@@ -1,0 +1,26 @@
+use sparse_dp_emb::models::ParamStore;
+use sparse_dp_emb::runtime::{HostTensor, Runtime};
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let model = rt.manifest.model("criteo-small")?;
+    let store = ParamStore::init(model, 3)?;
+    let b = 128usize; let nf = 26usize;
+    // every example activates bucket 3 of every feature
+    let cat = vec![3i32; b*nf];
+    let num = vec![0f32; b*13];
+    let y = vec![1f32; b];
+    let mut inputs = store.tensors();
+    inputs.push(HostTensor::i32(vec![b,nf], cat));
+    inputs.push(HostTensor::f32(vec![b,13], num));
+    inputs.push(HostTensor::f32(vec![b], y));
+    inputs.push(HostTensor::f32(vec![1], vec![1.0]));
+    inputs.push(HostTensor::f32(vec![1], vec![0.5]));
+    let outs = rt.execute_named("pctr_grads", &inputs)?;
+    let counts = outs["counts"].as_f32()?;
+    let nz: Vec<(usize, f32)> = counts.iter().enumerate().filter(|(_,&v)| v!=0.0).map(|(i,&v)|(i,v)).collect();
+    println!("nnz={} first 30: {:?}", nz.len(), &nz[..nz.len().min(30)]);
+    let offsets = model.attr_usize_list("row_offsets")?;
+    let expect: Vec<usize> = offsets.iter().map(|o| o+3).collect();
+    println!("expect: {:?}", expect);
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Language fine-tuning — DP fine-tuning of the RoBERTa-stand-in
+//! transformer with trainable word embeddings (paper §4.4 / Tables 1 & 6).
+//!
+//! Shows three configurations on a synthetic SST-2-like task:
+//!   1. DP-SGD with trainable embeddings   (dense noise — the baseline)
+//!   2. DP-SGD with frozen embeddings      (Table 6's comparison)
+//!   3. DP-AdaFEST on the embedding table  (sparsity-preserving)
+//! plus the LoRA-on-embedding baseline (r = 16) with its analytic gradient
+//! size (Table 1's comparison).
+//!
+//! Run with: `cargo run --release --example language_finetune`
+
+use anyhow::Result;
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{Algorithm, Trainer};
+use sparse_dp_emb::data::{SynthText, TextConfig};
+use sparse_dp_emb::runtime::Runtime;
+
+fn run_one(rt: &Runtime, cfg: &RunConfig) -> Result<(f64, f64)> {
+    let model = rt.manifest.model(&cfg.model)?;
+    let gen = SynthText::new(TextConfig::new(
+        model.attr_usize("vocab")?,
+        model.attr_usize("seq_len")?,
+        model.attr_usize("num_classes")?,
+        cfg.seed ^ 0xDA7A,
+    ));
+    let mut trainer = Trainer::new(cfg.clone(), rt)?;
+    let out = trainer.run_text(&gen)?;
+    Ok((out.utility, out.reduction_factor))
+}
+
+fn main() -> Result<()> {
+    let rt = Runtime::new("artifacts")?;
+
+    let mut base = RunConfig::default();
+    base.model = "nlu-roberta".into();
+    base.steps = 120;
+    base.eval_batches = 10;
+    base.epsilon = 1.0;
+    base.c2 = 0.5;
+
+    println!("synthetic SST-2-like task, vocab 50,265, eps = 1.0\n");
+
+    // 1. DP-SGD, trainable embeddings
+    let mut c1 = base.clone();
+    c1.algorithm = Algorithm::DpSgd;
+    let (acc1, _) = run_one(&rt, &c1)?;
+    println!("dp-sgd (embeddings trained):   acc {acc1:.4}  reduction 1.0x");
+
+    // 2. DP-SGD, frozen embeddings (Table 6)
+    let mut c2 = base.clone();
+    c2.algorithm = Algorithm::DpSgd;
+    c2.freeze_embedding = true;
+    let (acc2, _) = run_one(&rt, &c2)?;
+    println!("dp-sgd (embeddings frozen):    acc {acc2:.4}  (Table 6: expect <= trained)");
+
+    // 3. DP-AdaFEST on embeddings
+    let mut c3 = base.clone();
+    c3.algorithm = Algorithm::DpAdaFest;
+    c3.sigma_ratio = 10.0;
+    c3.tau = 2.0;
+    let (acc3, red3) = run_one(&rt, &c3)?;
+    println!("dp-adafest:                    acc {acc3:.4}  reduction {red3:.1}x");
+
+    // 4. LoRA-on-embedding baseline (Table 1), analytic gradient size
+    let model = rt.manifest.model("nlu-roberta")?;
+    let v = model.attr_usize("vocab")? as f64;
+    let d = model.attr_usize("d_model")? as f64;
+    let r = 16f64;
+    let lora_red = v * d / (v * r + r * d);
+    let mut c4 = base.clone();
+    c4.model = "nlu-roberta-loraemb16".into();
+    c4.algorithm = Algorithm::DpSgd;
+    let (acc4, _) = run_one(&rt, &c4)?;
+    println!("lora-emb r=16 (dense dp-sgd):  acc {acc4:.4}  reduction {lora_red:.1}x (analytic)");
+
+    println!(
+        "\nTable-1 shape: DP-AdaFEST's measured reduction should exceed LoRA's\n\
+         analytic {lora_red:.1}x at comparable accuracy; Table-6 shape: trained \n\
+         embeddings beat frozen."
+    );
+    Ok(())
+}

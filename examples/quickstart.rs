@@ -1,0 +1,82 @@
+//! Quickstart — the end-to-end driver (DESIGN.md "End-to-end validation").
+//!
+//! Trains the Criteo-small pCTR model for a few hundred steps on synthetic
+//! ad-click data with each of: non-private SGD, vanilla DP-SGD, and
+//! DP-AdaFEST — logging the loss curve — then prints the utility /
+//! gradient-size comparison that is the paper's whole point.
+//!
+//! Run with: `cargo run --release --example quickstart` (after
+//! `make artifacts`).
+
+use anyhow::Result;
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{Algorithm, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo};
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}\n", rt.platform());
+
+    let mut base = RunConfig::default();
+    base.model = "criteo-small".into();
+    base.steps = 300;
+    base.eval_batches = 16;
+    base.epsilon = 1.0;
+    base.c2 = 0.5;
+
+    let model = rt.manifest.model(&base.model)?;
+    let vocabs = model.attr_usize_list("vocabs")?;
+    let gen = SynthCriteo::new(CriteoConfig::new(vocabs, base.seed ^ 0xDA7A));
+
+    let mut results = Vec::new();
+    for algo in [Algorithm::NonPrivate, Algorithm::DpSgd, Algorithm::DpAdaFest] {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        if algo == Algorithm::DpAdaFest {
+            cfg.sigma_ratio = 10.0;
+            cfg.tau = 2.0;
+        }
+        println!("=== {} (eps={}) ===", algo.name(), cfg.epsilon);
+        let mut trainer = Trainer::new(cfg.clone(), &rt)?;
+        println!(
+            "noise: sigma1={:.3} sigma2={:.3}",
+            trainer.sigma1, trainer.sigma2
+        );
+
+        // explicit step loop so the loss curve is visible
+        let mut rng = Xoshiro256::seed_from(cfg.seed ^ 0xBA7C4);
+        for step in 0..cfg.steps {
+            let batch = gen.batch(0, trainer.batch_size(), &mut rng);
+            let stats = trainer.step_pctr(&batch)?;
+            if step % 50 == 0 || step + 1 == cfg.steps {
+                println!(
+                    "  step {:>4}  loss {:.4}  emb-coords-noised {:>8}  survivors {:>6}",
+                    step, stats.loss, stats.emb_coords_noised, stats.survivors
+                );
+            }
+        }
+        let eval: Vec<_> = (0..cfg.eval_batches)
+            .map(|_| gen.batch(0, trainer.batch_size(), &mut rng))
+            .collect();
+        let (auc, eval_loss) = trainer.eval_pctr(&eval)?;
+        println!(
+            "  -> AUC {auc:.4}  eval-loss {eval_loss:.4}  grad-size reduction {:.1}x\n",
+            trainer.meter.reduction_factor()
+        );
+        results.push((algo, auc, trainer.meter.reduction_factor()));
+    }
+
+    println!("=== summary ===");
+    println!("{:<16} {:>8} {:>14}", "algorithm", "AUC", "reduction");
+    for (algo, auc, red) in &results {
+        println!("{:<16} {:>8.4} {:>13.1}x", algo.name(), auc, red);
+    }
+    println!(
+        "\nThe paper's claim in miniature: DP-AdaFEST retains DP-SGD-level AUC\n\
+         while noising a small fraction of the embedding coordinates."
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Streaming ads — the paper's §4.3 time-series scenario as a runnable
+//! example: 24 days of drifting click data, trained day-by-day with a
+//! streaming period, evaluated on the six held-out future days.
+//!
+//! Compares DP-FEST with first-day vs streaming frequency sources against
+//! DP-AdaFEST — the example-level version of Figure 5.
+//!
+//! Run with: `cargo run --release --example streaming_ads`
+
+use anyhow::Result;
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{Algorithm, StreamingTrainer, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo};
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::selection::FrequencySource;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new("artifacts")?;
+
+    let mut base = RunConfig::default();
+    base.model = "criteo-small".into();
+    base.steps = 180; // 10 per simulated day
+    base.eval_batches = 12;
+    base.epsilon = 1.0;
+    base.c2 = 0.5;
+    base.streaming_period = 1;
+    base.fest_top_k = 4096;
+
+    let model = rt.manifest.model(&base.model)?;
+    let vocabs = model.attr_usize_list("vocabs")?;
+    let gen = SynthCriteo::new(CriteoConfig::new(vocabs, base.seed ^ 0xDA7A).with_drift());
+
+    let scenarios: Vec<(&str, Algorithm, FrequencySource)> = vec![
+        ("dp-fest / first-day freq", Algorithm::DpFest, FrequencySource::FirstDay),
+        ("dp-fest / streaming freq", Algorithm::DpFest, FrequencySource::Streaming),
+        ("dp-adafest (per-batch)", Algorithm::DpAdaFest, FrequencySource::Streaming),
+    ];
+
+    println!("24-day drifting stream; train days 0-17, eval days 18-23\n");
+    let mut summary = Vec::new();
+    for (label, algo, source) in scenarios {
+        let mut cfg = base.clone();
+        cfg.algorithm = algo;
+        cfg.freq_source = source;
+        if algo == Algorithm::DpAdaFest {
+            cfg.sigma_ratio = 10.0;
+            cfg.tau = 2.0;
+        }
+        println!("=== {label} ===");
+        let trainer = Trainer::new(cfg.clone(), &rt)?;
+        let mut st = StreamingTrainer::new(trainer, 6);
+        let out = st.run(&gen)?;
+        print!("  per-day AUC (days 18..23):");
+        for a in &out.per_day_auc {
+            print!(" {a:.4}");
+        }
+        println!();
+        println!(
+            "  overall AUC {:.4}  reduction {:.1}x  reselections {}\n",
+            out.outcome.utility, out.outcome.reduction_factor, out.reselections
+        );
+        summary.push((label, out.outcome.utility, out.outcome.reduction_factor));
+    }
+
+    println!("=== summary (paper Figure-5 shape) ===");
+    for (label, auc, red) in summary {
+        println!("{label:<28} AUC {auc:.4}  reduction {red:.1}x");
+    }
+    println!(
+        "\nExpected ordering: streaming-frequency DP-FEST beats first-day;\n\
+         DP-AdaFEST adapts per batch and achieves the best reduction at utility parity."
+    );
+    Ok(())
+}

@@ -1,0 +1,253 @@
+"""AOT build: lower every step computation to HLO *text* + a JSON manifest.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` — is
+the interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the pinned xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  ``python -m compile.aot --out-dir ../artifacts [--only pctr]``
+
+The manifest records, for each artifact, the ordered input/output specs and
+the model configuration (vocab sizes, row offsets, parameter inventory) that
+the Rust coordinator needs to drive it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default printer elides big
+    # constant literals as `constant({...})`, which the HLO text parser then
+    # silently reads back as garbage (we hit this with the row-offset vector
+    # and the positional-encoding table).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _spec_entry(name: str, shape: Tuple[int, ...], dtype: str) -> dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _abstractify(entries: List[dict]) -> List[jax.ShapeDtypeStruct]:
+    m = {"f32": jnp.float32, "i32": jnp.int32}
+    return [_spec(e["shape"], m[e["dtype"]]) for e in entries]
+
+
+def _out_entries(fn, in_specs: List[dict], names: List[str]) -> List[dict]:
+    outs = jax.eval_shape(fn, *_abstractify(in_specs))
+    assert len(outs) == len(names), f"{len(outs)} outputs vs {len(names)} names"
+    dm = {jnp.dtype("float32"): "f32", jnp.dtype("int32"): "i32"}
+    return [
+        {"name": n, "shape": list(o.shape), "dtype": dm[jnp.dtype(o.dtype)]}
+        for n, o in zip(names, outs)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+
+def pctr_artifacts(cfg: configs.PctrConfig):
+    b, nf = cfg.batch_size, len(cfg.vocabs)
+    pspecs = model.pctr_param_specs(cfg)
+    params_in = [_spec_entry(n, s, "f32") for n, s in pspecs]
+    batch_in = [
+        _spec_entry("cat_idx", (b, nf), "i32"),
+        _spec_entry("x_num", (b, configs.NUM_NUMERIC_FEATURES), "f32"),
+        _spec_entry("y", (b,), "f32"),
+    ]
+    clip_in = [_spec_entry("c1", (1,), "f32"), _spec_entry("c2", (1,), "f32")]
+
+    mlp_names = [n for n, _ in pspecs if n.startswith("mlp_")]
+    fwd = model.make_pctr_fwd(cfg)
+    grads = model.make_pctr_grads(cfg)
+
+    yield ("pctr_fwd", fwd, params_in + batch_in, ["loss", "logits"])
+    yield (
+        "pctr_grads",
+        grads,
+        params_in + batch_in + clip_in,
+        ["loss"] + [f"grad_{n}" for n in mlp_names]
+        + ["zgrads_scaled", "counts", "scales"],
+    )
+
+
+def nlu_artifacts(cfg: configs.NluConfig, prefix: str):
+    b, t = cfg.batch_size, cfg.seq_len
+    pspecs = model.nlu_param_specs(cfg)
+    params_in = [_spec_entry(n, s, "f32") for n, s, _ in pspecs]
+    batch_in = [
+        _spec_entry("token_ids", (b, t), "i32"),
+        _spec_entry("labels", (b,), "i32"),
+    ]
+    clip_in = [_spec_entry("c1", (1,), "f32"), _spec_entry("c2", (1,), "f32")]
+
+    fwd = model.make_nlu_fwd(cfg)
+    yield (f"{prefix}_fwd", fwd, params_in + batch_in, ["loss", "logits"])
+
+    if cfg.emb_lora_rank == 0:
+        step, names = model.make_nlu_grads(cfg)
+        tail = ["zgrads_scaled", "counts", "scales"]
+    else:
+        step, names = model.make_nlu_lora_emb_grads(cfg)
+        tail = ["aout_grads_scaled", "counts", "scales"]
+    yield (
+        f"{prefix}_grads",
+        step,
+        params_in + batch_in + clip_in,
+        ["loss"] + [f"grad_{n}" for n in names] + tail,
+    )
+
+
+def model_manifest(cfg) -> dict:
+    if isinstance(cfg, configs.PctrConfig):
+        pspecs = model.pctr_param_specs(cfg)
+        return {
+            "kind": "pctr",
+            "vocabs": cfg.vocabs,
+            "dims": cfg.dims,
+            "row_offsets": cfg.row_offsets,
+            "total_vocab": cfg.total_vocab,
+            "batch_size": cfg.batch_size,
+            "hidden_dim": cfg.hidden_dim,
+            "num_hidden_layers": cfg.num_hidden_layers,
+            "num_numeric": configs.NUM_NUMERIC_FEATURES,
+            "params": [
+                {"name": n, "shape": list(s), "trainable": True} for n, s in pspecs
+            ],
+        }
+    pspecs = model.nlu_param_specs(cfg)
+    return {
+        "kind": "nlu",
+        "vocab": cfg.vocab,
+        "seq_len": cfg.seq_len,
+        "batch_size": cfg.batch_size,
+        "d_model": cfg.d_model,
+        "num_layers": cfg.num_layers,
+        "num_heads": cfg.num_heads,
+        "ff_dim": cfg.ff_dim,
+        "lora_rank": cfg.lora_rank,
+        "emb_lora_rank": cfg.emb_lora_rank,
+        "num_classes": cfg.num_classes,
+        "params": [
+            {"name": n, "shape": list(s), "trainable": tr} for n, s, tr in pspecs
+        ],
+    }
+
+
+def build(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": {}, "models": {}}
+
+    plans = []
+    pctr_cfg = configs.pctr_small()
+    plans.append((pctr_cfg, "criteo-small", list(pctr_artifacts(pctr_cfg))))
+    nlu_cfg = configs.nlu_roberta()
+    plans.append((nlu_cfg, "nlu-roberta", list(nlu_artifacts(nlu_cfg, "nlu"))))
+    xlmr_cfg = configs.nlu_xlmr()
+    plans.append((xlmr_cfg, "nlu-xlmr", list(nlu_artifacts(xlmr_cfg, "nlu_xlmr"))))
+    # LoRA-on-embedding baselines at several ranks (Table 1's r sweep)
+    for r in (4, 16, 64):
+        loraemb_cfg = configs.nlu_roberta(emb_lora_rank=r)
+        plans.append(
+            (loraemb_cfg, f"nlu-roberta-loraemb{r}",
+             list(nlu_artifacts(loraemb_cfg, f"nlu_loraemb{r}")))
+        )
+
+    for cfg, model_name, artifacts in plans:
+        manifest["models"][model_name] = model_manifest(cfg)
+        for name, fn, in_specs, out_names in artifacts:
+            if only and only not in name:
+                continue
+            out_specs = _out_entries(fn, in_specs, out_names)
+            print(f"[aot] lowering {name} "
+                  f"({len(in_specs)} inputs, {len(out_specs)} outputs)")
+            lowered = jax.jit(fn).lower(*_abstractify(in_specs))
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            print(f"[aot]   wrote {fname}: {len(text)/1e6:.2f} MB")
+            manifest["artifacts"][name] = {
+                "file": fname,
+                "model": model_name,
+                "inputs": in_specs,
+                "outputs": out_specs,
+            }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    write_flat_manifest(manifest, os.path.join(out_dir, "manifest.txt"))
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def write_flat_manifest(manifest: dict, path: str) -> None:
+    """Line-oriented manifest for the Rust side (the vendored crate set has
+    no JSON parser; this format is trivially whitespace-splittable).
+
+    Grammar (one record per line, space-separated):
+      model <name> <kind>
+      attr  <model> <key> <value[,value...]>
+      param <model> <param_name> <0|1 trainable> <d0,d1,...|scalar>
+      artifact <name> <file> <model>
+      in    <artifact> <name> <f32|i32> <dims|scalar>
+      out   <artifact> <name> <f32|i32> <dims|scalar>
+    """
+    def dims(shape):
+        return ",".join(str(s) for s in shape) if shape else "scalar"
+
+    lines = []
+    for mname, m in manifest["models"].items():
+        lines.append(f"model {mname} {m['kind']}")
+        for key, val in m.items():
+            if key in ("kind", "params"):
+                continue
+            if isinstance(val, list):
+                lines.append(f"attr {mname} {key} {','.join(str(v) for v in val)}")
+            else:
+                lines.append(f"attr {mname} {key} {val}")
+        for p in m["params"]:
+            tr = 1 if p["trainable"] else 0
+            lines.append(f"param {mname} {p['name']} {tr} {dims(p['shape'])}")
+    for aname, a in manifest["artifacts"].items():
+        lines.append(f"artifact {aname} {a['file']} {a['model']}")
+        for e in a["inputs"]:
+            lines.append(f"in {aname} {e['name']} {e['dtype']} {dims(e['shape'])}")
+        for e in a["outputs"]:
+            lines.append(f"out {aname} {e['name']} {e['dtype']} {dims(e['shape'])}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", default=None, help="substring filter on artifact name")
+    args = p.parse_args()
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Model configurations shared by the JAX build path and (via manifest.json)
+the Rust runtime.
+
+Two model families, mirroring the paper's evaluation (Section 4.1.1):
+
+* ``pctr``  — the Criteo click-through-rate model: one embedding table per
+  categorical feature (vocabulary sizes from Table 3 of the paper), embedding
+  dimension ``int(2 * V ** 0.25)``, log-transformed numeric features, and a
+  stack of fully-connected ReLU layers.
+* ``nlu``   — a RoBERTa-stand-in transformer encoder with a real-size token
+  vocabulary (50,265 for the RoBERTa tokenizer, 250,002 for XLM-R), LoRA
+  adapters on the attention projections, and a trainable word-embedding table
+  (the paper trains embeddings during DP fine-tuning; Table 6).
+
+``criteo-small`` scales every vocabulary by 1/16 so that per-example-gradient
+training runs comfortably on CPU; gradient-*size* accounting always happens at
+the full Table-3 scale on the Rust side (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+# Vocabulary sizes of the 26 Criteo categorical features (paper Table 3,
+# categorical-feature-14 .. categorical-feature-39, in order).
+CRITEO_VOCABS: List[int] = [
+    1472, 577, 82741, 18940, 305, 23, 1172, 633, 3, 9090, 5918, 64300, 3207,
+    27, 1550, 44262, 10, 5485, 2161, 3, 56473, 17, 15, 27360, 104, 12934,
+]
+
+NUM_NUMERIC_FEATURES = 13  # 13 integer features, log-transformed upstream.
+
+ROBERTA_VOCAB = 50_265
+XLMR_VOCAB = 250_002
+
+
+def embedding_dim(vocab: int) -> int:
+    """The paper's heuristic rule: ``int(2 * V ** 0.25)`` (Appendix D.1.1)."""
+    return max(2, int(2.0 * vocab ** 0.25))
+
+
+@dataclasses.dataclass(frozen=True)
+class PctrConfig:
+    name: str
+    vocabs: List[int]
+    batch_size: int
+    hidden_dim: int
+    num_hidden_layers: int
+
+    @property
+    def dims(self) -> List[int]:
+        return [embedding_dim(v) for v in self.vocabs]
+
+    @property
+    def total_embedding_dim(self) -> int:
+        return sum(self.dims)
+
+    @property
+    def total_vocab(self) -> int:
+        return sum(self.vocabs)
+
+    @property
+    def mlp_input_dim(self) -> int:
+        return self.total_embedding_dim + NUM_NUMERIC_FEATURES
+
+    @property
+    def row_offsets(self) -> List[int]:
+        """Start offset of each feature's rows in the concatenated id space."""
+        offs, acc = [], 0
+        for v in self.vocabs:
+            offs.append(acc)
+            acc += v
+        return offs
+
+
+@dataclasses.dataclass(frozen=True)
+class NluConfig:
+    name: str
+    vocab: int
+    seq_len: int
+    batch_size: int
+    d_model: int
+    num_layers: int
+    num_heads: int
+    ff_dim: int
+    lora_rank: int          # rank of the attention LoRA adapters
+    num_classes: int
+    emb_lora_rank: int = 0  # >0: freeze the table, train a LoRA (A, B) on it
+
+
+def pctr_small() -> PctrConfig:
+    """CPU-scale utility config: Table-3 vocabularies divided by 16."""
+    return PctrConfig(
+        name="criteo-small",
+        vocabs=[max(4, v // 16) for v in CRITEO_VOCABS],
+        batch_size=128,
+        hidden_dim=128,
+        num_hidden_layers=4,
+    )
+
+
+def pctr_full() -> PctrConfig:
+    """Paper-scale config (Table 3 + 4x598 MLP). Used for gradient-size
+    accounting and the Table-4 wall-clock bench; not trained on CPU."""
+    return PctrConfig(
+        name="criteo-full",
+        vocabs=list(CRITEO_VOCABS),
+        batch_size=2048,
+        hidden_dim=598,
+        num_hidden_layers=4,
+    )
+
+
+def nlu_roberta(emb_lora_rank: int = 0) -> NluConfig:
+    return NluConfig(
+        name="nlu-roberta" + (f"-loraemb{emb_lora_rank}" if emb_lora_rank else ""),
+        vocab=ROBERTA_VOCAB,
+        seq_len=32,
+        batch_size=64,
+        d_model=64,
+        num_layers=2,
+        num_heads=4,
+        ff_dim=128,
+        lora_rank=16,
+        num_classes=2,
+        emb_lora_rank=emb_lora_rank,
+    )
+
+
+def nlu_xlmr() -> NluConfig:
+    return NluConfig(
+        name="nlu-xlmr",
+        vocab=XLMR_VOCAB,
+        seq_len=32,
+        batch_size=64,
+        d_model=64,
+        num_layers=2,
+        num_heads=4,
+        ff_dim=128,
+        lora_rank=16,
+        num_classes=3,  # XNLI is 3-way
+        emb_lora_rank=0,
+    )

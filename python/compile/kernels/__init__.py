@@ -1,0 +1,23 @@
+"""L1 — Pallas kernels for the sparsity-preserving DP training hot-spots.
+
+Every kernel has a pure-``jnp`` oracle in :mod:`ref` and is validated against
+it in ``python/tests/test_kernels.py`` (hypothesis sweeps over shapes and
+dtypes).  All kernels run with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute, so on this image
+the interpret path is the correctness target and TPU performance is estimated
+analytically (DESIGN.md §Hardware-Adaptation).
+"""
+
+from .clip_scale import clip_scale
+from .contribution_map import contribution_map
+from .embedding_lookup import embedding_lookup, embedding_lookup_tiled
+from .row_scatter import row_scatter, scale_grads
+
+__all__ = [
+    "clip_scale",
+    "contribution_map",
+    "embedding_lookup",
+    "embedding_lookup_tiled",
+    "row_scatter",
+    "scale_grads",
+]

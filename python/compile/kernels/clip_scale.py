@@ -1,0 +1,31 @@
+"""Pallas per-example clip-factor kernel (DP-SGD / Algorithm 1, line 5 & 9).
+
+Computes ``s_i = min(1, C / ||g_i||_2)`` from a matrix of per-part squared
+norms.  This is pure VPU element-wise work; on TPU it tiles to (8, 128)
+vector lanes with a single row-reduction, negligible next to the backward
+pass that produced the norms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _clip_scale_kernel(sq_ref, c_ref, o_ref):
+    sq = sq_ref[...]
+    norms = jnp.sqrt(jnp.maximum(sq.sum(axis=-1), 1e-24))
+    o_ref[...] = jnp.minimum(1.0, c_ref[0] / norms)
+
+
+@jax.jit
+def clip_scale(sq_norm_parts: jnp.ndarray, clip_norm: jnp.ndarray) -> jnp.ndarray:
+    """``sq_norm_parts`` (B, K) f32, ``clip_norm`` scalar f32 → (B,) f32."""
+    b, _ = sq_norm_parts.shape
+    c = jnp.asarray(clip_norm, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _clip_scale_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(sq_norm_parts.astype(jnp.float32), c)

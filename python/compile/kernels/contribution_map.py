@@ -1,0 +1,38 @@
+"""Pallas gradient-contribution-map kernel (Algorithm 1, lines 5–6).
+
+Accumulates the batch-wise contribution map ``sum_i [v_i]_{C1}`` — the
+l2-clipped indicator of which embedding rows each example activates — as a
+*scatter-add* over the concatenated row space.  The Gaussian noise of line 6
+is injected on the Rust side (all randomness lives in L3), so this kernel is
+the deterministic, per-batch part.
+
+TPU mapping: this is exactly the shape of a SparseCore scatter — the output
+count vector is partitioned across memory channels and the (id, weight)
+stream is routed by id.  Under ``interpret=True`` the scatter executes as an
+XLA scatter-add.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _contribution_kernel(idx_ref, w_ref, o_ref):
+    flat_idx = idx_ref[...].reshape(-1)
+    flat_w = w_ref[...].reshape(-1)
+    z = jnp.zeros(o_ref.shape, o_ref.dtype)
+    o_ref[...] = z.at[flat_idx].add(flat_w)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows",))
+def contribution_map(idx: jnp.ndarray, weights: jnp.ndarray, num_rows: int) -> jnp.ndarray:
+    """``idx`` (B, F) int32, ``weights`` (B, F) f32 → (num_rows,) f32 counts."""
+    return pl.pallas_call(
+        _contribution_kernel,
+        out_shape=jax.ShapeDtypeStruct((num_rows,), jnp.float32),
+        interpret=True,
+    )(idx, weights.astype(jnp.float32))

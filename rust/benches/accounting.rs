@@ -1,0 +1,29 @@
+//! `cargo bench --bench accounting` — PLD accountant performance:
+//! discretisation, FFT self-composition, and full σ calibration.
+
+use sparse_dp_emb::accounting::{calibrate_sigma, Adjacency, Pld, SubsampledGaussian};
+use sparse_dp_emb::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher { samples: 5, ..Default::default() };
+
+    let mech = SubsampledGaussian { sigma: 1.0, q: 0.01 };
+    b.bench("pld-build/subsampled-gaussian", || {
+        Pld::of(&mech, Adjacency::Remove).pmf.len()
+    });
+
+    let pld = Pld::of(&mech, Adjacency::Remove);
+    for t in [100u64, 10_000] {
+        b.bench(&format!("pld-compose-pow/T={t}"), || {
+            pld.compose_pow(t).pmf.len()
+        });
+    }
+
+    let composed = pld.compose_pow(1000);
+    b.bench("pld-epsilon(delta=1e-6)", || composed.epsilon(1e-6));
+
+    let cal = Bencher { samples: 3, ..Default::default() };
+    cal.bench("calibrate-sigma/eps=1,T=1000", || {
+        calibrate_sigma(1.0, 1e-6, 0.01, 1000).unwrap()
+    });
+}

@@ -1,0 +1,84 @@
+//! `cargo bench --bench hot_path` — end-to-end trainer step timing plus the
+//! L3 micro-kernels it is built from (noise generation, scatter-add,
+//! contribution-map build).  The §Perf iteration log in EXPERIMENTS.md
+//! tracks these numbers.
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{Algorithm, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo};
+use sparse_dp_emb::filtering::ContributionMap;
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::sparse::RowSparseGrad;
+use sparse_dp_emb::util::bench::Bencher;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+fn main() {
+    let b = Bencher { samples: 7, ..Default::default() };
+
+    // --- micro: dense noise generation throughput ---
+    let mut rng = Xoshiro256::seed_from(1);
+    let mut buf = vec![0f32; 1 << 20];
+    let r = b.bench("gauss-fill/1M-f32", || {
+        rng.fill_gauss_f32(&mut buf, 1.0);
+    });
+    println!(
+        "  -> {:.1} M samples/s\n",
+        1.0 / r.per_iter_secs() * (1 << 20) as f64 / 1e6
+    );
+
+    // --- micro: row-sparse accumulation (B=2048 rows, d=32) ---
+    let rows: Vec<u32> = (0..2048).map(|_| rng.below(100_000) as u32).collect();
+    let grad = vec![0.1f32; 32];
+    b.bench("rowsparse-accumulate/B=2048,d=32", || {
+        let mut g = RowSparseGrad::with_capacity(100_000, 32, 2048);
+        for &r in &rows {
+            g.add_row(r, &grad);
+        }
+        g.nnz_rows()
+    });
+
+    // --- micro: contribution map build + survivor sampling (full scale) ---
+    let examples: Vec<Vec<u32>> = (0..2048)
+        .map(|_| (0..26).map(|_| rng.below(340_000) as u32).collect())
+        .collect();
+    b.bench("contribution-map/B=2048,F=26", || {
+        ContributionMap::from_batch(&examples, 340_000, 1.0).nnz()
+    });
+    let map = ContributionMap::from_batch(&examples, 340_000, 1.0);
+    b.bench("survivors-sparse/B=2048", || {
+        map.survivors(2.0, 1.0, 4.0, true, &mut rng).0.len()
+    });
+    b.bench("survivors-dense-oracle/B=2048", || {
+        map.survivors(2.0, 1.0, 4.0, false, &mut rng).0.len()
+    });
+
+    // --- end-to-end: one trainer step per algorithm (needs artifacts) ---
+    match Runtime::new("artifacts") {
+        Ok(rt) => {
+            for algo in [Algorithm::NonPrivate, Algorithm::DpSgd, Algorithm::DpAdaFest] {
+                let mut cfg = RunConfig::default();
+                cfg.model = "criteo-small".into();
+                cfg.algorithm = algo;
+                cfg.steps = 8; // calibration target only
+                let model = rt.manifest.model(&cfg.model).unwrap();
+                let vocabs = model.attr_usize_list("vocabs").unwrap();
+                let gen = SynthCriteo::new(CriteoConfig::new(vocabs, 7));
+                let mut trainer = Trainer::new(cfg, &rt).unwrap();
+                let mut brng = Xoshiro256::seed_from(11);
+                let batch = gen.batch(0, trainer.batch_size(), &mut brng);
+                // warm the executable cache
+                trainer.step_pctr(&batch).unwrap();
+                let eb = Bencher { samples: 5, ..Default::default() };
+                eb.bench(&format!("trainer-step/{}", algo.name()), || {
+                    trainer.step_pctr(&batch).unwrap().loss
+                });
+            }
+            let s = rt.stats();
+            println!(
+                "\nruntime split: {} execs, marshal-in {:?}, execute {:?}, marshal-out {:?}",
+                s.executions, s.marshal_in, s.execute, s.marshal_out
+            );
+        }
+        Err(e) => println!("(skipping end-to-end trainer bench: {e})"),
+    }
+}

@@ -1,0 +1,45 @@
+//! `cargo bench --bench survivor_sampler` — Appendix B.2.
+//!
+//! The memory-efficient survivor sampler must be O(nnz + false-positives),
+//! not O(c): compare it against the naive dense thresholding at growing
+//! vocabulary sizes with fixed batch nnz.
+
+use sparse_dp_emb::sparse::{survivors_dense, survivors_sparse};
+use sparse_dp_emb::util::bench::Bencher;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+fn main() {
+    let b = Bencher { samples: 7, ..Default::default() };
+    let nnz = 2048; // batch-activated rows
+    let (sigma1, c1, tau) = (2.0, 1.0, 6.0);
+
+    println!("survivor sampler: nnz={nnz}, tau={tau}, sigma1={sigma1}\n");
+    for &c in &[100_000usize, 1_000_000, 10_000_000] {
+        let mut rng = Xoshiro256::seed_from(7);
+        // nnz random distinct rows with count ~ 1..10
+        let mut ids: Vec<u32> = (0..nnz * 2).map(|_| rng.below(c as u64) as u32).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.truncate(nnz);
+        let nonzero: Vec<(u32, f32)> = ids
+            .iter()
+            .map(|&i| (i, 1.0 + rng.below(10) as f32))
+            .collect();
+        let mut dense = vec![0f32; c];
+        for &(i, v) in &nonzero {
+            dense[i as usize] = v;
+        }
+
+        let d = b.bench(&format!("dense-threshold/c={c}"), || {
+            survivors_dense(&dense, sigma1, c1, tau, &mut rng).0.len()
+        });
+        let s = b.bench(&format!("sparse-sampler/c={c}"), || {
+            survivors_sparse(&nonzero, c, sigma1, c1, tau, &mut rng).0.len()
+        });
+        println!(
+            "  -> c={c}: speedup {:.1}x\n",
+            d.per_iter_secs() / s.per_iter_secs()
+        );
+    }
+    println!("expected: dense scales with c; sparse is ~flat (O(nnz + FP))");
+}

@@ -1,0 +1,65 @@
+//! `cargo bench --bench table4_wallclock` — paper Table 4.
+//!
+//! Dense DP-SGD embedding update (dense Gaussian noise + dense write) vs the
+//! sparsity-preserving update (scatter-add + row noise), per step, across
+//! vocabulary sizes.  The reduction factor should grow roughly linearly
+//! with the vocabulary (paper: 3x at 1e5 up to 177x at 1e7).
+
+use sparse_dp_emb::sparse::{add_dense_noise, add_row_noise, DenseState, Optimizer, RowSparseGrad};
+use sparse_dp_emb::util::bench::Bencher;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let vocabs: &[usize] = if full {
+        &[100_000, 200_000, 1_000_000, 2_000_000, 5_000_000, 10_000_000]
+    } else {
+        &[100_000, 200_000, 1_000_000, 2_000_000]
+    };
+    let (dim, batch) = (64, 1024);
+    let b = Bencher { samples: 7, ..Default::default() };
+
+    println!("Table 4 bench: d={dim}, B={batch} (pass --full for the 1e7 row)\n");
+    let mut results = Vec::new();
+    for &v in vocabs {
+        let mut rng = Xoshiro256::seed_from(1);
+        let opt = Optimizer::sgd(0.01);
+        let mut table = vec![0.01f32; v * dim];
+        let mut state = DenseState::default();
+        let row_grad: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.01).sin()).collect();
+        let rows: Vec<u32> = (0..batch).map(|_| rng.below(v as u64) as u32).collect();
+
+        let mut dense_grad = vec![0f32; v * dim];
+        let dense = b.bench(&format!("dense-update/V={v}"), || {
+            for g in dense_grad.iter_mut() {
+                *g = 0.0;
+            }
+            for &r in &rows {
+                let base = r as usize * dim;
+                for (g, x) in dense_grad[base..base + dim].iter_mut().zip(&row_grad) {
+                    *g += x;
+                }
+            }
+            add_dense_noise(&mut dense_grad, 1.0, &mut rng);
+            opt.dense_step(&mut table, &dense_grad, &mut state);
+        });
+
+        let sparse = b.bench(&format!("sparse-update/V={v}"), || {
+            let mut g = RowSparseGrad::with_capacity(v, dim, batch);
+            for &r in &rows {
+                g.add_row(r, &row_grad);
+            }
+            add_row_noise(&mut g, 1.0, &mut rng);
+            opt.sparse_step(&mut table, &g, &mut state);
+        });
+
+        let factor = dense.per_iter_secs() / sparse.per_iter_secs();
+        println!("  -> V={v}: reduction factor {factor:.1}x\n");
+        results.push((v, factor));
+    }
+
+    println!("vocab,reduction_factor");
+    for (v, f) in results {
+        println!("{v},{f:.2}");
+    }
+}

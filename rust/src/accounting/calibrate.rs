@@ -1,0 +1,114 @@
+//! Inverse accounting: find the smallest noise multiplier σ meeting a target
+//! (ε, δ) for a given sampling rate and step count, and split it into the
+//! (σ₁, σ₂) pair DP-AdaFEST needs for a chosen noise ratio σ₁/σ₂.
+
+use anyhow::{bail, Result};
+
+use super::Accountant;
+
+/// Smallest σ such that the Poisson-subsampled Gaussian mechanism run for
+/// `steps` steps at rate `q` satisfies (ε, δ)-DP.  Bisection over σ
+/// (ε is monotone decreasing in σ).
+pub fn calibrate_sigma(epsilon: f64, delta: f64, q: f64, steps: u64) -> Result<f64> {
+    if epsilon <= 0.0 || delta <= 0.0 || delta >= 1.0 {
+        bail!("invalid privacy target eps={epsilon} delta={delta}");
+    }
+    let eps_of = |sigma: f64| Accountant::new(sigma, q, steps).epsilon(delta);
+
+    let mut lo = 0.1f64;
+    let mut hi = 2.0f64;
+    // grow hi until it satisfies the budget
+    while eps_of(hi) > epsilon {
+        hi *= 2.0;
+        if hi > 1e4 {
+            bail!("calibration diverged: eps={epsilon} unreachable below sigma=1e4");
+        }
+    }
+    // shrink lo until it violates (so the root is bracketed)
+    while eps_of(lo) <= epsilon {
+        lo *= 0.5;
+        if lo < 1e-3 {
+            return Ok(lo); // essentially no noise needed
+        }
+    }
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if eps_of(mid) > epsilon {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi - lo) / hi < 1e-3 {
+            break;
+        }
+    }
+    Ok(hi)
+}
+
+/// The (σ₁, σ₂) noise pair for DP-AdaFEST (Algorithm 1) achieving the same
+/// per-step privacy cost as a single Gaussian with `sigma_eff`, at the
+/// requested ratio `ratio = σ₁/σ₂` (§4.5's tuning knob).
+///
+/// From `σ_eff = (σ₁⁻² + σ₂⁻²)^(−1/2)` and `σ₁ = r·σ₂`:
+/// `σ₂ = σ_eff·√(1 + 1/r²)`, `σ₁ = r·σ₂`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SigmaPair {
+    pub sigma1: f64,
+    pub sigma2: f64,
+}
+
+pub fn calibrate_sigma_pair(
+    epsilon: f64,
+    delta: f64,
+    q: f64,
+    steps: u64,
+    ratio: f64,
+) -> Result<SigmaPair> {
+    if ratio <= 0.0 {
+        bail!("sigma ratio must be positive");
+    }
+    let sigma_eff = calibrate_sigma(epsilon, delta, q, steps)?;
+    let sigma2 = sigma_eff * (1.0 + 1.0 / (ratio * ratio)).sqrt();
+    let sigma1 = ratio * sigma2;
+    Ok(SigmaPair { sigma1, sigma2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::gaussian::compose_sigmas;
+
+    #[test]
+    fn calibrated_sigma_meets_budget() {
+        let (eps, delta, q, t) = (2.0, 1e-5, 0.02, 200);
+        let sigma = calibrate_sigma(eps, delta, q, t).unwrap();
+        let achieved = Accountant::new(sigma, q, t).epsilon(delta);
+        assert!(achieved <= eps * 1.005, "achieved {achieved} > target {eps}");
+        // ... and is not wastefully large: 5% smaller sigma must violate
+        let achieved_tight = Accountant::new(sigma * 0.95, q, t).epsilon(delta);
+        assert!(achieved_tight > eps * 0.98, "sigma not tight: {achieved_tight}");
+    }
+
+    #[test]
+    fn sigma_grows_with_steps_and_budget_tightness() {
+        let s_few = calibrate_sigma(1.0, 1e-5, 0.02, 50).unwrap();
+        let s_many = calibrate_sigma(1.0, 1e-5, 0.02, 800).unwrap();
+        assert!(s_many > s_few);
+        let s_loose = calibrate_sigma(8.0, 1e-5, 0.02, 50).unwrap();
+        assert!(s_loose < s_few);
+    }
+
+    #[test]
+    fn pair_composes_back_to_effective_sigma() {
+        let pair = calibrate_sigma_pair(2.0, 1e-5, 0.02, 100, 5.0).unwrap();
+        let eff = compose_sigmas(pair.sigma1, pair.sigma2);
+        let direct = calibrate_sigma(2.0, 1e-5, 0.02, 100).unwrap();
+        assert!((eff - direct).abs() / direct < 1e-9);
+        assert!((pair.sigma1 / pair.sigma2 - 5.0).abs() < 1e-9);
+        // a large ratio puts almost all the budget on the gradients:
+        // sigma2 -> sigma_eff from above
+        let pair_big = calibrate_sigma_pair(2.0, 1e-5, 0.02, 100, 100.0).unwrap();
+        assert!(pair_big.sigma2 < pair.sigma2);
+        assert!((pair_big.sigma2 - direct).abs() / direct < 1e-3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal iterative radix-2 complex FFT for PLD self-composition
+//! (no external FFT crate in the offline set).
+
+/// In-place iterative Cooley–Tukey FFT on interleaved (re, im) pairs.
+/// `invert = true` computes the inverse transform including the 1/n scale.
+pub fn fft(re: &mut [f64], im: &mut [f64], invert: bool) {
+    let n = re.len();
+    assert!(n.is_power_of_two(), "fft size must be a power of two");
+    assert_eq!(im.len(), n);
+
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+
+    let sign = if invert { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr0, vi0) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let vr = vr0 * cr - vi0 * ci;
+                let vi = vr0 * ci + vi0 * cr;
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+
+    if invert {
+        let inv = 1.0 / n as f64;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Linear convolution of two non-negative real sequences via FFT.
+/// Output length is `a.len() + b.len() - 1`; small negative round-off
+/// values are clamped to zero (inputs are probability masses).
+pub fn convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let out_len = a.len() + b.len() - 1;
+    let n = out_len.next_power_of_two();
+    let mut ar = vec![0f64; n];
+    let mut ai = vec![0f64; n];
+    let mut br = vec![0f64; n];
+    let mut bi = vec![0f64; n];
+    ar[..a.len()].copy_from_slice(a);
+    br[..b.len()].copy_from_slice(b);
+    fft(&mut ar, &mut ai, false);
+    fft(&mut br, &mut bi, false);
+    for i in 0..n {
+        let r = ar[i] * br[i] - ai[i] * bi[i];
+        let im = ar[i] * bi[i] + ai[i] * br[i];
+        ar[i] = r;
+        ai[i] = im;
+    }
+    fft(&mut ar, &mut ai, true);
+    ar.truncate(out_len);
+    for v in ar.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    ar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convolve_matches_naive() {
+        let a = [0.1, 0.4, 0.5];
+        let b = [0.25, 0.25, 0.25, 0.25];
+        let got = convolve(&a, &b);
+        let mut want = vec![0f64; a.len() + b.len() - 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                want[i + j] += x * y;
+            }
+        }
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn convolution_preserves_mass() {
+        let a = vec![0.125f64; 8];
+        let b = vec![0.0625f64; 16];
+        let c = convolve(&a, &b);
+        let mass: f64 = c.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let orig: Vec<f64> = (0..64).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0f64; 64];
+        fft(&mut re, &mut im, false);
+        fft(&mut re, &mut im, true);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Closed-form Gaussian-mechanism results used both directly (AdaFEST's
+//! two-noise composition) and as ground truth for the PLD accountant.
+
+use crate::util::stats::gauss_cdf;
+
+/// Analytic δ(ε) for the sensitivity-1 Gaussian mechanism with noise
+/// multiplier σ (Balle & Wang 2018, Theorem 8):
+/// `δ = Φ(1/(2σ) − εσ) − e^ε · Φ(−1/(2σ) − εσ)`.
+pub fn gaussian_delta(epsilon: f64, sigma: f64) -> f64 {
+    let a = 1.0 / (2.0 * sigma);
+    (gauss_cdf(a - epsilon * sigma) - epsilon.exp() * gauss_cdf(-a - epsilon * sigma)).max(0.0)
+}
+
+/// Analytic ε(δ) for the Gaussian mechanism, by bisection on
+/// [`gaussian_delta`] (monotone decreasing in ε).
+pub fn gaussian_epsilon(delta: f64, sigma: f64) -> f64 {
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    while gaussian_delta(hi, sigma) > delta {
+        hi *= 2.0;
+        if hi > 1e6 {
+            return f64::INFINITY;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if gaussian_delta(mid, sigma) > delta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+/// DRS19 Corollary 3.3 (paper §3.3): composing Gaussian mechanisms with
+/// multipliers σ₁ and σ₂ equals a single Gaussian mechanism with
+/// `σ = (σ₁⁻² + σ₂⁻²)^(−1/2)`.
+pub fn compose_sigmas(sigma1: f64, sigma2: f64) -> f64 {
+    (sigma1.powi(-2) + sigma2.powi(-2)).powf(-0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_decreasing_in_epsilon_and_sigma() {
+        assert!(gaussian_delta(0.5, 1.0) > gaussian_delta(1.0, 1.0));
+        assert!(gaussian_delta(1.0, 0.5) > gaussian_delta(1.0, 2.0));
+    }
+
+    #[test]
+    fn epsilon_delta_roundtrip() {
+        for sigma in [0.7, 1.0, 3.0] {
+            let eps = gaussian_epsilon(1e-5, sigma);
+            let back = gaussian_delta(eps, sigma);
+            assert!((back - 1e-5).abs() < 1e-8, "sigma={sigma}: {back}");
+        }
+    }
+
+    #[test]
+    fn known_value() {
+        // σ = 1: δ(ε=1) = Φ(0.5 − 1) − e·Φ(−0.5 − 1)
+        //       = Φ(−0.5) − e·Φ(−1.5) ≈ 0.30854 − 2.71828·0.066807 ≈ 0.12693
+        let d = gaussian_delta(1.0, 1.0);
+        assert!((d - 0.12693).abs() < 1e-4, "{d}");
+    }
+
+    #[test]
+    fn compose_sigmas_matches_paper() {
+        // equal noise: σ_eff = σ/√2
+        let s = compose_sigmas(2.0, 2.0);
+        assert!((s - 2.0 / 2f64.sqrt()).abs() < 1e-12);
+        // one mechanism infinitely noisy: composition is the other one
+        let s = compose_sigmas(1e9, 1.5);
+        assert!((s - 1.5).abs() < 1e-6);
+        // composition is always *noisier budget-wise* (smaller σ_eff)
+        assert!(compose_sigmas(1.0, 5.0) < 1.0);
+    }
+}

@@ -1,0 +1,349 @@
+//! Discretised privacy-loss distributions (PLDs) of the Poisson-subsampled
+//! Gaussian mechanism, with pessimistic rounding and FFT self-composition —
+//! the numerical core of §3.3 / Appendix C.5, in the style of
+//! [KJH20, GLW21, DGK+22].
+//!
+//! Dominating pair (Lemma C.4): `P = (1−q)·N(0,σ²) + q·N(1,σ²)` vs
+//! `Q = N(0,σ²)`.  We account both adjacency directions:
+//!
+//! * `Remove` — x ~ P, loss `ℓ(x) = ln(dP/dQ) = ln((1−q) + q·e^{(2x−1)/(2σ²)})`
+//!   (monotone increasing in x);
+//! * `Add`    — x ~ Q, loss `ℓ'(x) = −ln((1−q) + q·e^{(2x−1)/(2σ²)})`
+//!   (monotone decreasing in x).
+//!
+//! Discretisation is *pessimistic*: each x-cell's mass is assigned the
+//! maximal loss in the cell rounded **up** to the grid, and truncated tail
+//! mass goes to the `+∞`-loss bucket, so reported δ is an upper bound.
+
+use crate::util::stats::gauss_cdf;
+
+use super::fft::convolve;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Adjacency {
+    /// D = D' + one example (x ~ P mixture).
+    Remove,
+    /// D' = D + one example (x ~ Q).
+    Add,
+}
+
+/// The Poisson-subsampled Gaussian mechanism: noise multiplier `sigma`,
+/// sampling probability `q`.
+#[derive(Clone, Copy, Debug)]
+pub struct SubsampledGaussian {
+    pub sigma: f64,
+    pub q: f64,
+}
+
+impl SubsampledGaussian {
+    /// `ln((1−q) + q·e^a)` computed overflow-safely.
+    fn log_mix(&self, a: f64) -> f64 {
+        let q = self.q;
+        if q >= 1.0 {
+            return a;
+        }
+        if a <= 0.0 {
+            ((1.0 - q) + q * a.exp()).ln()
+        } else {
+            // ln((1-q) + q e^a) = a + ln(q + (1-q)e^{-a})
+            a + (q + (1.0 - q) * (-a).exp()).ln()
+        }
+    }
+
+    /// Privacy loss at sample x for the given direction.
+    fn loss(&self, x: f64, dir: Adjacency) -> f64 {
+        let a = (2.0 * x - 1.0) / (2.0 * self.sigma * self.sigma);
+        match dir {
+            Adjacency::Remove => self.log_mix(a),
+            Adjacency::Add => -self.log_mix(a),
+        }
+    }
+
+    /// CDF of the sampling distribution for the direction.
+    fn cdf(&self, x: f64, dir: Adjacency) -> f64 {
+        match dir {
+            Adjacency::Remove => {
+                (1.0 - self.q) * gauss_cdf(x / self.sigma)
+                    + self.q * gauss_cdf((x - 1.0) / self.sigma)
+            }
+            Adjacency::Add => gauss_cdf(x / self.sigma),
+        }
+    }
+}
+
+/// Discrete PLD: `pmf[i]` is the probability of privacy loss
+/// `(min_index + i) * dl`, plus `inf_mass` at `+∞`.
+#[derive(Clone, Debug)]
+pub struct Pld {
+    pub dl: f64,
+    pub min_index: i64,
+    pub pmf: Vec<f64>,
+    pub inf_mass: f64,
+    /// truncation cap (losses are clamped into ±cap before/after composing)
+    pub cap: f64,
+}
+
+/// Discretisation parameters.  `dl` trades accuracy for speed; the default
+/// gives ≲0.01 ε error after thousands of compositions.
+#[derive(Clone, Copy, Debug)]
+pub struct PldParams {
+    pub dl: f64,
+    pub cap: f64,
+    pub x_cells: usize,
+    pub x_span_sigmas: f64,
+}
+
+impl Default for PldParams {
+    fn default() -> Self {
+        PldParams { dl: 5e-4, cap: 32.0, x_cells: 100_000, x_span_sigmas: 14.0 }
+    }
+}
+
+impl Pld {
+    pub fn of(mech: &SubsampledGaussian, dir: Adjacency) -> Pld {
+        Pld::of_with(mech, dir, PldParams::default())
+    }
+
+    pub fn of_with(mech: &SubsampledGaussian, dir: Adjacency, p: PldParams) -> Pld {
+        assert!(mech.sigma > 0.0 && mech.q > 0.0 && mech.q <= 1.0);
+        let span = p.x_span_sigmas * mech.sigma;
+        let (x_lo, x_hi) = (-span, 1.0 + span);
+        let n = p.x_cells;
+        let dx = (x_hi - x_lo) / n as f64;
+
+        let cap_idx = (p.cap / p.dl).round() as i64;
+        let mut pmf_map = vec![0f64; (2 * cap_idx + 1) as usize];
+        let mut inf_mass = 0.0;
+
+        // Tail mass (≈1e-40 at 14σ) is assigned to +∞ — pessimistic, valid.
+        inf_mass += mech.cdf(x_lo, dir);
+        inf_mass += 1.0 - mech.cdf(x_hi, dir);
+
+        let mut cdf_prev = mech.cdf(x_lo, dir);
+        let mut loss_prev = mech.loss(x_lo, dir);
+        for i in 0..n {
+            let x_next = x_lo + (i + 1) as f64 * dx;
+            let cdf_next = mech.cdf(x_next, dir);
+            let loss_next = mech.loss(x_next, dir);
+            let mass = (cdf_next - cdf_prev).max(0.0);
+            if mass > 0.0 {
+                // pessimistic: max loss in the cell, rounded up to the grid
+                let l = loss_prev.max(loss_next);
+                let idx = (l / p.dl).ceil() as i64;
+                if idx > cap_idx {
+                    inf_mass += mass;
+                } else {
+                    let slot = (idx.max(-cap_idx) + cap_idx) as usize;
+                    pmf_map[slot] += mass;
+                }
+            }
+            cdf_prev = cdf_next;
+            loss_prev = loss_next;
+        }
+
+        let mut pld = Pld {
+            dl: p.dl,
+            min_index: -cap_idx,
+            pmf: pmf_map,
+            inf_mass,
+            cap: p.cap,
+        };
+        pld.trim();
+        pld
+    }
+
+    /// Drop leading/trailing zero mass (keeps convolutions small).
+    fn trim(&mut self) {
+        let eps = 0.0;
+        let first = self.pmf.iter().position(|&v| v > eps).unwrap_or(0);
+        let last = self.pmf.iter().rposition(|&v| v > eps).unwrap_or(0);
+        if first > 0 || last + 1 < self.pmf.len() {
+            self.pmf = self.pmf[first..=last].to_vec();
+            self.min_index += first as i64;
+        }
+    }
+
+    /// Clamp losses into ±cap: mass above cap → ∞-bucket; mass below −cap
+    /// accumulates at −cap (rounding up ⇒ pessimistic).
+    fn truncate(&mut self) {
+        let cap_idx = (self.cap / self.dl).round() as i64;
+        let lo = self.min_index;
+        let hi = self.min_index + self.pmf.len() as i64 - 1;
+        if lo >= -cap_idx && hi <= cap_idx {
+            return;
+        }
+        let new_lo = lo.max(-cap_idx);
+        let new_hi = hi.min(cap_idx);
+        let mut new_pmf = vec![0f64; (new_hi - new_lo + 1) as usize];
+        for (i, &m) in self.pmf.iter().enumerate() {
+            if m == 0.0 {
+                continue;
+            }
+            let idx = lo + i as i64;
+            if idx > cap_idx {
+                self.inf_mass += m;
+            } else {
+                let clamped = idx.max(-cap_idx);
+                new_pmf[(clamped - new_lo) as usize] += m;
+            }
+        }
+        self.pmf = new_pmf;
+        self.min_index = new_lo;
+        self.trim();
+    }
+
+    /// Compose two PLDs (independent mechanisms): convolution of losses.
+    pub fn compose(&self, other: &Pld) -> Pld {
+        assert!((self.dl - other.dl).abs() < 1e-15, "grid mismatch");
+        let pmf = convolve(&self.pmf, &other.pmf);
+        let inf = 1.0 - (1.0 - self.inf_mass) * (1.0 - other.inf_mass);
+        let mut out = Pld {
+            dl: self.dl,
+            min_index: self.min_index + other.min_index,
+            pmf,
+            inf_mass: inf,
+            cap: self.cap,
+        };
+        out.truncate();
+        out
+    }
+
+    /// T-fold self-composition by exponentiation-by-squaring.
+    pub fn compose_pow(&self, t: u64) -> Pld {
+        assert!(t >= 1);
+        let mut result: Option<Pld> = None;
+        let mut base = self.clone();
+        let mut k = t;
+        loop {
+            if k & 1 == 1 {
+                result = Some(match result {
+                    None => base.clone(),
+                    Some(r) => r.compose(&base),
+                });
+            }
+            k >>= 1;
+            if k == 0 {
+                break;
+            }
+            base = base.compose(&base);
+        }
+        result.unwrap()
+    }
+
+    /// Hockey-stick divergence: `δ(ε) = Σ_{ℓ>ε} p(ℓ)·(1 − e^{ε−ℓ}) + inf_mass`.
+    pub fn delta(&self, epsilon: f64) -> f64 {
+        let mut d = self.inf_mass;
+        for (i, &m) in self.pmf.iter().enumerate() {
+            if m == 0.0 {
+                continue;
+            }
+            let l = (self.min_index + i as i64) as f64 * self.dl;
+            if l > epsilon {
+                d += m * (1.0 - (epsilon - l).exp());
+            }
+        }
+        d.min(1.0)
+    }
+
+    /// Smallest ε with `δ(ε) ≤ delta` (bisection; δ is monotone in ε).
+    pub fn epsilon(&self, delta: f64) -> f64 {
+        if self.inf_mass > delta {
+            return f64::INFINITY;
+        }
+        if self.delta(0.0) <= delta {
+            return 0.0;
+        }
+        let mut lo = 0.0;
+        let mut hi = self.cap * 2.0; // composed losses clamp at ±cap... per-step; after compose ±cap again
+        if self.delta(hi) > delta {
+            return f64::INFINITY;
+        }
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            if self.delta(mid) > delta {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    }
+
+    pub fn total_mass(&self) -> f64 {
+        self.pmf.iter().sum::<f64>() + self.inf_mass
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accounting::gaussian::gaussian_delta;
+
+    #[test]
+    fn mass_is_conserved() {
+        let mech = SubsampledGaussian { sigma: 1.0, q: 0.05 };
+        for dir in [Adjacency::Remove, Adjacency::Add] {
+            let pld = Pld::of(&mech, dir);
+            let m = pld.total_mass();
+            assert!((m - 1.0).abs() < 1e-9, "{dir:?}: mass {m}");
+            let c = pld.compose_pow(32);
+            let mc = c.total_mass();
+            assert!((mc - 1.0).abs() < 1e-7, "{dir:?} composed: mass {mc}");
+        }
+    }
+
+    #[test]
+    fn q1_single_step_matches_analytic_gaussian() {
+        let mech = SubsampledGaussian { sigma: 1.5, q: 1.0 };
+        let pld = Pld::of(&mech, Adjacency::Remove);
+        for eps in [0.25, 0.5, 1.0] {
+            let got = pld.delta(eps);
+            let want = gaussian_delta(eps, 1.5);
+            assert!(got >= want - 1e-12, "pessimism violated: {got} < {want}");
+            assert!(got - want < 3e-4, "eps={eps}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn q1_composition_matches_sqrt_t_scaling() {
+        // T compositions of Gaussian(σ) == single Gaussian(σ/√T)
+        let t = 16u64;
+        let mech = SubsampledGaussian { sigma: 4.0, q: 1.0 };
+        let composed = Pld::of(&mech, Adjacency::Remove).compose_pow(t);
+        let eff_sigma = 4.0 / (t as f64).sqrt();
+        for eps in [0.5, 1.0, 2.0] {
+            let got = composed.delta(eps);
+            let want = gaussian_delta(eps, eff_sigma);
+            assert!(
+                (got - want).abs() < 5e-3 * (1.0 + want),
+                "eps={eps}: {got} vs {want}"
+            );
+            assert!(got >= want - 1e-9, "pessimism violated");
+        }
+    }
+
+    #[test]
+    fn subsampling_helps() {
+        // At the same sigma and T, smaller q must give smaller epsilon.
+        let t = 128;
+        let e_full = Pld::of(&SubsampledGaussian { sigma: 1.0, q: 1.0 }, Adjacency::Remove)
+            .compose_pow(t)
+            .epsilon(1e-5);
+        let e_sub = Pld::of(&SubsampledGaussian { sigma: 1.0, q: 0.01 }, Adjacency::Remove)
+            .compose_pow(t)
+            .epsilon(1e-5);
+        assert!(e_sub < e_full / 5.0, "{e_sub} vs {e_full}");
+    }
+
+    #[test]
+    fn delta_monotone_decreasing_in_epsilon() {
+        let pld = Pld::of(&SubsampledGaussian { sigma: 1.0, q: 0.02 }, Adjacency::Remove)
+            .compose_pow(100);
+        let mut prev = 1.0;
+        for i in 0..20 {
+            let d = pld.delta(i as f64 * 0.2);
+            assert!(d <= prev + 1e-15);
+            prev = d;
+        }
+    }
+}

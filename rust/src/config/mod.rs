@@ -1,0 +1,258 @@
+//! Run configuration: typed config struct + `--key value` CLI parsing +
+//! `key = value` config-file loading (no serde in the offline crate set —
+//! the format is a deliberately tiny TOML subset).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Algorithm;
+use crate::selection::FrequencySource;
+use crate::sparse::OptimizerKind;
+
+/// Full configuration of one training run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// model name in the manifest (`criteo-small`, `nlu-roberta`, ...)
+    pub model: String,
+    pub algorithm: Algorithm,
+    pub steps: u64,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub lr: f32,
+    pub optimizer: OptimizerKind,
+
+    // privacy
+    pub epsilon: f64,
+    pub delta: f64,
+    /// dataset size N used for q = B/N and delta = 1/N defaults
+    pub dataset_size: u64,
+    /// contribution-map vs gradient noise ratio σ₁/σ₂ (§4.5)
+    pub sigma_ratio: f64,
+    pub tau: f64,
+    pub c1: f64,
+    pub c2: f64,
+
+    // DP-FEST
+    pub fest_top_k: usize,
+    pub fest_epsilon: f64,
+    pub freq_source: FrequencySource,
+
+    // exponential-selection baseline
+    pub exp_select_m: usize,
+
+    // streaming (time-series) mode
+    pub streaming_period: usize,
+
+    // memory-efficient filtering (Appendix B.2) on/off
+    pub memory_efficient_filtering: bool,
+
+    /// Table 6: freeze word embeddings during DP fine-tuning (no update, no
+    /// noise; gradient size counts 0 embedding coords)
+    pub freeze_embedding: bool,
+
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "criteo-small".into(),
+            algorithm: Algorithm::DpAdaFest,
+            steps: 200,
+            eval_batches: 20,
+            seed: 17,
+            lr: 0.05,
+            optimizer: OptimizerKind::Adagrad,
+            epsilon: 1.0,
+            delta: 0.0, // 0 ⇒ use 1/dataset_size
+            dataset_size: 1_000_000,
+            sigma_ratio: 5.0,
+            tau: 5.0,
+            c1: 1.0,
+            c2: 1.0,
+            fest_top_k: 4096,
+            fest_epsilon: 0.01,
+            freq_source: FrequencySource::Streaming,
+            exp_select_m: 1024,
+            streaming_period: 1,
+            memory_efficient_filtering: true,
+            freeze_embedding: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn effective_delta(&self) -> f64 {
+        if self.delta > 0.0 {
+            self.delta
+        } else {
+            1.0 / self.dataset_size as f64
+        }
+    }
+
+    /// Apply one `key = value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key {
+            "model" => self.model = v.into(),
+            "algorithm" => self.algorithm = v.parse()?,
+            "steps" => self.steps = v.parse().context("steps")?,
+            "eval_batches" => self.eval_batches = v.parse().context("eval_batches")?,
+            "seed" => self.seed = v.parse().context("seed")?,
+            "lr" => self.lr = v.parse().context("lr")?,
+            "optimizer" => self.optimizer = v.parse()?,
+            "epsilon" => self.epsilon = v.parse().context("epsilon")?,
+            "delta" => self.delta = v.parse().context("delta")?,
+            "dataset_size" => self.dataset_size = v.parse().context("dataset_size")?,
+            "sigma_ratio" => self.sigma_ratio = v.parse().context("sigma_ratio")?,
+            "tau" => self.tau = v.parse().context("tau")?,
+            "c1" => self.c1 = v.parse().context("c1")?,
+            "c2" => self.c2 = v.parse().context("c2")?,
+            "fest_top_k" => self.fest_top_k = v.parse().context("fest_top_k")?,
+            "fest_epsilon" => self.fest_epsilon = v.parse().context("fest_epsilon")?,
+            "freq_source" => self.freq_source = v.parse()?,
+            "exp_select_m" => self.exp_select_m = v.parse().context("exp_select_m")?,
+            "streaming_period" => {
+                self.streaming_period = v.parse().context("streaming_period")?
+            }
+            "memory_efficient_filtering" => {
+                self.memory_efficient_filtering = parse_bool(v)?
+            }
+            "freeze_embedding" => self.freeze_embedding = parse_bool(v)?,
+            "artifacts_dir" => self.artifacts_dir = v.into(),
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    /// Parse `--key value` pairs (flags may also be `--key=value`).
+    /// Returns leftover positional args.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut rest = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.set(&k.replace('-', "_"), v)?;
+                } else {
+                    let v = args
+                        .get(i + 1)
+                        .with_context(|| format!("flag --{stripped} needs a value"))?;
+                    self.set(&stripped.replace('-', "_"), v)?;
+                    i += 1;
+                }
+            } else {
+                rest.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(rest)
+    }
+
+    /// Load `key = value` lines (# comments, blank lines ok).
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        for (n, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path:?}:{}: want key = value", n + 1))?;
+            self.set(k.trim(), v.trim())
+                .with_context(|| format!("{path:?}:{}", n + 1))?;
+        }
+        Ok(())
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "model={} algo={:?} steps={} eps={} delta={:.2e} ratio={} tau={} c1={} c2={} lr={} opt={:?}",
+            self.model,
+            self.algorithm,
+            self.steps,
+            self.epsilon,
+            self.effective_delta(),
+            self.sigma_ratio,
+            self.tau,
+            self.c1,
+            self.c2,
+            self.lr,
+            self.optimizer,
+        )
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => bail!("expected bool, got {other}"),
+    }
+}
+
+/// Simple named-value overrides map used by the sweep harness.
+pub fn overrides_from_pairs(pairs: &[(&str, String)]) -> HashMap<String, String> {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_args_roundtrip() {
+        let mut c = RunConfig::default();
+        let rest = c
+            .apply_args(&[
+                "train".to_string(),
+                "--epsilon".to_string(),
+                "3.0".to_string(),
+                "--tau=10".to_string(),
+                "--algorithm".to_string(),
+                "dp-fest".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(rest, vec!["train"]);
+        assert_eq!(c.epsilon, 3.0);
+        assert_eq!(c.tau, 10.0);
+        assert_eq!(c.algorithm, Algorithm::DpFest);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("steps", "notanum").is_err());
+    }
+
+    #[test]
+    fn delta_defaults_to_inverse_n() {
+        let mut c = RunConfig::default();
+        c.dataset_size = 45_000_000;
+        assert!((c.effective_delta() - 1.0 / 45e6).abs() < 1e-15);
+        c.delta = 1e-6;
+        assert_eq!(c.effective_delta(), 1e-6);
+    }
+
+    #[test]
+    fn file_loading() {
+        let dir = std::env::temp_dir().join("sde_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.cfg");
+        std::fs::write(&p, "# comment\nepsilon = 8.0\nsteps=5\n").unwrap();
+        let mut c = RunConfig::default();
+        c.load_file(&p).unwrap();
+        assert_eq!(c.epsilon, 8.0);
+        assert_eq!(c.steps, 5);
+    }
+}

@@ -1,0 +1,95 @@
+//! The algorithm menu of the paper's evaluation (§4.1.2).
+
+/// Which update policy governs the embedding tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// no clipping, no noise (the ε = ∞ reference)
+    NonPrivate,
+    /// vanilla DP-SGD: dense Gaussian noise on every coordinate (Eq. 1)
+    DpSgd,
+    /// DP-SGD with exponential selection [ZMH21] (baseline)
+    ExpSelection,
+    /// DP-FEST (§3.1): frequency-filtered pre-selected buckets
+    DpFest,
+    /// DP-AdaFEST (§3.2, Algorithm 1): adaptive per-batch filtering
+    DpAdaFest,
+    /// DP-AdaFEST+ (§4.2): DP-FEST pre-selection ∘ DP-AdaFEST
+    DpAdaFestPlus,
+}
+
+impl Algorithm {
+    pub fn is_private(self) -> bool {
+        self != Algorithm::NonPrivate
+    }
+
+    /// Does this algorithm spend budget on the contribution map (σ₁)?
+    pub fn uses_contribution_map(self) -> bool {
+        matches!(self, Algorithm::DpAdaFest | Algorithm::DpAdaFestPlus)
+    }
+
+    /// Does this algorithm use DP-FEST pre-selection?
+    pub fn uses_fest_selection(self) -> bool {
+        matches!(self, Algorithm::DpFest | Algorithm::DpAdaFestPlus)
+    }
+
+    pub fn all() -> [Algorithm; 6] {
+        [
+            Algorithm::NonPrivate,
+            Algorithm::DpSgd,
+            Algorithm::ExpSelection,
+            Algorithm::DpFest,
+            Algorithm::DpAdaFest,
+            Algorithm::DpAdaFestPlus,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::NonPrivate => "non-private",
+            Algorithm::DpSgd => "dp-sgd",
+            Algorithm::ExpSelection => "exp-selection",
+            Algorithm::DpFest => "dp-fest",
+            Algorithm::DpAdaFest => "dp-adafest",
+            Algorithm::DpAdaFestPlus => "dp-adafest-plus",
+        }
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "non-private" | "nonprivate" => Ok(Algorithm::NonPrivate),
+            "dp-sgd" | "dpsgd" => Ok(Algorithm::DpSgd),
+            "exp-selection" | "exponential" => Ok(Algorithm::ExpSelection),
+            "dp-fest" | "fest" => Ok(Algorithm::DpFest),
+            "dp-adafest" | "adafest" => Ok(Algorithm::DpAdaFest),
+            "dp-adafest-plus" | "adafest+" | "dp-adafest+" => Ok(Algorithm::DpAdaFestPlus),
+            other => anyhow::bail!(
+                "unknown algorithm {other} (want non-private|dp-sgd|exp-selection|dp-fest|dp-adafest|dp-adafest-plus)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for a in Algorithm::all() {
+            let parsed: Algorithm = a.name().parse().unwrap();
+            assert_eq!(parsed, a);
+        }
+    }
+
+    #[test]
+    fn predicates() {
+        assert!(!Algorithm::NonPrivate.is_private());
+        assert!(Algorithm::DpAdaFest.uses_contribution_map());
+        assert!(!Algorithm::DpFest.uses_contribution_map());
+        assert!(Algorithm::DpAdaFestPlus.uses_fest_selection());
+        assert!(Algorithm::DpAdaFestPlus.uses_contribution_map());
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! [`Trainer`] drives one model through DP training entirely from Rust:
+//! per step it (1) feeds params + batch to the AOT grads artifact, (2) runs
+//! the selected sparsity-preserving policy on the returned contribution map,
+//! (3) injects all Gaussian noise (σ₁ map noise, σ₂ gradient noise), and
+//! (4) applies row-sparse embedding updates + dense updates.  Privacy is
+//! wired through [`crate::accounting`]: given (ε, δ, q, T) the noise pair is
+//! calibrated once per run.
+//!
+//! [`Algorithm`] enumerates the paper's methods and baselines:
+//! `NonPrivate`, `DpSgd` (dense noise), `ExpSelection` [ZMH21], `DpFest`
+//! (§3.1), `DpAdaFest` (§3.2 / Algorithm 1), `DpAdaFestPlus` (§4.2).
+
+mod algorithm;
+mod streaming;
+mod trainer;
+
+pub use algorithm::Algorithm;
+pub use streaming::{StreamingOutcome, StreamingTrainer};
+pub use trainer::{StepStats, Trainer, TrainOutcome};

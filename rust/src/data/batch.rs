@@ -1,0 +1,111 @@
+//! Fixed-shape mini-batches and their conversion to artifact input tensors.
+
+use crate::runtime::HostTensor;
+
+/// A Criteo-style batch: `cat[b*F + f]` categorical bucket ids (per-feature
+/// local), `num[b*13 + j]` log-transformed numeric features, `y[b]` labels.
+#[derive(Clone, Debug)]
+pub struct PctrBatch {
+    pub batch_size: usize,
+    pub num_features: usize,
+    pub num_numeric: usize,
+    pub cat: Vec<i32>,
+    pub num: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+impl PctrBatch {
+    pub fn cat_of(&self, example: usize, feature: usize) -> i32 {
+        self.cat[example * self.num_features + feature]
+    }
+
+    /// The artifact's batch inputs, in manifest order (cat_idx, x_num, y).
+    pub fn to_tensors(&self) -> Vec<HostTensor> {
+        vec![
+            HostTensor::i32(vec![self.batch_size, self.num_features], self.cat.clone()),
+            HostTensor::f32(vec![self.batch_size, self.num_numeric], self.num.clone()),
+            HostTensor::f32(vec![self.batch_size], self.y.clone()),
+        ]
+    }
+
+    /// Per-example activated rows in the concatenated row space.
+    pub fn activated_rows(&self, row_offsets: &[usize]) -> Vec<Vec<u32>> {
+        (0..self.batch_size)
+            .map(|i| {
+                (0..self.num_features)
+                    .map(|f| (row_offsets[f] + self.cat_of(i, f) as usize) as u32)
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// A text-classification batch: `ids[b*T + t]` token ids, `labels[b]`.
+#[derive(Clone, Debug)]
+pub struct TextBatch {
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub ids: Vec<i32>,
+    pub labels: Vec<i32>,
+}
+
+impl TextBatch {
+    pub fn token(&self, example: usize, pos: usize) -> i32 {
+        self.ids[example * self.seq_len + pos]
+    }
+
+    pub fn to_tensors(&self) -> Vec<HostTensor> {
+        vec![
+            HostTensor::i32(vec![self.batch_size, self.seq_len], self.ids.clone()),
+            HostTensor::i32(vec![self.batch_size], self.labels.clone()),
+        ]
+    }
+
+    /// Per-example activated vocabulary rows (token ids; duplicates kept —
+    /// the contribution map dedups per example).
+    pub fn activated_rows(&self) -> Vec<Vec<u32>> {
+        (0..self.batch_size)
+            .map(|i| {
+                (0..self.seq_len)
+                    .map(|t| self.token(i, t) as u32)
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pctr_tensor_shapes() {
+        let b = PctrBatch {
+            batch_size: 2,
+            num_features: 3,
+            num_numeric: 13,
+            cat: vec![0, 1, 2, 3, 4, 5],
+            num: vec![0.0; 26],
+            y: vec![1.0, 0.0],
+        };
+        let ts = b.to_tensors();
+        assert_eq!(ts[0].dims(), &[2, 3]);
+        assert_eq!(ts[1].dims(), &[2, 13]);
+        assert_eq!(ts[2].dims(), &[2]);
+        assert_eq!(b.cat_of(1, 0), 3);
+    }
+
+    #[test]
+    fn activated_rows_offsets() {
+        let b = PctrBatch {
+            batch_size: 1,
+            num_features: 2,
+            num_numeric: 13,
+            cat: vec![1, 0],
+            num: vec![0.0; 13],
+            y: vec![0.0],
+        };
+        let rows = b.activated_rows(&[0, 10]);
+        assert_eq!(rows, vec![vec![1u32, 10u32]]);
+    }
+}

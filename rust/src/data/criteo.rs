@@ -1,0 +1,296 @@
+//! `SynthCriteo` — synthetic Criteo-pCTR stand-in (DESIGN.md §2).
+//!
+//! Matches the properties the paper's algorithms act on:
+//!
+//! * **Vocabulary sizes** — exactly Table 3 (`criteo-full`) or a scaled
+//!   config (`criteo-small`); per-feature embedding dims follow the paper's
+//!   `int(2·V^0.25)` rule upstream.
+//! * **Frequency skew** — bucket activations are Zipf(α_f) with per-feature
+//!   exponents in [0.9, 1.5]; a per-feature permutation decouples bucket id
+//!   from rank (frequent buckets are arbitrary ids, as in hashed real data).
+//! * **Labels** — sparse logistic teacher over bucket/numeric weights, so
+//!   models can genuinely learn (AUC well above 0.5) and per-bucket
+//!   information content correlates with frequency the way §3's intuition
+//!   assumes.
+//! * **Time-series drift** (§4.3) — day `d` re-ranks a drifting fraction of
+//!   buckets and perturbs the teacher, reproducing the non-stationarity that
+//!   separates streaming/first-day/all-days frequency sources (Fig. 5) and
+//!   makes DP training degrade with longer staleness (Table 5).
+
+use std::cell::RefCell;
+
+use crate::util::rng::Xoshiro256;
+
+use super::batch::PctrBatch;
+use super::zipf::ZipfSampler;
+
+/// The 24-day Criteo-1TB split the paper uses: first 18 days train,
+/// days 19–24 evaluate.
+pub const TRAIN_DAYS: usize = 18;
+pub const EVAL_DAYS: std::ops::Range<usize> = 18..24;
+
+#[derive(Clone, Debug)]
+pub struct CriteoConfig {
+    pub vocabs: Vec<usize>,
+    pub num_numeric: usize,
+    pub seed: u64,
+    /// enable per-day drift (time-series mode)
+    pub drift: bool,
+    /// fraction of bucket ranks re-permuted per day
+    pub drift_swap_frac: f64,
+    /// teacher weight perturbation per day
+    pub drift_teacher: f64,
+}
+
+impl CriteoConfig {
+    pub fn new(vocabs: Vec<usize>, seed: u64) -> Self {
+        CriteoConfig {
+            vocabs,
+            num_numeric: 13,
+            seed,
+            drift: false,
+            drift_swap_frac: 0.02,
+            drift_teacher: 0.03,
+        }
+    }
+
+    pub fn with_drift(mut self) -> Self {
+        self.drift = true;
+        self
+    }
+}
+
+struct DayState {
+    day: usize,
+    /// rank → bucket-id permutation per feature
+    perms: Vec<Vec<u32>>,
+    /// teacher bucket weights per feature (indexed by bucket id)
+    weights: Vec<Vec<f32>>,
+}
+
+pub struct SynthCriteo {
+    pub cfg: CriteoConfig,
+    samplers: Vec<ZipfSampler>,
+    alphas: Vec<f64>,
+    num_weights: Vec<f32>,
+    bias: f32,
+    /// cached state for the most recent day (training iterates day order)
+    day_state: RefCell<Option<DayState>>,
+}
+
+impl SynthCriteo {
+    pub fn new(cfg: CriteoConfig) -> Self {
+        let mut rng = Xoshiro256::seed_from(cfg.seed);
+        let alphas: Vec<f64> = (0..cfg.vocabs.len())
+            .map(|f| 0.9 + 0.6 * ((f * 7 + 3) % 10) as f64 / 10.0)
+            .collect();
+        let samplers = cfg
+            .vocabs
+            .iter()
+            .zip(&alphas)
+            .map(|(&v, &a)| ZipfSampler::new(v, a))
+            .collect();
+        let num_weights = (0..cfg.num_numeric)
+            .map(|_| rng.gauss() as f32 * 0.3)
+            .collect();
+        SynthCriteo {
+            cfg,
+            samplers,
+            alphas,
+            num_weights,
+            bias: -0.6, // skew towards negatives like real CTR data
+            day_state: RefCell::new(None),
+        }
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.cfg.vocabs.len()
+    }
+
+    pub fn zipf_alpha(&self, feature: usize) -> f64 {
+        self.alphas[feature]
+    }
+
+    fn build_day_state(&self, day: usize) -> DayState {
+        let mut perms = Vec::with_capacity(self.num_features());
+        let mut weights = Vec::with_capacity(self.num_features());
+        for (f, &v) in self.cfg.vocabs.iter().enumerate() {
+            // base permutation, deterministic per feature
+            let mut rng = Xoshiro256::seed_from(
+                self.cfg.seed ^ (f as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let mut perm: Vec<u32> = (0..v as u32).collect();
+            rng.shuffle(&mut perm);
+            // teacher weights per bucket: informative mass concentrated on
+            // frequent ranks (information correlates with frequency — the
+            // paper's core intuition in §3)
+            let mut w = vec![0f32; v];
+            for (rank, &bucket) in perm.iter().enumerate() {
+                let scale = 1.0 / (1.0 + rank as f32).sqrt();
+                w[bucket as usize] = rng.gauss() as f32 * 0.55 * scale;
+            }
+            if self.cfg.drift {
+                // cumulative per-day drift: swap a fraction of ranks and
+                // perturb weights, once per elapsed day
+                for d in 1..=day {
+                    let mut drng = Xoshiro256::seed_from(
+                        self.cfg.seed ^ 0xD1F7 ^ ((f * 131 + d) as u64),
+                    );
+                    let swaps = ((v as f64) * self.cfg.drift_swap_frac).ceil() as usize;
+                    for _ in 0..swaps {
+                        let a = drng.below(v as u64) as usize;
+                        let b = drng.below(v as u64) as usize;
+                        perm.swap(a, b);
+                    }
+                    for wv in w.iter_mut() {
+                        *wv += drng.gauss() as f32 * self.cfg.drift_teacher as f32 * 0.1;
+                    }
+                }
+            }
+            perms.push(perm);
+            weights.push(w);
+        }
+        DayState { day, perms, weights }
+    }
+
+    fn with_day_state<R>(&self, day: usize, f: impl FnOnce(&DayState) -> R) -> R {
+        let day = if self.cfg.drift { day } else { 0 };
+        {
+            let cached = self.day_state.borrow();
+            if let Some(st) = cached.as_ref() {
+                if st.day == day {
+                    return f(st);
+                }
+            }
+        }
+        let st = self.build_day_state(day);
+        let out = f(&st);
+        *self.day_state.borrow_mut() = Some(st);
+        out
+    }
+
+    /// Generate one batch for `day` (ignored unless drift is enabled).
+    pub fn batch(&self, day: usize, batch_size: usize, rng: &mut Xoshiro256) -> PctrBatch {
+        let nf = self.num_features();
+        let nn = self.cfg.num_numeric;
+        self.with_day_state(day, |st| {
+            let mut cat = Vec::with_capacity(batch_size * nf);
+            let mut num = Vec::with_capacity(batch_size * nn);
+            let mut y = Vec::with_capacity(batch_size);
+            for _ in 0..batch_size {
+                let mut logit = self.bias;
+                for f in 0..nf {
+                    let rank = self.samplers[f].sample(rng);
+                    let bucket = st.perms[f][rank];
+                    cat.push(bucket as i32);
+                    logit += st.weights[f][bucket as usize];
+                }
+                for j in 0..nn {
+                    // log-transformed integer features ≈ N(0,1)
+                    let x = rng.gauss() as f32;
+                    num.push(x);
+                    logit += self.num_weights[j] * x * 0.3;
+                }
+                let p = 1.0 / (1.0 + (-logit as f64).exp());
+                y.push(if rng.uniform() < p { 1.0 } else { 0.0 });
+            }
+            PctrBatch {
+                batch_size,
+                num_features: nf,
+                num_numeric: nn,
+                cat,
+                num,
+                y,
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SynthCriteo {
+        SynthCriteo::new(CriteoConfig::new(vec![50, 20, 8], 7))
+    }
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let g = tiny();
+        let mut rng = Xoshiro256::seed_from(1);
+        let b = g.batch(0, 64, &mut rng);
+        assert_eq!(b.cat.len(), 64 * 3);
+        assert_eq!(b.num.len(), 64 * 13);
+        assert_eq!(b.y.len(), 64);
+        for i in 0..64 {
+            for (f, &v) in [50i32, 20, 8].iter().enumerate() {
+                let c = b.cat_of(i, f);
+                assert!(c >= 0 && c < v, "feature {f} bucket {c}");
+            }
+        }
+        assert!(b.y.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn labels_are_learnable_not_constant() {
+        let g = tiny();
+        let mut rng = Xoshiro256::seed_from(2);
+        let b = g.batch(0, 2000, &mut rng);
+        let pos: f64 = b.y.iter().map(|&v| v as f64).sum::<f64>() / 2000.0;
+        assert!(pos > 0.1 && pos < 0.9, "degenerate positive rate {pos}");
+    }
+
+    #[test]
+    fn frequency_skew_present() {
+        // the most frequent bucket of feature 0 should dominate uniform rate
+        let g = tiny();
+        let mut rng = Xoshiro256::seed_from(3);
+        let b = g.batch(0, 5000, &mut rng);
+        let mut counts = vec![0u32; 50];
+        for i in 0..5000 {
+            counts[b.cat_of(i, 0) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64 / 5000.0;
+        assert!(max > 0.1, "no skew: top bucket rate {max}"); // uniform would be 0.02
+    }
+
+    #[test]
+    fn no_drift_means_stationary() {
+        let g = tiny();
+        let mut r1 = Xoshiro256::seed_from(4);
+        let mut r2 = Xoshiro256::seed_from(4);
+        let b0 = g.batch(0, 32, &mut r1);
+        let b9 = g.batch(9, 32, &mut r2);
+        assert_eq!(b0.cat, b9.cat); // same rng, same distribution
+    }
+
+    #[test]
+    fn drift_changes_distribution_gradually() {
+        let g = SynthCriteo::new(CriteoConfig::new(vec![500], 5).with_drift());
+        // estimate top-bucket sets across days; day 1 should overlap day 0
+        // strongly, day 20 much less
+        let top = |day: usize| -> Vec<u32> {
+            let mut rng = Xoshiro256::seed_from(100);
+            let b = g.batch(day, 4000, &mut rng);
+            let mut counts = vec![0u32; 500];
+            for i in 0..4000 {
+                counts[b.cat_of(i, 0) as usize] += 1;
+            }
+            let mut ids: Vec<u32> = (0..500).collect();
+            ids.sort_by_key(|&i| std::cmp::Reverse(counts[i as usize]));
+            ids.truncate(20);
+            ids.sort();
+            ids
+        };
+        let t0 = top(0);
+        let t1 = top(1);
+        let t20 = top(20);
+        let overlap = |a: &[u32], b: &[u32]| {
+            a.iter().filter(|x| b.contains(x)).count()
+        };
+        let o1 = overlap(&t0, &t1);
+        let o20 = overlap(&t0, &t20);
+        assert!(o1 >= 15, "day-1 overlap too small: {o1}/20");
+        assert!(o20 < o1, "drift not cumulative: day20 {o20} vs day1 {o1}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Synthetic data substrates standing in for the paper's datasets
+//! (DESIGN.md §2 documents each substitution):
+//!
+//! * [`criteo`] — `SynthCriteo`: 26 categorical features with the exact
+//!   Table-3 vocabulary sizes (or any scaled config), Zipf-distributed
+//!   bucket activations behind per-feature permutations, 13 numeric
+//!   features, labels from a sparse logistic teacher; a time-series mode
+//!   adds per-day distribution drift (Criteo-1TB stand-in, §4.3).
+//! * [`text`] — `SynthText`: Zipf token streams over a real-size vocabulary
+//!   (50,265 RoBERTa / 250,002 XLM-R) with a bag-of-tokens teacher
+//!   (SST-2/QNLI/QQP/XNLI stand-ins).
+//! * [`zipf`] — the shared Zipf(α) sampler.
+
+mod batch;
+mod criteo;
+mod text;
+mod zipf;
+
+pub use batch::{PctrBatch, TextBatch};
+pub use criteo::{CriteoConfig, SynthCriteo, EVAL_DAYS, TRAIN_DAYS};
+pub use text::{SynthText, TextConfig};
+pub use zipf::ZipfSampler;

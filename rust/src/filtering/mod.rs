@@ -1,0 +1,217 @@
+//! Contribution maps and noisy thresholding — Algorithm 1 lines 5–8.
+//!
+//! The contribution map `V_t = Σᵢ [vᵢ]_{C₁}` arrives either from the AOT
+//! artifact (the Pallas `contribution_map` kernel's dense count vector,
+//! small models) or is built natively from batch indices (full-Table-3-scale
+//! gradient-size simulations, where `c` is too big to round-trip densely).
+//! Both feed the same survivor selection: explicit Gaussian noise on the
+//! non-zero counts and Appendix-B.2 geometric sampling for zero-count false
+//! positives.
+
+use std::collections::HashMap;
+
+use crate::sparse::{survivors_dense, survivors_sparse, SurvivorStats};
+use crate::util::rng::Xoshiro256;
+
+/// Sparse batch-wise contribution map over `num_rows` concatenated rows.
+#[derive(Clone, Debug)]
+pub struct ContributionMap {
+    pub num_rows: usize,
+    /// sorted by row id, no duplicates
+    pub nonzero: Vec<(u32, f32)>,
+}
+
+impl ContributionMap {
+    /// Extract the non-zeros of a dense count vector (artifact output).
+    pub fn from_dense(counts: &[f32]) -> Self {
+        let nonzero = counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        ContributionMap { num_rows: counts.len(), nonzero }
+    }
+
+    /// Build natively from per-example activated rows (already offset into
+    /// the concatenated row space).  Each example's indicator vector is
+    /// l2-clipped to `c1`: an example activating `u` distinct rows
+    /// contributes `min(1, c1/√u)` to each of them (paper Alg. 1, line 5).
+    pub fn from_batch(examples: &[Vec<u32>], num_rows: usize, c1: f64) -> Self {
+        let mut acc: HashMap<u32, f32> = HashMap::new();
+        let mut scratch: Vec<u32> = Vec::new();
+        for ex in examples {
+            scratch.clear();
+            scratch.extend_from_slice(ex);
+            scratch.sort_unstable();
+            scratch.dedup();
+            let u = scratch.len();
+            if u == 0 {
+                continue;
+            }
+            let w = (c1 / (u as f64).sqrt()).min(1.0) as f32;
+            for &r in &scratch {
+                *acc.entry(r).or_insert(0.0) += w;
+            }
+        }
+        let mut nonzero: Vec<(u32, f32)> = acc.into_iter().collect();
+        nonzero.sort_unstable_by_key(|&(r, _)| r);
+        ContributionMap { num_rows, nonzero }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nonzero.len()
+    }
+
+    /// Total clipped mass (diagnostics; bounded by `B·C₁·√F` trivially and
+    /// by `B·min(1, C₁/√u)·u` per example).
+    pub fn total_mass(&self) -> f64 {
+        self.nonzero.iter().map(|&(_, v)| v as f64).sum()
+    }
+
+    /// Algorithm 1 lines 6–8: add `N(0, (σ₁C₁)²)` and threshold at τ.
+    /// `memory_efficient = true` uses the Appendix-B.2 sampler (O(nnz+FP));
+    /// `false` materialises the dense noisy vector (O(c) oracle).
+    pub fn survivors(
+        &self,
+        sigma1: f64,
+        c1: f64,
+        tau: f64,
+        memory_efficient: bool,
+        rng: &mut Xoshiro256,
+    ) -> (SurvivorSet, SurvivorStats) {
+        let (ids, stats) = if memory_efficient {
+            survivors_sparse(&self.nonzero, self.num_rows, sigma1, c1, tau, rng)
+        } else {
+            let mut dense = vec![0f32; self.num_rows];
+            for &(r, v) in &self.nonzero {
+                dense[r as usize] = v;
+            }
+            let (mut ids, stats) = survivors_dense(&dense, sigma1, c1, tau, rng);
+            ids.sort_unstable();
+            (ids, stats)
+        };
+        (SurvivorSet { ids }, stats)
+    }
+}
+
+/// Sorted survivor row set with O(log n) membership.
+#[derive(Clone, Debug, Default)]
+pub struct SurvivorSet {
+    ids: Vec<u32>,
+}
+
+impl SurvivorSet {
+    pub fn from_sorted(ids: Vec<u32>) -> Self {
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        SurvivorSet { ids }
+    }
+
+    pub fn all(num_rows: usize) -> Self {
+        SurvivorSet { ids: (0..num_rows as u32).collect() }
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.ids.binary_search(&id).is_ok()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// Intersect with another sorted set (DP-AdaFEST+ composes the FEST
+    /// pre-selection with the per-batch survivors).
+    pub fn intersect(&self, other: &SurvivorSet) -> SurvivorSet {
+        let mut out = Vec::with_capacity(self.len().min(other.len()));
+        let (mut i, mut j) = (0, 0);
+        while i < self.ids.len() && j < other.ids.len() {
+            match self.ids[i].cmp(&other.ids[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    out.push(self.ids[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        SurvivorSet { ids: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_batch_clips_per_example() {
+        // one example with 4 distinct rows, c1 = 1 ⇒ weight 0.5 each
+        let m = ContributionMap::from_batch(&[vec![1, 5, 9, 3]], 16, 1.0);
+        assert_eq!(m.nnz(), 4);
+        for &(_, v) in &m.nonzero {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+        // duplicate rows inside an example count once
+        let m2 = ContributionMap::from_batch(&[vec![2, 2, 2]], 16, 10.0);
+        assert_eq!(m2.nnz(), 1);
+        assert!((m2.nonzero[0].1 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_batch_accumulates_across_examples() {
+        let m = ContributionMap::from_batch(&[vec![7], vec![7], vec![7]], 8, 5.0);
+        assert_eq!(m.nnz(), 1);
+        assert!((m.nonzero[0].1 - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_dense_matches_from_batch() {
+        let mut dense = vec![0f32; 10];
+        dense[2] = 2.0;
+        dense[9] = 1.0;
+        let a = ContributionMap::from_dense(&dense);
+        let b = ContributionMap::from_batch(&[vec![2], vec![2], vec![9]], 10, 100.0);
+        assert_eq!(a.nonzero, b.nonzero);
+    }
+
+    #[test]
+    fn survivors_dense_and_sparse_same_interface() {
+        let m = ContributionMap::from_batch(&[vec![0], vec![0], vec![1]], 1000, 100.0);
+        let mut rng = Xoshiro256::seed_from(1);
+        // no noise: threshold separates counts exactly
+        let (s, _) = m.survivors(0.0, 1.0, 1.5, true, &mut rng);
+        assert_eq!(s.ids(), &[0]);
+        let (s2, _) = m.survivors(0.0, 1.0, 1.5, false, &mut rng);
+        assert_eq!(s2.ids(), &[0]);
+        assert!(s.contains(0) && !s.contains(1));
+    }
+
+    #[test]
+    fn intersect_is_sorted_intersection() {
+        let a = SurvivorSet::from_sorted(vec![1, 3, 5, 7, 9]);
+        let b = SurvivorSet::from_sorted(vec![3, 4, 5, 6, 7]);
+        assert_eq!(a.intersect(&b).ids(), &[3, 5, 7]);
+        assert_eq!(a.intersect(&SurvivorSet::default()).len(), 0);
+    }
+
+    #[test]
+    fn threshold_monotone_in_tau() {
+        // higher tau ⇒ (stochastically) fewer survivors; with shared seed
+        // and no noise it is deterministic
+        let examples: Vec<Vec<u32>> = (0..50).map(|i| vec![i % 10]).collect();
+        let m = ContributionMap::from_batch(&examples, 100, 100.0);
+        let mut r1 = Xoshiro256::seed_from(2);
+        let mut r2 = Xoshiro256::seed_from(2);
+        let (lo, _) = m.survivors(0.0, 1.0, 2.0, true, &mut r1);
+        let (hi, _) = m.survivors(0.0, 1.0, 6.0, true, &mut r2);
+        assert!(hi.len() <= lo.len());
+    }
+}

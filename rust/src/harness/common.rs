@@ -1,0 +1,178 @@
+//! Shared harness plumbing: configured single runs, sweep records, CSV
+//! output, and aligned-table printing.
+
+use std::fs;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::{Trainer, TrainOutcome};
+use crate::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
+use crate::runtime::Runtime;
+
+/// One sweep result: a flat (label → value) record.
+#[derive(Clone, Debug, Default)]
+pub struct SweepRow {
+    pub fields: Vec<(String, String)>,
+}
+
+impl SweepRow {
+    pub fn push(&mut self, key: &str, value: impl std::fmt::Display) {
+        self.fields.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.parse().ok()
+    }
+}
+
+/// Write rows as CSV under `results/` and return the path.
+pub fn write_csv(name: &str, rows: &[SweepRow]) -> Result<PathBuf> {
+    fs::create_dir_all("results").context("creating results/")?;
+    let path = PathBuf::from(format!("results/{name}.csv"));
+    let mut out = String::new();
+    if let Some(first) = rows.first() {
+        let header: Vec<&str> = first.fields.iter().map(|(k, _)| k.as_str()).collect();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for r in rows {
+            let vals: Vec<&str> = r.fields.iter().map(|(_, v)| v.as_str()).collect();
+            out.push_str(&vals.join(","));
+            out.push('\n');
+        }
+    }
+    fs::write(&path, out).with_context(|| format!("writing {path:?}"))?;
+    println!("[csv] wrote {} rows to {}", rows.len(), path.display());
+    Ok(path)
+}
+
+/// Print rows as an aligned text table.
+pub fn print_table(title: &str, rows: &[SweepRow]) {
+    println!("\n== {title} ==");
+    let Some(first) = rows.first() else {
+        println!("(no rows)");
+        return;
+    };
+    let keys: Vec<&str> = first.fields.iter().map(|(k, _)| k.as_str()).collect();
+    let mut widths: Vec<usize> = keys.iter().map(|k| k.len()).collect();
+    for r in rows {
+        for (i, (_, v)) in r.fields.iter().enumerate() {
+            widths[i] = widths[i].max(v.len());
+        }
+    }
+    let header: Vec<String> = keys
+        .iter()
+        .zip(&widths)
+        .map(|(k, w)| format!("{k:>w$}"))
+        .collect();
+    println!("{}", header.join("  "));
+    for r in rows {
+        let vals: Vec<String> = r
+            .fields
+            .iter()
+            .zip(&widths)
+            .map(|((_, v), w)| format!("{v:>w$}"))
+            .collect();
+        println!("{}", vals.join("  "));
+    }
+}
+
+/// Build the data generator matching a manifest model and run one training.
+pub fn train_once(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
+    let model = rt.manifest.model(&cfg.model)?;
+    let mut trainer = Trainer::new(cfg.clone(), rt)?;
+    match model.kind.as_str() {
+        "pctr" => {
+            let vocabs = model.attr_usize_list("vocabs")?;
+            let gen = SynthCriteo::new(CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A));
+            trainer.run_pctr(&gen)
+        }
+        "nlu" => {
+            let vocab = model.attr_usize("vocab")?;
+            let seq_len = model.attr_usize("seq_len")?;
+            let classes = model.attr_usize("num_classes")?;
+            let gen = SynthText::new(TextConfig::new(
+                vocab,
+                seq_len,
+                classes,
+                cfg.seed ^ 0xDA7A,
+            ));
+            trainer.run_text(&gen)
+        }
+        other => anyhow::bail!("unknown model kind {other}"),
+    }
+}
+
+/// A (description, outcome) pair from a hyper-parameter sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    pub outcome: TrainOutcome,
+}
+
+/// Best gradient-size reduction among points whose utility is within
+/// `max_loss` of `baseline_utility` (the paper's Figure-3 y-axis).
+pub fn best_reduction_within(
+    points: &[SweepPoint],
+    baseline_utility: f64,
+    max_loss: f64,
+) -> Option<(f64, &SweepPoint)> {
+    points
+        .iter()
+        .filter(|p| baseline_utility - p.outcome.utility <= max_loss)
+        .map(|p| (p.outcome.reduction_factor, p))
+        .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(label: &str, utility: f64, reduction: f64) -> SweepPoint {
+        SweepPoint {
+            label: label.into(),
+            outcome: TrainOutcome {
+                loss_history: vec![],
+                utility,
+                eval_loss: 0.0,
+                emb_grad_coords_per_step: 0.0,
+                reduction_factor: reduction,
+                sigma1: 0.0,
+                sigma2: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn best_reduction_respects_threshold() {
+        let pts = vec![
+            pt("a", 0.75, 10.0),
+            pt("b", 0.748, 100.0),
+            pt("c", 0.70, 100000.0),
+        ];
+        let (r, p) = best_reduction_within(&pts, 0.75, 0.005).unwrap();
+        assert_eq!(r, 100.0);
+        assert_eq!(p.label, "b");
+        let (r2, _) = best_reduction_within(&pts, 0.75, 0.1).unwrap();
+        assert_eq!(r2, 100000.0);
+        assert!(best_reduction_within(&pts, 0.9, 0.001).is_none());
+    }
+
+    #[test]
+    fn sweep_row_roundtrip() {
+        let mut r = SweepRow::default();
+        r.push("x", 1.5);
+        r.push("name", "foo");
+        assert_eq!(r.get_f64("x"), Some(1.5));
+        assert_eq!(r.get("name"), Some("foo"));
+        assert_eq!(r.get("missing"), None);
+    }
+}

@@ -1,0 +1,74 @@
+//! Figure 1b — embedding gradient sparsity of the Criteo pCTR model.
+//!
+//! At full Table-3 scale: B = 2048, 50 update steps; report mean gradient
+//! sparsity (fraction of *zero* gradient rows) for the five
+//! highest-vocabulary categorical features and over all features.  This is
+//! a pure data-path computation (sparsity is a property of activations).
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::data::{CriteoConfig, SynthCriteo};
+use crate::util::rng::Xoshiro256;
+
+use super::common::{print_table, write_csv, SweepRow};
+
+/// Table-3 vocabulary sizes (criteo-full).
+pub const CRITEO_VOCABS: [usize; 26] = [
+    1472, 577, 82741, 18940, 305, 23, 1172, 633, 3, 9090, 5918, 64300, 3207, 27,
+    1550, 44262, 10, 5485, 2161, 3, 56473, 17, 15, 27360, 104, 12934,
+];
+
+pub fn run(cfg: &RunConfig, fast: bool) -> Result<()> {
+    let steps = if fast { 10 } else { 50 };
+    let batch = if fast { 512 } else { 2048 };
+    let vocabs = CRITEO_VOCABS.to_vec();
+    let gen = SynthCriteo::new(CriteoConfig::new(vocabs.clone(), cfg.seed));
+    let mut rng = Xoshiro256::seed_from(cfg.seed ^ 0xF161);
+
+    // per-feature: mean over steps of (distinct activated rows / vocab)
+    let nf = vocabs.len();
+    let mut sparsity_sum = vec![0f64; nf];
+    let mut all_rows_sum = 0f64;
+    let total_vocab: usize = vocabs.iter().sum();
+    for _ in 0..steps {
+        let b = gen.batch(0, batch, &mut rng);
+        let mut step_rows = 0usize;
+        for f in 0..nf {
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..batch {
+                seen.insert(b.cat_of(i, f));
+            }
+            sparsity_sum[f] += 1.0 - seen.len() as f64 / vocabs[f] as f64;
+            step_rows += seen.len();
+        }
+        all_rows_sum += 1.0 - step_rows as f64 / total_vocab as f64;
+    }
+
+    // the paper plots the top-5 vocab features + "all"
+    let mut order: Vec<usize> = (0..nf).collect();
+    order.sort_by_key(|&f| std::cmp::Reverse(vocabs[f]));
+    let mut rows = Vec::new();
+    for &f in order.iter().take(5) {
+        let mut r = SweepRow::default();
+        r.push("feature", format!("categorical-feature-{}", 14 + f));
+        r.push("vocab", vocabs[f]);
+        r.push("grad_sparsity", format!("{:.6}", sparsity_sum[f] / steps as f64));
+        rows.push(r);
+    }
+    let mut r = SweepRow::default();
+    r.push("feature", "all-26-features");
+    r.push("vocab", total_vocab);
+    r.push("grad_sparsity", format!("{:.6}", all_rows_sum / steps as f64));
+    rows.push(r);
+
+    print_table(
+        &format!("Figure 1b: embedding gradient sparsity (B={batch}, {steps} steps)"),
+        &rows,
+    );
+    write_csv("fig1b_sparsity", &rows)?;
+    println!(
+        "\npaper shape check: sparsity > 0.95 for large-vocab features, near 1.0 overall"
+    );
+    Ok(())
+}

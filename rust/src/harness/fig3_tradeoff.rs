@@ -1,0 +1,201 @@
+//! Figure 3 — best gradient-size reduction vs utility-loss threshold, per
+//! algorithm — and Figure 8 — the underlying utility/efficiency scatter.
+//!
+//! Protocol (paper §4.2): train DP-SGD as the utility reference; sweep each
+//! sparsity-preserving algorithm's knobs (k for DP-FEST; σ₁/σ₂, τ, C₁ for
+//! DP-AdaFEST; m for exponential selection); for every utility-loss
+//! threshold report the best reduction achieved within it.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::Algorithm;
+use crate::runtime::Runtime;
+
+use super::common::{
+    best_reduction_within, print_table, train_once, write_csv, SweepPoint, SweepRow,
+};
+
+pub const LOSS_THRESHOLDS: [f64; 5] = [0.001, 0.002, 0.005, 0.01, 0.02];
+
+/// Hyper-parameter grids per algorithm (paper Appendix D.1).
+pub fn sweep_algorithm(
+    base: &RunConfig,
+    rt: &Runtime,
+    algo: Algorithm,
+    fast: bool,
+) -> Result<Vec<SweepPoint>> {
+    let mut points = Vec::new();
+    let mut run = |label: String, cfg: RunConfig| -> Result<()> {
+        let outcome = train_once(&cfg, rt)?;
+        println!(
+            "  [{}] {label}: utility={:.4} reduction={:.1}x (sig1={:.2} sig2={:.2})",
+            algo.name(),
+            outcome.utility,
+            outcome.reduction_factor,
+            outcome.sigma1,
+            outcome.sigma2
+        );
+        points.push(SweepPoint { label, outcome });
+        Ok(())
+    };
+
+    match algo {
+        Algorithm::DpFest | Algorithm::DpAdaFestPlus => {
+            let ks: &[usize] = if fast {
+                &[512, 4096]
+            } else {
+                &[128, 512, 2048, 8192, 32768]
+            };
+            let (ratios, taus): (&[f64], &[f64]) = if algo == Algorithm::DpAdaFestPlus {
+                if fast {
+                    (&[5.0], &[5.0])
+                } else {
+                    (&[2.0, 5.0], &[1.0, 5.0, 20.0])
+                }
+            } else {
+                (&[5.0], &[0.0])
+            };
+            for &k in ks {
+                for &ratio in ratios {
+                    for &tau in taus {
+                        let mut cfg = base.clone();
+                        cfg.algorithm = algo;
+                        cfg.fest_top_k = k;
+                        cfg.sigma_ratio = ratio;
+                        cfg.tau = tau;
+                        run(format!("k={k},ratio={ratio},tau={tau}"), cfg)?;
+                    }
+                }
+            }
+        }
+        Algorithm::DpAdaFest => {
+            let ratios: &[f64] = if fast { &[5.0] } else { &[1.0, 2.0, 5.0, 10.0] };
+            let taus: &[f64] = if fast {
+                &[1.0, 10.0]
+            } else {
+                &[0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0]
+            };
+            let c1s: &[f64] = if fast { &[1.0] } else { &[1.0] };
+            for &ratio in ratios {
+                for &tau in taus {
+                    for &c1 in c1s {
+                        let mut cfg = base.clone();
+                        cfg.algorithm = algo;
+                        cfg.sigma_ratio = ratio;
+                        cfg.tau = tau;
+                        cfg.c1 = c1;
+                        run(format!("ratio={ratio},tau={tau},c1={c1}"), cfg)?;
+                    }
+                }
+            }
+        }
+        Algorithm::ExpSelection => {
+            let ms: &[usize] = if fast {
+                &[1024]
+            } else {
+                &[256, 1024, 4096, 16384]
+            };
+            for &m in ms {
+                let mut cfg = base.clone();
+                cfg.algorithm = algo;
+                cfg.exp_select_m = m;
+                run(format!("m={m}"), cfg)?;
+            }
+        }
+        other => {
+            let mut cfg = base.clone();
+            cfg.algorithm = other;
+            run(other.name().to_string(), cfg)?;
+        }
+    }
+    Ok(points)
+}
+
+pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
+    let mut base = cfg.clone();
+    if fast {
+        base.steps = base.steps.min(60);
+        base.eval_batches = base.eval_batches.min(10);
+    }
+    println!("Figure 3 sweep on {} ({})", base.model, base.summary());
+
+    let mut dpsgd_cfg = base.clone();
+    dpsgd_cfg.algorithm = Algorithm::DpSgd;
+    let baseline = train_once(&dpsgd_cfg, rt)?;
+    println!(
+        "DP-SGD baseline: utility={:.4} (reduction 1x by definition)",
+        baseline.utility
+    );
+
+    let algos = [
+        Algorithm::DpAdaFest,
+        Algorithm::DpFest,
+        Algorithm::ExpSelection,
+    ];
+    let mut rows = Vec::new();
+    let mut all_points = Vec::new();
+    for algo in algos {
+        let points = sweep_algorithm(&base, rt, algo, fast)?;
+        for &thr in &LOSS_THRESHOLDS {
+            let mut r = SweepRow::default();
+            r.push("algorithm", algo.name());
+            r.push("utility_loss_threshold", thr);
+            match best_reduction_within(&points, baseline.utility, thr) {
+                Some((red, p)) => {
+                    r.push("best_reduction", format!("{red:.2}"));
+                    r.push("at", &p.label);
+                    r.push("utility", format!("{:.4}", p.outcome.utility));
+                }
+                None => {
+                    r.push("best_reduction", "none");
+                    r.push("at", "-");
+                    r.push("utility", "-");
+                }
+            }
+            rows.push(r);
+        }
+        all_points.push((algo, points));
+    }
+    print_table("Figure 3: best reduction vs utility-loss threshold", &rows);
+    write_csv(&format!("fig3_{}", base.model), &rows)?;
+    println!("\npaper shape check: DP-AdaFEST ≥ DP-FEST ≫ exp-selection at every threshold");
+    Ok(())
+}
+
+/// Figure 8 — the raw scatter of every sweep point.
+pub fn run_scatter(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
+    let mut base = cfg.clone();
+    if fast {
+        base.steps = base.steps.min(60);
+        base.eval_batches = base.eval_batches.min(10);
+    }
+    let mut dpsgd_cfg = base.clone();
+    dpsgd_cfg.algorithm = Algorithm::DpSgd;
+    let baseline = train_once(&dpsgd_cfg, rt)?;
+
+    let mut rows = Vec::new();
+    let mut r0 = SweepRow::default();
+    r0.push("algorithm", "dp-sgd");
+    r0.push("label", "baseline");
+    r0.push("utility", format!("{:.4}", baseline.utility));
+    r0.push("reduction", "1.0");
+    rows.push(r0);
+    for algo in [
+        Algorithm::DpAdaFest,
+        Algorithm::DpFest,
+        Algorithm::ExpSelection,
+    ] {
+        for p in sweep_algorithm(&base, rt, algo, fast)? {
+            let mut r = SweepRow::default();
+            r.push("algorithm", algo.name());
+            r.push("label", &p.label);
+            r.push("utility", format!("{:.4}", p.outcome.utility));
+            r.push("reduction", format!("{:.2}", p.outcome.reduction_factor));
+            rows.push(r);
+        }
+    }
+    print_table("Figure 8: utility/efficiency scatter", &rows);
+    write_csv(&format!("fig8_{}", base.model), &rows)?;
+    Ok(())
+}

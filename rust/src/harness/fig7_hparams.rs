@@ -1,0 +1,97 @@
+//! Figure 7 — effect of σ₁/σ₂ and τ on utility and embedding gradient size
+//! — and Figure 9 — their joint heatmap.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::Algorithm;
+use crate::runtime::Runtime;
+
+use super::common::{print_table, train_once, write_csv, SweepRow};
+
+pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, heatmap: bool) -> Result<()> {
+    let mut base = cfg.clone();
+    base.algorithm = Algorithm::DpAdaFest;
+    if fast {
+        base.steps = base.steps.min(60);
+        base.eval_batches = base.eval_batches.min(10);
+    }
+
+    let ratios: &[f64] = if fast {
+        &[0.5, 5.0]
+    } else {
+        &[0.1, 0.5, 1.0, 2.0, 5.0, 10.0]
+    };
+    let taus: &[f64] = if fast {
+        &[1.0, 20.0]
+    } else {
+        &[0.5, 1.0, 5.0, 10.0, 20.0, 50.0, 100.0]
+    };
+
+    let mut rows = Vec::new();
+    if heatmap {
+        // Figure 9: full ratio × tau grid
+        for &ratio in ratios {
+            for &tau in taus {
+                let mut c = base.clone();
+                c.sigma_ratio = ratio;
+                c.tau = tau;
+                let out = train_once(&c, rt)?;
+                let mut r = SweepRow::default();
+                r.push("sigma_ratio", ratio);
+                r.push("tau", tau);
+                r.push("utility", format!("{:.4}", out.utility));
+                r.push("emb_coords_per_step", format!("{:.0}", out.emb_grad_coords_per_step));
+                r.push("reduction", format!("{:.2}", out.reduction_factor));
+                println!(
+                    "  [fig9] ratio={ratio} tau={tau}: utility={:.4} size={:.0}",
+                    out.utility, out.emb_grad_coords_per_step
+                );
+                rows.push(r);
+            }
+        }
+        print_table("Figure 9: joint ratio × tau heatmap", &rows);
+        write_csv(&format!("fig9_{}", base.model), &rows)?;
+        return Ok(());
+    }
+
+    // Figure 7 left: vary ratio at fixed tau
+    for &ratio in ratios {
+        let mut c = base.clone();
+        c.sigma_ratio = ratio;
+        let out = train_once(&c, rt)?;
+        let mut r = SweepRow::default();
+        r.push("knob", "sigma_ratio");
+        r.push("value", ratio);
+        r.push("utility", format!("{:.4}", out.utility));
+        r.push("emb_coords_per_step", format!("{:.0}", out.emb_grad_coords_per_step));
+        println!(
+            "  [fig7] ratio={ratio}: utility={:.4} size={:.0}",
+            out.utility, out.emb_grad_coords_per_step
+        );
+        rows.push(r);
+    }
+    // Figure 7 right: vary tau at fixed ratio
+    for &tau in taus {
+        let mut c = base.clone();
+        c.tau = tau;
+        let out = train_once(&c, rt)?;
+        let mut r = SweepRow::default();
+        r.push("knob", "tau");
+        r.push("value", tau);
+        r.push("utility", format!("{:.4}", out.utility));
+        r.push("emb_coords_per_step", format!("{:.0}", out.emb_grad_coords_per_step));
+        println!(
+            "  [fig7] tau={tau}: utility={:.4} size={:.0}",
+            out.utility, out.emb_grad_coords_per_step
+        );
+        rows.push(r);
+    }
+    print_table("Figure 7: hyper-parameter effects", &rows);
+    write_csv(&format!("fig7_{}", base.model), &rows)?;
+    println!(
+        "\npaper shape check: larger ratio → higher utility & larger grad size; \
+         larger tau → smaller grad size, sharp utility drop only at extreme tau"
+    );
+    Ok(())
+}

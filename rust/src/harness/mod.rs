@@ -1,0 +1,48 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §4).
+//! Each produces the same rows/series the paper reports, printed as aligned
+//! text and written as CSV under `results/`.
+
+mod common;
+mod fig1_sparsity;
+mod fig3_tradeoff;
+mod fig4_combined;
+mod fig5_timeseries;
+mod fig7_hparams;
+mod fullscale;
+mod lemma31;
+mod tab1_lora;
+mod tab2_vocab;
+mod tab4_wallclock;
+mod tab5_streaming;
+mod tab6_frozen;
+
+pub use common::{write_csv, SweepRow};
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::runtime::Runtime;
+
+/// Dispatch a named experiment.  `fast` scales the sweep down for CI.
+pub fn run_experiment(name: &str, cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
+    match name {
+        "fig1b" => fig1_sparsity::run(cfg, fast),
+        "fig3" => fig3_tradeoff::run(cfg, rt, fast),
+        "fig4" => fig4_combined::run(cfg, rt, fast),
+        "fig5" => fig5_timeseries::run(cfg, rt, fast, false),
+        "fig6" => fig5_timeseries::run(cfg, rt, fast, true),
+        "fig7" => fig7_hparams::run(cfg, rt, fast, false),
+        "fig8" => fig3_tradeoff::run_scatter(cfg, rt, fast),
+        "fig9" => fig7_hparams::run(cfg, rt, fast, true),
+        "tab1" => tab1_lora::run(cfg, rt, fast),
+        "tab2" => tab2_vocab::run(cfg, rt, fast),
+        "tab4" => tab4_wallclock::run(fast),
+        "tab5" => tab5_streaming::run(cfg, rt, fast),
+        "tab6" => tab6_frozen::run(cfg, rt, fast),
+        "lemma31" => lemma31::run(fast),
+        "fullscale" => fullscale::run(cfg.seed, fast),
+        other => bail!(
+            "unknown experiment {other} (want fig1b|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab6|lemma31|fullscale)"
+        ),
+    }
+}

@@ -1,0 +1,37 @@
+//! # sparse_dp_emb
+//!
+//! Reproduction of **"Sparsity-Preserving Differentially Private Training of
+//! Large Embedding Models"** (Ghazi et al., NeurIPS 2023) as a three-layer
+//! Rust + JAX + Pallas training framework:
+//!
+//! * **L1** — Pallas kernels (embedding gather, per-example clipping,
+//!   contribution-map scatter) authored in `python/compile/kernels/`,
+//!   validated against pure-jnp oracles, lowered AOT.
+//! * **L2** — JAX step computations (pCTR tower, transformer + LoRA) lowered
+//!   once to HLO text by `python/compile/aot.py`.
+//! * **L3** — this crate: the training coordinator.  It owns the parameter
+//!   store, mini-batch scheduling, all DP randomness (contribution-map noise
+//!   σ₁, gradient noise σ₂), sparse row updates, privacy accounting, and the
+//!   experiment harness reproducing every table and figure of the paper.
+//!
+//! Python never runs on the training path: `make artifacts` is a one-time
+//! build step and the resulting binary is self-contained.
+//!
+//! Entry points: [`coordinator::Trainer`] for training, [`harness`] for
+//! paper-experiment reproduction, `sparse-dp-emb` (see `main.rs`) for the
+//! CLI.
+
+pub mod accounting;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod filtering;
+pub mod harness;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod selection;
+pub mod sparse;
+pub mod util;
+
+pub mod proptest;

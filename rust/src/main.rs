@@ -1,0 +1,206 @@
+//! `sparse-dp-emb` — launcher CLI for the DP-FEST / DP-AdaFEST training
+//! framework.
+//!
+//! ```text
+//! sparse-dp-emb train   [--model criteo-small] [--algorithm dp-adafest] [--epsilon 1.0] ...
+//! sparse-dp-emb stream  [--streaming-period 1] [--freq-source streaming] ...
+//! sparse-dp-emb sweep   <fig1b|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab6|lemma31> [--fast]
+//! sparse-dp-emb account [--epsilon 1.0] [--steps 200] ...   # privacy accounting only
+//! sparse-dp-emb info                                        # manifest / artifact inventory
+//! ```
+//!
+//! Any `RunConfig` field can be overridden with `--key value`; `--config
+//! path` loads a `key = value` file first.
+
+use anyhow::{bail, Context, Result};
+
+use sparse_dp_emb::accounting::{calibrate_sigma_pair, Accountant};
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{StreamingTrainer, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
+use sparse_dp_emb::harness;
+use sparse_dp_emb::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+
+    // --config file is applied before other flags
+    let mut cfg = RunConfig::default();
+    if let Some(pos) = args.iter().position(|a| a == "--config") {
+        let path = args
+            .get(pos + 1)
+            .context("--config needs a path")?
+            .clone();
+        args.drain(pos..=pos + 1);
+        cfg.load_file(std::path::Path::new(&path))?;
+    }
+    let fast = if let Some(pos) = args.iter().position(|a| a == "--fast") {
+        args.remove(pos);
+        true
+    } else {
+        false
+    };
+    let positional = cfg.apply_args(&args)?;
+    let Some(command) = positional.first() else {
+        print_usage();
+        bail!("no command given");
+    };
+
+    match command.as_str() {
+        "train" => cmd_train(&cfg),
+        "stream" => cmd_stream(&cfg),
+        "sweep" => {
+            let exp = positional
+                .get(1)
+                .context("sweep needs an experiment id (e.g. fig3)")?;
+            let rt = Runtime::new(&cfg.artifacts_dir)?;
+            harness::run_experiment(exp, &cfg, &rt, fast)
+        }
+        "account" => cmd_account(&cfg),
+        "info" => cmd_info(&cfg),
+        other => {
+            print_usage();
+            bail!("unknown command {other}");
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: sparse-dp-emb <train|stream|sweep|account|info> [--key value ...] [--fast]\n\
+         see rust/src/main.rs docs for the command list"
+    );
+}
+
+fn cmd_train(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    println!("[train] platform={} {}", rt.platform(), cfg.summary());
+    let model = rt.manifest.model(&cfg.model)?.clone();
+    let mut trainer = Trainer::new(cfg.clone(), &rt)?;
+    println!(
+        "[train] sigma1={:.4} sigma2={:.4} (q={:.2e}, T={})",
+        trainer.sigma1,
+        trainer.sigma2,
+        trainer.batch_size() as f64 / cfg.dataset_size as f64,
+        cfg.steps
+    );
+    let outcome = match model.kind.as_str() {
+        "pctr" => {
+            let vocabs = model.attr_usize_list("vocabs")?;
+            let gen = SynthCriteo::new(CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A));
+            trainer.run_pctr(&gen)?
+        }
+        "nlu" => {
+            let gen = SynthText::new(TextConfig::new(
+                model.attr_usize("vocab")?,
+                model.attr_usize("seq_len")?,
+                model.attr_usize("num_classes")?,
+                cfg.seed ^ 0xDA7A,
+            ));
+            trainer.run_text(&gen)?
+        }
+        other => bail!("unknown model kind {other}"),
+    };
+    report(&outcome, &rt);
+    Ok(())
+}
+
+fn cmd_stream(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    let model = rt.manifest.model(&cfg.model)?.clone();
+    if model.kind != "pctr" {
+        bail!("stream mode is for pctr models");
+    }
+    let vocabs = model.attr_usize_list("vocabs")?;
+    let gen = SynthCriteo::new(CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A).with_drift());
+    let trainer = Trainer::new(cfg.clone(), &rt)?;
+    println!(
+        "[stream] {} period={} source={:?}",
+        cfg.summary(),
+        cfg.streaming_period,
+        cfg.freq_source
+    );
+    let mut st = StreamingTrainer::new(trainer, cfg.eval_batches.max(2) / 2);
+    let out = st.run(&gen)?;
+    println!("[stream] per-eval-day AUC: {:?}", out.per_day_auc);
+    println!("[stream] reselections: {}", out.reselections);
+    report(&out.outcome, &rt);
+    Ok(())
+}
+
+fn cmd_account(cfg: &RunConfig) -> Result<()> {
+    let q = 128.0 / cfg.dataset_size as f64; // criteo-small batch default
+    let delta = cfg.effective_delta();
+    println!(
+        "[account] target eps={} delta={delta:.2e} q={q:.2e} T={}",
+        cfg.epsilon, cfg.steps
+    );
+    let pair = calibrate_sigma_pair(cfg.epsilon, delta, q, cfg.steps, cfg.sigma_ratio)?;
+    let eff = sparse_dp_emb::accounting::compose_sigmas(pair.sigma1, pair.sigma2);
+    println!(
+        "[account] sigma_eff={eff:.4}  sigma1={:.4} sigma2={:.4} (ratio {})",
+        pair.sigma1, pair.sigma2, cfg.sigma_ratio
+    );
+    let achieved = Accountant::new(eff, q, cfg.steps).epsilon(delta);
+    println!("[account] achieved eps at that sigma: {achieved:.4}");
+    Ok(())
+}
+
+fn cmd_info(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    println!("platform: {}", rt.platform());
+    println!("\nmodels:");
+    let mut models: Vec<_> = rt.manifest.models.values().collect();
+    models.sort_by_key(|m| m.name.clone());
+    for m in models {
+        let total: usize = m.params.iter().map(|p| p.dims.iter().product::<usize>()).sum();
+        let trainable: usize = m
+            .params
+            .iter()
+            .filter(|p| p.trainable)
+            .map(|p| p.dims.iter().product::<usize>())
+            .sum();
+        println!(
+            "  {:<28} kind={:<5} params={:>9} trainable={:>9}",
+            m.name, m.kind, total, trainable
+        );
+    }
+    println!("\nartifacts:");
+    let mut arts: Vec<_> = rt.manifest.artifacts.values().collect();
+    arts.sort_by_key(|a| a.name.clone());
+    for a in arts {
+        println!(
+            "  {:<28} model={:<28} inputs={:>2} outputs={:>2}",
+            a.name,
+            a.model,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn report(outcome: &sparse_dp_emb::coordinator::TrainOutcome, rt: &Runtime) {
+    println!("\n=== outcome ===");
+    println!("utility (AUC/acc):      {:.4}", outcome.utility);
+    println!("eval loss:              {:.4}", outcome.eval_loss);
+    println!(
+        "first/last train loss:  {:.4} -> {:.4}",
+        outcome.loss_history.first().copied().unwrap_or(f64::NAN),
+        outcome.loss_history.last().copied().unwrap_or(f64::NAN)
+    );
+    println!(
+        "emb grad coords/step:   {:.1}",
+        outcome.emb_grad_coords_per_step
+    );
+    println!("grad size reduction:    {:.2}x", outcome.reduction_factor);
+    println!(
+        "noise: sigma1={:.4} sigma2={:.4}",
+        outcome.sigma1, outcome.sigma2
+    );
+    let s = rt.stats();
+    println!(
+        "runtime: {} execs, marshal-in {:?}, execute {:?}, marshal-out {:?}",
+        s.executions, s.marshal_in, s.execute, s.marshal_out
+    );
+}

@@ -1,0 +1,173 @@
+//! Evaluation metrics: exact AUC (the pCTR metric), log-loss, accuracy.
+
+/// Exact ROC AUC by rank statistics with proper tie handling
+/// (Mann–Whitney U).  `scores` are arbitrary reals, `labels` 0/1.
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+
+    // average ranks over tie groups (1-based ranks)
+    let mut rank = vec![0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j + 2) as f64 / 2.0;
+        for k in i..=j {
+            rank[order[k]] = avg;
+        }
+        i = j + 1;
+    }
+
+    let pos: f64 = labels.iter().map(|&y| y as f64).sum();
+    let neg = n as f64 - pos;
+    if pos == 0.0 || neg == 0.0 {
+        return f64::NAN;
+    }
+    let rank_sum_pos: f64 = (0..n).filter(|&i| labels[i] > 0.5).map(|i| rank[i]).sum();
+    (rank_sum_pos - pos * (pos + 1.0) / 2.0) / (pos * neg)
+}
+
+/// Mean binary cross-entropy from logits.
+pub fn logloss_from_logits(logits: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(logits.len(), labels.len());
+    let mut total = 0.0;
+    for (&z, &y) in logits.iter().zip(labels) {
+        let z = z as f64;
+        let y = y as f64;
+        // softplus(z) - y*z, stable
+        let sp = if z > 30.0 { z } else { (1.0 + z.exp()).ln() };
+        total += sp - y * z;
+    }
+    total / logits.len() as f64
+}
+
+/// Multi-class accuracy from per-class logits (row-major `[n, c]`).
+pub fn accuracy_from_logits(logits: &[f32], labels: &[i32], num_classes: usize) -> f64 {
+    let n = labels.len();
+    assert_eq!(logits.len(), n * num_classes);
+    let mut correct = 0;
+    for i in 0..n {
+        let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred as i32 == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Accumulates (score, label) pairs across eval batches.
+#[derive(Clone, Debug, Default)]
+pub struct EvalAccumulator {
+    pub scores: Vec<f32>,
+    pub labels: Vec<f32>,
+    pub loss_sum: f64,
+    pub batches: usize,
+}
+
+impl EvalAccumulator {
+    pub fn push(&mut self, scores: &[f32], labels: &[f32], loss: f64) {
+        self.scores.extend_from_slice(scores);
+        self.labels.extend_from_slice(labels);
+        self.loss_sum += loss;
+        self.batches += 1;
+    }
+
+    pub fn auc(&self) -> f64 {
+        auc(&self.scores, &self.labels)
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.batches == 0 {
+            f64::NAN
+        } else {
+            self.loss_sum / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let s = [0.1f32, 0.2, 0.8, 0.9];
+        let y = [0f32, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&s, &y), 1.0);
+        let y_inv = [1f32, 1.0, 0.0, 0.0];
+        assert_eq!(auc(&s, &y_inv), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        // deterministic construction: interleaved scores
+        let mut s = vec![];
+        let mut y = vec![];
+        for i in 0..1000 {
+            s.push(i as f32);
+            y.push((i % 2) as f32);
+        }
+        let a = auc(&s, &y);
+        assert!((a - 0.5).abs() < 0.01, "{a}");
+    }
+
+    #[test]
+    fn auc_ties_averaged() {
+        // all scores equal → AUC must be exactly 0.5
+        let s = [1f32; 10];
+        let y = [0f32, 1., 0., 1., 0., 1., 0., 1., 0., 1.];
+        assert!((auc(&s, &y) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_matches_brute_force() {
+        let s = [0.3f32, 0.7, 0.7, 0.1, 0.5, 0.9, 0.2];
+        let y = [0f32, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0];
+        // brute force pair counting
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..7 {
+            for j in 0..7 {
+                if y[i] > 0.5 && y[j] < 0.5 {
+                    den += 1.0;
+                    if s[i] > s[j] {
+                        num += 1.0;
+                    } else if s[i] == s[j] {
+                        num += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((auc(&s, &y) - num / den).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_is_nan() {
+        assert!(auc(&[1.0, 2.0], &[1.0, 1.0]).is_nan());
+    }
+
+    #[test]
+    fn logloss_known_value() {
+        // logit 0 → loss ln 2 regardless of label
+        let l = logloss_from_logits(&[0.0, 0.0], &[0.0, 1.0]);
+        assert!((l - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_multiclass() {
+        let logits = [1.0f32, 0.0, 0.0, /* pred 0 */ 0.0, 2.0, 1.0 /* pred 1 */];
+        let acc = accuracy_from_logits(&logits, &[0, 2], 3);
+        assert_eq!(acc, 0.5);
+    }
+}

@@ -1,0 +1,235 @@
+//! Parameter store: the Rust-owned canonical model state.
+//!
+//! The coordinator owns every parameter as a host tensor; artifacts are pure
+//! functions of (params, batch).  Initialisation follows the same
+//! conventions as `python/compile/model.py` (tables N(0, 0.05), He for MLP
+//! weights, zeros for biases and LoRA-B, ones for LayerNorm gains) — the
+//! Rust init is canonical, the Python one exists only for pytest.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, ModelManifest};
+use crate::sparse::DenseState;
+use crate::util::rng::Xoshiro256;
+
+/// One named parameter plus its optimizer slot state.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub trainable: bool,
+    pub tensor: HostTensor,
+    pub opt_state: DenseState,
+}
+
+impl Param {
+    pub fn dims(&self) -> &[usize] {
+        self.tensor.dims()
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.tensor.len()
+    }
+}
+
+/// Role of a parameter in the DP update (embedding rows get sparse noise,
+/// dense params get standard DP-SGD noise, frozen params get nothing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamRole {
+    /// embedding table updated row-sparsely (`table_*`, `emb_table`,
+    /// `emb_lora_a`)
+    EmbeddingTable,
+    /// trainable dense parameter (MLP / LoRA / head)
+    Dense,
+    /// frozen backbone
+    Frozen,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub model_name: String,
+    pub kind: String,
+    pub params: Vec<Param>,
+}
+
+impl ParamStore {
+    /// Build + initialise from the manifest's parameter inventory.
+    pub fn init(manifest: &ModelManifest, seed: u64) -> Result<ParamStore> {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for spec in &manifest.params {
+            let n: usize = spec.dims.iter().product();
+            let mut data = vec![0f32; n];
+            let name = spec.name.as_str();
+            if name.starts_with("table_") || name == "emb_table" {
+                for v in &mut data {
+                    *v = rng.gauss() as f32 * 0.05;
+                }
+            } else if name == "emb_lora_a" {
+                let fan_in = spec.dims[0].max(1);
+                let s = (fan_in as f32).powf(-0.5);
+                for v in &mut data {
+                    *v = rng.gauss() as f32 * s;
+                }
+            } else if name.ends_with("ln1_g") || name.ends_with("ln2_g") {
+                data.fill(1.0);
+            } else if name.contains("lora_b") || name == "emb_lora_b" {
+                // LoRA B starts at zero (adapters begin as identity)
+            } else if name.ends_with("_b") || name.ends_with("bout") {
+                // biases zero
+            } else if spec.dims.len() == 2 {
+                let fan_in = spec.dims[0].max(1);
+                let s = (2.0 / fan_in as f32).sqrt();
+                for v in &mut data {
+                    *v = rng.gauss() as f32 * s;
+                }
+            }
+            params.push(Param {
+                name: spec.name.clone(),
+                trainable: spec.trainable,
+                tensor: HostTensor::f32(spec.dims.clone(), data),
+                opt_state: DenseState::default(),
+            });
+        }
+        Ok(ParamStore {
+            model_name: manifest.name.clone(),
+            kind: manifest.kind.clone(),
+            params,
+        })
+    }
+
+    pub fn role(&self, name: &str) -> ParamRole {
+        let p = self.params.iter().find(|p| p.name == name);
+        match p {
+            Some(p) if !p.trainable => ParamRole::Frozen,
+            Some(p)
+                if p.name.starts_with("table_")
+                    || p.name == "emb_table"
+                    || p.name == "emb_lora_a" =>
+            {
+                let _ = p;
+                ParamRole::EmbeddingTable
+            }
+            Some(_) => ParamRole::Dense,
+            None => ParamRole::Frozen,
+        }
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|p| p.name == name)
+            .with_context(|| format!("no param {name} in store"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Param> {
+        Ok(&self.params[self.index_of(name)?])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Param> {
+        let i = self.index_of(name)?;
+        Ok(&mut self.params[i])
+    }
+
+    /// Tensors in manifest order — the artifact's leading inputs.
+    pub fn tensors(&self) -> Vec<HostTensor> {
+        self.params.iter().map(|p| p.tensor.clone()).collect()
+    }
+
+    /// Embedding-table coordinate count (the DP-SGD dense-noise baseline for
+    /// the gradient-size reduction factor).
+    pub fn embedding_coords(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|p| {
+                p.trainable
+                    && (p.name.starts_with("table_")
+                        || p.name == "emb_table"
+                        || p.name == "emb_lora_a")
+            })
+            .map(|p| p.num_elements())
+            .sum()
+    }
+
+    /// Trainable dense (non-embedding) coordinate count.
+    pub fn dense_coords(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|p| {
+                p.trainable
+                    && !(p.name.starts_with("table_")
+                        || p.name == "emb_table"
+                        || p.name == "emb_lora_a")
+            })
+            .map(|p| p.num_elements())
+            .sum()
+    }
+
+    /// Sanity check against an artifact's input specs (params must be a
+    /// prefix of the inputs).
+    pub fn check_against(&self, inputs: &[crate::runtime::TensorSpec]) -> Result<()> {
+        if inputs.len() < self.params.len() {
+            bail!("artifact has fewer inputs than params");
+        }
+        for (p, spec) in self.params.iter().zip(inputs) {
+            if p.name != spec.name || p.dims() != spec.dims.as_slice() {
+                bail!(
+                    "param/input mismatch: store has {}{:?}, artifact wants {}{:?}",
+                    p.name,
+                    p.dims(),
+                    spec.name,
+                    spec.dims
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    const SAMPLE: &str = "\
+model tiny pctr
+attr tiny batch_size 4
+param tiny table_00 1 8,2
+param tiny mlp_w0 1 4,3
+param tiny mlp_b0 1 3
+param tiny frozen_x 0 2,2
+";
+
+    #[test]
+    fn init_conventions() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let store = ParamStore::init(m.model("tiny").unwrap(), 1).unwrap();
+        let table = store.get("table_00").unwrap();
+        let vals = table.tensor.as_f32().unwrap();
+        assert!(vals.iter().any(|&v| v != 0.0));
+        assert!(vals.iter().all(|&v| v.abs() < 0.5));
+        let bias = store.get("mlp_b0").unwrap();
+        assert!(bias.tensor.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert_eq!(store.role("table_00"), ParamRole::EmbeddingTable);
+        assert_eq!(store.role("mlp_w0"), ParamRole::Dense);
+        assert_eq!(store.role("frozen_x"), ParamRole::Frozen);
+    }
+
+    #[test]
+    fn coordinate_counts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let store = ParamStore::init(m.model("tiny").unwrap(), 1).unwrap();
+        assert_eq!(store.embedding_coords(), 16);
+        assert_eq!(store.dense_coords(), 15);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = ParamStore::init(m.model("tiny").unwrap(), 42).unwrap();
+        let b = ParamStore::init(m.model("tiny").unwrap(), 42).unwrap();
+        assert_eq!(
+            a.get("mlp_w0").unwrap().tensor,
+            b.get("mlp_w0").unwrap().tensor
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Minimal property-testing harness (the offline crate set has no
+//! `proptest`/`quickcheck`).  Runs a property over many seeded random cases
+//! and reports the failing seed for reproduction; generators are provided by
+//! the seeded [`Xoshiro256`] itself.
+//!
+//! ```ignore
+//! check("clip never amplifies", 200, |rng| {
+//!     let n = rng.below(100) as usize + 1;
+//!     /* ... */
+//!     ensure(cond, format!("..."))
+//! });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn approx_eq(a: f64, b: f64, tol: f64, what: &str) -> CaseResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the failing seed on the
+/// first failure (re-run that seed to reproduce).
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Xoshiro256) -> CaseResult) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::seed_from(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(rng: &mut Xoshiro256, lo: f64, hi: f64) -> f64 {
+    lo + rng.uniform() * (hi - lo)
+}
+
+/// Random f32 vector with entries ~ N(0, scale²).
+pub fn gauss_vec(rng: &mut Xoshiro256, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.gauss() * scale) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("u64 is non-negative-ish", 50, |rng| {
+            ensure(rng.uniform() < 1.0, "uniform out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn check_reports_failures() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check("usize_in bounds", 100, |rng| {
+            let v = usize_in(rng, 3, 9);
+            ensure((3..=9).contains(&v), format!("{v} out of [3,9]"))
+        });
+    }
+}

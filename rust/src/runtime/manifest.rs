@@ -1,0 +1,239 @@
+//! Parser for `artifacts/manifest.txt` — the flat, line-oriented manifest
+//! emitted by `python/compile/aot.py::write_flat_manifest` describing every
+//! AOT artifact (ordered inputs/outputs) and model (parameter inventory,
+//! vocabulary layout).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub trainable: bool,
+    pub dims: Vec<usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ModelManifest {
+    pub name: String,
+    pub kind: String, // "pctr" | "nlu"
+    pub attrs: HashMap<String, String>,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelManifest {
+    pub fn attr_usize(&self, key: &str) -> Result<usize> {
+        self.attrs
+            .get(key)
+            .with_context(|| format!("model {}: missing attr {key}", self.name))?
+            .parse()
+            .with_context(|| format!("model {}: attr {key} not an integer", self.name))
+    }
+
+    pub fn attr_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        let raw = self
+            .attrs
+            .get(key)
+            .with_context(|| format!("model {}: missing attr {key}", self.name))?;
+        raw.split(',')
+            .map(|s| s.parse().with_context(|| format!("bad int in attr {key}: {s}")))
+            .collect()
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamSpec> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("model {}: no param {name}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactManifest {
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o.name == name)
+            .with_context(|| format!("artifact {}: no output {name}", self.name))
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: HashMap<String, ModelManifest>,
+    pub artifacts: HashMap<String, ArtifactManifest>,
+}
+
+fn parse_dims(tok: &str) -> Result<Vec<usize>> {
+    if tok == "scalar" {
+        return Ok(vec![]);
+    }
+    tok.split(',')
+        .map(|s| s.parse::<usize>().with_context(|| format!("bad dim {s}")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}: {line}", lineno + 1);
+            match toks[0] {
+                "model" => {
+                    if toks.len() != 3 {
+                        bail!("{}: want `model <name> <kind>`", ctx());
+                    }
+                    m.models.insert(
+                        toks[1].to_string(),
+                        ModelManifest {
+                            name: toks[1].to_string(),
+                            kind: toks[2].to_string(),
+                            ..Default::default()
+                        },
+                    );
+                }
+                "attr" => {
+                    if toks.len() != 4 {
+                        bail!("{}: want `attr <model> <key> <value>`", ctx());
+                    }
+                    m.models
+                        .get_mut(toks[1])
+                        .with_context(ctx)?
+                        .attrs
+                        .insert(toks[2].to_string(), toks[3].to_string());
+                }
+                "param" => {
+                    if toks.len() != 5 {
+                        bail!("{}: want `param <model> <name> <0|1> <dims>`", ctx());
+                    }
+                    let spec = ParamSpec {
+                        name: toks[2].to_string(),
+                        trainable: toks[3] == "1",
+                        dims: parse_dims(toks[4]).with_context(ctx)?,
+                    };
+                    m.models.get_mut(toks[1]).with_context(ctx)?.params.push(spec);
+                }
+                "artifact" => {
+                    if toks.len() != 4 {
+                        bail!("{}: want `artifact <name> <file> <model>`", ctx());
+                    }
+                    m.artifacts.insert(
+                        toks[1].to_string(),
+                        ArtifactManifest {
+                            name: toks[1].to_string(),
+                            file: toks[2].to_string(),
+                            model: toks[3].to_string(),
+                            inputs: vec![],
+                            outputs: vec![],
+                        },
+                    );
+                }
+                "in" | "out" => {
+                    if toks.len() != 5 {
+                        bail!("{}: want `in|out <artifact> <name> <dtype> <dims>`", ctx());
+                    }
+                    let spec = TensorSpec {
+                        name: toks[2].to_string(),
+                        dtype: toks[3].to_string(),
+                        dims: parse_dims(toks[4]).with_context(ctx)?,
+                    };
+                    let art = m.artifacts.get_mut(toks[1]).with_context(ctx)?;
+                    if toks[0] == "in" {
+                        art.inputs.push(spec);
+                    } else {
+                        art.outputs.push(spec);
+                    }
+                }
+                other => bail!("{}: unknown record kind {other}", ctx()),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactManifest> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("no artifact {name} in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| format!("no model {name} in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model tiny pctr
+attr tiny batch_size 4
+attr tiny vocabs 8,5
+param tiny table_00 1 8,2
+param tiny mlp_b0 1 3
+artifact tiny_fwd tiny_fwd.hlo.txt tiny
+in tiny_fwd table_00 f32 8,2
+in tiny_fwd c1 f32 1
+out tiny_fwd loss f32 scalar
+out tiny_fwd logits f32 4
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let model = m.model("tiny").unwrap();
+        assert_eq!(model.kind, "pctr");
+        assert_eq!(model.attr_usize("batch_size").unwrap(), 4);
+        assert_eq!(model.attr_usize_list("vocabs").unwrap(), vec![8, 5]);
+        assert_eq!(model.params.len(), 2);
+        assert!(model.param("table_00").unwrap().trainable);
+        let art = m.artifact("tiny_fwd").unwrap();
+        assert_eq!(art.inputs.len(), 2);
+        assert_eq!(art.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(art.output_index("logits").unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("model onlyname").is_err());
+        assert!(Manifest::parse("attr nomodel k v").is_err());
+        assert!(Manifest::parse("in nosuch x f32 1").is_err());
+        assert!(Manifest::parse("bogus rec").is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the training hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire model-execution surface of the Rust coordinator.  Pattern follows
+//! `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled once per artifact and cached for the life of the
+//! process (fixed shapes ⇒ a single compilation each).
+
+mod manifest;
+mod tensor;
+
+pub use manifest::{ArtifactManifest, Manifest, ModelManifest, ParamSpec, TensorSpec};
+pub use tensor::HostTensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Cumulative runtime counters (marshalling vs execution time) — inputs to
+/// the §Perf pass.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub marshal_in: Duration,
+    pub execute: Duration,
+    pub marshal_out: Duration,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load the manifest from `artifacts_dir` and initialise the PJRT CPU
+    /// client.  Artifacts themselves are compiled lazily on first use.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `artifact`.
+    fn ensure_compiled(&self, artifact: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(artifact) {
+            return Ok(());
+        }
+        let art = self.manifest.artifact(artifact)?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {artifact}"))?;
+        self.exes.borrow_mut().insert(artifact.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile an artifact (useful to front-load compile time).
+    pub fn warmup(&self, artifact: &str) -> Result<()> {
+        self.ensure_compiled(artifact)
+    }
+
+    /// Execute `artifact` with `inputs` (order and shapes are validated
+    /// against the manifest) and return the decomposed output tuple.
+    pub fn execute(&self, artifact: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let art = self.manifest.artifact(artifact)?;
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "artifact {artifact}: got {} inputs, manifest wants {}",
+                inputs.len(),
+                art.inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&art.inputs).enumerate() {
+            if t.dims() != spec.dims.as_slice() || t.dtype_str() != spec.dtype {
+                bail!(
+                    "artifact {artifact} input #{i} ({}): got {}{:?}, want {}{:?}",
+                    spec.name,
+                    t.dtype_str(),
+                    t.dims(),
+                    spec.dtype,
+                    spec.dims
+                );
+            }
+        }
+        self.ensure_compiled(artifact)?;
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let t1 = Instant::now();
+
+        let exes = self.exes.borrow();
+        let exe = exes.get(artifact).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {artifact}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let t2 = Instant::now();
+
+        // aot.py lowers with return_tuple=True: a single tuple literal.
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != art.outputs.len() {
+            bail!(
+                "artifact {artifact}: got {} outputs, manifest wants {}",
+                parts.len(),
+                art.outputs.len()
+            );
+        }
+        let outs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        let t3 = Instant::now();
+
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.marshal_in += t1 - t0;
+        s.execute += t2 - t1;
+        s.marshal_out += t3 - t2;
+        Ok(outs)
+    }
+
+    /// Execute and return outputs as a name → tensor map (convenience for
+    /// non-hot-path callers; the trainer uses positional access).
+    pub fn execute_named(
+        &self,
+        artifact: &str,
+        inputs: &[HostTensor],
+    ) -> Result<HashMap<String, HostTensor>> {
+        let outs = self.execute(artifact, inputs)?;
+        let art = self.manifest.artifact(artifact)?;
+        Ok(art
+            .outputs
+            .iter()
+            .map(|o| o.name.clone())
+            .zip(outs)
+            .collect())
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}

@@ -1,0 +1,91 @@
+//! DP-SGD with exponential selection [ZMH21] — the prior-work baseline.
+//!
+//! Per step, a fixed number `m` of embedding rows is sampled (without
+//! replacement) with probability proportional to
+//! `exp(ε_sel · u(row) / (2Δu))` where the utility `u` is the row's clipped
+//! gradient l2 norm; only the selected rows are noised and updated.  We
+//! implement the sampling with the Gumbel-max trick on log-weights, which
+//! draws the exponential mechanism exactly.
+//!
+//! The paper (§4.2) finds this baseline loses substantial utility at scale —
+//! our Figure-3/8 harness reproduces that ordering.
+
+use crate::util::rng::Xoshiro256;
+
+/// Sample `m` distinct row ids from `utilities` (row id, utility) by the
+/// exponential mechanism with exponent `eps_sel / (2 * sensitivity)`.
+/// Returns ids sorted ascending.
+pub fn exponential_select(
+    utilities: &[(u32, f64)],
+    m: usize,
+    eps_sel: f64,
+    sensitivity: f64,
+    rng: &mut Xoshiro256,
+) -> Vec<u32> {
+    let m = m.min(utilities.len());
+    if m == 0 {
+        return vec![];
+    }
+    let coef = if sensitivity > 0.0 { eps_sel / (2.0 * sensitivity) } else { 0.0 };
+    // Gumbel-max: top-m of (coef·u_i + Gumbel(1)) is an exact sample of the
+    // exponential mechanism applied m times without replacement.
+    let mut scored: Vec<(f64, u32)> = utilities
+        .iter()
+        .map(|&(id, u)| (coef * u + rng.gumbel(1.0), id))
+        .collect();
+    scored.select_nth_unstable_by(m - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut ids: Vec<u32> = scored[..m].iter().map(|&(_, id)| id).collect();
+    ids.sort_unstable();
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_m_distinct() {
+        let utils: Vec<(u32, f64)> = (0..100).map(|i| (i, (i % 7) as f64)).collect();
+        let mut rng = Xoshiro256::seed_from(1);
+        let sel = exponential_select(&utils, 10, 1.0, 1.0, &mut rng);
+        assert_eq!(sel.len(), 10);
+        let mut u = sel.clone();
+        u.dedup();
+        assert_eq!(u.len(), 10);
+    }
+
+    #[test]
+    fn high_eps_prefers_high_utility() {
+        let utils: Vec<(u32, f64)> = (0..50).map(|i| (i, i as f64)).collect();
+        let mut rng = Xoshiro256::seed_from(2);
+        let mut hits = 0;
+        for _ in 0..100 {
+            let sel = exponential_select(&utils, 5, 200.0, 1.0, &mut rng);
+            if sel == vec![45, 46, 47, 48, 49] {
+                hits += 1;
+            }
+        }
+        assert!(hits > 80, "top-5 hit only {hits}/100");
+    }
+
+    #[test]
+    fn eps_zero_is_uniform() {
+        // with eps 0 every subset is equally likely: each id selected with
+        // prob m/n; check empirical rate for one id
+        let utils: Vec<(u32, f64)> = (0..20).map(|i| (i, if i == 0 { 100.0 } else { 0.0 })).collect();
+        let mut rng = Xoshiro256::seed_from(3);
+        let trials = 2000;
+        let hits = (0..trials)
+            .filter(|_| exponential_select(&utils, 5, 0.0, 1.0, &mut rng).contains(&0))
+            .count();
+        let rate = hits as f64 / trials as f64;
+        assert!((rate - 0.25).abs() < 0.05, "rate {rate}, want 0.25");
+    }
+
+    #[test]
+    fn m_zero_or_empty_input() {
+        let mut rng = Xoshiro256::seed_from(4);
+        assert!(exponential_select(&[], 5, 1.0, 1.0, &mut rng).is_empty());
+        assert!(exponential_select(&[(1, 1.0)], 0, 1.0, 1.0, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,123 @@
+//! Streaming bucket-frequency tracking for DP-FEST on time-series data
+//! (paper §4.3, Figure 5).
+//!
+//! Three frequency sources are compared in the paper:
+//! * `FirstDay`   — counts gathered on day 0 only, then frozen;
+//! * `AllDays`    — oracle counts over the whole training range;
+//! * `Streaming`  — a running sum updated once per streaming period.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrequencySource {
+    FirstDay,
+    AllDays,
+    Streaming,
+}
+
+impl std::str::FromStr for FrequencySource {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "first-day" => Ok(FrequencySource::FirstDay),
+            "all-days" => Ok(FrequencySource::AllDays),
+            "streaming" => Ok(FrequencySource::Streaming),
+            other => anyhow::bail!("unknown frequency source {other}"),
+        }
+    }
+}
+
+/// Per-feature running bucket counts with period snapshots.
+#[derive(Clone, Debug)]
+pub struct FrequencyTracker {
+    /// counts[f][bucket]
+    counts: Vec<HashMap<u32, u64>>,
+    /// snapshot used for selection (what DP-FEST sees), refreshed on
+    /// `publish`; for `FirstDay` it is frozen after the first publish.
+    published: Vec<HashMap<u32, u64>>,
+    publishes: usize,
+    source: FrequencySource,
+}
+
+impl FrequencyTracker {
+    pub fn new(num_features: usize, source: FrequencySource) -> Self {
+        FrequencyTracker {
+            counts: vec![HashMap::new(); num_features],
+            published: vec![HashMap::new(); num_features],
+            publishes: 0,
+            source,
+        }
+    }
+
+    pub fn source(&self) -> FrequencySource {
+        self.source
+    }
+
+    /// Observe one batch of per-feature bucket ids (ids are *per-feature*
+    /// local indices).
+    pub fn observe(&mut self, feature: usize, buckets: &[i32]) {
+        let m = &mut self.counts[feature];
+        for &b in buckets {
+            *m.entry(b as u32).or_insert(0) += 1;
+        }
+    }
+
+    /// Publish the running counts to the selection snapshot (called at each
+    /// streaming-period boundary).  `FirstDay` freezes after the first call.
+    pub fn publish(&mut self) {
+        if self.source == FrequencySource::FirstDay && self.publishes > 0 {
+            return;
+        }
+        self.published = self.counts.clone();
+        self.publishes += 1;
+    }
+
+    /// Dense count vector for a feature (for the top-k mechanism).
+    pub fn dense_counts(&self, feature: usize, vocab: usize) -> Vec<f64> {
+        let mut v = vec![0f64; vocab];
+        for (&b, &c) in &self.published[feature] {
+            if (b as usize) < vocab {
+                v[b as usize] = c as f64;
+            }
+        }
+        v
+    }
+
+    pub fn total_observed(&self, feature: usize) -> u64 {
+        self.counts[feature].values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_updates_snapshot_each_publish() {
+        let mut t = FrequencyTracker::new(1, FrequencySource::Streaming);
+        t.observe(0, &[1, 1, 2]);
+        t.publish();
+        assert_eq!(t.dense_counts(0, 4), vec![0.0, 2.0, 1.0, 0.0]);
+        t.observe(0, &[3]);
+        t.publish();
+        assert_eq!(t.dense_counts(0, 4), vec![0.0, 2.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn first_day_freezes() {
+        let mut t = FrequencyTracker::new(1, FrequencySource::FirstDay);
+        t.observe(0, &[1]);
+        t.publish();
+        t.observe(0, &[2, 2, 2]);
+        t.publish(); // must be ignored
+        assert_eq!(t.dense_counts(0, 3), vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn unpublished_counts_invisible() {
+        let mut t = FrequencyTracker::new(1, FrequencySource::Streaming);
+        t.observe(0, &[0]);
+        assert_eq!(t.dense_counts(0, 2), vec![0.0, 0.0]);
+        assert_eq!(t.total_observed(0), 1);
+    }
+}

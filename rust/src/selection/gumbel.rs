@@ -1,0 +1,142 @@
+//! One-shot DP top-k selection (paper Algorithm 2, following [DR21]).
+//!
+//! Add i.i.d. `Gumbel(k/ε)`-style noise to bucket frequencies and return the
+//! indices of the k largest noisy counts.  With per-user contribution
+//! bounded by 1 per feature (paper Appendix B.1), the one-shot mechanism
+//! with scale `k/ε` is (ε, 0)-DP; here we expose the scale directly and let
+//! the caller implement the paper's budget split.
+
+use crate::util::rng::Xoshiro256;
+
+/// Select the top-k buckets of `counts` under Gumbel noise of scale `beta`
+/// (`beta = k/ε` for the one-shot (ε,0)-DP guarantee; `beta = 0` recovers
+/// exact top-k).  Returns indices sorted by noisy score, best first.
+pub fn dp_top_k(counts: &[f64], k: usize, beta: f64, rng: &mut Xoshiro256) -> Vec<u32> {
+    let k = k.min(counts.len());
+    if k == 0 {
+        return vec![];
+    }
+    let mut scored: Vec<(f64, u32)> = counts
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            let noise = if beta > 0.0 { rng.gumbel(beta) } else { 0.0 };
+            (c + noise, i as u32)
+        })
+        .collect();
+    // partial selection: top-k by score
+    scored.select_nth_unstable_by(k - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut top: Vec<(f64, u32)> = scored[..k].to_vec();
+    top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    top.into_iter().map(|(_, i)| i).collect()
+}
+
+/// The paper's multi-feature budget split (Appendix B.1): total selection
+/// budget `k` and privacy budget `epsilon` divided equally across `p`
+/// features; per-feature one-shot top-`k/p` with budget `ε/p`.
+///
+/// `feature_counts[f]` are the (non-private) bucket frequencies of feature
+/// `f`.  Returns per-feature selected bucket id lists.
+pub fn dp_top_k_per_feature(
+    feature_counts: &[Vec<f64>],
+    k_total: usize,
+    epsilon: f64,
+    rng: &mut Xoshiro256,
+) -> Vec<Vec<u32>> {
+    let p = feature_counts.len().max(1);
+    let k_per = (k_total / p).max(1);
+    let eps_per = epsilon / p as f64;
+    feature_counts
+        .iter()
+        .enumerate()
+        .map(|(f, counts)| {
+            let k_f = k_per.min(counts.len());
+            let beta = if eps_per > 0.0 { k_f as f64 / eps_per } else { 0.0 };
+            let mut sub = rng.fork(f as u64);
+            dp_top_k(counts, k_f, beta, &mut sub)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_topk_when_no_noise() {
+        let counts = vec![5.0, 1.0, 9.0, 7.0, 0.0];
+        let mut rng = Xoshiro256::seed_from(1);
+        let top = dp_top_k(&counts, 3, 0.0, &mut rng);
+        assert_eq!(top, vec![2, 3, 0]);
+    }
+
+    #[test]
+    fn high_budget_recovers_true_topk() {
+        // well-separated counts + tiny noise scale => true top-k w.h.p.
+        let counts: Vec<f64> = (0..100).map(|i| (i * 100) as f64).collect();
+        let mut rng = Xoshiro256::seed_from(2);
+        for _ in 0..20 {
+            let top = dp_top_k(&counts, 5, 0.5, &mut rng);
+            let mut sorted = top.clone();
+            sorted.sort();
+            assert_eq!(sorted, vec![95, 96, 97, 98, 99]);
+        }
+    }
+
+    #[test]
+    fn low_budget_is_noisy() {
+        // huge noise scale: selection must NOT consistently equal top-k
+        let counts: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let mut rng = Xoshiro256::seed_from(3);
+        let mut agree = 0;
+        let trials = 50;
+        for _ in 0..trials {
+            let top = dp_top_k(&counts, 5, 1e6, &mut rng);
+            let mut s = top.clone();
+            s.sort();
+            if s == vec![45, 46, 47, 48, 49] {
+                agree += 1;
+            }
+        }
+        assert!(agree < trials / 4, "still exact {agree}/{trials} times");
+    }
+
+    #[test]
+    fn frequency_bias_survives_statistically() {
+        // with moderate noise, high-count buckets are selected more often
+        let mut counts = vec![0.0f64; 20];
+        counts[7] = 50.0;
+        let mut rng = Xoshiro256::seed_from(4);
+        let hits = (0..200)
+            .filter(|_| dp_top_k(&counts, 1, 10.0, &mut rng)[0] == 7)
+            .count();
+        assert!(hits > 150, "bucket 7 selected only {hits}/200");
+    }
+
+    #[test]
+    fn per_feature_split_counts_and_ranges() {
+        let feats = vec![vec![1.0; 10], vec![2.0; 30], vec![3.0; 5]];
+        let mut rng = Xoshiro256::seed_from(5);
+        let sel = dp_top_k_per_feature(&feats, 9, 3.0, &mut rng);
+        assert_eq!(sel.len(), 3);
+        assert_eq!(sel[0].len(), 3);
+        assert_eq!(sel[1].len(), 3);
+        assert_eq!(sel[2].len(), 3);
+        for (f, ids) in sel.iter().enumerate() {
+            for &i in ids {
+                assert!((i as usize) < feats[f].len());
+            }
+            let mut u = ids.clone();
+            u.sort();
+            u.dedup();
+            assert_eq!(u.len(), ids.len(), "duplicates in feature {f}");
+        }
+    }
+
+    #[test]
+    fn k_larger_than_vocab_is_clamped() {
+        let counts = vec![1.0, 2.0];
+        let mut rng = Xoshiro256::seed_from(6);
+        assert_eq!(dp_top_k(&counts, 10, 0.0, &mut rng).len(), 2);
+    }
+}

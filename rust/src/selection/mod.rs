@@ -1,0 +1,17 @@
+//! Bucket-selection mechanisms.
+//!
+//! * [`gumbel`] — one-shot DP top-k (Algorithm 2, [DR21]) used by DP-FEST's
+//!   pre-training frequency filtering, with the per-feature ε/k budget split
+//!   of Appendix B.1.
+//! * [`exponential`] — the DP-SGD-with-exponential-selection baseline
+//!   [ZMH21] that Figures 3/8 compare against.
+//! * [`frequency`] — streaming frequency tracking for the time-series
+//!   experiments (first-day / all-days / streaming-period sources, Fig. 5).
+
+mod exponential;
+mod frequency;
+mod gumbel;
+
+pub use exponential::exponential_select;
+pub use frequency::{FrequencySource, FrequencyTracker};
+pub use gumbel::{dp_top_k, dp_top_k_per_feature};

@@ -1,0 +1,243 @@
+//! `RowSparseGrad` — the row-sparse embedding-table gradient
+//! `∇W = Σᵢ sᵢ·(xᵢ ⊗ ∂L/∂zᵢ)` (paper §2.1): at most B distinct rows are
+//! non-zero out of a vocabulary of c rows.
+
+use std::collections::HashMap;
+
+/// A row-sparse gradient over a `(num_rows, dim)` table.
+///
+/// Internally `(indices, values)` with `values.len() == indices.len() * dim`,
+/// kept unsorted during accumulation and canonicalised (sorted, unique) by
+/// [`RowSparseGrad::finalize`].
+#[derive(Clone, Debug, Default)]
+pub struct RowSparseGrad {
+    pub dim: usize,
+    pub num_rows: usize,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    /// map row-id → position in `indices` for O(1) accumulation
+    slot: HashMap<u32, usize>,
+}
+
+impl RowSparseGrad {
+    pub fn new(num_rows: usize, dim: usize) -> Self {
+        RowSparseGrad {
+            dim,
+            num_rows,
+            indices: Vec::new(),
+            values: Vec::new(),
+            slot: HashMap::new(),
+        }
+    }
+
+    pub fn with_capacity(num_rows: usize, dim: usize, cap: usize) -> Self {
+        RowSparseGrad {
+            dim,
+            num_rows,
+            indices: Vec::with_capacity(cap),
+            values: Vec::with_capacity(cap * dim),
+            slot: HashMap::with_capacity(cap),
+        }
+    }
+
+    /// Number of distinct non-zero rows.
+    pub fn nnz_rows(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Number of stored coordinates (`nnz_rows * dim`) — the paper's
+    /// "gradient size" for this table.
+    pub fn nnz_coords(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.values[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Accumulate `grad` into row `idx` (repeated ids within/between
+    /// examples add, exactly like a dense scatter-add).
+    pub fn add_row(&mut self, idx: u32, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.dim);
+        debug_assert!((idx as usize) < self.num_rows, "row {idx} out of range");
+        match self.slot.get(&idx) {
+            Some(&pos) => {
+                let base = pos * self.dim;
+                for (v, g) in self.values[base..base + self.dim].iter_mut().zip(grad) {
+                    *v += g;
+                }
+            }
+            None => {
+                self.slot.insert(idx, self.indices.len());
+                self.indices.push(idx);
+                self.values.extend_from_slice(grad);
+            }
+        }
+    }
+
+    /// Accumulate a scaled row: `row[idx] += s * grad`.
+    pub fn add_row_scaled(&mut self, idx: u32, s: f32, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.dim);
+        match self.slot.get(&idx) {
+            Some(&pos) => {
+                let base = pos * self.dim;
+                for (v, g) in self.values[base..base + self.dim].iter_mut().zip(grad) {
+                    *v += s * g;
+                }
+            }
+            None => {
+                self.slot.insert(idx, self.indices.len());
+                self.indices.push(idx);
+                let start = self.values.len();
+                self.values.extend_from_slice(grad);
+                for v in &mut self.values[start..] {
+                    *v *= s;
+                }
+            }
+        }
+    }
+
+    /// Drop every row not in `keep` (survivor filtering, Algorithm 1 line 8).
+    /// `keep` must answer membership for raw row ids.
+    pub fn retain_rows(&mut self, keep: impl Fn(u32) -> bool) {
+        let dim = self.dim;
+        let mut w = 0;
+        for r in 0..self.indices.len() {
+            if keep(self.indices[r]) {
+                if w != r {
+                    self.indices[w] = self.indices[r];
+                    let (dst, src) = (w * dim, r * dim);
+                    self.values.copy_within(src..src + dim, dst);
+                }
+                w += 1;
+            }
+        }
+        self.indices.truncate(w);
+        self.values.truncate(w * dim);
+        self.slot.clear();
+        for (pos, &idx) in self.indices.iter().enumerate() {
+            self.slot.insert(idx, pos);
+        }
+    }
+
+    /// Canonicalise: sort rows by index (stable layout for tests/serde).
+    pub fn finalize(&mut self) {
+        let dim = self.dim;
+        let mut order: Vec<usize> = (0..self.indices.len()).collect();
+        order.sort_by_key(|&i| self.indices[i]);
+        let indices: Vec<u32> = order.iter().map(|&i| self.indices[i]).collect();
+        let mut values = vec![0f32; self.values.len()];
+        for (new, &old) in order.iter().enumerate() {
+            values[new * dim..(new + 1) * dim]
+                .copy_from_slice(&self.values[old * dim..(old + 1) * dim]);
+        }
+        self.indices = indices;
+        self.values = values;
+        self.slot.clear();
+        for (pos, &idx) in self.indices.iter().enumerate() {
+            self.slot.insert(idx, pos);
+        }
+    }
+
+    /// Squared l2 norm of the whole sparse gradient.
+    pub fn sq_norm(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Scale every stored value.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+
+    /// Densify (tests / tiny tables only).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.num_rows * self.dim];
+        for (i, &idx) in self.indices.iter().enumerate() {
+            let dst = idx as usize * self.dim;
+            for (o, v) in out[dst..dst + self.dim].iter_mut().zip(self.row(i)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Iterate `(row_id, row_values)`.
+    pub fn iter_rows(&self) -> impl Iterator<Item = (u32, &[f32])> {
+        self.indices
+            .iter()
+            .enumerate()
+            .map(move |(i, &idx)| (idx, self.row(i)))
+    }
+
+    /// Mutable row access by slot position.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let d = self.dim;
+        &mut self.values[i * d..(i + 1) * d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_repeated_rows() {
+        let mut g = RowSparseGrad::new(10, 2);
+        g.add_row(3, &[1.0, 2.0]);
+        g.add_row(7, &[5.0, 5.0]);
+        g.add_row(3, &[0.5, -1.0]);
+        assert_eq!(g.nnz_rows(), 2);
+        let dense = g.to_dense();
+        assert_eq!(&dense[6..8], &[1.5, 1.0]);
+        assert_eq!(&dense[14..16], &[5.0, 5.0]);
+    }
+
+    #[test]
+    fn scaled_rows_and_norm() {
+        let mut g = RowSparseGrad::new(4, 2);
+        g.add_row_scaled(0, 0.5, &[2.0, 0.0]);
+        g.add_row_scaled(0, 2.0, &[0.0, 1.0]);
+        assert_eq!(g.nnz_rows(), 1);
+        assert_eq!(g.row(0), &[1.0, 2.0]);
+        assert!((g.sq_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retain_filters_rows() {
+        let mut g = RowSparseGrad::new(100, 1);
+        for i in 0..10u32 {
+            g.add_row(i, &[i as f32]);
+        }
+        g.retain_rows(|idx| idx % 2 == 0);
+        assert_eq!(g.nnz_rows(), 5);
+        let dense = g.to_dense();
+        assert_eq!(dense[4], 4.0);
+        assert_eq!(dense[5], 0.0);
+        // accumulation still works after retain
+        g.add_row(4, &[1.0]);
+        assert_eq!(g.to_dense()[4], 5.0);
+    }
+
+    #[test]
+    fn finalize_sorts() {
+        let mut g = RowSparseGrad::new(10, 1);
+        g.add_row(9, &[9.0]);
+        g.add_row(1, &[1.0]);
+        g.add_row(5, &[5.0]);
+        g.finalize();
+        assert_eq!(g.indices(), &[1, 5, 9]);
+        assert_eq!(g.values(), &[1.0, 5.0, 9.0]);
+        g.add_row(5, &[1.0]);
+        assert_eq!(g.to_dense()[5], 6.0);
+    }
+}

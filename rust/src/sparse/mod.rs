@@ -1,0 +1,18 @@
+//! Row-sparse gradients, sparse/dense optimizers, noise injection, and the
+//! Appendix-B.2 memory-efficient survivor sampler.
+//!
+//! This module is the mechanical heart of the paper's claim: the update path
+//! of an embedding table must stay `O(nnz)` — gather/scatter, never a dense
+//! `c×d` pass.  `RowSparseGrad` is the only gradient representation the
+//! embedding hot path ever materialises; the dense path exists solely as the
+//! DP-SGD baseline whose cost Table 4 measures.
+
+mod grad;
+mod noise;
+mod optimizer;
+mod survivor;
+
+pub use grad::RowSparseGrad;
+pub use noise::{add_dense_noise, add_row_noise, GradSizeMeter};
+pub use optimizer::{DenseState, Optimizer, OptimizerKind};
+pub use survivor::{survivors_dense, survivors_sparse, SurvivorStats};

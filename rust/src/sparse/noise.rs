@@ -1,0 +1,151 @@
+//! Gaussian noise injection — dense (vanilla DP-SGD, Eq. 1) and row-sparse
+//! (Algorithm 1 line 9, noise only on surviving rows) — plus the
+//! gradient-size meter that produces the paper's headline metric.
+
+use crate::util::rng::Xoshiro256;
+
+use super::grad::RowSparseGrad;
+
+/// Vanilla DP-SGD: add `N(0, sigma²)` to *every* coordinate of a dense
+/// gradient buffer.  Returns the number of noised coordinates (== len).
+pub fn add_dense_noise(buf: &mut [f32], sigma: f64, rng: &mut Xoshiro256) -> usize {
+    if sigma > 0.0 {
+        // generate-and-add in chunks to stay cache-resident
+        const CHUNK: usize = 4096;
+        let mut noise = [0f32; CHUNK];
+        let mut off = 0;
+        while off < buf.len() {
+            let n = CHUNK.min(buf.len() - off);
+            rng.fill_gauss_f32(&mut noise[..n], sigma);
+            for (b, z) in buf[off..off + n].iter_mut().zip(&noise[..n]) {
+                *b += z;
+            }
+            off += n;
+        }
+    }
+    buf.len()
+}
+
+/// Sparsity-preserving noise: add `N(0, sigma²)` only to the rows present in
+/// the row-sparse gradient.  Returns the number of noised coordinates
+/// (`nnz_rows * dim`).
+pub fn add_row_noise(grad: &mut RowSparseGrad, sigma: f64, rng: &mut Xoshiro256) -> usize {
+    let n = grad.nnz_coords();
+    if sigma > 0.0 {
+        for i in 0..grad.nnz_rows() {
+            let row = grad.row_mut(i);
+            let mut noise = vec![0f32; row.len()];
+            rng.fill_gauss_f32(&mut noise, sigma);
+            for (v, z) in row.iter_mut().zip(&noise) {
+                *v += z;
+            }
+        }
+    }
+    n
+}
+
+/// Tracks the paper's "gradient size": the number of coordinates that
+/// receive noise (and therefore must be written back densely) per step,
+/// split into embedding vs dense-layer parts.
+///
+/// `reduction_factor` is `dense_baseline / measured` where the baseline is
+/// what vanilla DP-SGD would noise: *every* embedding coordinate plus the
+/// dense params — this is the quantity Figures 3–6 plot (e.g. `>10⁶×`).
+#[derive(Clone, Debug, Default)]
+pub struct GradSizeMeter {
+    pub steps: u64,
+    pub emb_coords: u64,
+    pub dense_coords: u64,
+    /// per-step dense-equivalent embedding coordinates (c_total * d style
+    /// count: what DP-SGD would have noised)
+    pub emb_dense_baseline: u64,
+    pub dense_baseline: u64,
+}
+
+impl GradSizeMeter {
+    pub fn record_step(&mut self, emb_coords: usize, dense_coords: usize) {
+        self.steps += 1;
+        self.emb_coords += emb_coords as u64;
+        self.dense_coords += dense_coords as u64;
+    }
+
+    pub fn set_baselines(&mut self, emb_dense: usize, dense: usize) {
+        self.emb_dense_baseline = emb_dense as u64;
+        self.dense_baseline = dense as u64;
+    }
+
+    /// Mean noised embedding coordinates per step.
+    pub fn emb_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.emb_coords as f64 / self.steps as f64
+    }
+
+    /// The paper's embedding-gradient-size reduction factor vs DP-SGD.
+    pub fn reduction_factor(&self) -> f64 {
+        let per_step = self.emb_per_step();
+        if per_step == 0.0 {
+            return f64::INFINITY;
+        }
+        self.emb_dense_baseline as f64 / per_step
+    }
+
+    /// Total (embedding + dense) reduction factor.
+    pub fn total_reduction_factor(&self) -> f64 {
+        let per_step =
+            (self.emb_coords + self.dense_coords) as f64 / self.steps.max(1) as f64;
+        if per_step == 0.0 {
+            return f64::INFINITY;
+        }
+        (self.emb_dense_baseline + self.dense_baseline) as f64 / per_step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_noise_changes_every_coordinate() {
+        let mut rng = Xoshiro256::seed_from(1);
+        let mut buf = vec![0f32; 10_001];
+        let n = add_dense_noise(&mut buf, 1.0, &mut rng);
+        assert_eq!(n, 10_001);
+        assert!(buf.iter().all(|&v| v != 0.0));
+        let var: f64 =
+            buf.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn zero_sigma_is_identity() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let mut buf = vec![1f32; 64];
+        add_dense_noise(&mut buf, 0.0, &mut rng);
+        assert!(buf.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn row_noise_touches_only_present_rows() {
+        let mut rng = Xoshiro256::seed_from(3);
+        let mut g = RowSparseGrad::new(1000, 4);
+        g.add_row(10, &[0.0; 4]);
+        g.add_row(999, &[0.0; 4]);
+        let n = add_row_noise(&mut g, 1.0, &mut rng);
+        assert_eq!(n, 8);
+        let dense = g.to_dense();
+        let nz: usize = dense.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nz, 8); // only the two present rows got noise
+    }
+
+    #[test]
+    fn meter_reduction_factor() {
+        let mut m = GradSizeMeter::default();
+        m.set_baselines(1_000_000, 100);
+        m.record_step(10, 100);
+        m.record_step(30, 100);
+        assert_eq!(m.emb_per_step(), 20.0);
+        assert_eq!(m.reduction_factor(), 50_000.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Optimizers with first-class sparse row updates.
+//!
+//! The whole point of the paper is that the embedding update must be a
+//! scatter (`O(nnz)`), so the optimizer exposes two entry points per
+//! parameter: [`Optimizer::dense_step`] for MLP/LoRA params and
+//! [`Optimizer::sparse_step`] for embedding tables given a
+//! [`RowSparseGrad`].  SGD and (sparse-slot) Adagrad are provided; Adagrad's
+//! accumulator is updated only on touched rows, matching how production
+//! sparse optimizers (e.g. TF `scatter_add`-based slots) behave.
+
+use super::grad::RowSparseGrad;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adagrad,
+}
+
+impl std::str::FromStr for OptimizerKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "adagrad" => Ok(OptimizerKind::Adagrad),
+            other => anyhow::bail!("unknown optimizer {other} (want sgd|adagrad)"),
+        }
+    }
+}
+
+/// Per-parameter optimizer state (Adagrad accumulator; empty for SGD).
+#[derive(Clone, Debug, Default)]
+pub struct DenseState {
+    accum: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    pub adagrad_eps: f32,
+}
+
+impl Optimizer {
+    pub fn sgd(lr: f32) -> Self {
+        Optimizer { kind: OptimizerKind::Sgd, lr, adagrad_eps: 1e-8 }
+    }
+
+    pub fn adagrad(lr: f32) -> Self {
+        Optimizer { kind: OptimizerKind::Adagrad, lr, adagrad_eps: 1e-8 }
+    }
+
+    pub fn new(kind: OptimizerKind, lr: f32) -> Self {
+        Optimizer { kind, lr, adagrad_eps: 1e-8 }
+    }
+
+    /// Dense update: `param -= lr * grad` (optionally Adagrad-scaled).
+    pub fn dense_step(&self, param: &mut [f32], grad: &[f32], state: &mut DenseState) {
+        debug_assert_eq!(param.len(), grad.len());
+        match self.kind {
+            OptimizerKind::Sgd => {
+                for (p, g) in param.iter_mut().zip(grad) {
+                    *p -= self.lr * g;
+                }
+            }
+            OptimizerKind::Adagrad => {
+                if state.accum.len() != param.len() {
+                    state.accum = vec![0f32; param.len()];
+                }
+                for ((p, g), a) in param.iter_mut().zip(grad).zip(&mut state.accum) {
+                    *a += g * g;
+                    *p -= self.lr * g / (a.sqrt() + self.adagrad_eps);
+                }
+            }
+        }
+    }
+
+    /// Sparse update: scatter `-lr * grad_row` into the touched table rows
+    /// only.  `state` (Adagrad) is likewise touched only on those rows.
+    pub fn sparse_step(
+        &self,
+        table: &mut [f32],
+        grad: &RowSparseGrad,
+        state: &mut DenseState,
+    ) {
+        let d = grad.dim;
+        match self.kind {
+            OptimizerKind::Sgd => {
+                for (row_id, row) in grad.iter_rows() {
+                    let base = row_id as usize * d;
+                    for (p, g) in table[base..base + d].iter_mut().zip(row) {
+                        *p -= self.lr * g;
+                    }
+                }
+            }
+            OptimizerKind::Adagrad => {
+                if state.accum.len() != table.len() {
+                    state.accum = vec![0f32; table.len()];
+                }
+                for (row_id, row) in grad.iter_rows() {
+                    let base = row_id as usize * d;
+                    for ((p, g), a) in table[base..base + d]
+                        .iter_mut()
+                        .zip(row)
+                        .zip(&mut state.accum[base..base + d])
+                    {
+                        *a += g * g;
+                        *p -= self.lr * g / (a.sqrt() + self.adagrad_eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_equals_dense_sgd() {
+        // Property: applying a row-sparse grad sparsely == densifying it and
+        // applying densely.
+        let mut g = RowSparseGrad::new(20, 3);
+        g.add_row(2, &[1.0, -1.0, 0.5]);
+        g.add_row(17, &[0.1, 0.2, 0.3]);
+        g.add_row(2, &[1.0, 0.0, 0.0]);
+
+        let opt = Optimizer::sgd(0.1);
+        let mut a = vec![1f32; 60];
+        let mut b = a.clone();
+        let mut st_a = DenseState::default();
+        let mut st_b = DenseState::default();
+        opt.sparse_step(&mut a, &g, &mut st_a);
+        opt.dense_step(&mut b, &g.to_dense(), &mut st_b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_equals_dense_adagrad_on_touched_rows() {
+        let mut g = RowSparseGrad::new(10, 2);
+        g.add_row(1, &[0.5, 0.5]);
+        g.add_row(9, &[1.0, -2.0]);
+
+        let opt = Optimizer::adagrad(0.1);
+        let mut a = vec![0.5f32; 20];
+        let mut b = a.clone();
+        let mut st_a = DenseState::default();
+        let mut st_b = DenseState::default();
+        opt.sparse_step(&mut a, &g, &mut st_a);
+        // dense adagrad with the densified grad touches zero-grad rows with
+        // g=0, which adds 0 to accumulators and 0 to params — identical.
+        opt.dense_step(&mut b, &g.to_dense(), &mut st_b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn adagrad_shrinks_effective_lr() {
+        let opt = Optimizer::adagrad(1.0);
+        let mut p = vec![0f32; 1];
+        let mut st = DenseState::default();
+        opt.dense_step(&mut p, &[1.0], &mut st);
+        let first = -p[0];
+        opt.dense_step(&mut p, &[1.0], &mut st);
+        let second = -p[0] - first;
+        assert!(second < first, "{second} !< {first}");
+    }
+
+    #[test]
+    fn untouched_rows_unmodified() {
+        let mut g = RowSparseGrad::new(5, 2);
+        g.add_row(0, &[1.0, 1.0]);
+        let opt = Optimizer::sgd(1.0);
+        let mut table = vec![7f32; 10];
+        opt.sparse_step(&mut table, &g, &mut DenseState::default());
+        assert_eq!(&table[2..], &[7f32; 8][..]);
+        assert_eq!(&table[..2], &[6.0, 6.0]);
+    }
+}

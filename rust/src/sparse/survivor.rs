@@ -1,0 +1,257 @@
+//! Survivor selection on the noisy contribution map (Algorithm 1, lines 6–8)
+//! in two implementations:
+//!
+//! * [`survivors_dense`] — the naive `O(c)` path: materialise the noisy map,
+//!   threshold it.  This is the oracle.
+//! * [`survivors_sparse`] — Appendix B.2: only the `nnz` non-zero counts get
+//!   explicit Gaussian samples; the `c - nnz` zero-count coordinates can
+//!   survive only as false positives, which occur i.i.d. with probability
+//!   `p = Ψ(τ / (σ₁·C₁))`, so their indices are sampled directly by drawing
+//!   `Geometric(p)` gaps.  Cost is `O(nnz + #false-positives)` — linear in
+//!   the gradient, not the vocabulary.
+//!
+//! Both return the survivor row set; property tests check that the sparse
+//! sampler matches the dense law (exact on non-zeros given shared noise,
+//! χ²-consistent on false-positive counts).
+
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::gauss_sf;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SurvivorStats {
+    /// rows with non-zero clipped counts that survived
+    pub true_survivors: usize,
+    /// rows with non-zero clipped counts that were suppressed
+    pub suppressed: usize,
+    /// zero-count rows that survived on noise alone
+    pub false_positives: usize,
+}
+
+/// Naive `O(c)` reference: add `N(0, (σ₁C₁)²)` to every coordinate of the
+/// dense count vector, keep those `≥ τ`.
+pub fn survivors_dense(
+    counts: &[f32],
+    sigma1: f64,
+    c1: f64,
+    tau: f64,
+    rng: &mut Xoshiro256,
+) -> (Vec<u32>, SurvivorStats) {
+    let scale = sigma1 * c1;
+    let mut out = Vec::new();
+    let mut stats = SurvivorStats::default();
+    for (j, &v) in counts.iter().enumerate() {
+        let noisy = v as f64 + rng.gauss() * scale;
+        if noisy >= tau {
+            out.push(j as u32);
+            if v != 0.0 {
+                stats.true_survivors += 1;
+            } else {
+                stats.false_positives += 1;
+            }
+        } else if v != 0.0 {
+            stats.suppressed += 1;
+        }
+    }
+    (out, stats)
+}
+
+/// Appendix-B.2 sampler over a *sparse* count representation
+/// (`nonzero = [(row, count)]`, everything else zero, `num_rows` total).
+///
+/// Returned indices are sorted.  `nonzero` must be sorted by row id and
+/// contain no duplicates (the contribution map builder guarantees this).
+pub fn survivors_sparse(
+    nonzero: &[(u32, f32)],
+    num_rows: usize,
+    sigma1: f64,
+    c1: f64,
+    tau: f64,
+    rng: &mut Xoshiro256,
+) -> (Vec<u32>, SurvivorStats) {
+    let scale = sigma1 * c1;
+    let mut stats = SurvivorStats::default();
+    let mut survivors = Vec::with_capacity(nonzero.len());
+
+    // Explicit samples for the non-zero counts.
+    for &(row, v) in nonzero {
+        let noisy = v as f64 + rng.gauss() * scale;
+        if noisy >= tau {
+            survivors.push(row);
+            stats.true_survivors += 1;
+        } else {
+            stats.suppressed += 1;
+        }
+    }
+
+    // False positives among the zero-count coordinates: each survives with
+    // probability p = Ψ(τ / (σ₁C₁)); sample the survivor positions directly
+    // via Geometric(p) gaps over the *virtual* array of zero coordinates,
+    // then translate virtual positions to real row ids by skipping the
+    // non-zero rows (two-pointer walk over the sorted nonzero ids).
+    let p = if scale > 0.0 {
+        gauss_sf(tau / scale)
+    } else if tau <= 0.0 {
+        1.0
+    } else {
+        0.0
+    };
+    let num_zero = num_rows - nonzero.len();
+    if p > 0.0 && num_zero > 0 {
+        let mut fp_virtual: Vec<u64> = Vec::new();
+        if p >= 1.0 {
+            fp_virtual.extend(0..num_zero as u64);
+        } else {
+            let mut pos: u64 = 0;
+            loop {
+                let gap = rng.geometric(p);
+                pos += gap;
+                if pos > num_zero as u64 {
+                    break;
+                }
+                fp_virtual.push(pos - 1); // 0-based virtual index
+            }
+        }
+        if !fp_virtual.is_empty() {
+            // translate: virtual index v counts zero-coordinates only
+            let mut nz_iter = nonzero.iter().map(|&(r, _)| r as u64).peekable();
+            let mut skipped: u64 = 0; // non-zero rows passed so far
+            let mut next_nz = nz_iter.next();
+            for &v in &fp_virtual {
+                // real position r satisfies: r - (#nonzero ids <= r) == v
+                let mut r = v + skipped;
+                while let Some(nz) = next_nz {
+                    if nz <= r {
+                        skipped += 1;
+                        r += 1;
+                        next_nz = nz_iter.next();
+                    } else {
+                        break;
+                    }
+                }
+                survivors.push(r as u32);
+                stats.false_positives += 1;
+            }
+        }
+    }
+
+    survivors.sort_unstable();
+    (survivors, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sparse_counts(dense: &[f32]) -> Vec<(u32, f32)> {
+        dense
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect()
+    }
+
+    #[test]
+    fn no_noise_is_exact_threshold() {
+        let mut counts = vec![0f32; 100];
+        counts[3] = 5.0;
+        counts[10] = 1.0;
+        counts[50] = 10.0;
+        let mut rng = Xoshiro256::seed_from(1);
+        let (s, st) = survivors_sparse(&sparse_counts(&counts), 100, 0.0, 1.0, 2.0, &mut rng);
+        assert_eq!(s, vec![3, 50]);
+        assert_eq!(st.false_positives, 0);
+        assert_eq!(st.suppressed, 1);
+    }
+
+    #[test]
+    fn tau_zero_no_noise_keeps_all_rows() {
+        // τ ≤ 0 with σ=0 ⇒ every coordinate survives (noisy value 0 ≥ 0)
+        let counts = vec![0f32; 10];
+        let mut rng = Xoshiro256::seed_from(2);
+        let (s, _) = survivors_sparse(&sparse_counts(&counts), 10, 0.0, 1.0, 0.0, &mut rng);
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn false_positive_rate_matches_gaussian_tail() {
+        // all-zero counts: survivors are pure false positives with rate
+        // p = Ψ(τ/(σ₁C₁)).
+        let num_rows = 200_000;
+        let sigma1 = 1.0;
+        let c1 = 1.0;
+        let tau = 2.0; // p ≈ 0.02275
+        let p = gauss_sf(tau / (sigma1 * c1));
+        let mut rng = Xoshiro256::seed_from(3);
+        let (s, _) = survivors_sparse(&[], num_rows, sigma1, c1, tau, &mut rng);
+        let want = p * num_rows as f64;
+        let sd = (num_rows as f64 * p * (1.0 - p)).sqrt();
+        assert!(
+            (s.len() as f64 - want).abs() < 5.0 * sd,
+            "got {} want {want}±{sd}",
+            s.len()
+        );
+        // indices must be unique and in range
+        let mut u = s.clone();
+        u.dedup();
+        assert_eq!(u.len(), s.len());
+        assert!(s.iter().all(|&i| (i as usize) < num_rows));
+    }
+
+    #[test]
+    fn sparse_skips_nonzero_rows_in_fp_translation() {
+        // Dense rows 0..10 are non-zero with huge counts (always survive);
+        // false positives must never collide with them in the output-dup
+        // sense (a row can appear once only).
+        let nonzero: Vec<(u32, f32)> = (0..10).map(|i| (i as u32, 1e6)).collect();
+        let mut rng = Xoshiro256::seed_from(7);
+        let (s, st) =
+            survivors_sparse(&nonzero, 10_000, 10.0, 1.0, -50.0, &mut rng);
+        // tau very negative => p ~ 1: everything survives exactly once
+        assert_eq!(s.len(), 10_000);
+        assert_eq!(st.true_survivors, 10);
+        assert_eq!(st.false_positives, 9_990);
+        let mut u = s.clone();
+        u.dedup();
+        assert_eq!(u.len(), s.len());
+    }
+
+    #[test]
+    fn dense_and_sparse_agree_statistically() {
+        // Same count vector, many trials: survival rate per class
+        // (high-count / borderline / zero) should agree between the two
+        // implementations within sampling error.
+        let mut counts = vec![0f32; 5000];
+        for i in 0..50 {
+            counts[i * 100] = 3.0; // borderline at tau=3: P(survive)=0.5
+        }
+        let trials = 300;
+        let (mut dense_tot, mut sparse_tot) = (0usize, 0usize);
+        let (mut dense_fp, mut sparse_fp) = (0usize, 0usize);
+        let nz = sparse_counts(&counts);
+        for t in 0..trials {
+            let mut r1 = Xoshiro256::seed_from(1000 + t);
+            let mut r2 = Xoshiro256::seed_from(5000 + t);
+            let (_, st_d) = survivors_dense(&counts, 1.0, 1.0, 3.0, &mut r1);
+            let (_, st_s) = survivors_sparse(&nz, 5000, 1.0, 1.0, 3.0, &mut r2);
+            dense_tot += st_d.true_survivors;
+            sparse_tot += st_s.true_survivors;
+            dense_fp += st_d.false_positives;
+            sparse_fp += st_s.false_positives;
+        }
+        let n = (trials * 50) as f64;
+        let d_rate = dense_tot as f64 / n;
+        let s_rate = sparse_tot as f64 / n;
+        assert!((d_rate - 0.5).abs() < 0.03, "dense borderline rate {d_rate}");
+        assert!((s_rate - 0.5).abs() < 0.03, "sparse borderline rate {s_rate}");
+        // zero-count false positives: p = psi(3) ≈ 1.35e-3 over 4950 rows
+        let fp_want = gauss_sf(3.0) * 4950.0 * trials as f64;
+        for (name, fp) in [("dense", dense_fp), ("sparse", sparse_fp)] {
+            let got = fp as f64;
+            assert!(
+                (got - fp_want).abs() < 6.0 * fp_want.sqrt().max(3.0),
+                "{name} fp {got} want {fp_want}"
+            );
+        }
+    }
+}

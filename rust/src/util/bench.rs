@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! Protocol per benchmark: warm up until ~`warmup` has elapsed, then run
+//! `samples` timed iterations batched to at least `min_batch_time`, and
+//! report median / p10 / p90 of the per-iteration time.  Used by every
+//! `[[bench]]` target (`cargo bench` runs them with `--bench`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_batch_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            samples: 15,
+            min_batch_time: Duration::from_millis(20),
+        }
+    }
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn per_iter_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<48} median {:>12} p10 {:>12} p90 {:>12} ({} it/sample)",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.p10),
+            fmt_dur(self.p90),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+impl Bencher {
+    /// Benchmark `f`, preventing dead-code elimination via the returned value.
+    pub fn bench<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup and batch-size calibration.
+        let mut iters: u64 = 1;
+        let warm_start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed();
+            if warm_start.elapsed() >= self.warmup && dt >= self.min_batch_time {
+                break;
+            }
+            if dt < self.min_batch_time {
+                iters = (iters * 2).min(1 << 30);
+            }
+        }
+        // Timed samples.
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            median: Duration::from_secs_f64(stats::median(&per_iter)),
+            p10: Duration::from_secs_f64(stats::percentile(&per_iter, 10.0)),
+            p90: Duration::from_secs_f64(stats::percentile(&per_iter, 90.0)),
+            iters_per_sample: iters,
+        };
+        println!("{result}");
+        result
+    }
+
+    /// One-shot timing for expensive end-to-end runs (no batching).
+    pub fn once<T, F: FnOnce() -> T>(&self, name: &str, f: F) -> (T, Duration) {
+        let t0 = Instant::now();
+        let out = std::hint::black_box(f());
+        let dt = t0.elapsed();
+        println!("{:<48} once   {:>12}", name, fmt_dur(dt));
+        (out, dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            min_batch_time: Duration::from_micros(200),
+        };
+        // memory-bound workload: cannot be closed-form folded by LLVM
+        let data: Vec<u64> = (0..4096).map(|i| std::hint::black_box(i)).collect();
+        let r = b.bench("vec-sum", || {
+            data.iter().map(|&x| std::hint::black_box(x)).sum::<u64>()
+        });
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.p10 <= r.p90);
+    }
+}

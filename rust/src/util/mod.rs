@@ -1,0 +1,9 @@
+//! Shared utilities: RNG substrate, tiny statistics helpers, and the
+//! micro-benchmark harness used by `cargo bench` (the offline crate set has
+//! no criterion; `bench::Bencher` reproduces the warmup/median protocol).
+
+pub mod bench;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Xoshiro256;

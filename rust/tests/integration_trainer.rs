@@ -1,0 +1,237 @@
+//! End-to-end coordinator integration: every algorithm trains for a handful
+//! of steps on real artifacts; invariants across algorithms are checked
+//! (loss decreases non-privately, gradient-size ordering, survivor
+//! semantics, frozen embeddings untouched).
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{Algorithm, StreamingTrainer, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime init"))
+}
+
+fn base_cfg(algo: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-small".into();
+    cfg.algorithm = algo;
+    cfg.steps = 12;
+    cfg.eval_batches = 4;
+    cfg.c2 = 0.5;
+    cfg
+}
+
+fn criteo_gen(rt: &Runtime, cfg: &RunConfig) -> SynthCriteo {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    let vocabs = model.attr_usize_list("vocabs").unwrap();
+    SynthCriteo::new(CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A))
+}
+
+#[test]
+fn nonprivate_loss_decreases() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_cfg(Algorithm::NonPrivate);
+    cfg.steps = 60;
+    let gen = criteo_gen(&rt, &cfg);
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let out = trainer.run_pctr(&gen).unwrap();
+    let first: f64 = out.loss_history[..10].iter().sum::<f64>() / 10.0;
+    let last: f64 = out.loss_history[out.loss_history.len() - 10..]
+        .iter()
+        .sum::<f64>()
+        / 10.0;
+    assert!(
+        last < first - 0.01,
+        "loss did not decrease: {first:.4} -> {last:.4}"
+    );
+    assert!(out.utility > 0.55, "AUC {africa}", africa = out.utility);
+}
+
+#[test]
+fn all_algorithms_run_and_grad_size_ordering_holds() {
+    let Some(rt) = runtime() else { return };
+    let mut sizes = std::collections::HashMap::new();
+    for algo in [
+        Algorithm::DpSgd,
+        Algorithm::DpAdaFest,
+        Algorithm::DpAdaFestPlus,
+        Algorithm::DpFest,
+        Algorithm::ExpSelection,
+    ] {
+        let mut cfg = base_cfg(algo);
+        cfg.tau = 5.0;
+        cfg.fest_top_k = 1024;
+        cfg.exp_select_m = 512;
+        let gen = criteo_gen(&rt, &cfg);
+        let mut trainer = Trainer::new(cfg, &rt).unwrap();
+        let out = trainer.run_pctr(&gen).unwrap();
+        assert!(out.loss_history.iter().all(|l| l.is_finite()), "{algo:?}");
+        assert!(out.utility.is_finite());
+        sizes.insert(algo, out.emb_grad_coords_per_step);
+    }
+    let dense = sizes[&Algorithm::DpSgd];
+    // every sparsity-preserving variant noises strictly fewer coordinates
+    for algo in [
+        Algorithm::DpAdaFest,
+        Algorithm::DpAdaFestPlus,
+        Algorithm::DpFest,
+        Algorithm::ExpSelection,
+    ] {
+        assert!(
+            sizes[&algo] < dense * 0.8,
+            "{algo:?} size {} not < dense {dense}",
+            sizes[&algo]
+        );
+    }
+    // AdaFEST+ intersects with the FEST set, so it cannot exceed AdaFEST
+    assert!(
+        sizes[&Algorithm::DpAdaFestPlus] <= sizes[&Algorithm::DpAdaFest] * 1.05,
+        "+: {} vs {}",
+        sizes[&Algorithm::DpAdaFestPlus],
+        sizes[&Algorithm::DpAdaFest]
+    );
+}
+
+#[test]
+fn dp_sgd_noises_every_embedding_coordinate() {
+    let Some(rt) = runtime() else { return };
+    let cfg = base_cfg(Algorithm::DpSgd);
+    let gen = criteo_gen(&rt, &cfg);
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let emb_total = trainer.store.embedding_coords();
+    let mut rng = Xoshiro256::seed_from(1);
+    let batch = gen.batch(0, trainer.batch_size(), &mut rng);
+    let stats = trainer.step_pctr(&batch).unwrap();
+    assert_eq!(stats.emb_coords_noised, emb_total);
+    assert_eq!(stats.dense_coords_noised, trainer.store.dense_coords());
+}
+
+#[test]
+fn tau_monotonically_shrinks_gradient_size() {
+    let Some(rt) = runtime() else { return };
+    let mut prev = f64::INFINITY;
+    for tau in [0.5, 5.0, 50.0] {
+        let mut cfg = base_cfg(Algorithm::DpAdaFest);
+        cfg.tau = tau;
+        let gen = criteo_gen(&rt, &cfg);
+        let mut trainer = Trainer::new(cfg, &rt).unwrap();
+        let out = trainer.run_pctr(&gen).unwrap();
+        assert!(
+            out.emb_grad_coords_per_step <= prev * 1.1,
+            "tau={tau}: {} > prev {prev}",
+            out.emb_grad_coords_per_step
+        );
+        prev = out.emb_grad_coords_per_step;
+    }
+}
+
+#[test]
+fn frozen_embedding_is_untouched() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = RunConfig::default();
+    cfg.model = "nlu-roberta".into();
+    cfg.algorithm = Algorithm::DpSgd;
+    cfg.freeze_embedding = true;
+    cfg.steps = 3;
+    cfg.eval_batches = 2;
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    let gen = SynthText::new(TextConfig::new(
+        model.attr_usize("vocab").unwrap(),
+        model.attr_usize("seq_len").unwrap(),
+        model.attr_usize("num_classes").unwrap(),
+        3,
+    ));
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let emb_before = trainer
+        .store
+        .get("emb_table")
+        .unwrap()
+        .tensor
+        .as_f32()
+        .unwrap()
+        .to_vec();
+    let mut rng = Xoshiro256::seed_from(2);
+    for _ in 0..3 {
+        let b = gen.batch(trainer.batch_size(), &mut rng);
+        let stats = trainer.step_text(&b).unwrap();
+        assert_eq!(stats.emb_coords_noised, 0);
+    }
+    let emb_after = trainer
+        .store
+        .get("emb_table")
+        .unwrap()
+        .tensor
+        .as_f32()
+        .unwrap();
+    assert_eq!(emb_before.as_slice(), emb_after);
+}
+
+#[test]
+fn nlu_and_xlmr_train() {
+    let Some(rt) = runtime() else { return };
+    for model_name in ["nlu-roberta", "nlu-xlmr"] {
+        let mut cfg = RunConfig::default();
+        cfg.model = model_name.into();
+        cfg.algorithm = Algorithm::DpAdaFest;
+        cfg.steps = 4;
+        cfg.eval_batches = 2;
+        cfg.tau = 2.0;
+        let model = rt.manifest.model(&cfg.model).unwrap();
+        let gen = SynthText::new(TextConfig::new(
+            model.attr_usize("vocab").unwrap(),
+            model.attr_usize("seq_len").unwrap(),
+            model.attr_usize("num_classes").unwrap(),
+            7,
+        ));
+        let mut trainer = Trainer::new(cfg, &rt).unwrap();
+        let out = trainer.run_text(&gen).unwrap();
+        assert!(out.utility.is_finite() && out.utility >= 0.0);
+        assert!(out.reduction_factor > 1.0, "{model_name}: no reduction");
+    }
+}
+
+#[test]
+fn streaming_protocol_runs_and_evals_future_days() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = base_cfg(Algorithm::DpAdaFestPlus);
+    cfg.steps = 36; // 2/day
+    cfg.streaming_period = 2;
+    cfg.fest_top_k = 2048;
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    let vocabs = model.attr_usize_list("vocabs").unwrap();
+    let gen = SynthCriteo::new(CriteoConfig::new(vocabs, 9).with_drift());
+    let trainer = Trainer::new(cfg, &rt).unwrap();
+    let mut st = StreamingTrainer::new(trainer, 2);
+    let out = st.run(&gen).unwrap();
+    assert_eq!(out.per_day_auc.len(), 6);
+    assert!(out.reselections >= 1);
+    assert!(out.outcome.utility.is_finite());
+}
+
+#[test]
+fn loraemb_model_trains_densely() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = RunConfig::default();
+    cfg.model = "nlu-roberta-loraemb16".into();
+    cfg.algorithm = Algorithm::DpSgd;
+    cfg.steps = 3;
+    cfg.eval_batches = 2;
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    let gen = SynthText::new(TextConfig::new(
+        model.attr_usize("vocab").unwrap(),
+        model.attr_usize("seq_len").unwrap(),
+        model.attr_usize("num_classes").unwrap(),
+        7,
+    ));
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let emb_lora_coords = trainer.store.get("emb_lora_a").unwrap().num_elements();
+    let out = trainer.run_text(&gen).unwrap();
+    // dense noise on the LoRA-A factor every step
+    assert!((out.emb_grad_coords_per_step - emb_lora_coords as f64).abs() < 1.0);
+}

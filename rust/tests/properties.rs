@@ -1,0 +1,243 @@
+//! Property-based tests over coordinator invariants (DESIGN.md §7), using
+//! the in-repo seeded-case harness (`sparse_dp_emb::proptest`).
+
+use sparse_dp_emb::accounting::{compose_sigmas, Accountant};
+use sparse_dp_emb::data::PctrBatch;
+use sparse_dp_emb::filtering::{ContributionMap, SurvivorSet};
+use sparse_dp_emb::metrics::auc;
+use sparse_dp_emb::proptest::{check, ensure, f64_in, gauss_vec, usize_in};
+use sparse_dp_emb::sparse::{
+    add_row_noise, survivors_sparse, DenseState, Optimizer, RowSparseGrad,
+};
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+#[test]
+fn prop_sparse_update_equals_dense_update() {
+    check("sparse == dense optimizer step", 60, |rng| {
+        let rows = usize_in(rng, 4, 60);
+        let dim = usize_in(rng, 1, 12);
+        let nnz = usize_in(rng, 1, rows);
+        let mut g = RowSparseGrad::new(rows, dim);
+        for _ in 0..nnz * 2 {
+            let r = usize_in(rng, 0, rows - 1) as u32;
+            g.add_row(r, &gauss_vec(rng, dim, 1.0));
+        }
+        let lr = f64_in(rng, 0.001, 0.5) as f32;
+        let opt = Optimizer::sgd(lr);
+        let init = gauss_vec(rng, rows * dim, 1.0);
+        let mut a = init.clone();
+        let mut b = init;
+        opt.sparse_step(&mut a, &g, &mut DenseState::default());
+        opt.dense_step(&mut b, &g.to_dense(), &mut DenseState::default());
+        for (x, y) in a.iter().zip(&b) {
+            if (x - y).abs() > 1e-5 {
+                return Err(format!("mismatch {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_retain_then_densify_matches_mask() {
+    check("retain_rows == dense mask", 60, |rng| {
+        let rows = usize_in(rng, 4, 100);
+        let dim = usize_in(rng, 1, 6);
+        let mut g = RowSparseGrad::new(rows, dim);
+        for _ in 0..usize_in(rng, 1, 40) {
+            g.add_row(usize_in(rng, 0, rows - 1) as u32, &gauss_vec(rng, dim, 1.0));
+        }
+        let keep_mod = usize_in(rng, 1, 5) as u32;
+        let dense_before = g.to_dense();
+        g.retain_rows(|r| r % keep_mod == 0);
+        let dense_after = g.to_dense();
+        for r in 0..rows as u32 {
+            for k in 0..dim {
+                let want = if r % keep_mod == 0 {
+                    dense_before[r as usize * dim + k]
+                } else {
+                    0.0
+                };
+                if (dense_after[r as usize * dim + k] - want).abs() > 1e-6 {
+                    return Err(format!("row {r} wrong after retain"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_row_noise_preserves_support() {
+    check("row noise touches exactly the stored rows", 40, |rng| {
+        let rows = usize_in(rng, 10, 200);
+        let dim = usize_in(rng, 1, 8);
+        let mut g = RowSparseGrad::new(rows, dim);
+        let nnz = usize_in(rng, 1, 9.min(rows));
+        for i in 0..nnz {
+            g.add_row((i * (rows / nnz)) as u32, &vec![0f32; dim]);
+        }
+        let before = g.nnz_rows();
+        add_row_noise(&mut g, 1.0, rng);
+        ensure(g.nnz_rows() == before, "support changed")?;
+        let dense = g.to_dense();
+        let nz_rows = (0..rows)
+            .filter(|&r| dense[r * dim..(r + 1) * dim].iter().any(|&v| v != 0.0))
+            .count();
+        ensure(nz_rows == before, format!("{nz_rows} noisy rows vs {before}"))
+    });
+}
+
+#[test]
+fn prop_contribution_map_mass_bounded_by_c1_times_batch() {
+    // each example's clipped indicator has l2 norm <= C1, hence l1 mass
+    // <= C1 * sqrt(u) <= C1 * sqrt(F); total <= B * C1 * sqrt(F)
+    check("contribution mass bound", 50, |rng| {
+        let b = usize_in(rng, 1, 40);
+        let f = usize_in(rng, 1, 12);
+        let c = usize_in(rng, 4, 300);
+        let c1 = f64_in(rng, 0.1, 10.0);
+        let examples: Vec<Vec<u32>> = (0..b)
+            .map(|_| (0..f).map(|_| usize_in(rng, 0, c - 1) as u32).collect())
+            .collect();
+        let map = ContributionMap::from_batch(&examples, c, c1);
+        let bound = b as f64 * c1 * (f as f64).sqrt() + 1e-6;
+        ensure(
+            map.total_mass() <= bound,
+            format!("mass {} > bound {bound}", map.total_mass()),
+        )
+    });
+}
+
+#[test]
+fn prop_survivors_subset_and_tau_monotone() {
+    check("survivor count monotone in tau (shared noise)", 40, |rng| {
+        let c = usize_in(rng, 100, 5000);
+        let nnz = usize_in(rng, 0, 50.min(c / 2));
+        let mut ids: Vec<u32> = (0..nnz).map(|_| usize_in(rng, 0, c - 1) as u32).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let nonzero: Vec<(u32, f32)> =
+            ids.iter().map(|&i| (i, f64_in(rng, 0.5, 20.0) as f32)).collect();
+        let seed = rng.next_u64();
+        let mut counts = Vec::new();
+        for tau in [0.0, 2.0, 8.0] {
+            let mut r = Xoshiro256::seed_from(seed);
+            let (s, _) = survivors_sparse(&nonzero, c, 1.0, 1.0, tau, &mut r);
+            // ids unique & in range
+            let mut u = s.clone();
+            u.dedup();
+            if u.len() != s.len() || s.iter().any(|&i| i as usize >= c) {
+                return Err("invalid survivor ids".into());
+            }
+            counts.push(s.len());
+        }
+        ensure(
+            counts[0] >= counts[1] && counts[1] >= counts[2],
+            format!("not monotone: {counts:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_survivor_intersection_is_subset() {
+    check("adafest+ set ⊆ both parents", 50, |rng| {
+        let n = usize_in(rng, 0, 200);
+        let mut a: Vec<u32> = (0..n).map(|_| usize_in(rng, 0, 999) as u32).collect();
+        let mut b: Vec<u32> = (0..n).map(|_| usize_in(rng, 0, 999) as u32).collect();
+        a.sort_unstable();
+        a.dedup();
+        b.sort_unstable();
+        b.dedup();
+        let sa = SurvivorSet::from_sorted(a.clone());
+        let sb = SurvivorSet::from_sorted(b.clone());
+        let i = sa.intersect(&sb);
+        for &x in i.ids() {
+            if !sa.contains(x) || !sb.contains(x) {
+                return Err(format!("{x} not in both parents"));
+            }
+        }
+        // and nothing common is missing
+        for &x in &a {
+            if sb.contains(x) && !i.contains(x) {
+                return Err(format!("{x} missing from intersection"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accountant_epsilon_monotone() {
+    // smoke-scale grid (PLD is expensive): monotone in T and in 1/sigma
+    let e1 = Accountant::new(1.0, 0.02, 50).epsilon(1e-5);
+    let e2 = Accountant::new(1.0, 0.02, 200).epsilon(1e-5);
+    let e3 = Accountant::new(1.5, 0.02, 200).epsilon(1e-5);
+    assert!(e2 > e1 && e3 < e2, "e1={e1} e2={e2} e3={e3}");
+}
+
+#[test]
+fn prop_compose_sigmas_bounds() {
+    check("sigma_eff < min(sigma1, sigma2) and symmetric", 100, |rng| {
+        let s1 = f64_in(rng, 0.1, 50.0);
+        let s2 = f64_in(rng, 0.1, 50.0);
+        let eff = compose_sigmas(s1, s2);
+        ensure(eff < s1.min(s2), format!("eff {eff} >= min({s1},{s2})"))?;
+        ensure(
+            (compose_sigmas(s2, s1) - eff).abs() < 1e-12,
+            "not symmetric",
+        )
+    });
+}
+
+#[test]
+fn prop_auc_invariant_to_monotone_transform() {
+    check("AUC invariant under monotone score transform", 40, |rng| {
+        let n = usize_in(rng, 10, 200);
+        let scores: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let labels: Vec<f32> = (0..n).map(|_| (rng.below(2)) as f32).collect();
+        if labels.iter().all(|&l| l == 0.0) || labels.iter().all(|&l| l == 1.0) {
+            return Ok(()); // degenerate, AUC undefined
+        }
+        let a1 = auc(&scores, &labels);
+        let transformed: Vec<f32> = scores.iter().map(|&s| (s * 0.3).tanh() * 5.0 + 2.0).collect();
+        let a2 = auc(&transformed, &labels);
+        ensure((a1 - a2).abs() < 1e-9, format!("{a1} vs {a2}"))
+    });
+}
+
+#[test]
+fn prop_batch_activated_rows_within_offsets() {
+    check("activated rows land in the right table range", 50, |rng| {
+        let nf = usize_in(rng, 1, 8);
+        let vocabs: Vec<usize> = (0..nf).map(|_| usize_in(rng, 2, 50)).collect();
+        let mut offsets = vec![0usize];
+        for v in &vocabs[..nf - 1] {
+            let last = *offsets.last().unwrap();
+            offsets.push(last + v);
+        }
+        let bsz = usize_in(rng, 1, 16);
+        let cat: Vec<i32> = (0..bsz * nf)
+            .map(|i| usize_in(rng, 0, vocabs[i % nf] - 1) as i32)
+            .collect();
+        let batch = PctrBatch {
+            batch_size: bsz,
+            num_features: nf,
+            num_numeric: 13,
+            cat,
+            num: vec![0.0; bsz * 13],
+            y: vec![0.0; bsz],
+        };
+        let rows = batch.activated_rows(&offsets);
+        for ex in &rows {
+            for (f, &r) in ex.iter().enumerate() {
+                let lo = offsets[f] as u32;
+                let hi = lo + vocabs[f] as u32;
+                if r < lo || r >= hi {
+                    return Err(format!("row {r} outside table {f} [{lo},{hi})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
