@@ -43,7 +43,7 @@ fn main() -> Result<()> {
         let mut trainer = Trainer::new(cfg.clone(), &rt)?;
         println!(
             "noise: sigma1={:.3} sigma2={:.3}",
-            trainer.sigma1, trainer.sigma2
+            trainer.sigma1(), trainer.sigma2()
         );
 
         // explicit step loop so the loss curve is visible
@@ -64,9 +64,9 @@ fn main() -> Result<()> {
         let (auc, eval_loss) = trainer.eval_pctr(&eval)?;
         println!(
             "  -> AUC {auc:.4}  eval-loss {eval_loss:.4}  grad-size reduction {:.1}x\n",
-            trainer.meter.reduction_factor()
+            trainer.meter().reduction_factor()
         );
-        results.push((algo, auc, trainer.meter.reduction_factor()));
+        results.push((algo, auc, trainer.meter().reduction_factor()));
     }
 
     println!("=== summary ===");

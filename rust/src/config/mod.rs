@@ -11,6 +11,37 @@ use crate::coordinator::Algorithm;
 use crate::selection::FrequencySource;
 use crate::sparse::OptimizerKind;
 
+/// Configuration of the asynchronous sharded engine (`train-async`).
+///
+/// None of these knobs change the trained model: the engine is bit-for-bit
+/// equivalent to the sync trainer at any worker/shard/depth setting (see
+/// `engine/` module docs) — they only trade throughput for resources.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// gradient workers computing per-example clipped grads (`--engine-workers`)
+    pub grad_workers: usize,
+    /// pipelined batch-generation workers (`--engine-data-workers`)
+    pub data_workers: usize,
+    /// bound of the (step, batch) channel — pipeline depth (`--engine-channel-depth`)
+    pub channel_depth: usize,
+    /// row-range shards per embedding table (`--engine-shards`)
+    pub shards: usize,
+    /// 16-example reduction chunks dispatched per task (`--engine-microbatch`)
+    pub microbatch_chunks: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            grad_workers: 4,
+            data_workers: 2,
+            channel_depth: 8,
+            shards: 16,
+            microbatch_chunks: 1,
+        }
+    }
+}
+
 /// Full configuration of one training run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -53,6 +84,9 @@ pub struct RunConfig {
     pub freeze_embedding: bool,
 
     pub artifacts_dir: String,
+
+    /// async engine knobs (throughput-only; no effect on results)
+    pub engine: EngineConfig,
 }
 
 impl Default for RunConfig {
@@ -80,6 +114,7 @@ impl Default for RunConfig {
             memory_efficient_filtering: true,
             freeze_embedding: false,
             artifacts_dir: "artifacts".into(),
+            engine: EngineConfig::default(),
         }
     }
 }
@@ -123,6 +158,19 @@ impl RunConfig {
             }
             "freeze_embedding" => self.freeze_embedding = parse_bool(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
+            "engine_workers" => {
+                self.engine.grad_workers = v.parse().context("engine_workers")?
+            }
+            "engine_data_workers" => {
+                self.engine.data_workers = v.parse().context("engine_data_workers")?
+            }
+            "engine_channel_depth" => {
+                self.engine.channel_depth = v.parse().context("engine_channel_depth")?
+            }
+            "engine_shards" => self.engine.shards = v.parse().context("engine_shards")?,
+            "engine_microbatch" => {
+                self.engine.microbatch_chunks = v.parse().context("engine_microbatch")?
+            }
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -226,6 +274,26 @@ mod tests {
         assert_eq!(c.epsilon, 3.0);
         assert_eq!(c.tau, 10.0);
         assert_eq!(c.algorithm, Algorithm::DpFest);
+    }
+
+    #[test]
+    fn engine_keys_parse() {
+        let mut c = RunConfig::default();
+        let rest = c
+            .apply_args(&[
+                "train-async".to_string(),
+                "--engine-workers".to_string(),
+                "7".to_string(),
+                "--engine-shards=3".to_string(),
+                "--engine-microbatch".to_string(),
+                "2".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(rest, vec!["train-async"]);
+        assert_eq!(c.engine.grad_workers, 7);
+        assert_eq!(c.engine.shards, 3);
+        assert_eq!(c.engine.microbatch_chunks, 2);
+        assert_eq!(c.engine.data_workers, EngineConfig::default().data_workers);
     }
 
     #[test]

@@ -8,14 +8,21 @@
 //! wired through [`crate::accounting`]: given (ε, δ, q, T) the noise pair is
 //! calibrated once per run.
 //!
+//! The step mechanics live in [`step`] — shared verbatim with the
+//! asynchronous sharded engine ([`crate::engine`]), so the two paths are
+//! bit-for-bit equivalent (same noise stream, same batch streams, same
+//! reductions).
+//!
 //! [`Algorithm`] enumerates the paper's methods and baselines:
 //! `NonPrivate`, `DpSgd` (dense noise), `ExpSelection` [ZMH21], `DpFest`
 //! (§3.1), `DpAdaFest` (§3.2 / Algorithm 1), `DpAdaFestPlus` (§4.2).
 
 mod algorithm;
+pub mod step;
 mod streaming;
 mod trainer;
 
 pub use algorithm::Algorithm;
+pub use step::{EmbTable, ModelMeta, StepState, StepStats, TrainOutcome};
 pub use streaming::{StreamingOutcome, StreamingTrainer};
-pub use trainer::{StepStats, Trainer, TrainOutcome};
+pub use trainer::{pctr_frequency_counts, text_frequency_counts, Trainer};

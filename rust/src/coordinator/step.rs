@@ -1,0 +1,789 @@
+//! The step core of Algorithm 1, extracted so the synchronous [`Trainer`]
+//! and the asynchronous [`crate::engine`] run the *same* code for
+//! everything that touches privacy or parameters:
+//!
+//! * model geometry + artifact plan derivation from the manifest,
+//! * σ₁/σ₂ calibration (with a process-wide cache),
+//! * gradient-bundle assembly from artifact outputs,
+//! * survivor selection, noise injection, and optimizer updates
+//!   ([`StepState::apply_update`]),
+//! * evaluation and outcome reporting.
+//!
+//! ## Noise-draw-order invariant
+//!
+//! All DP randomness — FEST top-k Gumbel draws, exponential-selection draws,
+//! contribution-map noise (σ₁), row noise and dense noise (σ₂) — is drawn
+//! from the **single** [`StepState::rng`] stream in a fixed order per step:
+//! selection first, then per-table row noise in table order, then dense-grad
+//! noise in artifact output order.  Both the sync trainer and the async
+//! engine funnel through [`StepState::apply_update`], so the noise stream is
+//! bit-for-bit identical regardless of worker count.  `tests/engine.rs`
+//! asserts this (`noise_draw_order_is_worker-count-invariant`).
+//!
+//! ## Batch-stream invariant
+//!
+//! Training batch `t` is generated from the self-contained RNG
+//! [`train_batch_rng`]`(seed, t)` (and eval batch `i` from
+//! [`eval_batch_rng`]`(seed, i)`), never from a sequential stream — this is
+//! what lets the engine's data workers generate batches out of order and in
+//! parallel while remaining bit-identical to the sync loop.
+//!
+//! [`Trainer`]: super::Trainer
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::accounting::calibrate_sigma;
+use crate::config::RunConfig;
+use crate::data::{PctrBatch, TextBatch};
+use crate::filtering::{ContributionMap, SurvivorSet};
+use crate::metrics;
+use crate::models::ParamStore;
+use crate::runtime::{ArtifactManifest, HostTensor, Manifest, ModelManifest, Runtime};
+use crate::selection::{dp_top_k_per_feature, exponential_select};
+use crate::sparse::{
+    add_dense_noise, add_row_noise, GradSizeMeter, Optimizer, RowSparseGrad,
+};
+use crate::util::rng::Xoshiro256;
+
+use super::algorithm::Algorithm;
+
+/// One embedding table's geometry in the concatenated row space.
+#[derive(Clone, Debug)]
+pub struct EmbTable {
+    pub param_index: usize,
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub row_offset: usize,
+    /// offset of this table's slice in the artifact's per-example grads
+    pub grad_offset: usize,
+}
+
+/// Model-kind-specific metadata derived from the manifest.
+#[derive(Clone, Debug)]
+pub enum ModelMeta {
+    Pctr {
+        batch_size: usize,
+        num_numeric: usize,
+        num_features: usize,
+    },
+    Nlu {
+        batch_size: usize,
+        seq_len: usize,
+        num_classes: usize,
+    },
+}
+
+impl ModelMeta {
+    pub fn batch_size(&self) -> usize {
+        match self {
+            ModelMeta::Pctr { batch_size, .. } | ModelMeta::Nlu { batch_size, .. } => {
+                *batch_size
+            }
+        }
+    }
+}
+
+/// How each grads-artifact output is consumed.
+#[derive(Clone, Debug)]
+pub enum OutputKind {
+    Loss,
+    DenseGrad(usize), // param index
+    EmbGrads,
+    Counts,
+    Scales,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub loss: f64,
+    pub emb_coords_noised: usize,
+    pub dense_coords_noised: usize,
+    pub survivors: usize,
+    pub present_rows: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub loss_history: Vec<f64>,
+    pub utility: f64, // AUC (pctr) or accuracy (nlu)
+    pub eval_loss: f64,
+    pub emb_grad_coords_per_step: f64,
+    pub reduction_factor: f64,
+    pub sigma1: f64,
+    pub sigma2: f64,
+}
+
+/// Everything the grads artifact returns for one logical batch, in a form
+/// the update path consumes.  Produced by [`assemble_pctr`]/[`assemble_text`]
+/// from artifact outputs — identically in the sync and async paths.
+#[derive(Clone, Debug)]
+pub struct GradBundle {
+    pub loss: f64,
+    pub table_grads: Vec<RowSparseGrad>,
+    /// dense pre-noise contribution map over the concatenated row space —
+    /// materialised only for algorithms that consume it (the copy is
+    /// `total_vocab` floats, ~40 MB/step at paper scale)
+    pub counts: Option<Vec<f32>>,
+    /// (param index, clipped-sum grad) per dense parameter
+    pub dense_grads: Vec<(usize, Vec<f32>)>,
+}
+
+/// Destination of optimizer updates.  [`ParamStore`] applies in place; the
+/// engine's sharded store applies through per-shard locks.
+pub trait ParamSink {
+    fn apply_sparse(
+        &mut self,
+        param_index: usize,
+        grad: &RowSparseGrad,
+        opt: &Optimizer,
+    ) -> Result<()>;
+    fn apply_dense(
+        &mut self,
+        param_index: usize,
+        grad: &[f32],
+        opt: &Optimizer,
+    ) -> Result<()>;
+}
+
+impl ParamSink for ParamStore {
+    fn apply_sparse(
+        &mut self,
+        param_index: usize,
+        grad: &RowSparseGrad,
+        opt: &Optimizer,
+    ) -> Result<()> {
+        let p = &mut self.params[param_index];
+        opt.sparse_step(p.tensor.as_f32_mut()?, grad, &mut p.opt_state);
+        Ok(())
+    }
+
+    fn apply_dense(
+        &mut self,
+        param_index: usize,
+        grad: &[f32],
+        opt: &Optimizer,
+    ) -> Result<()> {
+        let p = &mut self.params[param_index];
+        opt.dense_step(p.tensor.as_f32_mut()?, grad, &mut p.opt_state);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic batch streams
+// ---------------------------------------------------------------------------
+
+/// RNG for training batch `step` — self-contained per step (see the
+/// batch-stream invariant in the module docs).
+pub fn train_batch_rng(seed: u64, step: u64) -> Xoshiro256 {
+    Xoshiro256::seed_from(
+        seed ^ 0xBA7C4 ^ (step + 1).wrapping_mul(0x9E3779B97F4A7C15),
+    )
+}
+
+/// RNG for eval batch `index` (stream disjoint from training by tag).
+pub fn eval_batch_rng(seed: u64, index: u64) -> Xoshiro256 {
+    Xoshiro256::seed_from(
+        seed ^ 0xE7A1BA7C ^ (index + 1).wrapping_mul(0xD1B54A32D192ED03),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Manifest-derived plans
+// ---------------------------------------------------------------------------
+
+/// Model geometry shared by both training paths.
+#[derive(Clone, Debug)]
+pub struct ModelGeometry {
+    pub meta: ModelMeta,
+    pub emb_tables: Vec<EmbTable>,
+    pub total_vocab: usize,
+}
+
+pub fn model_geometry(model: &ModelManifest, store: &ParamStore) -> Result<ModelGeometry> {
+    let (meta, emb_tables, total_vocab) = match model.kind.as_str() {
+        "pctr" => {
+            let vocabs = model.attr_usize_list("vocabs")?;
+            let dims = model.attr_usize_list("dims")?;
+            let offsets = model.attr_usize_list("row_offsets")?;
+            let mut tables = Vec::with_capacity(vocabs.len());
+            let mut grad_off = 0;
+            for (f, ((&v, &d), &off)) in
+                vocabs.iter().zip(&dims).zip(&offsets).enumerate()
+            {
+                tables.push(EmbTable {
+                    param_index: store.index_of(&format!("table_{f:02}"))?,
+                    name: format!("table_{f:02}"),
+                    vocab: v,
+                    dim: d,
+                    row_offset: off,
+                    grad_offset: grad_off,
+                });
+                grad_off += d;
+            }
+            (
+                ModelMeta::Pctr {
+                    batch_size: model.attr_usize("batch_size")?,
+                    num_numeric: model.attr_usize("num_numeric")?,
+                    num_features: vocabs.len(),
+                },
+                tables,
+                model.attr_usize("total_vocab")?,
+            )
+        }
+        "nlu" => {
+            let vocab = model.attr_usize("vocab")?;
+            let emb_lora = model.attr_usize("emb_lora_rank").unwrap_or(0);
+            let (pname, dim) = if emb_lora > 0 {
+                ("emb_lora_a".to_string(), emb_lora)
+            } else {
+                ("emb_table".to_string(), model.attr_usize("d_model")?)
+            };
+            let tables = vec![EmbTable {
+                param_index: store.index_of(&pname)?,
+                name: pname,
+                vocab,
+                dim,
+                row_offset: 0,
+                grad_offset: 0,
+            }];
+            (
+                ModelMeta::Nlu {
+                    batch_size: model.attr_usize("batch_size")?,
+                    seq_len: model.attr_usize("seq_len")?,
+                    num_classes: model.attr_usize("num_classes")?,
+                },
+                tables,
+                vocab,
+            )
+        }
+        other => bail!("unknown model kind {other}"),
+    };
+    Ok(ModelGeometry { meta, emb_tables, total_vocab })
+}
+
+/// Locate the `(grads, fwd)` artifact pair for a model.
+pub fn locate_artifacts(manifest: &Manifest, model: &str) -> Result<(String, String)> {
+    let mut grads_artifact = None;
+    let mut fwd_artifact = None;
+    for (name, art) in &manifest.artifacts {
+        if art.model == model {
+            if name.ends_with("_grads") {
+                grads_artifact = Some(name.clone());
+            } else if name.ends_with("_fwd") {
+                fwd_artifact = Some(name.clone());
+            }
+        }
+    }
+    Ok((
+        grads_artifact.with_context(|| format!("no grads artifact for {model}"))?,
+        fwd_artifact.with_context(|| format!("no fwd artifact for {model}"))?,
+    ))
+}
+
+/// Classify every output of the grads artifact.
+pub fn output_plan(art: &ArtifactManifest, store: &ParamStore) -> Result<Vec<OutputKind>> {
+    let mut plan = Vec::with_capacity(art.outputs.len());
+    for out in &art.outputs {
+        let kind = match out.name.as_str() {
+            "loss" => OutputKind::Loss,
+            "zgrads_scaled" | "aout_grads_scaled" => OutputKind::EmbGrads,
+            "counts" => OutputKind::Counts,
+            "scales" => OutputKind::Scales,
+            g if g.starts_with("grad_") => OutputKind::DenseGrad(store.index_of(&g[5..])?),
+            other => bail!("unexpected grads output {other}"),
+        };
+        plan.push(kind);
+    }
+    Ok(plan)
+}
+
+/// Effective clip norms fed to the artifact (non-private runs disable
+/// clipping with a huge C).
+pub fn clip_values(cfg: &RunConfig) -> (f32, f32) {
+    if cfg.algorithm.is_private() {
+        (cfg.c1 as f32, cfg.c2 as f32)
+    } else {
+        (1e9, 1e9)
+    }
+}
+
+pub fn clip_inputs(cfg: &RunConfig) -> (HostTensor, HostTensor) {
+    let (c1, c2) = clip_values(cfg);
+    (
+        HostTensor::f32(vec![1], vec![c1]),
+        HostTensor::f32(vec![1], vec![c2]),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// σ calibration (with process-wide cache)
+// ---------------------------------------------------------------------------
+
+// Calibration cache: PLD calibration costs seconds; sweeps reuse budgets.
+// Keyed on exact f64 bit patterns — quantising with `(x * 1e6) as u64`
+// collided for nearby budgets and truncated instead of rounding.
+static SIGMA_CACHE: Mutex<Option<HashMap<(u64, u64, u64, u64), f64>>> = Mutex::new(None);
+
+fn cached_calibrate(epsilon: f64, delta: f64, q: f64, steps: u64) -> Result<f64> {
+    let key = (epsilon.to_bits(), delta.to_bits(), q.to_bits(), steps);
+    {
+        let cache = SIGMA_CACHE.lock().unwrap();
+        if let Some(map) = cache.as_ref() {
+            if let Some(&s) = map.get(&key) {
+                return Ok(s);
+            }
+        }
+    }
+    let sigma = calibrate_sigma(epsilon, delta, q, steps)?;
+    let mut cache = SIGMA_CACHE.lock().unwrap();
+    cache.get_or_insert_with(HashMap::new).insert(key, sigma);
+    Ok(sigma)
+}
+
+/// Calibrate the (σ₁, σ₂) pair for a run.  Semantics identical to the seed
+/// trainer: FEST budget split first, then either a composed pair (σ₁/σ₂ at
+/// `cfg.sigma_ratio`, for contribution-map algorithms) or a single σ₂.
+/// Both branches share the σ_eff cache.
+pub fn calibrate_noise(cfg: &RunConfig, batch_size: usize) -> Result<(f64, f64)> {
+    let q = batch_size as f64 / cfg.dataset_size as f64;
+    let delta = cfg.effective_delta();
+    let mut eps_train = cfg.epsilon;
+    if cfg.algorithm.uses_fest_selection() {
+        eps_train -= cfg.fest_epsilon; // Appendix B.1 budget split
+        if eps_train <= 0.0 {
+            bail!("fest_epsilon exhausts the privacy budget");
+        }
+    }
+    match cfg.algorithm {
+        Algorithm::NonPrivate => Ok((0.0, 0.0)),
+        a if a.uses_contribution_map() => {
+            // Same split as accounting::calibrate_sigma_pair, but through
+            // the σ_eff cache (the pair is a closed-form function of it).
+            let ratio = cfg.sigma_ratio;
+            if ratio <= 0.0 {
+                bail!("sigma ratio must be positive");
+            }
+            let sigma_eff = cached_calibrate(eps_train, delta, q, cfg.steps)?;
+            let sigma2 = sigma_eff * (1.0 + 1.0 / (ratio * ratio)).sqrt();
+            Ok((ratio * sigma2, sigma2))
+        }
+        _ => Ok((0.0, cached_calibrate(eps_train, delta, q, cfg.steps)?)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gradient-bundle assembly from artifact outputs
+// ---------------------------------------------------------------------------
+
+fn assemble_common(
+    plan: &[OutputKind],
+    outs: &[HostTensor],
+    need_counts: bool,
+    mut emb: impl FnMut(&HostTensor) -> Result<Vec<RowSparseGrad>>,
+) -> Result<GradBundle> {
+    let mut loss = 0.0;
+    let mut table_grads: Vec<RowSparseGrad> = Vec::new();
+    let mut counts: Option<Vec<f32>> = None;
+    let mut dense_grads: Vec<(usize, Vec<f32>)> = Vec::new();
+    for (kind, out) in plan.iter().zip(outs) {
+        match kind {
+            OutputKind::Loss => loss = out.scalar()?,
+            OutputKind::DenseGrad(pi) => dense_grads.push((*pi, out.as_f32()?.to_vec())),
+            OutputKind::EmbGrads => table_grads = emb(out)?,
+            OutputKind::Counts if need_counts => counts = Some(out.as_f32()?.to_vec()),
+            OutputKind::Counts | OutputKind::Scales => {}
+        }
+    }
+    if need_counts && counts.is_none() {
+        bail!("grads artifact returned no counts");
+    }
+    Ok(GradBundle { loss, table_grads, counts, dense_grads })
+}
+
+/// Assemble per-table row-sparse grads from a pCTR grads-artifact output
+/// tuple (`zgrads_scaled` is `(B, Σdims)` row-major).  `need_counts` should
+/// be `algorithm.uses_contribution_map()` — copying the dense map is wasted
+/// work otherwise.
+pub fn assemble_pctr(
+    plan: &[OutputKind],
+    outs: &[HostTensor],
+    emb_tables: &[EmbTable],
+    batch: &PctrBatch,
+    need_counts: bool,
+) -> Result<GradBundle> {
+    let b = batch.batch_size;
+    assemble_common(plan, outs, need_counts, |out| {
+        let zg = out.as_f32()?;
+        let d_total: usize = emb_tables.iter().map(|t| t.dim).sum();
+        let mut grads: Vec<RowSparseGrad> = emb_tables
+            .iter()
+            .map(|t| RowSparseGrad::with_capacity(t.vocab, t.dim, b))
+            .collect();
+        for i in 0..b {
+            for (f, t) in emb_tables.iter().enumerate() {
+                let row = batch.cat_of(i, f) as u32;
+                let s = i * d_total + t.grad_offset;
+                grads[f].add_row(row, &zg[s..s + t.dim]);
+            }
+        }
+        Ok(grads)
+    })
+}
+
+/// Assemble the single-table row-sparse grad from an NLU grads-artifact
+/// output tuple (`zgrads_scaled` is `(B, T, d)` row-major).
+pub fn assemble_text(
+    plan: &[OutputKind],
+    outs: &[HostTensor],
+    emb_tables: &[EmbTable],
+    batch: &TextBatch,
+    seq_len: usize,
+    need_counts: bool,
+) -> Result<GradBundle> {
+    let b = batch.batch_size;
+    assemble_common(plan, outs, need_counts, |out| {
+        let zg = out.as_f32()?;
+        let t = &emb_tables[0];
+        let mut g = RowSparseGrad::with_capacity(t.vocab, t.dim, b * seq_len);
+        for i in 0..b {
+            for p in 0..seq_len {
+                let row = batch.token(i, p) as u32;
+                let s = (i * seq_len + p) * t.dim;
+                g.add_row(row, &zg[s..s + t.dim]);
+            }
+        }
+        Ok(vec![g])
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The mutable step state (selection + noise + update + bookkeeping)
+// ---------------------------------------------------------------------------
+
+/// Everything Algorithm 1 mutates across steps, independent of how the
+/// gradients were computed or where the parameters live.
+pub struct StepState {
+    pub cfg: RunConfig,
+    pub meta: ModelMeta,
+    pub emb_tables: Vec<EmbTable>,
+    pub total_vocab: usize,
+    pub opt: Optimizer,
+    pub rng: Xoshiro256,
+    pub meter: GradSizeMeter,
+    pub sigma1: f64,
+    pub sigma2: f64,
+    /// DP-FEST pre-selected rows (concatenated space), if applicable
+    pub fest_selected: Option<SurvivorSet>,
+    pub loss_history: Vec<f64>,
+}
+
+impl StepState {
+    pub fn new(cfg: RunConfig, model: &ModelManifest, store: &ParamStore) -> Result<StepState> {
+        let geom = model_geometry(model, store)?;
+        let (sigma1, sigma2) = calibrate_noise(&cfg, geom.meta.batch_size())?;
+        let mut meter = GradSizeMeter::default();
+        meter.set_baselines(store.embedding_coords(), store.dense_coords());
+        let opt = Optimizer::new(cfg.optimizer, cfg.lr);
+        let rng = Xoshiro256::seed_from(cfg.seed ^ 0xDEADBEEF);
+        Ok(StepState {
+            cfg,
+            meta: geom.meta,
+            emb_tables: geom.emb_tables,
+            total_vocab: geom.total_vocab,
+            opt,
+            rng,
+            meter,
+            sigma1,
+            sigma2,
+            fest_selected: None,
+            loss_history: Vec::new(),
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.meta.batch_size()
+    }
+
+    /// DP-FEST pre-selection from per-feature frequency counts (Algorithm 2
+    /// with the Appendix-B.1 ε/k split), at the configured selection budget.
+    pub fn fest_select(&mut self, feature_counts: &[Vec<f64>]) -> Result<()> {
+        let eps = self.cfg.fest_epsilon;
+        self.fest_select_with_eps(feature_counts, eps)
+    }
+
+    /// DP-FEST pre-selection at an explicit selection budget.  The streaming
+    /// trainer uses this to spread `fest_epsilon` over periodic reselections
+    /// without mutating the run config.
+    pub fn fest_select_with_eps(
+        &mut self,
+        feature_counts: &[Vec<f64>],
+        epsilon: f64,
+    ) -> Result<()> {
+        if feature_counts.len() != self.emb_tables.len() {
+            bail!(
+                "got counts for {} features, model has {}",
+                feature_counts.len(),
+                self.emb_tables.len()
+            );
+        }
+        let per_feature = dp_top_k_per_feature(
+            feature_counts,
+            self.cfg.fest_top_k,
+            epsilon,
+            &mut self.rng,
+        );
+        let mut ids: Vec<u32> = Vec::new();
+        for (t, sel) in self.emb_tables.iter().zip(&per_feature) {
+            for &b in sel {
+                ids.push((t.row_offset + b as usize) as u32);
+            }
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        self.fest_selected = Some(SurvivorSet::from_sorted(ids));
+        Ok(())
+    }
+
+    /// Shared post-gradient logic: survivor selection, noise, updates.
+    /// This is Algorithm 1 lines 5–11; the DP aggregation barrier of the
+    /// async engine calls it with a sharded sink, the sync trainer with the
+    /// plain param store — noise draw order is identical (module docs).
+    pub fn apply_update(
+        &mut self,
+        bundle: GradBundle,
+        sink: &mut impl ParamSink,
+    ) -> Result<StepStats> {
+        let GradBundle { loss, mut table_grads, counts, dense_grads } = bundle;
+        let b = self.batch_size() as f32;
+        let algo = self.cfg.algorithm;
+        let noise2 = self.sigma2 * self.cfg.c2; // gradient noise stddev
+        let present_rows: usize = table_grads.iter().map(|g| g.nnz_rows()).sum();
+
+        // ---- survivor selection (embedding row set to noise & update) ----
+        let mut survivors_len = 0usize;
+        let survivor_set: Option<SurvivorSet> = match algo {
+            Algorithm::NonPrivate | Algorithm::DpSgd => None,
+            Algorithm::ExpSelection => {
+                // [ZMH21]: exponential mechanism over row gradient norms.
+                let mut utilities: Vec<(u32, f64)> = Vec::with_capacity(present_rows);
+                for (t, g) in self.emb_tables.iter().zip(&table_grads) {
+                    for (row, vals) in g.iter_rows() {
+                        let norm =
+                            vals.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+                        utilities.push(((t.row_offset + row as usize) as u32, norm));
+                    }
+                }
+                let ids = exponential_select(
+                    &utilities,
+                    self.cfg.exp_select_m,
+                    self.cfg.epsilon / self.cfg.steps as f64, // per-step selection budget
+                    self.cfg.c2,
+                    &mut self.rng,
+                );
+                Some(SurvivorSet::from_sorted(ids))
+            }
+            Algorithm::DpFest => Some(
+                self.fest_selected
+                    .clone()
+                    .context("DP-FEST requires fest_select() before training")?,
+            ),
+            Algorithm::DpAdaFest | Algorithm::DpAdaFestPlus => {
+                let counts = counts
+                    .as_deref()
+                    .context("contribution map missing from the grad bundle")?;
+                let map = ContributionMap::from_dense(counts);
+                let (surv, _stats) = map.survivors(
+                    self.sigma1,
+                    self.cfg.c1,
+                    self.cfg.tau,
+                    self.cfg.memory_efficient_filtering,
+                    &mut self.rng,
+                );
+                if algo == Algorithm::DpAdaFestPlus {
+                    let fest = self
+                        .fest_selected
+                        .as_ref()
+                        .context("DP-AdaFEST+ requires fest_select() before training")?;
+                    Some(surv.intersect(fest))
+                } else {
+                    Some(surv)
+                }
+            }
+        };
+
+        // ---- embedding updates ----
+        let mut emb_coords = 0usize;
+        if self.cfg.freeze_embedding {
+            // Table 6 baseline: embeddings untouched — drop the grads.
+            table_grads.clear();
+        }
+        match algo {
+            _ if self.cfg.freeze_embedding => {}
+            Algorithm::DpSgd => {
+                // dense path: densify + dense noise + dense update
+                for (t, g) in self.emb_tables.iter().zip(&table_grads) {
+                    let mut dense = g.to_dense();
+                    emb_coords += add_dense_noise(&mut dense, noise2, &mut self.rng);
+                    for v in &mut dense {
+                        *v /= b;
+                    }
+                    sink.apply_dense(t.param_index, &dense, &self.opt)?;
+                }
+            }
+            Algorithm::NonPrivate => {
+                for (t, g) in self.emb_tables.iter().zip(&mut table_grads) {
+                    g.scale(1.0 / b);
+                    emb_coords += g.nnz_coords();
+                    sink.apply_sparse(t.param_index, g, &self.opt)?;
+                }
+            }
+            _ => {
+                // sparsity-preserving DP paths: restrict to survivors, make
+                // sure *every* survivor row exists (noise lands on zero-grad
+                // survivors too), then row noise + sparse update.
+                let surv = survivor_set.as_ref().unwrap();
+                survivors_len = surv.len();
+                for (t, g) in self.emb_tables.iter().zip(&mut table_grads) {
+                    let off = t.row_offset as u32;
+                    let hi = (t.row_offset + t.vocab) as u32;
+                    g.retain_rows(|row| surv.contains(off + row));
+                    // add survivor rows missing from the gradient
+                    let zero = vec![0f32; t.dim];
+                    for &cid in surv.ids() {
+                        if cid >= off && cid < hi {
+                            let local = cid - off;
+                            g.add_row_scaled(local, 0.0, &zero); // ensure presence
+                        }
+                    }
+                    emb_coords += add_row_noise(g, noise2, &mut self.rng);
+                    g.scale(1.0 / b);
+                    sink.apply_sparse(t.param_index, g, &self.opt)?;
+                }
+            }
+        }
+
+        // ---- dense (non-embedding) updates: standard DP-SGD ----
+        let mut dense_coords = 0usize;
+        for (pi, mut gbuf) in dense_grads {
+            if algo.is_private() {
+                dense_coords += add_dense_noise(&mut gbuf, noise2, &mut self.rng);
+            }
+            for v in &mut gbuf {
+                *v /= b;
+            }
+            sink.apply_dense(pi, &gbuf, &self.opt)?;
+        }
+
+        self.meter.record_step(emb_coords, dense_coords);
+        self.loss_history.push(loss);
+        Ok(StepStats {
+            loss,
+            emb_coords_noised: emb_coords,
+            dense_coords_noised: dense_coords,
+            survivors: survivors_len,
+            present_rows,
+        })
+    }
+
+    pub fn outcome(&self, utility: f64, eval_loss: f64) -> TrainOutcome {
+        TrainOutcome {
+            loss_history: self.loss_history.clone(),
+            utility,
+            eval_loss,
+            emb_grad_coords_per_step: self.meter.emb_per_step(),
+            reduction_factor: self.meter.reduction_factor(),
+            sigma1: self.sigma1,
+            sigma2: self.sigma2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation (shared by Trainer and the engine)
+// ---------------------------------------------------------------------------
+
+/// Evaluate on pCTR batches: returns (AUC, mean loss).
+pub fn eval_pctr(
+    rt: &Runtime,
+    fwd_artifact: &str,
+    store: &ParamStore,
+    batches: &[PctrBatch],
+) -> Result<(f64, f64)> {
+    let mut acc = metrics::EvalAccumulator::default();
+    for batch in batches {
+        let mut inputs = store.tensors();
+        inputs.extend(batch.to_tensors());
+        let outs = rt.execute(fwd_artifact, &inputs)?;
+        let loss = outs[0].scalar()?;
+        let logits = outs[1].as_f32()?;
+        acc.push(logits, &batch.y, loss);
+    }
+    Ok((acc.auc(), acc.mean_loss()))
+}
+
+/// Evaluate on text batches: returns (accuracy, mean loss).
+pub fn eval_text(
+    rt: &Runtime,
+    fwd_artifact: &str,
+    store: &ParamStore,
+    batches: &[TextBatch],
+    num_classes: usize,
+) -> Result<(f64, f64)> {
+    let mut correct_w = 0.0;
+    let mut loss_sum = 0.0;
+    let mut n = 0;
+    for batch in batches {
+        let mut inputs = store.tensors();
+        inputs.extend(batch.to_tensors());
+        let outs = rt.execute(fwd_artifact, &inputs)?;
+        loss_sum += outs[0].scalar()?;
+        let logits = outs[1].as_f32()?;
+        correct_w += metrics::accuracy_from_logits(logits, &batch.labels, num_classes)
+            * batch.batch_size as f64;
+        n += batch.batch_size;
+    }
+    Ok((correct_w / n as f64, loss_sum / batches.len() as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_rng_streams_are_self_contained_and_distinct() {
+        let mut a = train_batch_rng(7, 3);
+        let mut b = train_batch_rng(7, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = train_batch_rng(7, 4);
+        let mut a2 = train_batch_rng(7, 3);
+        assert_ne!(a2.next_u64(), c.next_u64());
+        let mut e = eval_batch_rng(7, 3);
+        let mut a3 = train_batch_rng(7, 3);
+        assert_ne!(a3.next_u64(), e.next_u64());
+    }
+
+    #[test]
+    fn sigma_cache_distinguishes_nearby_budgets() {
+        // regression: (x * 1e6) as u64 mapped 1.0 and 1.0000005 to the same
+        // key.  With to_bits keys the cache must treat them as distinct.
+        let a = (1.0f64).to_bits();
+        let b = (1.000_000_5f64).to_bits();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn clip_values_disable_clipping_when_nonprivate() {
+        let mut cfg = RunConfig::default();
+        cfg.c1 = 0.5;
+        cfg.c2 = 0.25;
+        cfg.algorithm = Algorithm::NonPrivate;
+        assert_eq!(clip_values(&cfg), (1e9, 1e9));
+        cfg.algorithm = Algorithm::DpAdaFest;
+        assert_eq!(clip_values(&cfg), (0.5, 0.25));
+    }
+}

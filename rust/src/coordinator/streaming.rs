@@ -17,7 +17,8 @@ use crate::data::{PctrBatch, SynthCriteo, EVAL_DAYS, TRAIN_DAYS};
 use crate::selection::{FrequencySource, FrequencyTracker};
 use crate::util::rng::Xoshiro256;
 
-use super::trainer::{TrainOutcome, Trainer};
+use super::step::TrainOutcome;
+use super::trainer::Trainer;
 
 pub struct StreamingTrainer<'rt> {
     pub trainer: Trainer<'rt>,
@@ -35,33 +36,34 @@ pub struct StreamingOutcome {
 
 impl<'rt> StreamingTrainer<'rt> {
     pub fn new(trainer: Trainer<'rt>, eval_batches_per_day: usize) -> Self {
-        let steps_per_day = (trainer.cfg.steps / TRAIN_DAYS as u64).max(1);
+        let steps_per_day = (trainer.cfg().steps / TRAIN_DAYS as u64).max(1);
         StreamingTrainer { trainer, steps_per_day, eval_batches_per_day }
     }
 
     /// Run the full 24-day protocol. `gen` must be a drift-enabled
     /// SynthCriteo.
     pub fn run(&mut self, gen: &SynthCriteo) -> Result<StreamingOutcome> {
-        let cfg = self.trainer.cfg.clone();
+        let cfg = self.trainer.cfg().clone();
         let period = cfg.streaming_period.max(1);
         let uses_fest = cfg.algorithm.uses_fest_selection();
         let source = cfg.freq_source;
-        let nf = self.trainer.emb_tables.len();
-        let vocabs: Vec<usize> = self.trainer.emb_tables.iter().map(|t| t.vocab).collect();
+        let nf = self.trainer.emb_tables().len();
+        let vocabs: Vec<usize> =
+            self.trainer.emb_tables().iter().map(|t| t.vocab).collect();
         let mut tracker = FrequencyTracker::new(nf, source);
         let mut rng = Xoshiro256::seed_from(cfg.seed ^ 0x57AE);
         let bsz = self.trainer.batch_size();
 
         // Split the FEST selection budget across the expected number of
         // reselections (basic composition over disjoint... conservatively:
-        // equal split).
+        // equal split).  The split budget is passed to each selection call
+        // directly — a previous revision divided `cfg.fest_epsilon` in
+        // place, so a second `run()` would halve the already-halved budget.
         let n_selections = match source {
             FrequencySource::FirstDay | FrequencySource::AllDays => 1,
             FrequencySource::Streaming => (TRAIN_DAYS + period - 1) / period,
         };
-        if uses_fest {
-            self.trainer.cfg.fest_epsilon = cfg.fest_epsilon / n_selections as f64;
-        }
+        let fest_eps_per_selection = cfg.fest_epsilon / n_selections as f64;
         let mut reselections = 0usize;
 
         let mut observe = |tracker: &mut FrequencyTracker, batch: &PctrBatch| {
@@ -97,7 +99,7 @@ impl<'rt> StreamingTrainer<'rt> {
             let counts: Vec<Vec<f64>> = (0..nf)
                 .map(|f| tracker.dense_counts(f, vocabs[f]))
                 .collect();
-            trainer.fest_select(&counts)?;
+            trainer.fest_select_with_eps(&counts, fest_eps_per_selection)?;
             Ok(())
         };
 

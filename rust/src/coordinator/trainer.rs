@@ -1,326 +1,80 @@
-//! The DP training loop (Algorithm 1 and all baselines) over AOT artifacts.
+//! The synchronous DP training loop (Algorithm 1 and all baselines) over
+//! AOT artifacts.  All step mechanics live in [`super::step`] and are shared
+//! with the asynchronous [`crate::engine`]; this type owns the runtime
+//! handle, the parameter store, and the per-model artifact plan.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+use anyhow::{bail, Result};
 
-use anyhow::{bail, Context, Result};
-
-use crate::accounting::{calibrate_sigma, calibrate_sigma_pair};
 use crate::config::RunConfig;
 use crate::data::{PctrBatch, SynthCriteo, TextBatch};
-use crate::filtering::{ContributionMap, SurvivorSet};
-use crate::metrics;
-use crate::models::ParamStore;
-use crate::runtime::{HostTensor, Runtime};
-use crate::selection::{dp_top_k_per_feature, exponential_select};
-use crate::sparse::{
-    add_dense_noise, add_row_noise, GradSizeMeter, Optimizer, RowSparseGrad,
-};
+use crate::runtime::Runtime;
+use crate::sparse::GradSizeMeter;
 use crate::util::rng::Xoshiro256;
 
-use super::algorithm::Algorithm;
-
-/// One embedding table's geometry in the concatenated row space.
-#[derive(Clone, Debug)]
-pub struct EmbTable {
-    pub param_index: usize,
-    pub name: String,
-    pub vocab: usize,
-    pub dim: usize,
-    pub row_offset: usize,
-    /// offset of this table's slice in the artifact's per-example grads
-    pub grad_offset: usize,
-}
-
-/// Model-kind-specific metadata derived from the manifest.
-#[derive(Clone, Debug)]
-pub enum ModelMeta {
-    Pctr {
-        batch_size: usize,
-        num_numeric: usize,
-        num_features: usize,
-    },
-    Nlu {
-        batch_size: usize,
-        seq_len: usize,
-        num_classes: usize,
-    },
-}
-
-impl ModelMeta {
-    pub fn batch_size(&self) -> usize {
-        match self {
-            ModelMeta::Pctr { batch_size, .. } | ModelMeta::Nlu { batch_size, .. } => {
-                *batch_size
-            }
-        }
-    }
-}
-
-/// How each grads-artifact output is consumed.
-#[derive(Clone, Debug)]
-enum OutputKind {
-    Loss,
-    DenseGrad(usize), // param index
-    EmbGrads,
-    Counts,
-    Scales,
-}
-
-#[derive(Clone, Debug, Default)]
-pub struct StepStats {
-    pub loss: f64,
-    pub emb_coords_noised: usize,
-    pub dense_coords_noised: usize,
-    pub survivors: usize,
-    pub present_rows: usize,
-}
-
-#[derive(Clone, Debug)]
-pub struct TrainOutcome {
-    pub loss_history: Vec<f64>,
-    pub utility: f64, // AUC (pctr) or accuracy (nlu)
-    pub eval_loss: f64,
-    pub emb_grad_coords_per_step: f64,
-    pub reduction_factor: f64,
-    pub sigma1: f64,
-    pub sigma2: f64,
-}
-
-// Calibration cache: PLD calibration costs seconds; sweeps reuse budgets.
-static SIGMA_CACHE: Mutex<Option<HashMap<(u64, u64, u64, u64), f64>>> = Mutex::new(None);
-
-fn cached_calibrate(epsilon: f64, delta: f64, q: f64, steps: u64) -> Result<f64> {
-    let key = (
-        (epsilon * 1e6) as u64,
-        (delta * 1e12) as u64,
-        (q * 1e9) as u64,
-        steps,
-    );
-    {
-        let cache = SIGMA_CACHE.lock().unwrap();
-        if let Some(map) = cache.as_ref() {
-            if let Some(&s) = map.get(&key) {
-                return Ok(s);
-            }
-        }
-    }
-    let sigma = calibrate_sigma(epsilon, delta, q, steps)?;
-    let mut cache = SIGMA_CACHE.lock().unwrap();
-    cache.get_or_insert_with(HashMap::new).insert(key, sigma);
-    Ok(sigma)
-}
+use super::step::{self, ModelMeta, OutputKind, StepState, StepStats, TrainOutcome};
+pub use super::step::EmbTable;
 
 pub struct Trainer<'rt> {
-    pub cfg: RunConfig,
     rt: &'rt Runtime,
-    pub store: ParamStore,
-    pub meta: ModelMeta,
-    pub emb_tables: Vec<EmbTable>,
-    pub total_vocab: usize,
-    opt: Optimizer,
-    rng: Xoshiro256,
-    pub meter: GradSizeMeter,
-    pub sigma1: f64,
-    pub sigma2: f64,
+    pub store: crate::models::ParamStore,
+    /// Mutable Algorithm-1 state (selection, noise RNG, meter, history),
+    /// shared structurally with the async engine.
+    pub state: StepState,
     grads_artifact: String,
     fwd_artifact: String,
     output_plan: Vec<OutputKind>,
-    /// DP-FEST pre-selected rows (concatenated space), if applicable
-    pub fest_selected: Option<SurvivorSet>,
-    pub loss_history: Vec<f64>,
 }
 
 impl<'rt> Trainer<'rt> {
     pub fn new(cfg: RunConfig, rt: &'rt Runtime) -> Result<Trainer<'rt>> {
         let model = rt.manifest.model(&cfg.model)?;
-        let store = ParamStore::init(model, cfg.seed)?;
-
-        // locate artifacts for this model
-        let mut grads_artifact = None;
-        let mut fwd_artifact = None;
-        for (name, art) in &rt.manifest.artifacts {
-            if art.model == cfg.model {
-                if name.ends_with("_grads") {
-                    grads_artifact = Some(name.clone());
-                } else if name.ends_with("_fwd") {
-                    fwd_artifact = Some(name.clone());
-                }
-            }
-        }
-        let grads_artifact =
-            grads_artifact.with_context(|| format!("no grads artifact for {}", cfg.model))?;
-        let fwd_artifact =
-            fwd_artifact.with_context(|| format!("no fwd artifact for {}", cfg.model))?;
-
-        // model geometry
-        let (meta, emb_tables, total_vocab) = match model.kind.as_str() {
-            "pctr" => {
-                let vocabs = model.attr_usize_list("vocabs")?;
-                let dims = model.attr_usize_list("dims")?;
-                let offsets = model.attr_usize_list("row_offsets")?;
-                let mut tables = Vec::with_capacity(vocabs.len());
-                let mut grad_off = 0;
-                for (f, ((&v, &d), &off)) in
-                    vocabs.iter().zip(&dims).zip(&offsets).enumerate()
-                {
-                    tables.push(EmbTable {
-                        param_index: store.index_of(&format!("table_{f:02}"))?,
-                        name: format!("table_{f:02}"),
-                        vocab: v,
-                        dim: d,
-                        row_offset: off,
-                        grad_offset: grad_off,
-                    });
-                    grad_off += d;
-                }
-                (
-                    ModelMeta::Pctr {
-                        batch_size: model.attr_usize("batch_size")?,
-                        num_numeric: model.attr_usize("num_numeric")?,
-                        num_features: vocabs.len(),
-                    },
-                    tables,
-                    model.attr_usize("total_vocab")?,
-                )
-            }
-            "nlu" => {
-                let vocab = model.attr_usize("vocab")?;
-                let emb_lora = model.attr_usize("emb_lora_rank").unwrap_or(0);
-                let (pname, dim) = if emb_lora > 0 {
-                    ("emb_lora_a".to_string(), emb_lora)
-                } else {
-                    ("emb_table".to_string(), model.attr_usize("d_model")?)
-                };
-                let tables = vec![EmbTable {
-                    param_index: store.index_of(&pname)?,
-                    name: pname,
-                    vocab,
-                    dim,
-                    row_offset: 0,
-                    grad_offset: 0,
-                }];
-                (
-                    ModelMeta::Nlu {
-                        batch_size: model.attr_usize("batch_size")?,
-                        seq_len: model.attr_usize("seq_len")?,
-                        num_classes: model.attr_usize("num_classes")?,
-                    },
-                    tables,
-                    vocab,
-                )
-            }
-            other => bail!("unknown model kind {other}"),
-        };
-
-        // output plan for the grads artifact
-        let art = rt.manifest.artifact(&grads_artifact)?;
-        let mut output_plan = Vec::with_capacity(art.outputs.len());
-        for out in &art.outputs {
-            let kind = match out.name.as_str() {
-                "loss" => OutputKind::Loss,
-                "zgrads_scaled" | "aout_grads_scaled" => OutputKind::EmbGrads,
-                "counts" => OutputKind::Counts,
-                "scales" => OutputKind::Scales,
-                g if g.starts_with("grad_") => {
-                    OutputKind::DenseGrad(store.index_of(&g[5..])?)
-                }
-                other => bail!("unexpected grads output {other}"),
-            };
-            output_plan.push(kind);
-        }
-
-        // privacy calibration
-        let b = meta.batch_size();
-        let q = b as f64 / cfg.dataset_size as f64;
-        let delta = cfg.effective_delta();
-        let mut eps_train = cfg.epsilon;
-        if cfg.algorithm.uses_fest_selection() {
-            eps_train -= cfg.fest_epsilon; // Appendix B.1 budget split
-            if eps_train <= 0.0 {
-                bail!("fest_epsilon exhausts the privacy budget");
-            }
-        }
-        let (sigma1, sigma2) = match cfg.algorithm {
-            Algorithm::NonPrivate => (0.0, 0.0),
-            a if a.uses_contribution_map() => {
-                let pair =
-                    calibrate_sigma_pair(eps_train, delta, q, cfg.steps, cfg.sigma_ratio)?;
-                (pair.sigma1, pair.sigma2)
-            }
-            _ => (0.0, cached_calibrate(eps_train, delta, q, cfg.steps)?),
-        };
-
-        let mut meter = GradSizeMeter::default();
-        meter.set_baselines(store.embedding_coords(), store.dense_coords());
-
-        let opt = Optimizer::new(cfg.optimizer, cfg.lr);
-        let rng = Xoshiro256::seed_from(cfg.seed ^ 0xDEADBEEF);
-
-        Ok(Trainer {
-            cfg,
-            rt,
-            store,
-            meta,
-            emb_tables,
-            total_vocab,
-            opt,
-            rng,
-            meter,
-            sigma1,
-            sigma2,
-            grads_artifact,
-            fwd_artifact,
-            output_plan,
-            fest_selected: None,
-            loss_history: Vec::new(),
-        })
+        let store = crate::models::ParamStore::init(model, cfg.seed)?;
+        let (grads_artifact, fwd_artifact) =
+            step::locate_artifacts(&rt.manifest, &cfg.model)?;
+        let output_plan =
+            step::output_plan(rt.manifest.artifact(&grads_artifact)?, &store)?;
+        let state = StepState::new(cfg, model, &store)?;
+        Ok(Trainer { rt, store, state, grads_artifact, fwd_artifact, output_plan })
     }
 
     pub fn batch_size(&self) -> usize {
-        self.meta.batch_size()
+        self.state.batch_size()
+    }
+
+    pub fn cfg(&self) -> &RunConfig {
+        &self.state.cfg
+    }
+
+    pub fn sigma1(&self) -> f64 {
+        self.state.sigma1
+    }
+
+    pub fn sigma2(&self) -> f64 {
+        self.state.sigma2
+    }
+
+    pub fn meter(&self) -> &GradSizeMeter {
+        &self.state.meter
+    }
+
+    pub fn emb_tables(&self) -> &[EmbTable] {
+        &self.state.emb_tables
     }
 
     /// DP-FEST pre-selection from per-feature frequency counts (Algorithm 2
     /// with the Appendix-B.1 ε/k split).  `feature_counts[f][bucket]`.
     pub fn fest_select(&mut self, feature_counts: &[Vec<f64>]) -> Result<()> {
-        if feature_counts.len() != self.emb_tables.len() {
-            bail!(
-                "got counts for {} features, model has {}",
-                feature_counts.len(),
-                self.emb_tables.len()
-            );
-        }
-        let per_feature = dp_top_k_per_feature(
-            feature_counts,
-            self.cfg.fest_top_k,
-            self.cfg.fest_epsilon,
-            &mut self.rng,
-        );
-        let mut ids: Vec<u32> = Vec::new();
-        for (t, sel) in self.emb_tables.iter().zip(&per_feature) {
-            for &b in sel {
-                ids.push((t.row_offset + b as usize) as u32);
-            }
-        }
-        ids.sort_unstable();
-        ids.dedup();
-        self.fest_selected = Some(SurvivorSet::from_sorted(ids));
-        Ok(())
+        self.state.fest_select(feature_counts)
     }
 
-    /// Effective clip norms fed to the artifact (non-private runs disable
-    /// clipping with a huge C).
-    fn clip_inputs(&self) -> (HostTensor, HostTensor) {
-        let (c1, c2) = if self.cfg.algorithm.is_private() {
-            (self.cfg.c1 as f32, self.cfg.c2 as f32)
-        } else {
-            (1e9, 1e9)
-        };
-        (
-            HostTensor::f32(vec![1], vec![c1]),
-            HostTensor::f32(vec![1], vec![c2]),
-        )
+    /// DP-FEST pre-selection at an explicit selection budget (used by the
+    /// streaming trainer to split `fest_epsilon` over reselections).
+    pub fn fest_select_with_eps(
+        &mut self,
+        feature_counts: &[Vec<f64>],
+        epsilon: f64,
+    ) -> Result<()> {
+        self.state.fest_select_with_eps(feature_counts, epsilon)
     }
 
     /// One training step on a pCTR batch.
@@ -331,45 +85,19 @@ impl<'rt> Trainer<'rt> {
         }
         let mut inputs = self.store.tensors();
         inputs.extend(batch.to_tensors());
-        let (c1, c2) = self.clip_inputs();
+        let (c1, c2) = step::clip_inputs(&self.state.cfg);
         inputs.push(c1);
         inputs.push(c2);
         let outs = self.rt.execute(&self.grads_artifact, &inputs)?;
-        let nf = self.emb_tables.len();
-        // assemble per-table row-sparse grads from zgrads
-        let plan = self.output_plan.clone();
-        let mut loss = 0.0;
-        let mut table_grads: Vec<RowSparseGrad> = Vec::new();
-        let mut counts: Option<&HostTensor> = None;
-        let mut dense_grads: Vec<(usize, &HostTensor)> = Vec::new();
-        for (kind, out) in plan.iter().zip(&outs) {
-            match kind {
-                OutputKind::Loss => loss = out.scalar()?,
-                OutputKind::DenseGrad(pi) => dense_grads.push((*pi, out)),
-                OutputKind::EmbGrads => {
-                    let zg = out.as_f32()?;
-                    let d_total: usize = self.emb_tables.iter().map(|t| t.dim).sum();
-                    table_grads = self
-                        .emb_tables
-                        .iter()
-                        .map(|t| RowSparseGrad::with_capacity(t.vocab, t.dim, b))
-                        .collect();
-                    for i in 0..b {
-                        for (f, t) in self.emb_tables.iter().enumerate() {
-                            let row = batch.cat_of(i, f) as u32;
-                            let s = i * d_total + t.grad_offset;
-                            table_grads[f].add_row(row, &zg[s..s + t.dim]);
-                        }
-                    }
-                    let _ = nf;
-                }
-                OutputKind::Counts => counts = Some(out),
-                OutputKind::Scales => {}
-            }
-        }
-        let counts = counts.context("grads artifact returned no counts")?;
-        let stats = self.apply_update(loss, table_grads, counts, dense_grads)?;
-        Ok(stats)
+        let need_counts = self.state.cfg.algorithm.uses_contribution_map();
+        let bundle = step::assemble_pctr(
+            &self.output_plan,
+            &outs,
+            &self.state.emb_tables,
+            batch,
+            need_counts,
+        )?;
+        self.state.apply_update(bundle, &mut self.store)
     }
 
     /// One training step on a text batch.
@@ -378,240 +106,68 @@ impl<'rt> Trainer<'rt> {
         if batch.batch_size != b {
             bail!("batch size {} != model batch {b}", batch.batch_size);
         }
-        let seq_len = match self.meta {
+        let seq_len = match self.state.meta {
             ModelMeta::Nlu { seq_len, .. } => seq_len,
             _ => bail!("step_text on a non-NLU model"),
         };
         let mut inputs = self.store.tensors();
         inputs.extend(batch.to_tensors());
-        let (c1, c2) = self.clip_inputs();
+        let (c1, c2) = step::clip_inputs(&self.state.cfg);
         inputs.push(c1);
         inputs.push(c2);
         let outs = self.rt.execute(&self.grads_artifact, &inputs)?;
-        let plan = self.output_plan.clone();
-        let mut loss = 0.0;
-        let mut table_grads: Vec<RowSparseGrad> = Vec::new();
-        let mut counts: Option<&HostTensor> = None;
-        let mut dense_grads: Vec<(usize, &HostTensor)> = Vec::new();
-        for (kind, out) in plan.iter().zip(&outs) {
-            match kind {
-                OutputKind::Loss => loss = out.scalar()?,
-                OutputKind::DenseGrad(pi) => dense_grads.push((*pi, out)),
-                OutputKind::EmbGrads => {
-                    let zg = out.as_f32()?;
-                    let t = &self.emb_tables[0];
-                    let mut g = RowSparseGrad::with_capacity(t.vocab, t.dim, b * seq_len);
-                    for i in 0..b {
-                        for p in 0..seq_len {
-                            let row = batch.token(i, p) as u32;
-                            let s = (i * seq_len + p) * t.dim;
-                            g.add_row(row, &zg[s..s + t.dim]);
-                        }
-                    }
-                    table_grads = vec![g];
-                }
-                OutputKind::Counts => counts = Some(out),
-                OutputKind::Scales => {}
-            }
-        }
-        let counts = counts.context("grads artifact returned no counts")?;
-        self.apply_update(loss, table_grads, counts, dense_grads)
-    }
-
-    /// Shared post-gradient logic: survivor selection, noise, updates.
-    fn apply_update(
-        &mut self,
-        loss: f64,
-        mut table_grads: Vec<RowSparseGrad>,
-        counts: &HostTensor,
-        dense_grads: Vec<(usize, &HostTensor)>,
-    ) -> Result<StepStats> {
-        let b = self.batch_size() as f32;
-        let algo = self.cfg.algorithm;
-        let noise2 = self.sigma2 * self.cfg.c2; // gradient noise stddev
-        let present_rows: usize = table_grads.iter().map(|g| g.nnz_rows()).sum();
-
-        // ---- survivor selection (embedding row set to noise & update) ----
-        let mut survivors_len = 0usize;
-        let survivor_set: Option<SurvivorSet> = match algo {
-            Algorithm::NonPrivate | Algorithm::DpSgd => None,
-            Algorithm::ExpSelection => {
-                // [ZMH21]: exponential mechanism over row gradient norms.
-                let mut utilities: Vec<(u32, f64)> = Vec::with_capacity(present_rows);
-                for (t, g) in self.emb_tables.iter().zip(&table_grads) {
-                    for (row, vals) in g.iter_rows() {
-                        let norm = vals.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
-                        utilities.push(((t.row_offset + row as usize) as u32, norm));
-                    }
-                }
-                let ids = exponential_select(
-                    &utilities,
-                    self.cfg.exp_select_m,
-                    self.cfg.epsilon / self.cfg.steps as f64, // per-step selection budget
-                    self.cfg.c2,
-                    &mut self.rng,
-                );
-                Some(SurvivorSet::from_sorted(ids))
-            }
-            Algorithm::DpFest => Some(
-                self.fest_selected
-                    .clone()
-                    .context("DP-FEST requires fest_select() before training")?,
-            ),
-            Algorithm::DpAdaFest | Algorithm::DpAdaFestPlus => {
-                let map = ContributionMap::from_dense(counts.as_f32()?);
-                let (surv, _stats) = map.survivors(
-                    self.sigma1,
-                    self.cfg.c1,
-                    self.cfg.tau,
-                    self.cfg.memory_efficient_filtering,
-                    &mut self.rng,
-                );
-                if algo == Algorithm::DpAdaFestPlus {
-                    let fest = self
-                        .fest_selected
-                        .as_ref()
-                        .context("DP-AdaFEST+ requires fest_select() before training")?;
-                    Some(surv.intersect(fest))
-                } else {
-                    Some(surv)
-                }
-            }
-        };
-
-        // ---- embedding updates ----
-        let mut emb_coords = 0usize;
-        if self.cfg.freeze_embedding {
-            // Table 6 baseline: embeddings untouched — drop the grads.
-            table_grads.clear();
-        }
-        match algo {
-            _ if self.cfg.freeze_embedding => {}
-            Algorithm::DpSgd => {
-                // dense path: densify + dense noise + dense update
-                for (t, g) in self.emb_tables.iter().zip(&table_grads) {
-                    let mut dense = g.to_dense();
-                    emb_coords += add_dense_noise(&mut dense, noise2, &mut self.rng);
-                    for v in &mut dense {
-                        *v /= b;
-                    }
-                    let p = &mut self.store.params[t.param_index];
-                    self.opt
-                        .dense_step(p.tensor.as_f32_mut()?, &dense, &mut p.opt_state);
-                }
-            }
-            Algorithm::NonPrivate => {
-                for (t, g) in self.emb_tables.iter().zip(&mut table_grads) {
-                    g.scale(1.0 / b);
-                    emb_coords += g.nnz_coords();
-                    let p = &mut self.store.params[t.param_index];
-                    self.opt
-                        .sparse_step(p.tensor.as_f32_mut()?, g, &mut p.opt_state);
-                }
-            }
-            _ => {
-                // sparsity-preserving DP paths: restrict to survivors, make
-                // sure *every* survivor row exists (noise lands on zero-grad
-                // survivors too), then row noise + sparse update.
-                let surv = survivor_set.as_ref().unwrap();
-                survivors_len = surv.len();
-                for (t, g) in self.emb_tables.iter().zip(&mut table_grads) {
-                    let off = t.row_offset as u32;
-                    let hi = (t.row_offset + t.vocab) as u32;
-                    g.retain_rows(|row| surv.contains(off + row));
-                    // add survivor rows missing from the gradient
-                    let zero = vec![0f32; t.dim];
-                    for &cid in surv.ids() {
-                        if cid >= off && cid < hi {
-                            let local = cid - off;
-                            g.add_row_scaled(local, 0.0, &zero); // ensure presence
-                        }
-                    }
-                    emb_coords += add_row_noise(g, noise2, &mut self.rng);
-                    g.scale(1.0 / b);
-                    let p = &mut self.store.params[t.param_index];
-                    self.opt
-                        .sparse_step(p.tensor.as_f32_mut()?, g, &mut p.opt_state);
-                }
-            }
-        }
-
-        // ---- dense (non-embedding) updates: standard DP-SGD ----
-        let mut dense_coords = 0usize;
-        for (pi, gt) in dense_grads {
-            let mut gbuf = gt.as_f32()?.to_vec();
-            if algo.is_private() {
-                dense_coords += add_dense_noise(&mut gbuf, noise2, &mut self.rng);
-            }
-            for v in &mut gbuf {
-                *v /= b;
-            }
-            let p = &mut self.store.params[pi];
-            self.opt
-                .dense_step(p.tensor.as_f32_mut()?, &gbuf, &mut p.opt_state);
-        }
-
-        self.meter.record_step(emb_coords, dense_coords);
-        self.loss_history.push(loss);
-        Ok(StepStats {
-            loss,
-            emb_coords_noised: emb_coords,
-            dense_coords_noised: dense_coords,
-            survivors: survivors_len,
-            present_rows,
-        })
+        let need_counts = self.state.cfg.algorithm.uses_contribution_map();
+        let bundle = step::assemble_text(
+            &self.output_plan,
+            &outs,
+            &self.state.emb_tables,
+            batch,
+            seq_len,
+            need_counts,
+        )?;
+        self.state.apply_update(bundle, &mut self.store)
     }
 
     /// Evaluate on pCTR batches: returns (AUC, mean loss).
     pub fn eval_pctr(&self, batches: &[PctrBatch]) -> Result<(f64, f64)> {
-        let mut acc = metrics::EvalAccumulator::default();
-        for batch in batches {
-            let mut inputs = self.store.tensors();
-            inputs.extend(batch.to_tensors());
-            let outs = self.rt.execute(&self.fwd_artifact, &inputs)?;
-            let loss = outs[0].scalar()?;
-            let logits = outs[1].as_f32()?;
-            acc.push(logits, &batch.y, loss);
-        }
-        Ok((acc.auc(), acc.mean_loss()))
+        step::eval_pctr(self.rt, &self.fwd_artifact, &self.store, batches)
     }
 
     /// Evaluate on text batches: returns (accuracy, mean loss).
     pub fn eval_text(&self, batches: &[TextBatch]) -> Result<(f64, f64)> {
-        let num_classes = match self.meta {
+        let num_classes = match self.state.meta {
             ModelMeta::Nlu { num_classes, .. } => num_classes,
             _ => bail!("eval_text on a non-NLU model"),
         };
-        let mut correct_w = 0.0;
-        let mut loss_sum = 0.0;
-        let mut n = 0;
-        for batch in batches {
-            let mut inputs = self.store.tensors();
-            inputs.extend(batch.to_tensors());
-            let outs = self.rt.execute(&self.fwd_artifact, &inputs)?;
-            loss_sum += outs[0].scalar()?;
-            let logits = outs[1].as_f32()?;
-            correct_w += metrics::accuracy_from_logits(logits, &batch.labels, num_classes)
-                * batch.batch_size as f64;
-            n += batch.batch_size;
-        }
-        Ok((correct_w / n as f64, loss_sum / batches.len() as f64))
+        step::eval_text(self.rt, &self.fwd_artifact, &self.store, batches, num_classes)
     }
 
     /// Full non-streaming pCTR run: optional FEST selection from `prior`
     /// batches, `cfg.steps` training steps, then eval.
+    ///
+    /// Batch `t` comes from the self-contained stream
+    /// [`step::train_batch_rng`]`(seed, t)` — the invariant that makes the
+    /// async engine's pipelined data loading bit-identical to this loop.
     pub fn run_pctr(&mut self, gen: &SynthCriteo) -> Result<TrainOutcome> {
-        if self.cfg.algorithm.uses_fest_selection() && self.fest_selected.is_none() {
-            let counts = pctr_frequency_counts(gen, &self.emb_tables, 50, self.cfg.seed);
+        if self.state.cfg.algorithm.uses_fest_selection()
+            && self.state.fest_selected.is_none()
+        {
+            let counts =
+                pctr_frequency_counts(gen, &self.state.emb_tables, 50, self.state.cfg.seed);
             self.fest_select(&counts)?;
         }
-        let mut rng = Xoshiro256::seed_from(self.cfg.seed ^ 0xBA7C4);
-        for _ in 0..self.cfg.steps {
-            let batch = gen.batch(0, self.batch_size(), &mut rng);
+        let seed = self.state.cfg.seed;
+        let bsz = self.batch_size();
+        for t in 0..self.state.cfg.steps {
+            let mut rng = step::train_batch_rng(seed, t);
+            let batch = gen.batch(0, bsz, &mut rng);
             self.step_pctr(&batch)?;
         }
-        let eval: Vec<PctrBatch> = (0..self.cfg.eval_batches)
-            .map(|_| gen.batch(0, self.batch_size(), &mut rng))
+        let eval: Vec<PctrBatch> = (0..self.state.cfg.eval_batches)
+            .map(|i| {
+                let mut rng = step::eval_batch_rng(seed, i as u64);
+                gen.batch(0, bsz, &mut rng)
+            })
             .collect();
         let (auc, eval_loss) = self.eval_pctr(&eval)?;
         Ok(self.outcome(auc, eval_loss))
@@ -619,32 +175,32 @@ impl<'rt> Trainer<'rt> {
 
     /// Full non-streaming text run.
     pub fn run_text(&mut self, gen: &crate::data::SynthText) -> Result<TrainOutcome> {
-        if self.cfg.algorithm.uses_fest_selection() && self.fest_selected.is_none() {
-            let counts = text_frequency_counts(gen, self.total_vocab, 50, self.cfg.seed);
+        if self.state.cfg.algorithm.uses_fest_selection()
+            && self.state.fest_selected.is_none()
+        {
+            let counts =
+                text_frequency_counts(gen, self.state.total_vocab, 50, self.state.cfg.seed);
             self.fest_select(&[counts])?;
         }
-        let mut rng = Xoshiro256::seed_from(self.cfg.seed ^ 0xBA7C4);
-        for _ in 0..self.cfg.steps {
-            let batch = gen.batch(self.batch_size(), &mut rng);
+        let seed = self.state.cfg.seed;
+        let bsz = self.batch_size();
+        for t in 0..self.state.cfg.steps {
+            let mut rng = step::train_batch_rng(seed, t);
+            let batch = gen.batch(bsz, &mut rng);
             self.step_text(&batch)?;
         }
-        let eval: Vec<TextBatch> = (0..self.cfg.eval_batches)
-            .map(|_| gen.batch(self.batch_size(), &mut rng))
+        let eval: Vec<TextBatch> = (0..self.state.cfg.eval_batches)
+            .map(|i| {
+                let mut rng = step::eval_batch_rng(seed, i as u64);
+                gen.batch(bsz, &mut rng)
+            })
             .collect();
         let (acc, eval_loss) = self.eval_text(&eval)?;
         Ok(self.outcome(acc, eval_loss))
     }
 
     pub fn outcome(&self, utility: f64, eval_loss: f64) -> TrainOutcome {
-        TrainOutcome {
-            loss_history: self.loss_history.clone(),
-            utility,
-            eval_loss,
-            emb_grad_coords_per_step: self.meter.emb_per_step(),
-            reduction_factor: self.meter.reduction_factor(),
-            sigma1: self.sigma1,
-            sigma2: self.sigma2,
-        }
+        self.state.outcome(utility, eval_loss)
     }
 }
 

@@ -1,0 +1,70 @@
+//! The DP aggregation barrier.
+//!
+//! Collects the gradient workers' per-chunk partials and folds them **in
+//! chunk order** into the full-batch artifact output tuple — the identical
+//! accumulation the sync reference backend performs — then hands the result
+//! to the shared [`StepState::apply_update`] which performs selection,
+//! draws *all* σ₁/σ₂ noise from the single RNG stream **once per logical
+//! batch**, and scatters optimizer updates into the sharded store.  Because
+//! everything stochastic happens here, serially, on bit-identical inputs,
+//! the privacy accounting and the trained model are bit-for-bit equal to
+//! the sync path regardless of worker count.
+//!
+//! [`StepState::apply_update`]: crate::coordinator::step::StepState::apply_update
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::reference::{ChunkGrads, PctrGradsAcc, PctrModel};
+use crate::runtime::HostTensor;
+
+/// Receive `n_chunks` chunk results (arriving in any order) and merge them
+/// in ascending chunk order into the artifact output tuple.
+///
+/// `workers_down` counts gradient workers that have exited (each worker
+/// bumps it from a drop guard, so panics count too).  During a step no
+/// worker exits legitimately — the task channel is still open — so a
+/// non-zero count while chunks are outstanding means a worker died and its
+/// chunk will never arrive; we bail instead of blocking forever.
+pub fn collect_step(
+    model: &PctrModel,
+    n_chunks: usize,
+    results: &Receiver<(usize, ChunkGrads)>,
+    workers_down: &AtomicUsize,
+) -> Result<Vec<HostTensor>> {
+    let mut acc = PctrGradsAcc::new(model);
+    let mut buffered: BTreeMap<usize, ChunkGrads> = BTreeMap::new();
+    let mut next = 0usize;
+    while next < n_chunks {
+        let (chunk, grads) = loop {
+            match results.recv_timeout(Duration::from_millis(200)) {
+                Ok(r) => break r,
+                Err(RecvTimeoutError::Timeout) => {
+                    if workers_down.load(Ordering::SeqCst) > 0 {
+                        bail!(
+                            "a gradient worker terminated mid-step \
+                             ({next}/{n_chunks} chunks merged) — likely a panic; \
+                             see stderr above"
+                        );
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!(
+                    "gradient workers terminated early ({next}/{n_chunks} chunks merged)"
+                ),
+            }
+        };
+        if chunk >= n_chunks {
+            bail!("chunk index {chunk} out of range (step has {n_chunks})");
+        }
+        buffered.insert(chunk, grads);
+        while let Some(g) = buffered.remove(&next) {
+            acc.merge(model, g);
+            next += 1;
+        }
+    }
+    Ok(acc.into_outputs(model))
+}

@@ -1,0 +1,252 @@
+//! Asynchronous sharded DP training engine.
+//!
+//! Runs the same Algorithm-1 semantics as the synchronous
+//! [`Trainer`](crate::coordinator::Trainer), pipelined across threads:
+//!
+//! ```text
+//!  data workers (N)          gradient workers (M)        aggregation barrier
+//!  ───────────────           ────────────────────        ───────────────────
+//!  step counter ──┐           ┌── ChunkTask ◀─────────────── dispatch per step
+//!  gen batch(t) ──┴─▶ bounded │   (16-example reduction       │
+//!                    channel  │    chunks, shared param       ▼
+//!  (t, batch) ──▶ BatchStream │    snapshot + sharded      merge chunks in order
+//!                  (reorder)  │    embedding reads)           │
+//!                             └──▶ (chunk, grads) ──────────▶ select ∘ noise(σ₁σ₂)
+//!                                                             ∘ sharded update
+//! ```
+//!
+//! **Bit-for-bit equivalence with the sync path** rests on three documented
+//! invariants (each with a test in `tests/engine.rs`):
+//!
+//! 1. *Batch streams* — batch `t` comes from the self-contained RNG
+//!    `train_batch_rng(seed, t)`, so data workers can produce batches in
+//!    any order ([`crate::coordinator::step`]).
+//! 2. *Fixed-chunk reductions* — all batch reductions merge 16-example
+//!    chunk partials in chunk order, independent of worker count
+//!    ([`crate::runtime::reference`]).
+//! 3. *Noise draw order* — every DP random draw happens once per logical
+//!    batch, serially, at the aggregation barrier, from the single
+//!    [`StepState`](crate::coordinator::step::StepState) RNG.
+//!
+//! The engine requires the reference runtime backend (PJRT artifacts have a
+//! fixed batch shape and cannot compute per-chunk partials); with `xla`
+//! artifacts use the sync trainer.
+
+mod aggregator;
+mod pipeline;
+mod sharded_store;
+
+pub use aggregator::collect_step;
+pub use pipeline::{BatchStream, ChunkTask, WorkerView};
+pub use sharded_store::{ShardedStore, ShardedTable};
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::step::{self, StepState, TrainOutcome};
+use crate::coordinator::pctr_frequency_counts;
+use crate::data::{CriteoConfig, PctrBatch, SynthCriteo};
+use crate::models::ParamStore;
+use crate::runtime::reference::{PctrModel, REDUCE_CHUNK};
+use crate::runtime::Runtime;
+
+/// Run a full async pCTR training (train → eval), returning the same
+/// [`TrainOutcome`] as `Trainer::run_pctr` — bitwise, given the same
+/// config and seed.
+pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<TrainOutcome> {
+    if !rt.is_reference() {
+        bail!(
+            "the async engine requires the reference runtime backend \
+             (PJRT artifacts cannot be chunk-sliced); run without AOT artifacts"
+        );
+    }
+    let model = rt.manifest.model(&cfg.model)?;
+    if model.kind != "pctr" {
+        bail!("the async engine currently supports pctr models, got {}", model.kind);
+    }
+    let pm = PctrModel::from_manifest(model)?;
+    let store = ParamStore::init(model, cfg.seed)?;
+    let (grads_artifact, fwd_artifact) = step::locate_artifacts(&rt.manifest, &cfg.model)?;
+    let plan = step::output_plan(rt.manifest.artifact(&grads_artifact)?, &store)?;
+    let mut state = StepState::new(cfg.clone(), model, &store)?;
+
+    // FEST pre-selection — same prior pass and RNG stream as the sync path.
+    if state.cfg.algorithm.uses_fest_selection() && state.fest_selected.is_none() {
+        let gen = SynthCriteo::new(gen_cfg.clone());
+        let counts = pctr_frequency_counts(&gen, &state.emb_tables, 50, state.cfg.seed);
+        state.fest_select(&counts)?;
+    }
+
+    let emb_params: Vec<usize> = state.emb_tables.iter().map(|t| t.param_index).collect();
+    let ecfg = state.cfg.engine;
+    let estore = ShardedStore::from_store(store, &emb_params, ecfg.shards.max(1))?;
+
+    let b = state.batch_size();
+    let steps = state.cfg.steps;
+    let seed = state.cfg.seed;
+    let (c1, c2) = step::clip_values(&state.cfg);
+    let n_chunks = (b + REDUCE_CHUNK - 1) / REDUCE_CHUNK;
+    let chunks_per_task = ecfg.microbatch_chunks.clamp(1, n_chunks);
+
+    let next_step = AtomicU64::new(0);
+    let workers_down = AtomicUsize::new(0);
+    let (batch_tx, batch_rx) = mpsc::sync_channel::<(u64, PctrBatch)>(ecfg.channel_depth.max(1));
+    let (task_tx, task_rx) = mpsc::channel::<ChunkTask>();
+    let task_rx = Arc::new(Mutex::new(task_rx));
+    let (res_tx, res_rx) = mpsc::channel();
+
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..ecfg.data_workers.max(1) {
+            let tx = batch_tx.clone();
+            let gcfg = gen_cfg.clone();
+            let next = &next_step;
+            scope.spawn(move || pipeline::data_worker(gcfg, seed, b, steps, next, tx));
+        }
+        drop(batch_tx); // aggregator detects data-worker exit via channel close
+
+        for _ in 0..ecfg.grad_workers.max(1) {
+            let rx = Arc::clone(&task_rx);
+            let tx = res_tx.clone();
+            let (pm, estore, emb) = (&pm, &estore, &emb_params[..]);
+            let down = &workers_down;
+            scope.spawn(move || {
+                // Bump the exit counter even on panic, so the aggregator
+                // can tell a dead worker from a slow one (aggregator.rs).
+                struct ExitGuard<'a>(&'a AtomicUsize);
+                impl Drop for ExitGuard<'_> {
+                    fn drop(&mut self) {
+                        self.0.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                let _guard = ExitGuard(down);
+                pipeline::grad_worker(pm, estore, emb, &rx, &tx)
+            });
+        }
+        drop(res_tx);
+
+        // ---- the aggregation loop (this thread) ----
+        let run = |state: &mut StepState| -> Result<()> {
+            let mut stream = BatchStream::new(batch_rx);
+            let nf = pm.nf();
+            let np = pm.num_params();
+            for t in 0..steps {
+                let batch = Arc::new(stream.next(t)?);
+                if batch.batch_size != b {
+                    bail!("batch size {} != model batch {b}", batch.batch_size);
+                }
+                let dense = Arc::new(estore.dense_snapshot(nf..np));
+                let mut c0 = 0usize;
+                while c0 < n_chunks {
+                    let c1_idx = (c0 + chunks_per_task).min(n_chunks);
+                    task_tx
+                        .send(ChunkTask {
+                            chunks: c0..c1_idx,
+                            batch: Arc::clone(&batch),
+                            dense: Arc::clone(&dense),
+                            c1,
+                            c2,
+                        })
+                        .ok()
+                        .context("gradient workers terminated early")?;
+                    c0 = c1_idx;
+                }
+                let outs = collect_step(&pm, n_chunks, &res_rx, &workers_down)?;
+                let bundle = step::assemble_pctr(
+                    &plan,
+                    &outs,
+                    &state.emb_tables,
+                    &batch,
+                    state.cfg.algorithm.uses_contribution_map(),
+                )?;
+                let mut sink = &estore;
+                state.apply_update(bundle, &mut sink)?;
+            }
+            Ok(())
+        };
+        let result = run(&mut state);
+        // Orderly shutdown on both the success and error paths: closing the
+        // task channel ends the gradient workers; the batch receiver died
+        // with `stream` (end of `run`), which unblocks any data worker
+        // parked on a full channel.
+        drop(task_tx);
+        result
+    })?;
+
+    // ---- evaluation on the reassembled store (same stream as sync) ----
+    let store = estore.into_store()?;
+    let gen = SynthCriteo::new(gen_cfg);
+    let eval: Vec<PctrBatch> = (0..state.cfg.eval_batches)
+        .map(|i| {
+            let mut rng = step::eval_batch_rng(seed, i as u64);
+            gen.batch(0, b, &mut rng)
+        })
+        .collect();
+    let (auc, eval_loss) = step::eval_pctr(rt, &fwd_artifact, &store, &eval)?;
+    Ok(state.outcome(auc, eval_loss))
+}
+
+/// One row of a sync-vs-async throughput comparison.
+#[derive(Clone, Debug)]
+pub struct ThroughputRow {
+    pub path: &'static str,
+    pub grad_workers: usize,
+    pub secs: f64,
+    pub steps_per_sec: f64,
+    /// relative to the sync row (sync row reports 1.0)
+    pub speedup: f64,
+}
+
+/// Timed sync-vs-async comparison on one config: warms the σ-calibration
+/// cache, runs the sync trainer once, then the engine at each worker count,
+/// asserting the loss histories bit-identical throughout.  Shared by the
+/// tab4 harness and `benches/engine_throughput.rs` so the protocol cannot
+/// drift between them.
+pub fn compare_throughput(
+    cfg: &RunConfig,
+    rt: &Runtime,
+    gen_cfg: &CriteoConfig,
+    worker_counts: &[usize],
+) -> Result<Vec<ThroughputRow>> {
+    use crate::coordinator::Trainer;
+    // warm calibration so every timed run measures the training loop
+    let _ = Trainer::new(cfg.clone(), rt)?;
+
+    let mut rows = Vec::with_capacity(1 + worker_counts.len());
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(cfg.clone(), rt)?;
+    let gen = SynthCriteo::new(gen_cfg.clone());
+    let sync_out = trainer.run_pctr(&gen)?;
+    let sync_secs = t0.elapsed().as_secs_f64();
+    let sync_sps = cfg.steps as f64 / sync_secs;
+    rows.push(ThroughputRow {
+        path: "sync",
+        grad_workers: 1,
+        secs: sync_secs,
+        steps_per_sec: sync_sps,
+        speedup: 1.0,
+    });
+
+    for &workers in worker_counts {
+        let mut c = cfg.clone();
+        c.engine.grad_workers = workers;
+        let t0 = std::time::Instant::now();
+        let out = run_pctr(&c, rt, gen_cfg.clone())?;
+        let secs = t0.elapsed().as_secs_f64();
+        if out.loss_history != sync_out.loss_history {
+            bail!("async engine ({workers} workers) diverged from the sync trainer");
+        }
+        let sps = cfg.steps as f64 / secs;
+        rows.push(ThroughputRow {
+            path: "async",
+            grad_workers: workers,
+            secs,
+            steps_per_sec: sps,
+            speedup: sps / sync_sps,
+        });
+    }
+    Ok(rows)
+}

@@ -1,0 +1,138 @@
+//! Worker side of the async engine: pipelined data loaders and per-example
+//! gradient workers.
+//!
+//! * **Data workers** claim step indices off a shared atomic counter and
+//!   generate that step's batch from its self-contained RNG
+//!   ([`step::train_batch_rng`]), sending `(step, batch)` over a bounded
+//!   channel — order across workers is irrelevant, the [`BatchStream`]
+//!   reorders.  Backpressure comes from the channel bound.
+//! * **Gradient workers** pull [`ChunkTask`]s (a range of fixed 16-example
+//!   reduction chunks of the current step's batch), compute per-example
+//!   clipped gradients against a read-only view of the sharded store + a
+//!   dense-parameter snapshot, and send `(chunk_index, ChunkGrads)` to the
+//!   aggregation barrier.
+//!
+//! Shutdown is purely channel-driven: dropping the task sender ends the
+//! gradient workers, dropping the batch receiver ends the data workers
+//! (their `send` fails), and workers never block on result sends (the
+//! result channel is unbounded).  `tests/engine.rs` exercises the
+//! no-deadlock property.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::step;
+use crate::data::{CriteoConfig, PctrBatch, SynthCriteo};
+use crate::runtime::reference::{BatchRef, ChunkGrads, ParamsView, PctrModel, REDUCE_CHUNK};
+
+use super::sharded_store::ShardedStore;
+
+/// One unit of gradient work: reduction chunks `chunks` of the step's batch.
+pub struct ChunkTask {
+    pub chunks: Range<usize>,
+    pub batch: Arc<PctrBatch>,
+    /// per-step snapshot of the MLP parameters (read-only)
+    pub dense: Arc<Vec<Vec<f32>>>,
+    pub c1: f32,
+    pub c2: f32,
+}
+
+/// [`ParamsView`] over the sharded store (embedding rows through per-shard
+/// locks) plus the step's dense snapshot (lock-free).
+pub struct WorkerView<'a> {
+    pub store: &'a ShardedStore,
+    /// param index of each embedding table, in feature order
+    pub emb_params: &'a [usize],
+    pub dense: &'a [Vec<f32>],
+}
+
+impl ParamsView for WorkerView<'_> {
+    fn emb_row(&self, feature: usize, row: usize, out: &mut [f32]) {
+        self.store.read_emb_row(self.emb_params[feature], row, out);
+    }
+
+    fn mlp(&self, index: usize) -> &[f32] {
+        &self.dense[index]
+    }
+}
+
+/// Body of one data-worker thread.
+pub fn data_worker(
+    gen_cfg: CriteoConfig,
+    seed: u64,
+    batch_size: usize,
+    steps: u64,
+    next_step: &AtomicU64,
+    tx: SyncSender<(u64, PctrBatch)>,
+) {
+    let gen = SynthCriteo::new(gen_cfg);
+    loop {
+        let step_idx = next_step.fetch_add(1, Ordering::Relaxed);
+        if step_idx >= steps {
+            return;
+        }
+        let mut rng = step::train_batch_rng(seed, step_idx);
+        let batch = gen.batch(0, batch_size, &mut rng);
+        if tx.send((step_idx, batch)).is_err() {
+            return; // aggregator gone — shut down
+        }
+    }
+}
+
+/// Body of one gradient-worker thread.
+pub fn grad_worker(
+    model: &PctrModel,
+    store: &ShardedStore,
+    emb_params: &[usize],
+    tasks: &Mutex<Receiver<ChunkTask>>,
+    results: &Sender<(usize, ChunkGrads)>,
+) {
+    loop {
+        // hold the lock only for the recv, not for the compute
+        let task = { tasks.lock().unwrap().recv() };
+        let Ok(task) = task else { return };
+        let view = WorkerView { store, emb_params, dense: task.dense.as_slice() };
+        let batch = BatchRef::from_pctr(&task.batch);
+        let b = task.batch.batch_size;
+        for chunk in task.chunks.clone() {
+            let lo = chunk * REDUCE_CHUNK;
+            let hi = (lo + REDUCE_CHUNK).min(b);
+            let out = model.grads_chunk(&view, &batch, lo, hi, task.c1, task.c2);
+            if results.send((chunk, out)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Reorders the data workers' out-of-order `(step, batch)` stream.
+pub struct BatchStream {
+    rx: Receiver<(u64, PctrBatch)>,
+    pending: BTreeMap<u64, PctrBatch>,
+}
+
+impl BatchStream {
+    pub fn new(rx: Receiver<(u64, PctrBatch)>) -> BatchStream {
+        BatchStream { rx, pending: BTreeMap::new() }
+    }
+
+    /// Block until the batch for `step` is available.
+    pub fn next(&mut self, step: u64) -> Result<PctrBatch> {
+        loop {
+            if let Some(b) = self.pending.remove(&step) {
+                return Ok(b);
+            }
+            match self.rx.recv() {
+                Ok((s, b)) => {
+                    self.pending.insert(s, b);
+                }
+                Err(_) => bail!("data workers exited before producing step {step}"),
+            }
+        }
+    }
+}

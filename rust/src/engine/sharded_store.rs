@@ -1,0 +1,411 @@
+//! Sharded parameter store for the async engine.
+//!
+//! Embedding tables are partitioned into contiguous **row-range shards**,
+//! each behind its own `Mutex`, so sparse row updates apply concurrently
+//! without contending on dense parameters (which each sit behind their own
+//! lock and are only ever updated by the aggregation barrier).  Row-disjoint
+//! updates commute bitwise — Adagrad/SGD touch each coordinate
+//! independently — so shard-parallel application is deterministic no matter
+//! how the scheduler interleaves shard locks; `tests/engine.rs` checks this
+//! under the in-repo property harness.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::step::ParamSink;
+use crate::models::{Param, ParamStore};
+use crate::runtime::HostTensor;
+use crate::sparse::{DenseState, Optimizer, RowSparseGrad};
+
+/// Row count above which a sparse update fans out across shard threads.
+/// Below it the per-thread spawn cost dominates (criteo-small steps touch a
+/// few hundred rows; tab4-scale tables touch tens of thousands).
+const PARALLEL_ROW_THRESHOLD: usize = 4096;
+
+struct TableShard {
+    /// rows `[shard_index * rows_per_shard, …)` of the table, row-major
+    values: Vec<f32>,
+    state: DenseState,
+}
+
+/// One embedding table split into row-range shards.
+pub struct ShardedTable {
+    pub rows: usize,
+    pub dim: usize,
+    rows_per_shard: usize,
+    shards: Vec<Mutex<TableShard>>,
+}
+
+impl ShardedTable {
+    pub fn from_dense(
+        rows: usize,
+        dim: usize,
+        values: Vec<f32>,
+        num_shards: usize,
+    ) -> ShardedTable {
+        assert_eq!(values.len(), rows * dim, "table shape mismatch");
+        let num_shards = num_shards.clamp(1, rows.max(1));
+        let rows_per_shard = (rows + num_shards - 1) / num_shards;
+        let mut shards = Vec::with_capacity(num_shards);
+        let mut row = 0;
+        while row < rows {
+            let hi = (row + rows_per_shard).min(rows);
+            shards.push(Mutex::new(TableShard {
+                values: values[row * dim..hi * dim].to_vec(),
+                state: DenseState::default(),
+            }));
+            row = hi;
+        }
+        ShardedTable { rows, dim, rows_per_shard, shards }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn shard_of(&self, row: usize) -> (usize, usize) {
+        (row / self.rows_per_shard, row % self.rows_per_shard)
+    }
+
+    /// Copy one row out (the gradient workers' embedding lookup).
+    pub fn read_row(&self, row: usize, out: &mut [f32]) {
+        debug_assert!(row < self.rows, "row {row} out of range");
+        let (si, local) = self.shard_of(row);
+        let shard = self.shards[si].lock().unwrap();
+        out.copy_from_slice(&shard.values[local * self.dim..(local + 1) * self.dim]);
+    }
+
+    fn apply_group(&self, shard_index: usize, grad: &RowSparseGrad, opt: &Optimizer) {
+        let mut shard = self.shards[shard_index].lock().unwrap();
+        let TableShard { values, state } = &mut *shard;
+        opt.sparse_step(values, grad, state);
+    }
+
+    /// Scatter a row-sparse update.  Rows are grouped by shard; groups apply
+    /// under their own locks — in parallel when the update is large enough.
+    /// Safe to call concurrently from several threads.
+    pub fn apply_sparse(&self, grad: &RowSparseGrad, opt: &Optimizer) {
+        debug_assert_eq!(grad.dim, self.dim);
+        // group rows by shard, re-indexed to shard-local row ids
+        let mut groups: Vec<Option<RowSparseGrad>> = (0..self.shards.len()).map(|_| None).collect();
+        let shard_rows = self.rows_per_shard;
+        for (row, vals) in grad.iter_rows() {
+            let (si, local) = self.shard_of(row as usize);
+            groups[si]
+                .get_or_insert_with(|| {
+                    RowSparseGrad::with_capacity(shard_rows, self.dim, grad.nnz_rows())
+                })
+                .add_row(local as u32, vals);
+        }
+        let groups: Vec<(usize, RowSparseGrad)> = groups
+            .into_iter()
+            .enumerate()
+            .filter_map(|(si, g)| g.map(|g| (si, g)))
+            .collect();
+        if grad.nnz_rows() >= PARALLEL_ROW_THRESHOLD && groups.len() > 1 {
+            std::thread::scope(|scope| {
+                for (si, g) in &groups {
+                    scope.spawn(move || self.apply_group(*si, g, opt));
+                }
+            });
+        } else {
+            for (si, g) in &groups {
+                self.apply_group(*si, g, opt);
+            }
+        }
+    }
+
+    /// Dense update over every row (the DP-SGD embedding baseline), shard by
+    /// shard.
+    pub fn apply_dense(&self, grad: &[f32], opt: &Optimizer) {
+        assert_eq!(grad.len(), self.rows * self.dim);
+        let d = self.dim;
+        let per = self.rows_per_shard;
+        if self.rows >= PARALLEL_ROW_THRESHOLD && self.shards.len() > 1 {
+            std::thread::scope(|scope| {
+                for (si, shard) in self.shards.iter().enumerate() {
+                    let lo = si * per * d;
+                    scope.spawn(move || {
+                        let mut s = shard.lock().unwrap();
+                        let TableShard { values, state } = &mut *s;
+                        let hi = lo + values.len();
+                        opt.dense_step(values, &grad[lo..hi], state);
+                    });
+                }
+            });
+        } else {
+            for (si, shard) in self.shards.iter().enumerate() {
+                let mut s = shard.lock().unwrap();
+                let TableShard { values, state } = &mut *s;
+                let lo = si * per * d;
+                let hi = lo + values.len();
+                opt.dense_step(values, &grad[lo..hi], state);
+            }
+        }
+    }
+
+    /// Reassemble `(values, adagrad accumulator)`; the accumulator is empty
+    /// when no shard was ever touched by Adagrad.
+    pub fn into_dense(self) -> (Vec<f32>, Vec<f32>) {
+        let d = self.dim;
+        let mut values = Vec::with_capacity(self.rows * d);
+        let mut accum = Vec::with_capacity(self.rows * d);
+        let mut any_state = false;
+        for shard in self.shards {
+            let shard = shard.into_inner().unwrap();
+            let n = shard.values.len();
+            values.extend_from_slice(&shard.values);
+            let acc = shard.state.into_accum();
+            if acc.is_empty() {
+                accum.resize(accum.len() + n, 0.0);
+            } else {
+                any_state = true;
+                accum.extend_from_slice(&acc);
+            }
+        }
+        if !any_state {
+            accum.clear();
+        }
+        (values, accum)
+    }
+}
+
+struct DenseSlot {
+    values: Vec<f32>,
+    state: DenseState,
+}
+
+enum SlotBody {
+    Dense(Mutex<DenseSlot>),
+    Sharded(ShardedTable),
+}
+
+struct ParamSlot {
+    name: String,
+    trainable: bool,
+    dims: Vec<usize>,
+    body: SlotBody,
+}
+
+/// The engine's parameter store: embedding tables sharded, everything else
+/// behind per-parameter locks.  All methods take `&self`; the store is
+/// shared by reference across the worker scope.
+pub struct ShardedStore {
+    model_name: String,
+    kind: String,
+    slots: Vec<ParamSlot>,
+}
+
+impl ShardedStore {
+    /// Partition a [`ParamStore`]: parameters whose index is in
+    /// `sharded_indices` (the embedding tables) get `num_shards` row shards.
+    pub fn from_store(
+        store: ParamStore,
+        sharded_indices: &[usize],
+        num_shards: usize,
+    ) -> Result<ShardedStore> {
+        let model_name = store.model_name.clone();
+        let kind = store.kind.clone();
+        let mut slots = Vec::with_capacity(store.params.len());
+        for (i, p) in store.params.into_iter().enumerate() {
+            let Param { name, trainable, tensor, opt_state } = p;
+            let dims = tensor.dims().to_vec();
+            let values = tensor.into_f32()?;
+            let body = if sharded_indices.contains(&i) {
+                if dims.len() != 2 {
+                    bail!("sharded param {name} must be 2-D, got {dims:?}");
+                }
+                if !opt_state.accum().is_empty() {
+                    // Splitting a live accumulator across shards is not
+                    // implemented; silently resetting it would break the
+                    // bit-equivalence contract on warm starts.
+                    bail!(
+                        "sharded param {name} already has optimizer state; \
+                         warm-starting the engine is not supported yet"
+                    );
+                }
+                ShardedTable::from_dense(dims[0], dims[1], values, num_shards)
+                    .into_slot()
+            } else {
+                SlotBody::Dense(Mutex::new(DenseSlot { values, state: opt_state }))
+            };
+            slots.push(ParamSlot { name, trainable, dims, body });
+        }
+        Ok(ShardedStore { model_name, kind, slots })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Embedding lookup for the gradient workers.
+    pub fn read_emb_row(&self, param_index: usize, row: usize, out: &mut [f32]) {
+        match &self.slots[param_index].body {
+            SlotBody::Sharded(t) => t.read_row(row, out),
+            SlotBody::Dense(m) => {
+                let d = out.len();
+                let s = m.lock().unwrap();
+                out.copy_from_slice(&s.values[row * d..(row + 1) * d]);
+            }
+        }
+    }
+
+    /// Snapshot the dense (non-sharded) parameters with indices `range`,
+    /// in index order — the per-step read-only view the gradient workers
+    /// use for the MLP stack.
+    pub fn dense_snapshot(&self, indices: std::ops::Range<usize>) -> Vec<Vec<f32>> {
+        indices
+            .map(|i| match &self.slots[i].body {
+                SlotBody::Dense(m) => m.lock().unwrap().values.clone(),
+                SlotBody::Sharded(_) => panic!("dense_snapshot over a sharded param"),
+            })
+            .collect()
+    }
+
+    /// Reassemble a plain [`ParamStore`] (for evaluation / checkpointing).
+    pub fn into_store(self) -> Result<ParamStore> {
+        let mut params = Vec::with_capacity(self.slots.len());
+        for slot in self.slots {
+            let ParamSlot { name, trainable, dims, body } = slot;
+            let (values, state) = match body {
+                SlotBody::Dense(m) => {
+                    let s = m.into_inner().unwrap();
+                    (s.values, s.state)
+                }
+                SlotBody::Sharded(t) => {
+                    let (values, accum) = t.into_dense();
+                    (values, DenseState::from_accum(accum))
+                }
+            };
+            params.push(Param {
+                name,
+                trainable,
+                tensor: HostTensor::f32(dims, values),
+                opt_state: state,
+            });
+        }
+        Ok(ParamStore { model_name: self.model_name, kind: self.kind, params })
+    }
+
+    fn slot(&self, index: usize) -> Result<&ParamSlot> {
+        self.slots
+            .get(index)
+            .with_context(|| format!("param index {index} out of range"))
+    }
+}
+
+impl ShardedTable {
+    fn into_slot(self) -> SlotBody {
+        SlotBody::Sharded(self)
+    }
+}
+
+/// The aggregation barrier applies updates through the shared step code via
+/// this sink; interior mutability makes `&ShardedStore` sufficient.
+impl ParamSink for &ShardedStore {
+    fn apply_sparse(
+        &mut self,
+        param_index: usize,
+        grad: &RowSparseGrad,
+        opt: &Optimizer,
+    ) -> Result<()> {
+        match &self.slot(param_index)?.body {
+            SlotBody::Sharded(t) => {
+                t.apply_sparse(grad, opt);
+                Ok(())
+            }
+            SlotBody::Dense(_) => {
+                bail!("sparse update aimed at dense param #{param_index}")
+            }
+        }
+    }
+
+    fn apply_dense(&mut self, param_index: usize, grad: &[f32], opt: &Optimizer) -> Result<()> {
+        match &self.slot(param_index)?.body {
+            SlotBody::Sharded(t) => {
+                t.apply_dense(grad, opt);
+                Ok(())
+            }
+            SlotBody::Dense(m) => {
+                let mut s = m.lock().unwrap();
+                let DenseSlot { values, state } = &mut *s;
+                opt.dense_step(values, grad, state);
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_grad(rows: usize, dim: usize, nnz: usize, seed: u64) -> RowSparseGrad {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(seed);
+        let mut g = RowSparseGrad::new(rows, dim);
+        for _ in 0..nnz {
+            let r = rng.below(rows as u64) as u32;
+            let vals: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+            g.add_row(r, &vals);
+        }
+        g
+    }
+
+    #[test]
+    fn sharded_sparse_update_matches_flat() {
+        for &shards in &[1usize, 3, 8, 64] {
+            let (rows, dim) = (100, 4);
+            let init: Vec<f32> = (0..rows * dim).map(|i| (i as f32 * 0.01).sin()).collect();
+            let g = sample_grad(rows, dim, 40, 9);
+            let opt = Optimizer::adagrad(0.1);
+
+            let mut flat = init.clone();
+            let mut state = DenseState::default();
+            opt.sparse_step(&mut flat, &g, &mut state);
+
+            let table = ShardedTable::from_dense(rows, dim, init, shards);
+            table.apply_sparse(&g, &opt);
+            let (values, accum) = table.into_dense();
+            assert_eq!(values, flat, "shards={shards}");
+            assert_eq!(accum.len(), rows * dim);
+            assert_eq!(accum, state.accum().to_vec(), "adagrad state, shards={shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_dense_update_matches_flat() {
+        let (rows, dim) = (64, 3);
+        let init = vec![0.5f32; rows * dim];
+        let grad: Vec<f32> = (0..rows * dim).map(|i| (i % 7) as f32 * 0.1 - 0.3).collect();
+        let opt = Optimizer::sgd(0.2);
+        let mut flat = init.clone();
+        opt.dense_step(&mut flat, &grad, &mut DenseState::default());
+        let table = ShardedTable::from_dense(rows, dim, init, 5);
+        table.apply_dense(&grad, &opt);
+        assert_eq!(table.into_dense().0, flat);
+    }
+
+    #[test]
+    fn read_row_roundtrip() {
+        let (rows, dim) = (10, 3);
+        let init: Vec<f32> = (0..rows * dim).map(|i| i as f32).collect();
+        let table = ShardedTable::from_dense(rows, dim, init.clone(), 4);
+        let mut out = vec![0f32; dim];
+        for r in 0..rows {
+            table.read_row(r, &mut out);
+            assert_eq!(out, &init[r * dim..(r + 1) * dim]);
+        }
+    }
+
+    #[test]
+    fn untouched_shards_leave_state_empty() {
+        let table = ShardedTable::from_dense(8, 2, vec![1.0; 16], 4);
+        let g = sample_grad(8, 2, 0, 1); // empty grad
+        table.apply_sparse(&g, &Optimizer::adagrad(0.1));
+        let (values, accum) = table.into_dense();
+        assert_eq!(values, vec![1.0; 16]);
+        assert!(accum.is_empty(), "no shard touched ⇒ no state materialised");
+    }
+}

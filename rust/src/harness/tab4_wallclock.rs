@@ -9,6 +9,11 @@
 
 use anyhow::Result;
 
+use crate::config::RunConfig;
+use crate::coordinator::Algorithm;
+use crate::data::CriteoConfig;
+use crate::engine;
+use crate::runtime::Runtime;
 use crate::sparse::{add_dense_noise, add_row_noise, Optimizer, RowSparseGrad};
 use crate::util::bench::fmt_dur;
 use crate::util::rng::Xoshiro256;
@@ -106,5 +111,38 @@ pub fn run(fast: bool) -> Result<()> {
         "\npaper shape check: dense time grows ~linearly with V; sparse is ~flat; \
          reduction factor grows with V (paper reports 3x…177x over 1e5…1e7)"
     );
+    engine_comparison(fast)
+}
+
+/// End-to-end steps/sec: sync trainer vs the async engine at 1/2/4 gradient
+/// workers, on the reference runtime's criteo-small (results asserted
+/// bit-identical — the engine only changes wall-clock).
+fn engine_comparison(fast: bool) -> Result<()> {
+    let rt = Runtime::builtin();
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-small".into();
+    cfg.algorithm = Algorithm::DpAdaFest;
+    cfg.steps = if fast { 24 } else { 80 };
+    cfg.eval_batches = 1;
+    let model = rt.manifest.model(&cfg.model)?.clone();
+    let vocabs = model.attr_usize_list("vocabs")?;
+    let gen_cfg = CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A);
+
+    let comparison = engine::compare_throughput(&cfg, &rt, &gen_cfg, &[1, 2, 4])?;
+    let mut rows = Vec::new();
+    for t in &comparison {
+        let mut r = SweepRow::default();
+        r.push("path", t.path);
+        r.push("workers", t.grad_workers);
+        r.push("steps_per_sec", format!("{:.1}", t.steps_per_sec));
+        r.push("speedup", format!("{:.2}", t.speedup));
+        rows.push(r);
+    }
+    print_table(
+        &format!("Table 4b: engine steps/sec, {} steps, criteo-small", cfg.steps),
+        &rows,
+    );
+    write_csv("tab4_engine", &rows)?;
+    println!("(loss histories asserted bit-identical across all rows)");
     Ok(())
 }

@@ -14,17 +14,32 @@
 //!   σ₁, gradient noise σ₂), sparse row updates, privacy accounting, and the
 //!   experiment harness reproducing every table and figure of the paper.
 //!
-//! Python never runs on the training path: `make artifacts` is a one-time
-//! build step and the resulting binary is self-contained.
+//! Two execution backends drive the models ([`runtime`]): the PJRT client
+//! over AOT artifacts (`--features xla`), and a pure-Rust **reference
+//! executor** for the pCTR models (the default — no Python build step, no
+//! external crates) whose fixed-chunk reductions also power the async
+//! engine.
 //!
-//! Entry points: [`coordinator::Trainer`] for training, [`harness`] for
-//! paper-experiment reproduction, `sparse-dp-emb` (see `main.rs`) for the
-//! CLI.
+//! Two training paths share one step core ([`coordinator::step`]):
+//!
+//! * [`coordinator::Trainer`] — the synchronous loop;
+//! * [`engine`] — the asynchronous sharded engine: pipelined data workers →
+//!   per-example gradient workers → a DP aggregation barrier that draws all
+//!   noise once per logical batch.  Bit-for-bit equivalent to the sync path
+//!   at any worker count (`sparse-dp-emb train-async`).
+//!
+//! Python never runs on the training path: `make artifacts` is an optional
+//! one-time build step and the resulting binary is self-contained.
+//!
+//! Entry points: [`coordinator::Trainer`] / [`engine::run_pctr`] for
+//! training, [`harness`] for paper-experiment reproduction, `sparse-dp-emb`
+//! (see `main.rs`) for the CLI.
 
 pub mod accounting;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod filtering;
 pub mod harness;
 pub mod metrics;

@@ -2,12 +2,16 @@
 //! framework.
 //!
 //! ```text
-//! sparse-dp-emb train   [--model criteo-small] [--algorithm dp-adafest] [--epsilon 1.0] ...
-//! sparse-dp-emb stream  [--streaming-period 1] [--freq-source streaming] ...
-//! sparse-dp-emb sweep   <fig1b|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab6|lemma31> [--fast]
-//! sparse-dp-emb account [--epsilon 1.0] [--steps 200] ...   # privacy accounting only
-//! sparse-dp-emb info                                        # manifest / artifact inventory
+//! sparse-dp-emb train       [--model criteo-small] [--algorithm dp-adafest] [--epsilon 1.0] ...
+//! sparse-dp-emb train-async [--engine-workers 4] [--engine-shards 16] ...   # pipelined engine
+//! sparse-dp-emb stream      [--streaming-period 1] [--freq-source streaming] ...
+//! sparse-dp-emb sweep       <fig1b|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab6|lemma31> [--fast]
+//! sparse-dp-emb account     [--epsilon 1.0] [--steps 200] ...   # privacy accounting only
+//! sparse-dp-emb info                                            # manifest / artifact inventory
 //! ```
+//!
+//! `train-async` runs the asynchronous sharded engine and produces the
+//! exact same outcome as `train` for the same seed/config — only faster.
 //!
 //! Any `RunConfig` field can be overridden with `--key value`; `--config
 //! path` loads a `key = value` file first.
@@ -48,6 +52,7 @@ fn main() -> Result<()> {
 
     match command.as_str() {
         "train" => cmd_train(&cfg),
+        "train-async" => cmd_train_async(&cfg),
         "stream" => cmd_stream(&cfg),
         "sweep" => {
             let exp = positional
@@ -67,7 +72,7 @@ fn main() -> Result<()> {
 
 fn print_usage() {
     eprintln!(
-        "usage: sparse-dp-emb <train|stream|sweep|account|info> [--key value ...] [--fast]\n\
+        "usage: sparse-dp-emb <train|train-async|stream|sweep|account|info> [--key value ...] [--fast]\n\
          see rust/src/main.rs docs for the command list"
     );
 }
@@ -79,8 +84,8 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
     let mut trainer = Trainer::new(cfg.clone(), &rt)?;
     println!(
         "[train] sigma1={:.4} sigma2={:.4} (q={:.2e}, T={})",
-        trainer.sigma1,
-        trainer.sigma2,
+        trainer.sigma1(),
+        trainer.sigma2(),
         trainer.batch_size() as f64 / cfg.dataset_size as f64,
         cfg.steps
     );
@@ -101,6 +106,36 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
         }
         other => bail!("unknown model kind {other}"),
     };
+    report(&outcome, &rt);
+    Ok(())
+}
+
+fn cmd_train_async(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::new(&cfg.artifacts_dir)?;
+    println!(
+        "[train-async] platform={} {} workers={} data={} shards={} depth={}",
+        rt.platform(),
+        cfg.summary(),
+        cfg.engine.grad_workers,
+        cfg.engine.data_workers,
+        cfg.engine.shards,
+        cfg.engine.channel_depth,
+    );
+    let model = rt.manifest.model(&cfg.model)?.clone();
+    if model.kind != "pctr" {
+        bail!("train-async currently supports pctr models");
+    }
+    let vocabs = model.attr_usize_list("vocabs")?;
+    let gen_cfg = CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A);
+    let t0 = std::time::Instant::now();
+    let outcome = sparse_dp_emb::engine::run_pctr(cfg, &rt, gen_cfg)?;
+    let dt = t0.elapsed();
+    println!(
+        "[train-async] {} steps in {:.2?} ({:.1} steps/s)",
+        cfg.steps,
+        dt,
+        cfg.steps as f64 / dt.as_secs_f64()
+    );
     report(&outcome, &rt);
     Ok(())
 }

@@ -1,25 +1,33 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
-//! the training hot path.
+//! Model-execution runtime with two interchangeable backends:
 //!
-//! Python runs only at build time (`make artifacts`); this module is the
-//! entire model-execution surface of the Rust coordinator.  Pattern follows
-//! `/opt/xla-example/load_hlo`: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Executables are compiled once per artifact and cached for the life of the
-//! process (fixed shapes ⇒ a single compilation each).
+//! * **PJRT** (`--features xla`) — loads AOT-compiled HLO-text artifacts
+//!   (built once by `python/compile/aot.py`) and executes them on the PJRT
+//!   CPU client.  Pattern follows `/opt/xla-example/load_hlo`.
+//! * **Reference** (default) — a pure-Rust executor implementing the same
+//!   artifact contract for the pCTR models, with a built-in manifest, so
+//!   the CLI, tests, and benches run with no Python build step and no
+//!   external crates.  See [`reference`] for the fixed-chunk reduction
+//!   invariant that also powers the async engine.
+//!
+//! `Runtime::new(dir)` loads `dir/manifest.txt` when present (PJRT backend
+//! if compiled in) and otherwise falls back to the built-in reference
+//! manifest.  Executables are compiled/validated once per artifact and
+//! cached for the life of the process.
 
 mod manifest;
+#[cfg(feature = "xla")]
+mod pjrt;
+pub mod reference;
 mod tensor;
 
 pub use manifest::{ArtifactManifest, Manifest, ModelManifest, ParamSpec, TensorSpec};
 pub use tensor::HostTensor;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 /// Cumulative runtime counters (marshalling vs execution time) — inputs to
 /// the §Perf pass.
@@ -31,57 +39,94 @@ pub struct RuntimeStats {
     pub marshal_out: Duration,
 }
 
+enum Backend {
+    Reference(reference::ReferenceBackend),
+    #[cfg(feature = "xla")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
     pub manifest: Manifest,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    backend: Backend,
     stats: RefCell<RuntimeStats>,
 }
 
 impl Runtime {
-    /// Load the manifest from `artifacts_dir` and initialise the PJRT CPU
-    /// client.  Artifacts themselves are compiled lazily on first use.
+    /// Load the manifest from `artifacts_dir` and pick a backend.  With no
+    /// manifest on disk the built-in reference manifest is used, so a fresh
+    /// checkout trains out of the box.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            dir,
-            manifest,
-            exes: RefCell::new(HashMap::new()),
+        let manifest_path = dir.join("manifest.txt");
+        if manifest_path.exists() {
+            let manifest = Manifest::load(&manifest_path)?;
+            #[cfg(feature = "xla")]
+            {
+                return Ok(Runtime {
+                    manifest,
+                    backend: Backend::Pjrt(pjrt::PjrtBackend::new(dir)?),
+                    stats: RefCell::new(RuntimeStats::default()),
+                });
+            }
+            #[cfg(not(feature = "xla"))]
+            {
+                // Artifacts exist but the PJRT client is not compiled in:
+                // execute natively off the on-disk manifest geometry.
+                eprintln!(
+                    "[runtime] {} found but the `xla` feature is not compiled in — \
+                     using the native reference executor (pctr models only)",
+                    manifest_path.display()
+                );
+                return Ok(Runtime {
+                    manifest,
+                    backend: Backend::Reference(reference::ReferenceBackend::default()),
+                    stats: RefCell::new(RuntimeStats::default()),
+                });
+            }
+        }
+        eprintln!(
+            "[runtime] {} not found — using the built-in reference manifest \
+             (criteo-small / criteo-tiny)",
+            manifest_path.display()
+        );
+        Ok(Runtime::builtin())
+    }
+
+    /// The artifact-free runtime: built-in manifest + reference executor.
+    /// Infallible — used by tests and benches.
+    pub fn builtin() -> Runtime {
+        Runtime {
+            manifest: reference::builtin_manifest(),
+            backend: Backend::Reference(reference::ReferenceBackend::default()),
             stats: RefCell::new(RuntimeStats::default()),
-        })
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Reference(_) => "reference-cpu".to_string(),
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(p) => p.platform(),
+        }
     }
 
-    /// Compile (or fetch the cached) executable for `artifact`.
-    fn ensure_compiled(&self, artifact: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(artifact) {
-            return Ok(());
-        }
-        let art = self.manifest.artifact(artifact)?;
-        let path = self.dir.join(&art.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {artifact}"))?;
-        self.exes.borrow_mut().insert(artifact.to_string(), exe);
-        Ok(())
+    /// True when the native reference executor is driving this runtime —
+    /// the async engine requires it (its gradient workers compute reduction
+    /// chunks with the same math, which PJRT artifacts cannot slice).
+    pub fn is_reference(&self) -> bool {
+        matches!(self.backend, Backend::Reference(_))
     }
 
     /// Pre-compile an artifact (useful to front-load compile time).
     pub fn warmup(&self, artifact: &str) -> Result<()> {
-        self.ensure_compiled(artifact)
+        match &self.backend {
+            Backend::Reference(_) => {
+                self.manifest.artifact(artifact)?;
+                Ok(())
+            }
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(p) => p.ensure_compiled(&self.manifest, artifact),
+        }
     }
 
     /// Execute `artifact` with `inputs` (order and shapes are validated
@@ -107,45 +152,27 @@ impl Runtime {
                 );
             }
         }
-        self.ensure_compiled(artifact)?;
-
-        let t0 = Instant::now();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let t1 = Instant::now();
-
-        let exes = self.exes.borrow();
-        let exe = exes.get(artifact).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing artifact {artifact}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let t2 = Instant::now();
-
-        // aot.py lowers with return_tuple=True: a single tuple literal.
-        let parts = tuple.to_tuple().context("decomposing result tuple")?;
-        if parts.len() != art.outputs.len() {
+        let outs = match &self.backend {
+            Backend::Reference(r) => {
+                let t0 = Instant::now();
+                let outs = r.execute(&self.manifest, art, inputs)?;
+                let mut s = self.stats.borrow_mut();
+                s.executions += 1;
+                s.execute += t0.elapsed();
+                outs
+            }
+            #[cfg(feature = "xla")]
+            Backend::Pjrt(p) => {
+                p.execute(&self.manifest, art, inputs, &mut self.stats.borrow_mut())?
+            }
+        };
+        if outs.len() != art.outputs.len() {
             bail!(
                 "artifact {artifact}: got {} outputs, manifest wants {}",
-                parts.len(),
+                outs.len(),
                 art.outputs.len()
             );
         }
-        let outs: Vec<HostTensor> = parts
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<_>>()?;
-        let t3 = Instant::now();
-
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.marshal_in += t1 - t0;
-        s.execute += t2 - t1;
-        s.marshal_out += t3 - t2;
         Ok(outs)
     }
 
@@ -155,7 +182,7 @@ impl Runtime {
         &self,
         artifact: &str,
         inputs: &[HostTensor],
-    ) -> Result<HashMap<String, HostTensor>> {
+    ) -> Result<std::collections::HashMap<String, HostTensor>> {
         let outs = self.execute(artifact, inputs)?;
         let art = self.manifest.artifact(artifact)?;
         Ok(art

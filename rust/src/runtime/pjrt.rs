@@ -1,0 +1,95 @@
+//! PJRT backend (`--features xla`): load AOT-compiled HLO-text artifacts
+//! and execute them on the PJRT CPU client.  Compiled executables are cached
+//! per artifact for the life of the process (fixed shapes ⇒ a single
+//! compilation each).
+//!
+//! The `xla` crate is not in the offline registry; enabling this feature
+//! requires adding it as a path dependency (see Cargo.toml).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactManifest, Manifest};
+use super::tensor::HostTensor;
+use super::RuntimeStats;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    pub fn new(dir: PathBuf) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client, dir, exes: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `artifact`.
+    pub fn ensure_compiled(&self, manifest: &Manifest, artifact: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(artifact) {
+            return Ok(());
+        }
+        let art = manifest.artifact(artifact)?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {artifact}"))?;
+        self.exes.borrow_mut().insert(artifact.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn execute(
+        &self,
+        manifest: &Manifest,
+        art: &ArtifactManifest,
+        inputs: &[HostTensor],
+        stats: &mut RuntimeStats,
+    ) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(manifest, &art.name)?;
+
+        let t0 = std::time::Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let t1 = std::time::Instant::now();
+
+        let exes = self.exes.borrow();
+        let exe = exes.get(&art.name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {}", art.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let t2 = std::time::Instant::now();
+
+        // aot.py lowers with return_tuple=True: a single tuple literal.
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        let outs: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        let t3 = std::time::Instant::now();
+
+        stats.executions += 1;
+        stats.marshal_in += t1 - t0;
+        stats.execute += t2 - t1;
+        stats.marshal_out += t3 - t2;
+        Ok(outs)
+    }
+}

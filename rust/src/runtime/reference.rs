@@ -1,0 +1,921 @@
+//! Pure-Rust reference executor for the pCTR artifacts.
+//!
+//! When the `xla` feature (PJRT client for AOT HLO artifacts) is not
+//! compiled in — the offline default — this module executes the pCTR model
+//! natively: same inputs, same output tuple, same manifest contract as the
+//! `pctr_*_grads` / `pctr_*_fwd` artifacts lowered by
+//! `python/compile/aot.py`.  It also provides a **built-in manifest**
+//! (`criteo-small` plus a CPU-test-sized `criteo-tiny`) so the whole CLI and
+//! test suite run with zero build-time artifacts.
+//!
+//! ## Fixed-chunk reduction invariant
+//!
+//! Every batch reduction (loss mean, clipped dense-grad sums, contribution
+//! map) is computed as a **sequential merge of [`REDUCE_CHUNK`]-example
+//! chunk partials**, never as one flat loop and never as a worker-count-
+//! dependent tree.  [`PctrModel::grads_chunk`] computes one chunk;
+//! [`PctrGradsAcc::merge`] folds chunks **in chunk order**.  The sync path
+//! (full-batch `execute`) and the async engine (chunks computed by parallel
+//! workers, merged in order at the aggregation barrier) therefore produce
+//! bit-identical output tuples — this is the invariant that makes
+//! `train-async` exactly reproduce `train`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactManifest, Manifest, ModelManifest};
+use super::tensor::HostTensor;
+
+/// Examples per reduction chunk (see module docs).  Changing this value
+/// changes every f32 reduction result; it is part of the numerical contract
+/// between the sync and async paths.
+pub const REDUCE_CHUNK: usize = 16;
+
+/// Vocabulary sizes of the 26 Criteo categorical features (paper Table 3),
+/// mirrored from `python/compile/configs.py`.
+pub const CRITEO_VOCABS: [usize; 26] = [
+    1472, 577, 82741, 18940, 305, 23, 1172, 633, 3, 9090, 5918, 64300, 3207,
+    27, 1550, 44262, 10, 5485, 2161, 3, 56473, 17, 15, 27360, 104, 12934,
+];
+
+pub const NUM_NUMERIC: usize = 13;
+
+/// The paper's embedding-dimension rule `int(2 · V^0.25)` (Appendix D.1.1).
+pub fn embedding_dim(vocab: usize) -> usize {
+    ((2.0 * (vocab as f64).powf(0.25)) as usize).max(2)
+}
+
+// ---------------------------------------------------------------------------
+// Model geometry
+// ---------------------------------------------------------------------------
+
+/// Geometry of a pCTR model, parsed once from the manifest.
+#[derive(Clone, Debug)]
+pub struct PctrModel {
+    pub vocabs: Vec<usize>,
+    pub dims: Vec<usize>,
+    pub offsets: Vec<usize>,
+    pub total_vocab: usize,
+    pub batch_size: usize,
+    pub hidden_dim: usize,
+    pub num_hidden_layers: usize,
+    pub num_numeric: usize,
+    pub d_emb: usize,
+    /// dims of every MLP param in order: w0, b0, …, wout, bout
+    pub mlp_shapes: Vec<Vec<usize>>,
+}
+
+impl PctrModel {
+    pub fn from_manifest(model: &ModelManifest) -> Result<PctrModel> {
+        if model.kind != "pctr" {
+            bail!(
+                "reference runtime supports pctr models only (got kind `{}` for {}); \
+                 build with the `xla` feature and AOT artifacts for NLU models",
+                model.kind,
+                model.name
+            );
+        }
+        let vocabs = model.attr_usize_list("vocabs")?;
+        let dims = model.attr_usize_list("dims")?;
+        let offsets = model.attr_usize_list("row_offsets")?;
+        let hidden = model.attr_usize("hidden_dim")?;
+        let layers = model.attr_usize("num_hidden_layers")?;
+        let num_numeric = model.attr_usize("num_numeric")?;
+        let d_emb: usize = dims.iter().sum();
+        let mut mlp_shapes = Vec::with_capacity(2 * layers + 2);
+        let mut in_dim = d_emb + num_numeric;
+        for _ in 0..layers {
+            mlp_shapes.push(vec![in_dim, hidden]);
+            mlp_shapes.push(vec![hidden]);
+            in_dim = hidden;
+        }
+        mlp_shapes.push(vec![in_dim, 1]);
+        mlp_shapes.push(vec![1]);
+        Ok(PctrModel {
+            total_vocab: model.attr_usize("total_vocab")?,
+            batch_size: model.attr_usize("batch_size")?,
+            hidden_dim: hidden,
+            num_hidden_layers: layers,
+            num_numeric,
+            d_emb,
+            vocabs,
+            dims,
+            offsets,
+            mlp_shapes,
+        })
+    }
+
+    pub fn nf(&self) -> usize {
+        self.vocabs.len()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.nf() + self.mlp_shapes.len()
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.d_emb + self.num_numeric
+    }
+}
+
+/// Read access to the parameters the chunk math needs.  Implemented over
+/// raw input tensors (sync path) and over the engine's sharded store.
+pub trait ParamsView: Sync {
+    /// Copy embedding row `row` of feature `feature` into `out`.
+    fn emb_row(&self, feature: usize, row: usize, out: &mut [f32]);
+    /// The `index`-th MLP parameter (order: w0, b0, …, wout, bout).
+    fn mlp(&self, index: usize) -> &[f32];
+}
+
+/// [`ParamsView`] over the artifact's input tensors.
+pub struct TensorView<'a> {
+    tables: Vec<&'a [f32]>,
+    dims: &'a [usize],
+    mlp: Vec<&'a [f32]>,
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(params: &'a [HostTensor], model: &'a PctrModel) -> Result<TensorView<'a>> {
+        let nf = model.nf();
+        if params.len() != model.num_params() {
+            bail!("expected {} param tensors, got {}", model.num_params(), params.len());
+        }
+        let mut tables = Vec::with_capacity(nf);
+        for t in &params[..nf] {
+            tables.push(t.as_f32()?);
+        }
+        let mut mlp = Vec::with_capacity(params.len() - nf);
+        for t in &params[nf..] {
+            mlp.push(t.as_f32()?);
+        }
+        Ok(TensorView { tables, dims: &model.dims, mlp })
+    }
+}
+
+impl ParamsView for TensorView<'_> {
+    fn emb_row(&self, feature: usize, row: usize, out: &mut [f32]) {
+        let d = self.dims[feature];
+        out.copy_from_slice(&self.tables[feature][row * d..row * d + d]);
+    }
+
+    fn mlp(&self, index: usize) -> &[f32] {
+        self.mlp[index]
+    }
+}
+
+/// Borrowed view of a pCTR batch (avoids coupling to tensor or `PctrBatch`
+/// layouts).
+#[derive(Clone, Copy)]
+pub struct BatchRef<'a> {
+    pub nf: usize,
+    pub nn: usize,
+    pub cat: &'a [i32],
+    pub num: &'a [f32],
+    pub y: &'a [f32],
+}
+
+impl<'a> BatchRef<'a> {
+    pub fn cat(&self, example: usize, feature: usize) -> i32 {
+        self.cat[example * self.nf + feature]
+    }
+
+    pub fn from_pctr(b: &'a crate::data::PctrBatch) -> BatchRef<'a> {
+        BatchRef {
+            nf: b.num_features,
+            nn: b.num_numeric,
+            cat: &b.cat,
+            num: &b.num,
+            y: &b.y,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunked per-example gradients
+// ---------------------------------------------------------------------------
+
+/// Outputs of one reduction chunk (`[lo, hi)` examples).
+pub struct ChunkGrads {
+    pub lo: usize,
+    pub hi: usize,
+    pub loss_sum: f32,
+    /// clipped-sum grads per MLP param (full param shapes)
+    pub mlp_grads: Vec<Vec<f32>>,
+    /// `s_i · ∂L/∂z_i` rows, `(hi-lo) × d_emb` row-major
+    pub zgrads: Vec<f32>,
+    /// sparse contribution-map partial (per-bucket value accumulated in
+    /// example order within the chunk)
+    pub counts: Vec<(u32, f32)>,
+    pub scales: Vec<f32>,
+}
+
+#[inline]
+fn softplus(x: f32) -> f32 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+impl PctrModel {
+    /// Per-example clipped gradients for examples `[lo, hi)` — the unit of
+    /// work of the async engine's gradient workers, and the reduction chunk
+    /// of the sync path.  Pure function of (params view, batch, clip norms).
+    pub fn grads_chunk<V: ParamsView + ?Sized>(
+        &self,
+        view: &V,
+        batch: &BatchRef,
+        lo: usize,
+        hi: usize,
+        c1: f32,
+        c2: f32,
+    ) -> ChunkGrads {
+        let nf = self.nf();
+        let hidden = self.hidden_dim;
+        let layers = self.num_hidden_layers;
+        let d_emb = self.d_emb;
+        let in_dim = self.in_dim();
+        let w_cnt = (c1 / (nf as f32).sqrt()).min(1.0);
+
+        let mut out = ChunkGrads {
+            lo,
+            hi,
+            loss_sum: 0.0,
+            mlp_grads: self.mlp_shapes.iter().map(|s| vec![0f32; s.iter().product()]).collect(),
+            zgrads: vec![0f32; (hi - lo) * d_emb],
+            counts: Vec::new(),
+            scales: Vec::with_capacity(hi - lo),
+        };
+        let mut cmap: HashMap<u32, f32> = HashMap::with_capacity((hi - lo) * nf);
+
+        for i in lo..hi {
+            // ---- gather h0 = [z_cat | x_num] ----
+            let mut h0 = vec![0f32; in_dim];
+            let mut off = 0;
+            for f in 0..nf {
+                let d = self.dims[f];
+                view.emb_row(f, batch.cat(i, f) as usize, &mut h0[off..off + d]);
+                off += d;
+            }
+            h0[d_emb..].copy_from_slice(&batch.num[i * self.num_numeric..(i + 1) * self.num_numeric]);
+
+            // ---- forward, storing post-ReLU activations ----
+            let mut hs: Vec<Vec<f32>> = Vec::with_capacity(layers + 1);
+            hs.push(h0);
+            for l in 0..layers {
+                let w = view.mlp(2 * l);
+                let bias = view.mlp(2 * l + 1);
+                let prev = &hs[l];
+                let mut h = bias.to_vec();
+                for (k, &x) in prev.iter().enumerate() {
+                    if x != 0.0 {
+                        let row = &w[k * hidden..(k + 1) * hidden];
+                        for (hj, &wj) in h.iter_mut().zip(row) {
+                            *hj += x * wj;
+                        }
+                    }
+                }
+                for v in &mut h {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                hs.push(h);
+            }
+            let wout = view.mlp(2 * layers);
+            let bout = view.mlp(2 * layers + 1)[0];
+            let hl = &hs[layers];
+            let mut logit = bout;
+            for (hk, &wk) in hl.iter().zip(wout) {
+                logit += hk * wk;
+            }
+            let y = batch.y[i];
+            let loss_i = softplus(logit) - y * logit;
+            let dlogit = sigmoid(logit) - y;
+
+            // ---- backward: da per layer + dh back to the embeddings ----
+            // Per-param squared norms use the outer-product factorisation
+            // ||h ⊗ da||² = ||h||²·||da||² (exact, deterministic).
+            let mut sq_parts = vec![0f32; 2 * layers + 2];
+            let sq_hl: f32 = hl.iter().map(|v| v * v).sum();
+            sq_parts[2 * layers] = dlogit * dlogit * sq_hl;
+            sq_parts[2 * layers + 1] = dlogit * dlogit;
+            let mut dh: Vec<f32> = wout.iter().map(|&w| w * dlogit).collect();
+            // da_rev[0] is layer L-1's da, da_rev[L-1] is layer 0's
+            let mut da_rev: Vec<Vec<f32>> = Vec::with_capacity(layers);
+            for l in (0..layers).rev() {
+                let h = &hs[l + 1];
+                let da: Vec<f32> = h
+                    .iter()
+                    .zip(&dh)
+                    .map(|(&hv, &dv)| if hv > 0.0 { dv } else { 0.0 })
+                    .collect();
+                let prev = &hs[l];
+                let sq_prev: f32 = prev.iter().map(|v| v * v).sum();
+                let sq_da: f32 = da.iter().map(|v| v * v).sum();
+                sq_parts[2 * l] = sq_prev * sq_da;
+                sq_parts[2 * l + 1] = sq_da;
+                let w = view.mlp(2 * l);
+                let mut dprev = vec![0f32; prev.len()];
+                for (k, dp) in dprev.iter_mut().enumerate() {
+                    let row = &w[k * hidden..(k + 1) * hidden];
+                    let mut acc = 0f32;
+                    for (&wj, &dj) in row.iter().zip(&da) {
+                        acc += wj * dj;
+                    }
+                    *dp = acc;
+                }
+                da_rev.push(da);
+                dh = dprev;
+            }
+
+            // ---- clip factor over the full per-example gradient ----
+            let sq_mlp: f32 = sq_parts.iter().sum();
+            let sq_emb: f32 = dh[..d_emb].iter().map(|v| v * v).sum();
+            let norm = (sq_mlp + sq_emb).max(1e-24).sqrt();
+            let s = (c2 / norm).min(1.0);
+
+            // ---- accumulate clipped grads into the chunk partials ----
+            out.loss_sum += loss_i;
+            for l in 0..layers {
+                let da = &da_rev[layers - 1 - l];
+                let prev = &hs[l];
+                let wbuf = &mut out.mlp_grads[2 * l];
+                for (k, &x) in prev.iter().enumerate() {
+                    if x != 0.0 {
+                        let sx = s * x;
+                        let row = &mut wbuf[k * hidden..(k + 1) * hidden];
+                        for (rj, &dj) in row.iter_mut().zip(da) {
+                            *rj += sx * dj;
+                        }
+                    }
+                }
+                let bbuf = &mut out.mlp_grads[2 * l + 1];
+                for (bj, &dj) in bbuf.iter_mut().zip(da) {
+                    *bj += s * dj;
+                }
+            }
+            let sd = s * dlogit;
+            let woutbuf = &mut out.mlp_grads[2 * layers];
+            for (wk, &hk) in woutbuf.iter_mut().zip(hl.iter()) {
+                *wk += sd * hk;
+            }
+            out.mlp_grads[2 * layers + 1][0] += sd;
+
+            let zrow = &mut out.zgrads[(i - lo) * d_emb..(i - lo + 1) * d_emb];
+            for (zo, &zv) in zrow.iter_mut().zip(&dh[..d_emb]) {
+                *zo = s * zv;
+            }
+            out.scales.push(s);
+
+            // Contribution map: one bucket per feature per example, weight
+            // min(1, C1/√F) (Alg. 1 line 5).  Per-bucket accumulation is in
+            // example order (HashMap entry add is in-place).
+            for f in 0..nf {
+                let idx = (self.offsets[f] + batch.cat(i, f) as usize) as u32;
+                *cmap.entry(idx).or_insert(0.0) += w_cnt;
+            }
+        }
+        out.counts = cmap.into_iter().collect();
+        out
+    }
+
+    /// Forward pass for examples `[lo, hi)`: per-example BCE loss sum and
+    /// logits.
+    pub fn forward_chunk<V: ParamsView + ?Sized>(
+        &self,
+        view: &V,
+        batch: &BatchRef,
+        lo: usize,
+        hi: usize,
+    ) -> (f32, Vec<f32>) {
+        let nf = self.nf();
+        let hidden = self.hidden_dim;
+        let layers = self.num_hidden_layers;
+        let d_emb = self.d_emb;
+        let in_dim = self.in_dim();
+        let mut loss_sum = 0f32;
+        let mut logits = Vec::with_capacity(hi - lo);
+        let mut h0 = vec![0f32; in_dim];
+        for i in lo..hi {
+            let mut off = 0;
+            for f in 0..nf {
+                let d = self.dims[f];
+                view.emb_row(f, batch.cat(i, f) as usize, &mut h0[off..off + d]);
+                off += d;
+            }
+            h0[d_emb..]
+                .copy_from_slice(&batch.num[i * self.num_numeric..(i + 1) * self.num_numeric]);
+            let mut prev = h0.clone();
+            for l in 0..layers {
+                let w = view.mlp(2 * l);
+                let bias = view.mlp(2 * l + 1);
+                let mut h = bias.to_vec();
+                for (k, &x) in prev.iter().enumerate() {
+                    if x != 0.0 {
+                        let row = &w[k * hidden..(k + 1) * hidden];
+                        for (hj, &wj) in h.iter_mut().zip(row) {
+                            *hj += x * wj;
+                        }
+                    }
+                }
+                for v in &mut h {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                prev = h;
+            }
+            let wout = view.mlp(2 * layers);
+            let mut logit = view.mlp(2 * layers + 1)[0];
+            for (hk, &wk) in prev.iter().zip(wout) {
+                logit += hk * wk;
+            }
+            loss_sum += softplus(logit) - batch.y[i] * logit;
+            logits.push(logit);
+        }
+        (loss_sum, logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunk accumulation (the artifact-output assembler)
+// ---------------------------------------------------------------------------
+
+/// Accumulates [`ChunkGrads`] **in chunk order** into the full-batch output
+/// tuple.  Used identically by the sync `execute` loop and by the async
+/// engine's DP aggregation barrier.
+pub struct PctrGradsAcc {
+    loss_sum: f32,
+    mlp_grads: Vec<Vec<f32>>,
+    zgrads: Vec<f32>,
+    counts: Vec<f32>,
+    scales: Vec<f32>,
+}
+
+impl PctrGradsAcc {
+    pub fn new(model: &PctrModel) -> PctrGradsAcc {
+        PctrGradsAcc {
+            loss_sum: 0.0,
+            mlp_grads: model
+                .mlp_shapes
+                .iter()
+                .map(|s| vec![0f32; s.iter().product()])
+                .collect(),
+            zgrads: vec![0f32; model.batch_size * model.d_emb],
+            counts: vec![0f32; model.total_vocab],
+            scales: vec![0f32; model.batch_size],
+        }
+    }
+
+    /// Fold one chunk in.  Must be called in ascending chunk order — the
+    /// merge order is part of the numerical contract (module docs).
+    pub fn merge(&mut self, model: &PctrModel, chunk: ChunkGrads) {
+        self.loss_sum += chunk.loss_sum;
+        for (acc, part) in self.mlp_grads.iter_mut().zip(&chunk.mlp_grads) {
+            for (a, &p) in acc.iter_mut().zip(part) {
+                *a += p;
+            }
+        }
+        let d = model.d_emb;
+        self.zgrads[chunk.lo * d..chunk.hi * d].copy_from_slice(&chunk.zgrads);
+        for &(idx, v) in &chunk.counts {
+            self.counts[idx as usize] += v;
+        }
+        self.scales[chunk.lo..chunk.hi].copy_from_slice(&chunk.scales);
+    }
+
+    /// Final artifact output tuple, in manifest order:
+    /// `loss, grad_mlp_*…, zgrads_scaled, counts, scales`.
+    pub fn into_outputs(self, model: &PctrModel) -> Vec<HostTensor> {
+        let mut outs = Vec::with_capacity(3 + self.mlp_grads.len());
+        outs.push(HostTensor::f32(
+            vec![],
+            vec![self.loss_sum / model.batch_size as f32],
+        ));
+        for (buf, shape) in self.mlp_grads.into_iter().zip(&model.mlp_shapes) {
+            outs.push(HostTensor::f32(shape.clone(), buf));
+        }
+        outs.push(HostTensor::f32(
+            vec![model.batch_size, model.d_emb],
+            self.zgrads,
+        ));
+        outs.push(HostTensor::f32(vec![model.total_vocab], self.counts));
+        outs.push(HostTensor::f32(vec![model.batch_size], self.scales));
+        outs
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Native CPU executor implementing the artifact contract for pCTR models.
+/// Parsed model geometries are cached per model name (the hot path runs
+/// `execute` every step — mirroring `PjrtBackend`'s executable cache).
+#[derive(Default)]
+pub struct ReferenceBackend {
+    models: std::cell::RefCell<HashMap<String, PctrModel>>,
+}
+
+impl ReferenceBackend {
+    fn model_for(&self, model: &ModelManifest) -> Result<PctrModel> {
+        if let Some(pm) = self.models.borrow().get(&model.name) {
+            return Ok(pm.clone());
+        }
+        let pm = PctrModel::from_manifest(model)?;
+        self.models
+            .borrow_mut()
+            .insert(model.name.clone(), pm.clone());
+        Ok(pm)
+    }
+
+    pub fn execute(
+        &self,
+        manifest: &Manifest,
+        art: &ArtifactManifest,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let model = manifest.model(&art.model)?;
+        let pm = self.model_for(model)?;
+        let np = pm.num_params();
+        let b = pm.batch_size;
+        let nf = pm.nf();
+        let view = TensorView::new(&inputs[..np], &pm)?;
+        let batch = BatchRef {
+            nf,
+            nn: pm.num_numeric,
+            cat: inputs[np].as_i32()?,
+            num: inputs[np + 1].as_f32()?,
+            y: inputs[np + 2].as_f32()?,
+        };
+        if art.name.ends_with("_grads") {
+            let c1 = inputs[np + 3].as_f32()?[0];
+            let c2 = inputs[np + 4].as_f32()?[0];
+            let mut acc = PctrGradsAcc::new(&pm);
+            let mut lo = 0;
+            while lo < b {
+                let hi = (lo + REDUCE_CHUNK).min(b);
+                acc.merge(&pm, pm.grads_chunk(&view, &batch, lo, hi, c1, c2));
+                lo = hi;
+            }
+            Ok(acc.into_outputs(&pm))
+        } else if art.name.ends_with("_fwd") {
+            let mut loss_sum = 0f32;
+            let mut logits = Vec::with_capacity(b);
+            let mut lo = 0;
+            while lo < b {
+                let hi = (lo + REDUCE_CHUNK).min(b);
+                let (ls, lg) = pm.forward_chunk(&view, &batch, lo, hi);
+                loss_sum += ls;
+                logits.extend(lg);
+                lo = hi;
+            }
+            Ok(vec![
+                HostTensor::f32(vec![], vec![loss_sum / b as f32]),
+                HostTensor::f32(vec![b], logits),
+            ])
+        } else {
+            bail!("reference runtime: unknown artifact kind {}", art.name)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in manifest (no `make artifacts` needed)
+// ---------------------------------------------------------------------------
+
+struct BuiltinPctr {
+    model: &'static str,
+    artifact_prefix: &'static str,
+    vocabs: Vec<usize>,
+    batch_size: usize,
+    hidden_dim: usize,
+    num_hidden_layers: usize,
+}
+
+fn dims_str(dims: &[usize]) -> String {
+    if dims.is_empty() {
+        "scalar".to_string()
+    } else {
+        dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+    }
+}
+
+fn push_pctr(lines: &mut Vec<String>, cfg: &BuiltinPctr) {
+    let m = cfg.model;
+    let dims: Vec<usize> = cfg.vocabs.iter().map(|&v| embedding_dim(v)).collect();
+    let mut offsets = Vec::with_capacity(cfg.vocabs.len());
+    let mut acc = 0usize;
+    for &v in &cfg.vocabs {
+        offsets.push(acc);
+        acc += v;
+    }
+    let total_vocab = acc;
+    let d_emb: usize = dims.iter().sum();
+    let join = |xs: &[usize]| {
+        xs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+    };
+    lines.push(format!("model {m} pctr"));
+    lines.push(format!("attr {m} vocabs {}", join(&cfg.vocabs)));
+    lines.push(format!("attr {m} dims {}", join(&dims)));
+    lines.push(format!("attr {m} row_offsets {}", join(&offsets)));
+    lines.push(format!("attr {m} total_vocab {total_vocab}"));
+    lines.push(format!("attr {m} batch_size {}", cfg.batch_size));
+    lines.push(format!("attr {m} hidden_dim {}", cfg.hidden_dim));
+    lines.push(format!("attr {m} num_hidden_layers {}", cfg.num_hidden_layers));
+    lines.push(format!("attr {m} num_numeric {NUM_NUMERIC}"));
+
+    // params: tables, then the MLP stack
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    for (f, (&v, &d)) in cfg.vocabs.iter().zip(&dims).enumerate() {
+        params.push((format!("table_{f:02}"), vec![v, d]));
+    }
+    let mut in_dim = d_emb + NUM_NUMERIC;
+    for i in 0..cfg.num_hidden_layers {
+        params.push((format!("mlp_w{i}"), vec![in_dim, cfg.hidden_dim]));
+        params.push((format!("mlp_b{i}"), vec![cfg.hidden_dim]));
+        in_dim = cfg.hidden_dim;
+    }
+    params.push(("mlp_wout".to_string(), vec![in_dim, 1]));
+    params.push(("mlp_bout".to_string(), vec![1]));
+    for (name, d) in &params {
+        lines.push(format!("param {m} {name} 1 {}", dims_str(d)));
+    }
+
+    let b = cfg.batch_size;
+    let nf = cfg.vocabs.len();
+    for suffix in ["fwd", "grads"] {
+        let a = format!("{}_{suffix}", cfg.artifact_prefix);
+        lines.push(format!("artifact {a} {a}.hlo.txt {m}"));
+        for (name, d) in &params {
+            lines.push(format!("in {a} {name} f32 {}", dims_str(d)));
+        }
+        lines.push(format!("in {a} cat_idx i32 {b},{nf}"));
+        lines.push(format!("in {a} x_num f32 {b},{NUM_NUMERIC}"));
+        lines.push(format!("in {a} y f32 {b}"));
+        if suffix == "grads" {
+            lines.push(format!("in {a} c1 f32 1"));
+            lines.push(format!("in {a} c2 f32 1"));
+            lines.push(format!("out {a} loss f32 scalar"));
+            for (name, d) in params.iter().filter(|(n, _)| n.starts_with("mlp_")) {
+                lines.push(format!("out {a} grad_{name} f32 {}", dims_str(d)));
+            }
+            lines.push(format!("out {a} zgrads_scaled f32 {b},{d_emb}"));
+            lines.push(format!("out {a} counts f32 {total_vocab}"));
+            lines.push(format!("out {a} scales f32 {b}"));
+        } else {
+            lines.push(format!("out {a} loss f32 scalar"));
+            lines.push(format!("out {a} logits f32 {b}"));
+        }
+    }
+}
+
+/// The built-in manifest: `criteo-small` (the paper's CPU-scale config,
+/// Table-3 vocabularies / 16) and `criteo-tiny` (test-sized).
+pub fn builtin_manifest() -> Manifest {
+    let mut lines: Vec<String> = Vec::new();
+    push_pctr(
+        &mut lines,
+        &BuiltinPctr {
+            model: "criteo-small",
+            artifact_prefix: "pctr",
+            vocabs: CRITEO_VOCABS.iter().map(|&v| (v / 16).max(4)).collect(),
+            batch_size: 128,
+            hidden_dim: 128,
+            num_hidden_layers: 4,
+        },
+    );
+    push_pctr(
+        &mut lines,
+        &BuiltinPctr {
+            model: "criteo-tiny",
+            artifact_prefix: "pctr_tiny",
+            vocabs: vec![96, 48, 200, 12],
+            batch_size: 32,
+            hidden_dim: 16,
+            num_hidden_layers: 2,
+        },
+    );
+    Manifest::parse(&lines.join("\n"))
+        .context("built-in manifest must parse")
+        .expect("built-in manifest is static")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ParamStore;
+
+    #[test]
+    fn builtin_manifest_parses_and_is_consistent() {
+        let m = builtin_manifest();
+        for name in ["criteo-small", "criteo-tiny"] {
+            let model = m.model(name).unwrap();
+            let pm = PctrModel::from_manifest(model).unwrap();
+            assert_eq!(pm.vocabs.len(), pm.dims.len());
+            assert_eq!(pm.total_vocab, pm.vocabs.iter().sum::<usize>());
+            let store = ParamStore::init(model, 1).unwrap();
+            assert_eq!(store.params.len(), pm.num_params());
+        }
+        assert!(m.artifact("pctr_grads").is_ok());
+        assert!(m.artifact("pctr_tiny_fwd").is_ok());
+        // grads artifact I/O arity: params + 3 batch + 2 clip inputs;
+        // loss + mlp grads + 3 tail outputs
+        let art = m.artifact("pctr_tiny_grads").unwrap();
+        let pm = PctrModel::from_manifest(m.model("criteo-tiny").unwrap()).unwrap();
+        assert_eq!(art.inputs.len(), pm.num_params() + 5);
+        assert_eq!(art.outputs.len(), 1 + pm.mlp_shapes.len() + 3);
+    }
+
+    #[test]
+    fn embedding_dim_rule_matches_python() {
+        // int(2 * v**0.25) with a floor of 2
+        assert_eq!(embedding_dim(3), 2);
+        assert_eq!(embedding_dim(92), 6);
+        assert_eq!(embedding_dim(5171), 16);
+    }
+
+    fn tiny_exec() -> (Manifest, Vec<HostTensor>, PctrModel) {
+        let m = builtin_manifest();
+        let model = m.model("criteo-tiny").unwrap();
+        let pm = PctrModel::from_manifest(model).unwrap();
+        let store = ParamStore::init(model, 7).unwrap();
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(3);
+        let b = pm.batch_size;
+        let nf = pm.nf();
+        let cat: Vec<i32> = (0..b * nf)
+            .map(|i| rng.below(pm.vocabs[i % nf] as u64) as i32)
+            .collect();
+        let num: Vec<f32> = (0..b * pm.num_numeric).map(|_| rng.gauss() as f32).collect();
+        let y: Vec<f32> = (0..b).map(|_| rng.below(2) as f32).collect();
+        let mut inputs = store.tensors();
+        inputs.push(HostTensor::i32(vec![b, nf], cat));
+        inputs.push(HostTensor::f32(vec![b, pm.num_numeric], num));
+        inputs.push(HostTensor::f32(vec![b], y));
+        (m, inputs, pm)
+    }
+
+    #[test]
+    fn reference_grads_shapes_and_determinism() {
+        let (m, mut inputs, pm) = tiny_exec();
+        inputs.push(HostTensor::f32(vec![1], vec![1.0]));
+        inputs.push(HostTensor::f32(vec![1], vec![0.7]));
+        let backend = ReferenceBackend::default();
+        let art = m.artifact("pctr_tiny_grads").unwrap();
+        let o1 = backend.execute(&m, art, &inputs).unwrap();
+        let o2 = backend.execute(&m, art, &inputs).unwrap();
+        assert_eq!(o1.len(), art.outputs.len());
+        assert_eq!(o1, o2, "reference execution must be deterministic");
+        let loss = o1[0].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        // scales respect the clip norm
+        let scales = o1.last().unwrap().as_f32().unwrap();
+        assert!(scales.iter().all(|&s| s > 0.0 && s <= 1.0));
+        // counts mass: every example contributes min(1, c1/sqrt(F)) per feature
+        let counts = o1[o1.len() - 2].as_f32().unwrap();
+        let mass: f64 = counts.iter().map(|&v| v as f64).sum();
+        let w = (1.0 / (pm.nf() as f64).sqrt()).min(1.0);
+        let want = w * (pm.batch_size * pm.nf()) as f64;
+        assert!((mass - want).abs() < 1e-2, "mass {mass} want {want}");
+    }
+
+    #[test]
+    fn clipping_caps_per_example_norm() {
+        // With a tiny clip norm, the summed grad's norm is bounded by B*C2.
+        let (m, mut inputs, pm) = tiny_exec();
+        inputs.push(HostTensor::f32(vec![1], vec![1.0]));
+        inputs.push(HostTensor::f32(vec![1], vec![0.05]));
+        let art = m.artifact("pctr_tiny_grads").unwrap();
+        let outs = ReferenceBackend::default().execute(&m, art, &inputs).unwrap();
+        let mut sq = 0f64;
+        for (spec, out) in art.outputs.iter().zip(&outs) {
+            if spec.name.starts_with("grad_") || spec.name == "zgrads_scaled" {
+                sq += out
+                    .as_f32()
+                    .unwrap()
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum::<f64>();
+            }
+        }
+        // mlp grads are summed over B (norm ≤ B·C2); zgrads stay per-example
+        // (Σ‖·‖² ≤ B·C2²) — so the total is ≤ C2·√(B² + B).
+        let b = pm.batch_size as f64;
+        let bound = 0.05 * (b * b + b).sqrt();
+        assert!(
+            sq.sqrt() <= bound + 1e-3,
+            "clipped norm {} exceeds C2*sqrt(B^2+B) = {bound}",
+            sq.sqrt()
+        );
+    }
+
+    #[test]
+    fn forward_matches_grads_loss() {
+        // fwd and grads artifacts must agree on the loss for c2 -> inf
+        let (m, inputs, _pm) = tiny_exec();
+        let fwd = ReferenceBackend::default()
+            .execute(&m, m.artifact("pctr_tiny_fwd").unwrap(), &inputs)
+            .unwrap();
+        let mut ginputs = inputs;
+        ginputs.push(HostTensor::f32(vec![1], vec![1e9]));
+        ginputs.push(HostTensor::f32(vec![1], vec![1e9]));
+        let grads = ReferenceBackend::default()
+            .execute(&m, m.artifact("pctr_tiny_grads").unwrap(), &ginputs)
+            .unwrap();
+        assert_eq!(fwd[0].scalar().unwrap(), grads[0].scalar().unwrap());
+    }
+
+    #[test]
+    fn chunk_merge_equals_full_batch() {
+        // merging per-chunk partials in order == the sync execute loop
+        let (m, mut inputs, pm) = tiny_exec();
+        inputs.push(HostTensor::f32(vec![1], vec![1.0]));
+        inputs.push(HostTensor::f32(vec![1], vec![1.0]));
+        let art = m.artifact("pctr_tiny_grads").unwrap();
+        let full = ReferenceBackend::default().execute(&m, art, &inputs).unwrap();
+        let np = pm.num_params();
+        let view = TensorView::new(&inputs[..np], &pm).unwrap();
+        let batch = BatchRef {
+            nf: pm.nf(),
+            nn: pm.num_numeric,
+            cat: inputs[np].as_i32().unwrap(),
+            num: inputs[np + 1].as_f32().unwrap(),
+            y: inputs[np + 2].as_f32().unwrap(),
+        };
+        // compute chunks out of order, merge in order — as the engine does
+        let mut chunks: Vec<ChunkGrads> = Vec::new();
+        let mut lo = 0;
+        while lo < pm.batch_size {
+            let hi = (lo + REDUCE_CHUNK).min(pm.batch_size);
+            chunks.push(pm.grads_chunk(&view, &batch, lo, hi, 1.0, 1.0));
+            lo = hi;
+        }
+        chunks.reverse();
+        chunks.sort_by_key(|c| c.lo);
+        let mut acc = PctrGradsAcc::new(&pm);
+        for c in chunks {
+            acc.merge(&pm, c);
+        }
+        let merged = acc.into_outputs(&pm);
+        assert_eq!(full, merged, "chunked merge must be bit-identical");
+    }
+
+    #[test]
+    fn grads_point_downhill() {
+        // one SGD step along -grad must reduce the fwd loss (sanity that
+        // the hand-written backward pass is a real gradient)
+        let (m, inputs, pm) = tiny_exec();
+        let art_f = m.artifact("pctr_tiny_fwd").unwrap();
+        let loss0 = ReferenceBackend::default().execute(&m, art_f, &inputs).unwrap()[0]
+            .scalar()
+            .unwrap();
+        let mut ginputs = inputs.clone();
+        ginputs.push(HostTensor::f32(vec![1], vec![1e9]));
+        ginputs.push(HostTensor::f32(vec![1], vec![1e9]));
+        let art_g = m.artifact("pctr_tiny_grads").unwrap();
+        let grads = ReferenceBackend::default().execute(&m, art_g, &ginputs).unwrap();
+        let np = pm.num_params();
+        let nf = pm.nf();
+        let lr = 0.05f32 / pm.batch_size as f32;
+        let mut stepped = inputs;
+        // dense params: grad_mlp_* outputs are 1..=mlp count
+        for (j, out) in grads[1..1 + pm.mlp_shapes.len()].iter().enumerate() {
+            let p = stepped[nf + j].as_f32_mut().unwrap();
+            for (pv, &g) in p.iter_mut().zip(out.as_f32().unwrap()) {
+                *pv -= lr * g;
+            }
+        }
+        // embedding rows via zgrads scatter
+        let zg = grads[1 + pm.mlp_shapes.len()].as_f32().unwrap().to_vec();
+        let cat = stepped[np].as_i32().unwrap().to_vec();
+        for i in 0..pm.batch_size {
+            let mut off = 0;
+            for f in 0..nf {
+                let d = pm.dims[f];
+                let row = cat[i * nf + f] as usize;
+                let t = stepped[f].as_f32_mut().unwrap();
+                for k in 0..d {
+                    t[row * d + k] -= lr * zg[i * pm.d_emb + off + k];
+                }
+                off += d;
+            }
+        }
+        let loss1 = ReferenceBackend::default().execute(&m, art_f, &stepped).unwrap()[0]
+            .scalar()
+            .unwrap();
+        assert!(loss1 < loss0, "loss did not decrease: {loss0} -> {loss1}");
+    }
+}

@@ -33,6 +33,24 @@ pub struct DenseState {
     accum: Vec<f32>,
 }
 
+impl DenseState {
+    /// Rehydrate from a raw accumulator (the engine's sharded store splits
+    /// and re-joins state across shards).
+    pub fn from_accum(accum: Vec<f32>) -> Self {
+        DenseState { accum }
+    }
+
+    /// The raw accumulator; empty until the first Adagrad step touches the
+    /// parameter.
+    pub fn accum(&self) -> &[f32] {
+        &self.accum
+    }
+
+    pub fn into_accum(self) -> Vec<f32> {
+        self.accum
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Optimizer {
     pub kind: OptimizerKind,

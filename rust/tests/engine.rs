@@ -1,0 +1,243 @@
+//! Async-engine integration tests over the built-in reference runtime (no
+//! AOT artifacts needed):
+//!
+//! * sync-vs-async **exact** equivalence (loss history, utility, noised
+//!   coordinate counts) across worker/shard/microbatch settings;
+//! * the noise-draw-order invariant (a `ParamStore` sink and a sharded sink
+//!   consume the identical RNG stream and produce identical parameters);
+//! * sharded-store concurrent-update correctness under the in-repo property
+//!   harness;
+//! * channel shutdown / no-deadlock at degenerate configurations.
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::step::{GradBundle, StepState};
+use sparse_dp_emb::coordinator::{Algorithm, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo};
+use sparse_dp_emb::engine::{self, ShardedStore, ShardedTable};
+use sparse_dp_emb::models::ParamStore;
+use sparse_dp_emb::proptest::{check, ensure, usize_in};
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::sparse::{DenseState, Optimizer, RowSparseGrad};
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+fn tiny_cfg(algo: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 6;
+    cfg.eval_batches = 2;
+    cfg.c2 = 0.5;
+    cfg
+}
+
+fn gen_cfg(rt: &Runtime, cfg: &RunConfig) -> CriteoConfig {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    let vocabs = model.attr_usize_list("vocabs").unwrap();
+    CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A)
+}
+
+fn assert_outcomes_identical(
+    a: &sparse_dp_emb::coordinator::TrainOutcome,
+    b: &sparse_dp_emb::coordinator::TrainOutcome,
+    what: &str,
+) {
+    assert_eq!(a.loss_history, b.loss_history, "{what}: loss history");
+    assert_eq!(a.utility, b.utility, "{what}: utility");
+    assert_eq!(a.eval_loss, b.eval_loss, "{what}: eval loss");
+    assert_eq!(
+        a.emb_grad_coords_per_step, b.emb_grad_coords_per_step,
+        "{what}: emb coords/step"
+    );
+    assert_eq!(a.sigma1, b.sigma1, "{what}: sigma1");
+    assert_eq!(a.sigma2, b.sigma2, "{what}: sigma2");
+}
+
+#[test]
+fn sync_and_async_outcomes_match_exactly() {
+    let rt = Runtime::builtin();
+    for algo in [Algorithm::NonPrivate, Algorithm::DpSgd, Algorithm::DpAdaFest] {
+        let cfg = tiny_cfg(algo);
+        let gcfg = gen_cfg(&rt, &cfg);
+
+        let gen = SynthCriteo::new(gcfg.clone());
+        let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+        let sync_out = trainer.run_pctr(&gen).unwrap();
+        assert!(sync_out.loss_history.iter().all(|l| l.is_finite()), "{algo:?}");
+
+        let async_out = engine::run_pctr(&cfg, &rt, gcfg).unwrap();
+        assert_outcomes_identical(&sync_out, &async_out, &format!("{algo:?}"));
+    }
+}
+
+#[test]
+fn async_outcome_is_invariant_to_engine_knobs() {
+    let rt = Runtime::builtin();
+    let base = tiny_cfg(Algorithm::DpAdaFest);
+    let gcfg = gen_cfg(&rt, &base);
+    let reference = engine::run_pctr(&base, &rt, gcfg.clone()).unwrap();
+    // (grad workers, data workers, channel depth, shards, microbatch chunks)
+    for (gw, dw, depth, shards, mb) in
+        [(1, 1, 1, 1, 1), (3, 2, 2, 7, 2), (8, 4, 16, 64, 100)]
+    {
+        let mut cfg = base.clone();
+        cfg.engine.grad_workers = gw;
+        cfg.engine.data_workers = dw;
+        cfg.engine.channel_depth = depth;
+        cfg.engine.shards = shards;
+        cfg.engine.microbatch_chunks = mb;
+        let out = engine::run_pctr(&cfg, &rt, gcfg.clone()).unwrap();
+        assert_outcomes_identical(
+            &reference,
+            &out,
+            &format!("engine knobs ({gw},{dw},{depth},{shards},{mb})"),
+        );
+    }
+}
+
+#[test]
+fn noise_draw_order_is_worker_count_invariant() {
+    // The documented invariant from coordinator::step: consuming an
+    // identical GradBundle through a ParamStore sink and through a sharded
+    // sink must draw the same noise stream (RNG states end equal) and
+    // produce bitwise-equal parameters.
+    let rt = Runtime::builtin();
+    let model = rt.manifest.model("criteo-tiny").unwrap();
+    let cfg = tiny_cfg(Algorithm::DpAdaFest);
+    let store_a = ParamStore::init(model, cfg.seed).unwrap();
+    let store_b = ParamStore::init(model, cfg.seed).unwrap();
+    let mut state_a = StepState::new(cfg.clone(), model, &store_a).unwrap();
+    let mut state_b = StepState::new(cfg, model, &store_b).unwrap();
+
+    let bundle = |state: &StepState| -> GradBundle {
+        let mut rng = Xoshiro256::seed_from(99);
+        let total: usize = state.emb_tables.iter().map(|t| t.vocab).sum();
+        let mut counts = vec![0f32; total];
+        let mut table_grads = Vec::new();
+        for t in &state.emb_tables {
+            let mut g = RowSparseGrad::new(t.vocab, t.dim);
+            for _ in 0..8 {
+                let row = rng.below(t.vocab as u64) as u32;
+                let vals: Vec<f32> = (0..t.dim).map(|_| rng.gauss() as f32).collect();
+                g.add_row(row, &vals);
+                counts[t.row_offset + row as usize] += 1.0;
+            }
+            table_grads.push(g);
+        }
+        GradBundle { loss: 0.7, table_grads, counts: Some(counts), dense_grads: vec![] }
+    };
+
+    let mut sink_a = store_a;
+    let bundle_a = bundle(&state_a);
+    let stats_a = state_a.apply_update(bundle_a, &mut sink_a).unwrap();
+
+    let emb_params: Vec<usize> =
+        state_b.emb_tables.iter().map(|t| t.param_index).collect();
+    let sharded = ShardedStore::from_store(store_b, &emb_params, 5).unwrap();
+    let bundle_b = bundle(&state_b);
+    let stats_b = {
+        let mut sink = &sharded;
+        state_b.apply_update(bundle_b, &mut sink).unwrap()
+    };
+
+    assert_eq!(stats_a.emb_coords_noised, stats_b.emb_coords_noised);
+    assert_eq!(stats_a.survivors, stats_b.survivors);
+    // identical post-update RNG state ⇒ identical draw counts and order
+    assert_eq!(state_a.rng.next_u64(), state_b.rng.next_u64());
+    // identical parameters, coordinate for coordinate
+    let back = sharded.into_store().unwrap();
+    for (pa, pb) in sink_a.params.iter().zip(&back.params) {
+        assert_eq!(pa.name, pb.name);
+        assert_eq!(
+            pa.tensor.as_f32().unwrap(),
+            pb.tensor.as_f32().unwrap(),
+            "param {} diverged",
+            pa.name
+        );
+    }
+}
+
+#[test]
+fn prop_sharded_concurrent_disjoint_updates_match_sequential() {
+    // Row-disjoint updates applied concurrently from several threads must
+    // equal one sequential application (rows commute coordinate-wise).
+    check("sharded concurrent == sequential", 40, |rng| {
+        let rows = usize_in(rng, 8, 200);
+        let dim = usize_in(rng, 1, 8);
+        let shards = usize_in(rng, 1, 9);
+        let threads = usize_in(rng, 2, 5);
+        let init: Vec<f32> = (0..rows * dim).map(|_| rng.gauss() as f32).collect();
+
+        // one grad split into row-disjoint per-thread parts
+        let mut full = RowSparseGrad::new(rows, dim);
+        let mut parts: Vec<RowSparseGrad> =
+            (0..threads).map(|_| RowSparseGrad::new(rows, dim)).collect();
+        for row in 0..rows {
+            if rng.uniform() < 0.4 {
+                let vals: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+                full.add_row(row as u32, &vals);
+                parts[row % threads].add_row(row as u32, &vals);
+            }
+        }
+        let opt = Optimizer::adagrad(0.05);
+
+        let mut flat = init.clone();
+        let mut st = DenseState::default();
+        opt.sparse_step(&mut flat, &full, &mut st);
+
+        let table = ShardedTable::from_dense(rows, dim, init, shards);
+        std::thread::scope(|scope| {
+            for part in &parts {
+                let (t, o) = (&table, &opt);
+                scope.spawn(move || t.apply_sparse(part, o));
+            }
+        });
+        let (values, _) = table.into_dense();
+        ensure(
+            values == flat,
+            format!("mismatch at rows={rows} dim={dim} shards={shards}"),
+        )
+    });
+}
+
+#[test]
+fn engine_handles_degenerate_configs_without_deadlock() {
+    let rt = Runtime::builtin();
+
+    // zero steps: nothing to train, eval only
+    let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+    cfg.steps = 0;
+    let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
+    assert!(out.loss_history.is_empty());
+
+    // one step, minimal channel, more workers than work
+    let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+    cfg.steps = 1;
+    cfg.eval_batches = 1;
+    cfg.engine.grad_workers = 8;
+    cfg.engine.data_workers = 6;
+    cfg.engine.channel_depth = 1;
+    let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
+    assert_eq!(out.loss_history.len(), 1);
+
+    // unknown model errors cleanly instead of hanging
+    let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+    cfg.model = "no-such-model".into();
+    let vocabs = vec![8usize];
+    assert!(engine::run_pctr(&cfg, &rt, CriteoConfig::new(vocabs, 1)).is_err());
+}
+
+#[test]
+fn fest_preselection_paths_agree() {
+    // DP-AdaFEST+ exercises fest_select (Gumbel draws from the shared RNG
+    // stream) plus per-batch filtering — the strictest equivalence case.
+    let rt = Runtime::builtin();
+    let mut cfg = tiny_cfg(Algorithm::DpAdaFestPlus);
+    cfg.fest_top_k = 64;
+    cfg.steps = 4;
+    let gcfg = gen_cfg(&rt, &cfg);
+    let gen = SynthCriteo::new(gcfg.clone());
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let sync_out = trainer.run_pctr(&gen).unwrap();
+    let async_out = engine::run_pctr(&cfg, &rt, gcfg).unwrap();
+    assert_outcomes_identical(&sync_out, &async_out, "DpAdaFestPlus");
+}
