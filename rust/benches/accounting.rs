@@ -1,7 +1,7 @@
 //! `cargo bench --bench accounting` — PLD accountant performance:
 //! discretisation, FFT self-composition, and full σ calibration.
 
-use sparse_dp_emb::accounting::{calibrate_sigma, Adjacency, Pld, SubsampledGaussian};
+use sparse_dp_emb::accounting::{calibrate_sigma_uncached, Adjacency, Pld, SubsampledGaussian};
 use sparse_dp_emb::util::bench::Bencher;
 
 fn main() {
@@ -22,8 +22,10 @@ fn main() {
     let composed = pld.compose_pow(1000);
     b.bench("pld-epsilon(delta=1e-6)", || composed.epsilon(1e-6));
 
+    // the uncached bisection — calibrate_sigma itself memoizes process-wide
+    // and would only measure a HashMap hit after the first sample
     let cal = Bencher { samples: 3, ..Default::default() };
     cal.bench("calibrate-sigma/eps=1,T=1000", || {
-        calibrate_sigma(1.0, 1e-6, 0.01, 1000).unwrap()
+        calibrate_sigma_uncached(1.0, 1e-6, 0.01, 1000).unwrap()
     });
 }

@@ -1,15 +1,55 @@
 //! Inverse accounting: find the smallest noise multiplier σ meeting a target
 //! (ε, δ) for a given sampling rate and step count, and split it into the
 //! (σ₁, σ₂) pair DP-AdaFEST needs for a chosen noise ratio σ₁/σ₂.
+//!
+//! PLD calibration costs seconds and sweeps reuse budgets, so
+//! [`calibrate_sigma`] memoizes through a **process-wide cache** — every
+//! caller (the step core, `sparse-dp-emb account`, the harness sweeps,
+//! [`calibrate_sigma_pair`]) shares it.  Keys are exact f64 bit patterns:
+//! quantizing with `(x * 1e6) as u64` collided for nearby budgets and
+//! truncated instead of rounding.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
 use super::Accountant;
 
+static SIGMA_CACHE: Mutex<Option<HashMap<(u64, u64, u64, u64), f64>>> = Mutex::new(None);
+
 /// Smallest σ such that the Poisson-subsampled Gaussian mechanism run for
-/// `steps` steps at rate `q` satisfies (ε, δ)-DP.  Bisection over σ
-/// (ε is monotone decreasing in σ).
+/// `steps` steps at rate `q` satisfies (ε, δ)-DP, via the process-wide
+/// cache.
 pub fn calibrate_sigma(epsilon: f64, delta: f64, q: f64, steps: u64) -> Result<f64> {
+    let key = (epsilon.to_bits(), delta.to_bits(), q.to_bits(), steps);
+    {
+        let cache = SIGMA_CACHE.lock().unwrap();
+        if let Some(map) = cache.as_ref() {
+            if let Some(&sigma) = map.get(&key) {
+                return Ok(sigma);
+            }
+        }
+    }
+    let sigma = calibrate_sigma_uncached(epsilon, delta, q, steps)?;
+    let mut cache = SIGMA_CACHE.lock().unwrap();
+    cache.get_or_insert_with(HashMap::new).insert(key, sigma);
+    Ok(sigma)
+}
+
+#[cfg(test)]
+fn sigma_cache_has(epsilon: f64, delta: f64, q: f64, steps: u64) -> bool {
+    let key = (epsilon.to_bits(), delta.to_bits(), q.to_bits(), steps);
+    SIGMA_CACHE
+        .lock()
+        .unwrap()
+        .as_ref()
+        .is_some_and(|map| map.contains_key(&key))
+}
+
+/// The bisection behind [`calibrate_sigma`], cache-free — for callers that
+/// measure calibration cost itself (`benches/accounting.rs`).
+pub fn calibrate_sigma_uncached(epsilon: f64, delta: f64, q: f64, steps: u64) -> Result<f64> {
     if epsilon <= 0.0 || delta <= 0.0 || delta >= 1.0 {
         bail!("invalid privacy target eps={epsilon} delta={delta}");
     }
@@ -96,6 +136,23 @@ mod tests {
         assert!(s_many > s_few);
         let s_loose = calibrate_sigma(8.0, 1e-5, 0.02, 50).unwrap();
         assert!(s_loose < s_few);
+    }
+
+    #[test]
+    fn sigma_cache_memoizes_and_distinguishes_nearby_budgets() {
+        // regression: (x * 1e6) as u64 mapped 1.0 and 1.0000005 to the same
+        // key.  With to_bits keys the cache must treat them as distinct.
+        assert_ne!((1.0f64).to_bits(), (1.000_000_5f64).to_bits());
+        // a call populates the cache under its exact key, and repeated /
+        // pair calibrations are served from it
+        let (eps, delta, q, t) = (1.375, 2e-5, 0.0175, 60);
+        let first = calibrate_sigma(eps, delta, q, t).unwrap();
+        assert!(sigma_cache_has(eps, delta, q, t));
+        let second = calibrate_sigma(eps, delta, q, t).unwrap();
+        assert_eq!(first, second);
+        let pair = calibrate_sigma_pair(eps, delta, q, t, 5.0).unwrap();
+        let eff = compose_sigmas(pair.sigma1, pair.sigma2);
+        assert!((eff - first).abs() / first < 1e-9);
     }
 
     #[test]

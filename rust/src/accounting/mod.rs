@@ -17,7 +17,7 @@ mod fft;
 mod gaussian;
 mod pld;
 
-pub use calibrate::{calibrate_sigma, calibrate_sigma_pair, SigmaPair};
+pub use calibrate::{calibrate_sigma, calibrate_sigma_pair, calibrate_sigma_uncached, SigmaPair};
 pub use gaussian::{compose_sigmas, gaussian_delta, gaussian_epsilon};
 pub use pld::{Adjacency, Pld, SubsampledGaussian};
 

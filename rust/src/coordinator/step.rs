@@ -30,9 +30,6 @@
 //!
 //! [`Trainer`]: super::Trainer
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
 use anyhow::{bail, Context, Result};
 
 use crate::accounting::calibrate_sigma;
@@ -321,34 +318,15 @@ pub fn clip_inputs(cfg: &RunConfig) -> (HostTensor, HostTensor) {
 }
 
 // ---------------------------------------------------------------------------
-// σ calibration (with process-wide cache)
+// σ calibration
 // ---------------------------------------------------------------------------
-
-// Calibration cache: PLD calibration costs seconds; sweeps reuse budgets.
-// Keyed on exact f64 bit patterns — quantising with `(x * 1e6) as u64`
-// collided for nearby budgets and truncated instead of rounding.
-static SIGMA_CACHE: Mutex<Option<HashMap<(u64, u64, u64, u64), f64>>> = Mutex::new(None);
-
-fn cached_calibrate(epsilon: f64, delta: f64, q: f64, steps: u64) -> Result<f64> {
-    let key = (epsilon.to_bits(), delta.to_bits(), q.to_bits(), steps);
-    {
-        let cache = SIGMA_CACHE.lock().unwrap();
-        if let Some(map) = cache.as_ref() {
-            if let Some(&s) = map.get(&key) {
-                return Ok(s);
-            }
-        }
-    }
-    let sigma = calibrate_sigma(epsilon, delta, q, steps)?;
-    let mut cache = SIGMA_CACHE.lock().unwrap();
-    cache.get_or_insert_with(HashMap::new).insert(key, sigma);
-    Ok(sigma)
-}
 
 /// Calibrate the (σ₁, σ₂) pair for a run.  Semantics identical to the seed
 /// trainer: FEST budget split first, then either a composed pair (σ₁/σ₂ at
 /// `cfg.sigma_ratio`, for contribution-map algorithms) or a single σ₂.
-/// Both branches share the σ_eff cache.
+/// Both branches share the process-wide σ_eff cache that now lives inside
+/// [`calibrate_sigma`] itself, so `calibrate_sigma_pair` callers (the CLI
+/// `account` command, harness sweeps) hit the same memo.
 pub fn calibrate_noise(cfg: &RunConfig, batch_size: usize) -> Result<(f64, f64)> {
     let q = batch_size as f64 / cfg.dataset_size as f64;
     let delta = cfg.effective_delta();
@@ -362,17 +340,17 @@ pub fn calibrate_noise(cfg: &RunConfig, batch_size: usize) -> Result<(f64, f64)>
     match cfg.algorithm {
         Algorithm::NonPrivate => Ok((0.0, 0.0)),
         a if a.uses_contribution_map() => {
-            // Same split as accounting::calibrate_sigma_pair, but through
-            // the σ_eff cache (the pair is a closed-form function of it).
+            // Same split as accounting::calibrate_sigma_pair (the pair is a
+            // closed-form function of the cached σ_eff).
             let ratio = cfg.sigma_ratio;
             if ratio <= 0.0 {
                 bail!("sigma ratio must be positive");
             }
-            let sigma_eff = cached_calibrate(eps_train, delta, q, cfg.steps)?;
+            let sigma_eff = calibrate_sigma(eps_train, delta, q, cfg.steps)?;
             let sigma2 = sigma_eff * (1.0 + 1.0 / (ratio * ratio)).sqrt();
             Ok((ratio * sigma2, sigma2))
         }
-        _ => Ok((0.0, cached_calibrate(eps_train, delta, q, cfg.steps)?)),
+        _ => Ok((0.0, calibrate_sigma(eps_train, delta, q, cfg.steps)?)),
     }
 }
 
@@ -765,15 +743,6 @@ mod tests {
         let mut e = eval_batch_rng(7, 3);
         let mut a3 = train_batch_rng(7, 3);
         assert_ne!(a3.next_u64(), e.next_u64());
-    }
-
-    #[test]
-    fn sigma_cache_distinguishes_nearby_budgets() {
-        // regression: (x * 1e6) as u64 mapped 1.0 and 1.0000005 to the same
-        // key.  With to_bits keys the cache must treat them as distinct.
-        let a = (1.0f64).to_bits();
-        let b = (1.000_000_5f64).to_bits();
-        assert_ne!(a, b);
     }
 
     #[test]

@@ -74,6 +74,23 @@ impl TextBatch {
     }
 }
 
+/// Either workload's owned batch — the kind-generic currency of the async
+/// engine's channels (data workers → aggregation loop → gradient workers).
+#[derive(Clone, Debug)]
+pub enum Batch {
+    Pctr(PctrBatch),
+    Text(TextBatch),
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        match self {
+            Batch::Pctr(b) => b.batch_size,
+            Batch::Text(b) => b.batch_size,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,13 +10,51 @@
 //!   (50,265 RoBERTa / 250,002 XLM-R) with a bag-of-tokens teacher
 //!   (SST-2/QNLI/QQP/XNLI stand-ins).
 //! * [`zipf`] — the shared Zipf(α) sampler.
+//!
+//! [`GenConfig`] / [`Generator`] wrap both substrates behind one interface
+//! so kind-generic callers (the async engine's data workers) can be handed
+//! either workload.
 
 mod batch;
 mod criteo;
 mod text;
 mod zipf;
 
-pub use batch::{PctrBatch, TextBatch};
+pub use batch::{Batch, PctrBatch, TextBatch};
 pub use criteo::{CriteoConfig, SynthCriteo, EVAL_DAYS, TRAIN_DAYS};
 pub use text::{SynthText, TextConfig};
 pub use zipf::ZipfSampler;
+
+use crate::util::rng::Xoshiro256;
+
+/// Data-source configuration for either workload — cloneable across the
+/// engine's data-worker threads (each worker builds its own generator).
+#[derive(Clone, Debug)]
+pub enum GenConfig {
+    Pctr(CriteoConfig),
+    Text(TextConfig),
+}
+
+/// A constructed generator for either workload.
+pub enum Generator {
+    Pctr(SynthCriteo),
+    Text(SynthText),
+}
+
+impl Generator {
+    pub fn new(cfg: GenConfig) -> Generator {
+        match cfg {
+            GenConfig::Pctr(c) => Generator::Pctr(SynthCriteo::new(c)),
+            GenConfig::Text(c) => Generator::Text(SynthText::new(c)),
+        }
+    }
+
+    /// One batch from the wrapped generator (day 0 for the pCTR substrate —
+    /// the engine has no streaming mode yet).
+    pub fn batch(&self, batch_size: usize, rng: &mut Xoshiro256) -> Batch {
+        match self {
+            Generator::Pctr(g) => Batch::Pctr(g.batch(0, batch_size, rng)),
+            Generator::Text(g) => Batch::Text(g.batch(batch_size, rng)),
+        }
+    }
+}

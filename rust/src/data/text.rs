@@ -26,6 +26,21 @@ impl TextConfig {
     pub fn new(vocab: usize, seq_len: usize, num_classes: usize, seed: u64) -> Self {
         TextConfig { vocab, seq_len, num_classes, seed, informative: 512 }
     }
+
+    /// Build from an NLU model's manifest attrs — the one place the
+    /// (vocab, seq_len, num_classes) triple is read, shared by the CLI,
+    /// the harnesses, and the async engine.
+    pub fn from_model(
+        model: &crate::runtime::ModelManifest,
+        seed: u64,
+    ) -> anyhow::Result<TextConfig> {
+        Ok(TextConfig::new(
+            model.attr_usize("vocab")?,
+            model.attr_usize("seq_len")?,
+            model.attr_usize("num_classes")?,
+            seed,
+        ))
+    }
 }
 
 pub struct SynthText {

@@ -19,7 +19,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::reference::{ChunkGrads, PctrGradsAcc, PctrModel};
+use crate::runtime::reference::{ChunkGrads, GradsAcc, RefModel};
 use crate::runtime::HostTensor;
 
 /// Receive `n_chunks` chunk results (arriving in any order) and merge them
@@ -31,12 +31,12 @@ use crate::runtime::HostTensor;
 /// non-zero count while chunks are outstanding means a worker died and its
 /// chunk will never arrive; we bail instead of blocking forever.
 pub fn collect_step(
-    model: &PctrModel,
+    model: &RefModel,
     n_chunks: usize,
     results: &Receiver<(usize, ChunkGrads)>,
     workers_down: &AtomicUsize,
 ) -> Result<Vec<HostTensor>> {
-    let mut acc = PctrGradsAcc::new(model);
+    let mut acc = GradsAcc::new(model);
     let mut buffered: BTreeMap<usize, ChunkGrads> = BTreeMap::new();
     let mut next = 0usize;
     while next < n_chunks {

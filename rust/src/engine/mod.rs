@@ -15,8 +15,14 @@
 //!                                                             ∘ sharded update
 //! ```
 //!
+//! The pipeline is **kind-generic**: [`run`] derives the data source from
+//! the model manifest and drives either workload — the Criteo tower
+//! ([`run_pctr`]) or the NLU transformer ([`run_text`]) — through the same
+//! worker bodies, with the chunk math dispatched by
+//! [`RefModel`](crate::runtime::reference::RefModel).
+//!
 //! **Bit-for-bit equivalence with the sync path** rests on three documented
-//! invariants (each with a test in `tests/engine.rs`):
+//! invariants (each with a test in `tests/engine.rs`, for both workloads):
 //!
 //! 1. *Batch streams* — batch `t` comes from the self-contained RNG
 //!    `train_batch_rng(seed, t)`, so data workers can produce batches in
@@ -47,17 +53,45 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::step::{self, StepState, TrainOutcome};
-use crate::coordinator::pctr_frequency_counts;
-use crate::data::{CriteoConfig, PctrBatch, SynthCriteo};
+use crate::coordinator::step::{self, ModelMeta, StepState, TrainOutcome};
+use crate::coordinator::{pctr_frequency_counts, text_frequency_counts};
+use crate::data::{
+    Batch, CriteoConfig, GenConfig, PctrBatch, SynthCriteo, SynthText, TextBatch,
+    TextConfig,
+};
 use crate::models::ParamStore;
-use crate::runtime::reference::{PctrModel, REDUCE_CHUNK};
+use crate::runtime::reference::{RefModel, REDUCE_CHUNK};
 use crate::runtime::Runtime;
 
-/// Run a full async pCTR training (train → eval), returning the same
-/// [`TrainOutcome`] as `Trainer::run_pctr` — bitwise, given the same
-/// config and seed.
+/// Run a full async training (train → eval) for whatever kind of model
+/// `cfg.model` names, deriving the synthetic data source from the manifest
+/// exactly as the sync CLI path does.  Returns the same [`TrainOutcome`] as
+/// the sync trainer — bitwise, given the same config and seed.
+pub fn run(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
+    let model = rt.manifest.model(&cfg.model)?;
+    let src = match model.kind.as_str() {
+        "pctr" => GenConfig::Pctr(CriteoConfig::new(
+            model.attr_usize_list("vocabs")?,
+            cfg.seed ^ 0xDA7A,
+        )),
+        "nlu" => GenConfig::Text(TextConfig::from_model(model, cfg.seed ^ 0xDA7A)?),
+        other => bail!("unknown model kind {other}"),
+    };
+    run_with(cfg, rt, src)
+}
+
+/// Async pCTR training over an explicit generator config (harness/bench
+/// entry point; [`run`] derives the config from the manifest instead).
 pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<TrainOutcome> {
+    run_with(cfg, rt, GenConfig::Pctr(gen_cfg))
+}
+
+/// Async NLU training over an explicit generator config.
+pub fn run_text(cfg: &RunConfig, rt: &Runtime, gen_cfg: TextConfig) -> Result<TrainOutcome> {
+    run_with(cfg, rt, GenConfig::Text(gen_cfg))
+}
+
+fn run_with(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcome> {
     if !rt.is_reference() {
         bail!(
             "the async engine requires the reference runtime backend \
@@ -65,20 +99,65 @@ pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<
         );
     }
     let model = rt.manifest.model(&cfg.model)?;
-    if model.kind != "pctr" {
-        bail!("the async engine currently supports pctr models, got {}", model.kind);
+    let rm = RefModel::from_manifest(model)?;
+    // The grad workers consume batches without going through the shape
+    // checks of Runtime::execute, so the generator geometry must be
+    // validated against the model up front — a seq_len/vocab mismatch
+    // would otherwise scatter gradients onto the wrong rows silently.
+    match (&rm, &src) {
+        (RefModel::Pctr(m), GenConfig::Pctr(g)) => {
+            if g.vocabs != m.vocabs {
+                bail!(
+                    "generator vocabularies do not match model {} ({} vs {} features)",
+                    model.name,
+                    g.vocabs.len(),
+                    m.vocabs.len()
+                );
+            }
+        }
+        (RefModel::Nlu(m), GenConfig::Text(g)) => {
+            if g.vocab != m.vocab || g.seq_len != m.seq_len || g.num_classes != m.num_classes
+            {
+                bail!(
+                    "generator geometry (vocab {}, seq_len {}, classes {}) does not \
+                     match model {} (vocab {}, seq_len {}, classes {})",
+                    g.vocab,
+                    g.seq_len,
+                    g.num_classes,
+                    model.name,
+                    m.vocab,
+                    m.seq_len,
+                    m.num_classes
+                );
+            }
+        }
+        _ => bail!("data source kind does not match model {} ({})", model.name, model.kind),
     }
-    let pm = PctrModel::from_manifest(model)?;
     let store = ParamStore::init(model, cfg.seed)?;
     let (grads_artifact, fwd_artifact) = step::locate_artifacts(&rt.manifest, &cfg.model)?;
     let plan = step::output_plan(rt.manifest.artifact(&grads_artifact)?, &store)?;
     let mut state = StepState::new(cfg.clone(), model, &store)?;
+    let (seq_len, num_classes) = match state.meta {
+        ModelMeta::Nlu { seq_len, num_classes, .. } => (seq_len, num_classes),
+        ModelMeta::Pctr { .. } => (0, 0),
+    };
 
     // FEST pre-selection — same prior pass and RNG stream as the sync path.
     if state.cfg.algorithm.uses_fest_selection() && state.fest_selected.is_none() {
-        let gen = SynthCriteo::new(gen_cfg.clone());
-        let counts = pctr_frequency_counts(&gen, &state.emb_tables, 50, state.cfg.seed);
-        state.fest_select(&counts)?;
+        match &src {
+            GenConfig::Pctr(g) => {
+                let gen = SynthCriteo::new(g.clone());
+                let counts =
+                    pctr_frequency_counts(&gen, &state.emb_tables, 50, state.cfg.seed);
+                state.fest_select(&counts)?;
+            }
+            GenConfig::Text(g) => {
+                let gen = SynthText::new(g.clone());
+                let counts =
+                    text_frequency_counts(&gen, state.total_vocab, 50, state.cfg.seed);
+                state.fest_select(&[counts])?;
+            }
+        }
     }
 
     let emb_params: Vec<usize> = state.emb_tables.iter().map(|t| t.param_index).collect();
@@ -92,9 +171,24 @@ pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<
     let n_chunks = (b + REDUCE_CHUNK - 1) / REDUCE_CHUNK;
     let chunks_per_task = ecfg.microbatch_chunks.clamp(1, n_chunks);
 
+    // Frozen dense params (the NLU transformer backbone) never receive
+    // updates, so snapshot them once; only trainable dense params (the MLP
+    // stack / classifier head) are re-cloned per step.
+    let nt = rm.num_tables();
+    let np = rm.num_params();
+    let static_dense: Vec<Option<Arc<Vec<f32>>>> = (nt..np)
+        .map(|i| {
+            if estore.is_trainable(i) {
+                None
+            } else {
+                Some(Arc::new(estore.dense_values(i)))
+            }
+        })
+        .collect();
+
     let next_step = AtomicU64::new(0);
     let workers_down = AtomicUsize::new(0);
-    let (batch_tx, batch_rx) = mpsc::sync_channel::<(u64, PctrBatch)>(ecfg.channel_depth.max(1));
+    let (batch_tx, batch_rx) = mpsc::sync_channel::<(u64, Batch)>(ecfg.channel_depth.max(1));
     let (task_tx, task_rx) = mpsc::channel::<ChunkTask>();
     let task_rx = Arc::new(Mutex::new(task_rx));
     let (res_tx, res_rx) = mpsc::channel();
@@ -102,7 +196,7 @@ pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<
     std::thread::scope(|scope| -> Result<()> {
         for _ in 0..ecfg.data_workers.max(1) {
             let tx = batch_tx.clone();
-            let gcfg = gen_cfg.clone();
+            let gcfg = src.clone();
             let next = &next_step;
             scope.spawn(move || pipeline::data_worker(gcfg, seed, b, steps, next, tx));
         }
@@ -111,7 +205,7 @@ pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<
         for _ in 0..ecfg.grad_workers.max(1) {
             let rx = Arc::clone(&task_rx);
             let tx = res_tx.clone();
-            let (pm, estore, emb) = (&pm, &estore, &emb_params[..]);
+            let (rm, estore, emb) = (&rm, &estore, &emb_params[..]);
             let down = &workers_down;
             scope.spawn(move || {
                 // Bump the exit counter even on panic, so the aggregator
@@ -123,22 +217,29 @@ pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<
                     }
                 }
                 let _guard = ExitGuard(down);
-                pipeline::grad_worker(pm, estore, emb, &rx, &tx)
+                pipeline::grad_worker(rm, estore, emb, &rx, &tx)
             });
         }
         drop(res_tx);
 
         // ---- the aggregation loop (this thread) ----
-        let run = |state: &mut StepState| -> Result<()> {
+        let run_loop = |state: &mut StepState| -> Result<()> {
             let mut stream = BatchStream::new(batch_rx);
-            let nf = pm.nf();
-            let np = pm.num_params();
             for t in 0..steps {
                 let batch = Arc::new(stream.next(t)?);
-                if batch.batch_size != b {
-                    bail!("batch size {} != model batch {b}", batch.batch_size);
+                if batch.batch_size() != b {
+                    bail!("batch size {} != model batch {b}", batch.batch_size());
                 }
-                let dense = Arc::new(estore.dense_snapshot(nf..np));
+                let dense: Arc<Vec<Arc<Vec<f32>>>> = Arc::new(
+                    static_dense
+                        .iter()
+                        .enumerate()
+                        .map(|(j, frozen)| match frozen {
+                            Some(a) => Arc::clone(a),
+                            None => Arc::new(estore.dense_values(nt + j)),
+                        })
+                        .collect(),
+                );
                 let mut c0 = 0usize;
                 while c0 < n_chunks {
                     let c1_idx = (c0 + chunks_per_task).min(n_chunks);
@@ -154,23 +255,34 @@ pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<
                         .context("gradient workers terminated early")?;
                     c0 = c1_idx;
                 }
-                let outs = collect_step(&pm, n_chunks, &res_rx, &workers_down)?;
-                let bundle = step::assemble_pctr(
-                    &plan,
-                    &outs,
-                    &state.emb_tables,
-                    &batch,
-                    state.cfg.algorithm.uses_contribution_map(),
-                )?;
+                let outs = collect_step(&rm, n_chunks, &res_rx, &workers_down)?;
+                let need_counts = state.cfg.algorithm.uses_contribution_map();
+                let bundle = match batch.as_ref() {
+                    Batch::Pctr(pb) => step::assemble_pctr(
+                        &plan,
+                        &outs,
+                        &state.emb_tables,
+                        pb,
+                        need_counts,
+                    )?,
+                    Batch::Text(tb) => step::assemble_text(
+                        &plan,
+                        &outs,
+                        &state.emb_tables,
+                        tb,
+                        seq_len,
+                        need_counts,
+                    )?,
+                };
                 let mut sink = &estore;
                 state.apply_update(bundle, &mut sink)?;
             }
             Ok(())
         };
-        let result = run(&mut state);
+        let result = run_loop(&mut state);
         // Orderly shutdown on both the success and error paths: closing the
         // task channel ends the gradient workers; the batch receiver died
-        // with `stream` (end of `run`), which unblocks any data worker
+        // with `stream` (end of `run_loop`), which unblocks any data worker
         // parked on a full channel.
         drop(task_tx);
         result
@@ -178,15 +290,29 @@ pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<
 
     // ---- evaluation on the reassembled store (same stream as sync) ----
     let store = estore.into_store()?;
-    let gen = SynthCriteo::new(gen_cfg);
-    let eval: Vec<PctrBatch> = (0..state.cfg.eval_batches)
-        .map(|i| {
-            let mut rng = step::eval_batch_rng(seed, i as u64);
-            gen.batch(0, b, &mut rng)
-        })
-        .collect();
-    let (auc, eval_loss) = step::eval_pctr(rt, &fwd_artifact, &store, &eval)?;
-    Ok(state.outcome(auc, eval_loss))
+    let (utility, eval_loss) = match &src {
+        GenConfig::Pctr(g) => {
+            let gen = SynthCriteo::new(g.clone());
+            let eval: Vec<PctrBatch> = (0..state.cfg.eval_batches)
+                .map(|i| {
+                    let mut rng = step::eval_batch_rng(seed, i as u64);
+                    gen.batch(0, b, &mut rng)
+                })
+                .collect();
+            step::eval_pctr(rt, &fwd_artifact, &store, &eval)?
+        }
+        GenConfig::Text(g) => {
+            let gen = SynthText::new(g.clone());
+            let eval: Vec<TextBatch> = (0..state.cfg.eval_batches)
+                .map(|i| {
+                    let mut rng = step::eval_batch_rng(seed, i as u64);
+                    gen.batch(b, &mut rng)
+                })
+                .collect();
+            step::eval_text(rt, &fwd_artifact, &store, &eval, num_classes)?
+        }
+    };
+    Ok(state.outcome(utility, eval_loss))
 }
 
 /// One row of a sync-vs-async throughput comparison.

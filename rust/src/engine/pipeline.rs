@@ -1,5 +1,5 @@
 //! Worker side of the async engine: pipelined data loaders and per-example
-//! gradient workers.
+//! gradient workers, generic over both workloads (pCTR and NLU).
 //!
 //! * **Data workers** claim step indices off a shared atomic counter and
 //!   generate that step's batch from its self-contained RNG
@@ -10,7 +10,8 @@
 //!   reduction chunks of the current step's batch), compute per-example
 //!   clipped gradients against a read-only view of the sharded store + a
 //!   dense-parameter snapshot, and send `(chunk_index, ChunkGrads)` to the
-//!   aggregation barrier.
+//!   aggregation barrier.  The chunk math dispatches through [`RefModel`],
+//!   so the same worker body drives the Criteo tower and the transformer.
 //!
 //! Shutdown is purely channel-driven: dropping the task sender ends the
 //! gradient workers, dropping the batch receiver ends the data workers
@@ -27,17 +28,19 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::coordinator::step;
-use crate::data::{CriteoConfig, PctrBatch, SynthCriteo};
-use crate::runtime::reference::{BatchRef, ChunkGrads, ParamsView, PctrModel, REDUCE_CHUNK};
+use crate::data::{Batch, GenConfig, Generator};
+use crate::runtime::reference::{BatchRef, ChunkGrads, ParamsView, RefModel, REDUCE_CHUNK};
 
 use super::sharded_store::ShardedStore;
 
 /// One unit of gradient work: reduction chunks `chunks` of the step's batch.
 pub struct ChunkTask {
     pub chunks: Range<usize>,
-    pub batch: Arc<PctrBatch>,
-    /// per-step snapshot of the MLP parameters (read-only)
-    pub dense: Arc<Vec<Vec<f32>>>,
+    pub batch: Arc<Batch>,
+    /// per-step snapshot of the dense (non-table) parameters, read-only;
+    /// frozen entries are shared across steps (the engine clones only the
+    /// trainable dense params each step)
+    pub dense: Arc<Vec<Arc<Vec<f32>>>>,
     pub c1: f32,
     pub c2: f32,
 }
@@ -48,7 +51,7 @@ pub struct WorkerView<'a> {
     pub store: &'a ShardedStore,
     /// param index of each embedding table, in feature order
     pub emb_params: &'a [usize],
-    pub dense: &'a [Vec<f32>],
+    pub dense: &'a [Arc<Vec<f32>>],
 }
 
 impl ParamsView for WorkerView<'_> {
@@ -57,27 +60,27 @@ impl ParamsView for WorkerView<'_> {
     }
 
     fn mlp(&self, index: usize) -> &[f32] {
-        &self.dense[index]
+        self.dense[index].as_slice()
     }
 }
 
 /// Body of one data-worker thread.
 pub fn data_worker(
-    gen_cfg: CriteoConfig,
+    gen_cfg: GenConfig,
     seed: u64,
     batch_size: usize,
     steps: u64,
     next_step: &AtomicU64,
-    tx: SyncSender<(u64, PctrBatch)>,
+    tx: SyncSender<(u64, Batch)>,
 ) {
-    let gen = SynthCriteo::new(gen_cfg);
+    let gen = Generator::new(gen_cfg);
     loop {
         let step_idx = next_step.fetch_add(1, Ordering::Relaxed);
         if step_idx >= steps {
             return;
         }
         let mut rng = step::train_batch_rng(seed, step_idx);
-        let batch = gen.batch(0, batch_size, &mut rng);
+        let batch = gen.batch(batch_size, &mut rng);
         if tx.send((step_idx, batch)).is_err() {
             return; // aggregator gone — shut down
         }
@@ -86,7 +89,7 @@ pub fn data_worker(
 
 /// Body of one gradient-worker thread.
 pub fn grad_worker(
-    model: &PctrModel,
+    model: &RefModel,
     store: &ShardedStore,
     emb_params: &[usize],
     tasks: &Mutex<Receiver<ChunkTask>>,
@@ -97,8 +100,8 @@ pub fn grad_worker(
         let task = { tasks.lock().unwrap().recv() };
         let Ok(task) = task else { return };
         let view = WorkerView { store, emb_params, dense: task.dense.as_slice() };
-        let batch = BatchRef::from_pctr(&task.batch);
-        let b = task.batch.batch_size;
+        let batch = BatchRef::from_batch(&task.batch);
+        let b = task.batch.batch_size();
         for chunk in task.chunks.clone() {
             let lo = chunk * REDUCE_CHUNK;
             let hi = (lo + REDUCE_CHUNK).min(b);
@@ -112,17 +115,17 @@ pub fn grad_worker(
 
 /// Reorders the data workers' out-of-order `(step, batch)` stream.
 pub struct BatchStream {
-    rx: Receiver<(u64, PctrBatch)>,
-    pending: BTreeMap<u64, PctrBatch>,
+    rx: Receiver<(u64, Batch)>,
+    pending: BTreeMap<u64, Batch>,
 }
 
 impl BatchStream {
-    pub fn new(rx: Receiver<(u64, PctrBatch)>) -> BatchStream {
+    pub fn new(rx: Receiver<(u64, Batch)>) -> BatchStream {
         BatchStream { rx, pending: BTreeMap::new() }
     }
 
     /// Block until the batch for `step` is available.
-    pub fn next(&mut self, step: u64) -> Result<PctrBatch> {
+    pub fn next(&mut self, step: u64) -> Result<Batch> {
         loop {
             if let Some(b) = self.pending.remove(&step) {
                 return Ok(b);

@@ -252,16 +252,21 @@ impl ShardedStore {
         }
     }
 
-    /// Snapshot the dense (non-sharded) parameters with indices `range`,
-    /// in index order — the per-step read-only view the gradient workers
-    /// use for the MLP stack.
-    pub fn dense_snapshot(&self, indices: std::ops::Range<usize>) -> Vec<Vec<f32>> {
-        indices
-            .map(|i| match &self.slots[i].body {
-                SlotBody::Dense(m) => m.lock().unwrap().values.clone(),
-                SlotBody::Sharded(_) => panic!("dense_snapshot over a sharded param"),
-            })
-            .collect()
+    /// Whether parameter `index` is trainable.  Frozen dense params never
+    /// receive updates, so the engine snapshots them once per run instead
+    /// of once per step (the NLU backbone is >99% of the dense bytes).
+    pub fn is_trainable(&self, index: usize) -> bool {
+        self.slots[index].trainable
+    }
+
+    /// Clone the current values of the dense (non-sharded) parameter
+    /// `index` — the building block of the gradient workers' per-step
+    /// read-only view.
+    pub fn dense_values(&self, index: usize) -> Vec<f32> {
+        match &self.slots[index].body {
+            SlotBody::Dense(m) => m.lock().unwrap().values.clone(),
+            SlotBody::Sharded(_) => panic!("dense_values on a sharded param"),
+        }
     }
 
     /// Reassemble a plain [`ParamStore`] (for evaluation / checkpointing).

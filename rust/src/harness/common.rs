@@ -96,18 +96,36 @@ pub fn train_once(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
             trainer.run_pctr(&gen)
         }
         "nlu" => {
-            let vocab = model.attr_usize("vocab")?;
-            let seq_len = model.attr_usize("seq_len")?;
-            let classes = model.attr_usize("num_classes")?;
-            let gen = SynthText::new(TextConfig::new(
-                vocab,
-                seq_len,
-                classes,
-                cfg.seed ^ 0xDA7A,
-            ));
+            let gen = SynthText::new(TextConfig::from_model(model, cfg.seed ^ 0xDA7A)?);
             trainer.run_text(&gen)
         }
         other => anyhow::bail!("unknown model kind {other}"),
+    }
+}
+
+/// Prefer `name` when the loaded manifest has it *and* the active backend
+/// can execute it; fall back to the named built-in reference model
+/// otherwise, so the NLU harnesses run with zero artifacts.  The
+/// executability check matters: an on-disk artifact manifest can be driven
+/// by the reference backend (no `xla` feature), and its LoRA-bearing NLU
+/// inventories are not natively executable.
+pub fn model_or_builtin(rt: &Runtime, name: &str, fallback: &str) -> String {
+    let executable = |n: &str| match rt.manifest.model(n) {
+        Ok(model) => {
+            !rt.is_reference()
+                || crate::runtime::reference::RefModel::from_manifest(model).is_ok()
+        }
+        Err(_) => false,
+    };
+    if executable(name) {
+        name.to_string()
+    } else if executable(fallback) {
+        println!("[harness] model {name} unavailable on this runtime — using built-in {fallback}");
+        fallback.to_string()
+    } else {
+        // No runnable variant: keep the requested name so the caller's
+        // error names the real problem (e.g. rebuild with --features xla).
+        name.to_string()
     }
 }
 

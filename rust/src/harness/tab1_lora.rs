@@ -14,7 +14,8 @@ use crate::coordinator::Algorithm;
 use crate::runtime::Runtime;
 
 use super::common::{
-    best_reduction_within, print_table, train_once, write_csv, SweepPoint, SweepRow,
+    best_reduction_within, model_or_builtin, print_table, train_once, write_csv,
+    SweepPoint, SweepRow,
 };
 use super::fig3_tradeoff::sweep_algorithm;
 
@@ -22,7 +23,7 @@ pub const THRESHOLDS: [f64; 3] = [0.001, 0.005, 0.01];
 
 pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
     let mut base = cfg.clone();
-    base.model = "nlu-roberta".into();
+    base.model = model_or_builtin(rt, "nlu-roberta", "nlu-small");
     base.epsilon = 1.0;
     if fast {
         base.steps = base.steps.min(50);
@@ -36,7 +37,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
     println!("DP-SGD (full embedding) utility: {:.4}", baseline.utility);
 
     // model geometry for the analytic LoRA sizes
-    let model = rt.manifest.model("nlu-roberta")?;
+    let model = rt.manifest.model(&base.model)?;
     let v = model.attr_usize("vocab")? as f64;
     let d = model.attr_usize("d_model")? as f64;
 

@@ -7,18 +7,25 @@ use crate::config::RunConfig;
 use crate::coordinator::Algorithm;
 use crate::runtime::Runtime;
 
-use super::common::{best_reduction_within, print_table, train_once, write_csv, SweepRow};
+use super::common::{
+    best_reduction_within, model_or_builtin, print_table, train_once, write_csv, SweepRow,
+};
 use super::fig3_tradeoff::sweep_algorithm;
 use super::tab1_lora::THRESHOLDS;
 
 pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
     let mut rows = Vec::new();
-    let models = ["nlu-roberta", "nlu-xlmr"];
+    // artifact builds compare real tokenizer vocabularies; the built-in
+    // fallback keeps the small-vs-large contrast (512 vs 4096)
+    let models = [
+        model_or_builtin(rt, "nlu-roberta", "nlu-tiny"),
+        model_or_builtin(rt, "nlu-xlmr", "nlu-small"),
+    ];
 
     let mut per_model = Vec::new();
-    for model in models {
+    for model in &models {
         let mut base = cfg.clone();
-        base.model = model.into();
+        base.model = model.clone();
         base.epsilon = 1.0;
         if fast {
             base.steps = base.steps.min(50);

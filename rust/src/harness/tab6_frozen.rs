@@ -8,11 +8,11 @@ use crate::config::RunConfig;
 use crate::coordinator::Algorithm;
 use crate::runtime::Runtime;
 
-use super::common::{print_table, train_once, write_csv, SweepRow};
+use super::common::{model_or_builtin, print_table, train_once, write_csv, SweepRow};
 
 pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
     let mut base = cfg.clone();
-    base.model = "nlu-roberta".into();
+    base.model = model_or_builtin(rt, "nlu-roberta", "nlu-small");
     if fast {
         base.steps = base.steps.min(50);
         base.eval_batches = base.eval_batches.min(8);

@@ -16,8 +16,9 @@
 //!
 //! Two execution backends drive the models ([`runtime`]): the PJRT client
 //! over AOT artifacts (`--features xla`), and a pure-Rust **reference
-//! executor** for the pCTR models (the default — no Python build step, no
-//! external crates) whose fixed-chunk reductions also power the async
+//! executor** for both model families — the pCTR tower and a native
+//! transformer for the NLU workload (the default — no Python build step,
+//! no external crates) — whose fixed-chunk reductions also power the async
 //! engine.
 //!
 //! Two training paths share one step core ([`coordinator::step`]):
@@ -31,9 +32,9 @@
 //! Python never runs on the training path: `make artifacts` is an optional
 //! one-time build step and the resulting binary is self-contained.
 //!
-//! Entry points: [`coordinator::Trainer`] / [`engine::run_pctr`] for
-//! training, [`harness`] for paper-experiment reproduction, `sparse-dp-emb`
-//! (see `main.rs`) for the CLI.
+//! Entry points: [`coordinator::Trainer`] / [`engine::run`] for training
+//! (either workload), [`harness`] for paper-experiment reproduction,
+//! `sparse-dp-emb` (see `main.rs`) for the CLI.
 
 pub mod accounting;
 pub mod config;

@@ -12,6 +12,9 @@
 //!
 //! `train-async` runs the asynchronous sharded engine and produces the
 //! exact same outcome as `train` for the same seed/config — only faster.
+//! Both commands drive either model family: the built-in reference manifest
+//! covers `criteo-small`/`criteo-tiny` (pCTR) and `nlu-small`/`nlu-tiny`
+//! (native transformer), so no artifacts are needed for any of them.
 //!
 //! Any `RunConfig` field can be overridden with `--key value`; `--config
 //! path` loads a `key = value` file first.
@@ -96,12 +99,7 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
             trainer.run_pctr(&gen)?
         }
         "nlu" => {
-            let gen = SynthText::new(TextConfig::new(
-                model.attr_usize("vocab")?,
-                model.attr_usize("seq_len")?,
-                model.attr_usize("num_classes")?,
-                cfg.seed ^ 0xDA7A,
-            ));
+            let gen = SynthText::new(TextConfig::from_model(&model, cfg.seed ^ 0xDA7A)?);
             trainer.run_text(&gen)?
         }
         other => bail!("unknown model kind {other}"),
@@ -121,14 +119,8 @@ fn cmd_train_async(cfg: &RunConfig) -> Result<()> {
         cfg.engine.shards,
         cfg.engine.channel_depth,
     );
-    let model = rt.manifest.model(&cfg.model)?.clone();
-    if model.kind != "pctr" {
-        bail!("train-async currently supports pctr models");
-    }
-    let vocabs = model.attr_usize_list("vocabs")?;
-    let gen_cfg = CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A);
     let t0 = std::time::Instant::now();
-    let outcome = sparse_dp_emb::engine::run_pctr(cfg, &rt, gen_cfg)?;
+    let outcome = sparse_dp_emb::engine::run(cfg, &rt)?;
     let dt = t0.elapsed();
     println!(
         "[train-async] {} steps in {:.2?} ({:.1} steps/s)",

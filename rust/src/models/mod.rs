@@ -223,6 +223,33 @@ param tiny frozen_x 0 2,2
     }
 
     #[test]
+    fn nlu_transformer_roles_and_init() {
+        // the native NLU layout: trainable table + head, frozen backbone,
+        // LayerNorm gains at one, biases at zero
+        let m = crate::runtime::reference::builtin_manifest();
+        let store = ParamStore::init(m.model("nlu-tiny").unwrap(), 3).unwrap();
+        assert_eq!(store.role("emb_table"), ParamRole::EmbeddingTable);
+        assert_eq!(store.role("head_w"), ParamRole::Dense);
+        assert_eq!(store.role("head_b"), ParamRole::Dense);
+        assert_eq!(store.role("l0_wq"), ParamRole::Frozen);
+        assert_eq!(store.role("l1_ff2"), ParamRole::Frozen);
+        let g = store.get("l0_ln1_g").unwrap();
+        assert!(g.tensor.as_f32().unwrap().iter().all(|&v| v == 1.0));
+        let b = store.get("l0_wq_b").unwrap();
+        assert!(b.tensor.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        // backbone weights are randomly initialised (a random frozen encoder)
+        let wq = store.get("l0_wq").unwrap();
+        assert!(wq.tensor.as_f32().unwrap().iter().any(|&v| v != 0.0));
+        // gradient-size baselines count only the trainable table
+        let model = m.model("nlu-tiny").unwrap();
+        let v = model.attr_usize("vocab").unwrap();
+        let d = model.attr_usize("d_model").unwrap();
+        let c = model.attr_usize("num_classes").unwrap();
+        assert_eq!(store.embedding_coords(), v * d);
+        assert_eq!(store.dense_coords(), d * c + c);
+    }
+
+    #[test]
     fn deterministic_init() {
         let m = Manifest::parse(SAMPLE).unwrap();
         let a = ParamStore::init(m.model("tiny").unwrap(), 42).unwrap();

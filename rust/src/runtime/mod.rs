@@ -4,10 +4,11 @@
 //!   (built once by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client.  Pattern follows `/opt/xla-example/load_hlo`.
 //! * **Reference** (default) — a pure-Rust executor implementing the same
-//!   artifact contract for the pCTR models, with a built-in manifest, so
-//!   the CLI, tests, and benches run with no Python build step and no
-//!   external crates.  See [`reference`] for the fixed-chunk reduction
-//!   invariant that also powers the async engine.
+//!   artifact contract for both model families (the pCTR tower and the NLU
+//!   transformer), with a built-in manifest, so the CLI, tests, and benches
+//!   run with no Python build step and no external crates.  See
+//!   [`reference`] for the fixed-chunk reduction invariant that also powers
+//!   the async engine.
 //!
 //! `Runtime::new(dir)` loads `dir/manifest.txt` when present (PJRT backend
 //! if compiled in) and otherwise falls back to the built-in reference
@@ -74,7 +75,7 @@ impl Runtime {
                 // execute natively off the on-disk manifest geometry.
                 eprintln!(
                     "[runtime] {} found but the `xla` feature is not compiled in — \
-                     using the native reference executor (pctr models only)",
+                     using the native reference executor",
                     manifest_path.display()
                 );
                 return Ok(Runtime {
@@ -86,7 +87,7 @@ impl Runtime {
         }
         eprintln!(
             "[runtime] {} not found — using the built-in reference manifest \
-             (criteo-small / criteo-tiny)",
+             (criteo-small / criteo-tiny / nlu-small / nlu-tiny)",
             manifest_path.display()
         );
         Ok(Runtime::builtin())

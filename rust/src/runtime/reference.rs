@@ -1,24 +1,37 @@
-//! Pure-Rust reference executor for the pCTR artifacts.
+//! Pure-Rust reference executor for both model families.
 //!
 //! When the `xla` feature (PJRT client for AOT HLO artifacts) is not
-//! compiled in — the offline default — this module executes the pCTR model
+//! compiled in — the offline default — this module executes the models
 //! natively: same inputs, same output tuple, same manifest contract as the
-//! `pctr_*_grads` / `pctr_*_fwd` artifacts lowered by
-//! `python/compile/aot.py`.  It also provides a **built-in manifest**
-//! (`criteo-small` plus a CPU-test-sized `criteo-tiny`) so the whole CLI and
-//! test suite run with zero build-time artifacts.
+//! artifacts lowered by `python/compile/aot.py`.  Two executors sit behind
+//! the [`RefModel`] dispatch:
+//!
+//! * [`PctrModel`] (this file) — the Criteo tower: per-feature embedding
+//!   tables + ReLU MLP, per-example clipped grads, contribution map.
+//! * [`NluModel`] ([`transformer`]) — the text workload: token + sinusoidal
+//!   position embeddings into a frozen transformer encoder (attention + MLP
+//!   blocks) with a trainable classifier head, hand-derived backward, and
+//!   the same sparse per-token `zgrads_scaled` rows the pCTR path surfaces.
+//!
+//! A **built-in manifest** (`criteo-small` / `criteo-tiny` plus `nlu-small`
+//! / `nlu-tiny`) lets the whole CLI and test suite run with zero build-time
+//! artifacts on both workloads.
 //!
 //! ## Fixed-chunk reduction invariant
 //!
 //! Every batch reduction (loss mean, clipped dense-grad sums, contribution
 //! map) is computed as a **sequential merge of [`REDUCE_CHUNK`]-example
 //! chunk partials**, never as one flat loop and never as a worker-count-
-//! dependent tree.  [`PctrModel::grads_chunk`] computes one chunk;
-//! [`PctrGradsAcc::merge`] folds chunks **in chunk order**.  The sync path
+//! dependent tree.  [`RefModel::grads_chunk`] computes one chunk;
+//! [`GradsAcc::merge`] folds chunks **in chunk order**.  The sync path
 //! (full-batch `execute`) and the async engine (chunks computed by parallel
 //! workers, merged in order at the aggregation barrier) therefore produce
 //! bit-identical output tuples — this is the invariant that makes
-//! `train-async` exactly reproduce `train`.
+//! `train-async` exactly reproduce `train`, on pCTR and NLU alike.
+
+pub mod transformer;
+
+pub use transformer::NluModel;
 
 use std::collections::HashMap;
 
@@ -26,6 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::{ArtifactManifest, Manifest, ModelManifest};
 use super::tensor::HostTensor;
+use crate::data::{Batch, PctrBatch, TextBatch};
 
 /// Examples per reduction chunk (see module docs).  Changing this value
 /// changes every f32 reduction result; it is part of the numerical contract
@@ -70,8 +84,7 @@ impl PctrModel {
     pub fn from_manifest(model: &ModelManifest) -> Result<PctrModel> {
         if model.kind != "pctr" {
             bail!(
-                "reference runtime supports pctr models only (got kind `{}` for {}); \
-                 build with the `xla` feature and AOT artifacts for NLU models",
+                "PctrModel::from_manifest on kind `{}` for {} (use RefModel::from_manifest)",
                 model.kind,
                 model.name
             );
@@ -131,25 +144,25 @@ pub trait ParamsView: Sync {
 /// [`ParamsView`] over the artifact's input tensors.
 pub struct TensorView<'a> {
     tables: Vec<&'a [f32]>,
-    dims: &'a [usize],
+    dims: Vec<usize>,
     mlp: Vec<&'a [f32]>,
 }
 
 impl<'a> TensorView<'a> {
-    pub fn new(params: &'a [HostTensor], model: &'a PctrModel) -> Result<TensorView<'a>> {
-        let nf = model.nf();
+    pub fn new(params: &'a [HostTensor], model: &RefModel) -> Result<TensorView<'a>> {
+        let nt = model.num_tables();
         if params.len() != model.num_params() {
             bail!("expected {} param tensors, got {}", model.num_params(), params.len());
         }
-        let mut tables = Vec::with_capacity(nf);
-        for t in &params[..nf] {
+        let mut tables = Vec::with_capacity(nt);
+        for t in &params[..nt] {
             tables.push(t.as_f32()?);
         }
-        let mut mlp = Vec::with_capacity(params.len() - nf);
-        for t in &params[nf..] {
+        let mut mlp = Vec::with_capacity(params.len() - nt);
+        for t in &params[nt..] {
             mlp.push(t.as_f32()?);
         }
-        Ok(TensorView { tables, dims: &model.dims, mlp })
+        Ok(TensorView { tables, dims: model.table_dims(), mlp })
     }
 }
 
@@ -164,29 +177,45 @@ impl ParamsView for TensorView<'_> {
     }
 }
 
-/// Borrowed view of a pCTR batch (avoids coupling to tensor or `PctrBatch`
-/// layouts).
+/// Borrowed view of a batch (avoids coupling the executors to tensor or
+/// owned-batch layouts).  Each variant carries exactly the fields the
+/// matching chunk math reads; [`RefModel`] dispatch pairs model and batch
+/// kinds, so a mismatch inside a chunk function is a programming error.
 #[derive(Clone, Copy)]
-pub struct BatchRef<'a> {
-    pub nf: usize,
-    pub nn: usize,
-    pub cat: &'a [i32],
-    pub num: &'a [f32],
-    pub y: &'a [f32],
+pub enum BatchRef<'a> {
+    Pctr {
+        nf: usize,
+        nn: usize,
+        cat: &'a [i32],
+        num: &'a [f32],
+        y: &'a [f32],
+    },
+    Text {
+        seq_len: usize,
+        ids: &'a [i32],
+        labels: &'a [i32],
+    },
 }
 
 impl<'a> BatchRef<'a> {
-    pub fn cat(&self, example: usize, feature: usize) -> i32 {
-        self.cat[example * self.nf + feature]
-    }
-
-    pub fn from_pctr(b: &'a crate::data::PctrBatch) -> BatchRef<'a> {
-        BatchRef {
+    pub fn from_pctr(b: &'a PctrBatch) -> BatchRef<'a> {
+        BatchRef::Pctr {
             nf: b.num_features,
             nn: b.num_numeric,
             cat: &b.cat,
             num: &b.num,
             y: &b.y,
+        }
+    }
+
+    pub fn from_text(b: &'a TextBatch) -> BatchRef<'a> {
+        BatchRef::Text { seq_len: b.seq_len, ids: &b.ids, labels: &b.labels }
+    }
+
+    pub fn from_batch(b: &'a Batch) -> BatchRef<'a> {
+        match b {
+            Batch::Pctr(p) => BatchRef::from_pctr(p),
+            Batch::Text(t) => BatchRef::from_text(t),
         }
     }
 }
@@ -195,14 +224,17 @@ impl<'a> BatchRef<'a> {
 // Chunked per-example gradients
 // ---------------------------------------------------------------------------
 
-/// Outputs of one reduction chunk (`[lo, hi)` examples).
+/// Outputs of one reduction chunk (`[lo, hi)` examples), for either model
+/// family.
 pub struct ChunkGrads {
     pub lo: usize,
     pub hi: usize,
     pub loss_sum: f32,
-    /// clipped-sum grads per MLP param (full param shapes)
-    pub mlp_grads: Vec<Vec<f32>>,
-    /// `s_i · ∂L/∂z_i` rows, `(hi-lo) × d_emb` row-major
+    /// clipped-sum grads per trainable dense param, in grads-artifact output
+    /// order (pCTR: the MLP stack; NLU: head_w then head_b)
+    pub dense_grads: Vec<Vec<f32>>,
+    /// `s_i · ∂L/∂z_i` rows, `(hi-lo) × emb_cols` row-major, where
+    /// `emb_cols` is `Σ dims` (pCTR) or `T · d_model` (NLU)
     pub zgrads: Vec<f32>,
     /// sparse contribution-map partial (per-bucket value accumulated in
     /// example order within the chunk)
@@ -242,7 +274,11 @@ impl PctrModel {
         c1: f32,
         c2: f32,
     ) -> ChunkGrads {
+        let BatchRef::Pctr { cat, num, y, .. } = *batch else {
+            panic!("pctr grads_chunk on a non-pctr batch (dispatch bug)")
+        };
         let nf = self.nf();
+        let cat_of = |i: usize, f: usize| cat[i * nf + f];
         let hidden = self.hidden_dim;
         let layers = self.num_hidden_layers;
         let d_emb = self.d_emb;
@@ -253,7 +289,7 @@ impl PctrModel {
             lo,
             hi,
             loss_sum: 0.0,
-            mlp_grads: self.mlp_shapes.iter().map(|s| vec![0f32; s.iter().product()]).collect(),
+            dense_grads: self.mlp_shapes.iter().map(|s| vec![0f32; s.iter().product()]).collect(),
             zgrads: vec![0f32; (hi - lo) * d_emb],
             counts: Vec::new(),
             scales: Vec::with_capacity(hi - lo),
@@ -266,10 +302,10 @@ impl PctrModel {
             let mut off = 0;
             for f in 0..nf {
                 let d = self.dims[f];
-                view.emb_row(f, batch.cat(i, f) as usize, &mut h0[off..off + d]);
+                view.emb_row(f, cat_of(i, f) as usize, &mut h0[off..off + d]);
                 off += d;
             }
-            h0[d_emb..].copy_from_slice(&batch.num[i * self.num_numeric..(i + 1) * self.num_numeric]);
+            h0[d_emb..].copy_from_slice(&num[i * self.num_numeric..(i + 1) * self.num_numeric]);
 
             // ---- forward, storing post-ReLU activations ----
             let mut hs: Vec<Vec<f32>> = Vec::with_capacity(layers + 1);
@@ -301,9 +337,9 @@ impl PctrModel {
             for (hk, &wk) in hl.iter().zip(wout) {
                 logit += hk * wk;
             }
-            let y = batch.y[i];
-            let loss_i = softplus(logit) - y * logit;
-            let dlogit = sigmoid(logit) - y;
+            let y_i = y[i];
+            let loss_i = softplus(logit) - y_i * logit;
+            let dlogit = sigmoid(logit) - y_i;
 
             // ---- backward: da per layer + dh back to the embeddings ----
             // Per-param squared norms use the outer-product factorisation
@@ -352,7 +388,7 @@ impl PctrModel {
             for l in 0..layers {
                 let da = &da_rev[layers - 1 - l];
                 let prev = &hs[l];
-                let wbuf = &mut out.mlp_grads[2 * l];
+                let wbuf = &mut out.dense_grads[2 * l];
                 for (k, &x) in prev.iter().enumerate() {
                     if x != 0.0 {
                         let sx = s * x;
@@ -362,17 +398,17 @@ impl PctrModel {
                         }
                     }
                 }
-                let bbuf = &mut out.mlp_grads[2 * l + 1];
+                let bbuf = &mut out.dense_grads[2 * l + 1];
                 for (bj, &dj) in bbuf.iter_mut().zip(da) {
                     *bj += s * dj;
                 }
             }
             let sd = s * dlogit;
-            let woutbuf = &mut out.mlp_grads[2 * layers];
+            let woutbuf = &mut out.dense_grads[2 * layers];
             for (wk, &hk) in woutbuf.iter_mut().zip(hl.iter()) {
                 *wk += sd * hk;
             }
-            out.mlp_grads[2 * layers + 1][0] += sd;
+            out.dense_grads[2 * layers + 1][0] += sd;
 
             let zrow = &mut out.zgrads[(i - lo) * d_emb..(i - lo + 1) * d_emb];
             for (zo, &zv) in zrow.iter_mut().zip(&dh[..d_emb]) {
@@ -384,7 +420,7 @@ impl PctrModel {
             // min(1, C1/√F) (Alg. 1 line 5).  Per-bucket accumulation is in
             // example order (HashMap entry add is in-place).
             for f in 0..nf {
-                let idx = (self.offsets[f] + batch.cat(i, f) as usize) as u32;
+                let idx = (self.offsets[f] + cat_of(i, f) as usize) as u32;
                 *cmap.entry(idx).or_insert(0.0) += w_cnt;
             }
         }
@@ -401,7 +437,11 @@ impl PctrModel {
         lo: usize,
         hi: usize,
     ) -> (f32, Vec<f32>) {
+        let BatchRef::Pctr { cat, num, y, .. } = *batch else {
+            panic!("pctr forward_chunk on a non-pctr batch (dispatch bug)")
+        };
         let nf = self.nf();
+        let cat_of = |i: usize, f: usize| cat[i * nf + f];
         let hidden = self.hidden_dim;
         let layers = self.num_hidden_layers;
         let d_emb = self.d_emb;
@@ -413,11 +453,11 @@ impl PctrModel {
             let mut off = 0;
             for f in 0..nf {
                 let d = self.dims[f];
-                view.emb_row(f, batch.cat(i, f) as usize, &mut h0[off..off + d]);
+                view.emb_row(f, cat_of(i, f) as usize, &mut h0[off..off + d]);
                 off += d;
             }
             h0[d_emb..]
-                .copy_from_slice(&batch.num[i * self.num_numeric..(i + 1) * self.num_numeric]);
+                .copy_from_slice(&num[i * self.num_numeric..(i + 1) * self.num_numeric]);
             let mut prev = h0.clone();
             for l in 0..layers {
                 let w = view.mlp(2 * l);
@@ -443,10 +483,164 @@ impl PctrModel {
             for (hk, &wk) in prev.iter().zip(wout) {
                 logit += hk * wk;
             }
-            loss_sum += softplus(logit) - batch.y[i] * logit;
+            loss_sum += softplus(logit) - y[i] * logit;
             logits.push(logit);
         }
         (loss_sum, logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model dispatch
+// ---------------------------------------------------------------------------
+
+/// A parsed native model — the dispatch point of the reference executor.
+/// Everything downstream of the manifest (chunk math, output assembly, the
+/// async engine's gradient workers) is generic over this enum.
+#[derive(Clone, Debug)]
+pub enum RefModel {
+    Pctr(PctrModel),
+    Nlu(NluModel),
+}
+
+impl RefModel {
+    pub fn from_manifest(model: &ModelManifest) -> Result<RefModel> {
+        match model.kind.as_str() {
+            "pctr" => Ok(RefModel::Pctr(PctrModel::from_manifest(model)?)),
+            "nlu" => Ok(RefModel::Nlu(NluModel::from_manifest(model)?)),
+            other => bail!(
+                "reference runtime: unknown model kind `{other}` for {}",
+                model.name
+            ),
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        match self {
+            RefModel::Pctr(m) => m.batch_size,
+            RefModel::Nlu(m) => m.batch_size,
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        match self {
+            RefModel::Pctr(m) => m.num_params(),
+            RefModel::Nlu(m) => m.num_params(),
+        }
+    }
+
+    /// Embedding-table parameters — always a prefix of the param list.
+    pub fn num_tables(&self) -> usize {
+        match self {
+            RefModel::Pctr(m) => m.nf(),
+            RefModel::Nlu(_) => 1,
+        }
+    }
+
+    /// Row width of each embedding table, in table order.
+    pub fn table_dims(&self) -> Vec<usize> {
+        match self {
+            RefModel::Pctr(m) => m.dims.clone(),
+            RefModel::Nlu(m) => vec![m.d_model],
+        }
+    }
+
+    /// Per-example width of the `zgrads_scaled` output.
+    pub fn emb_cols(&self) -> usize {
+        match self {
+            RefModel::Pctr(m) => m.d_emb,
+            RefModel::Nlu(m) => m.seq_len * m.d_model,
+        }
+    }
+
+    pub fn total_vocab(&self) -> usize {
+        match self {
+            RefModel::Pctr(m) => m.total_vocab,
+            RefModel::Nlu(m) => m.vocab,
+        }
+    }
+
+    /// Shapes of the trainable dense-grad outputs, in artifact output order.
+    pub fn dense_grad_shapes(&self) -> Vec<Vec<usize>> {
+        match self {
+            RefModel::Pctr(m) => m.mlp_shapes.clone(),
+            RefModel::Nlu(m) => {
+                vec![vec![m.d_model, m.num_classes], vec![m.num_classes]]
+            }
+        }
+    }
+
+    fn zgrads_dims(&self) -> Vec<usize> {
+        match self {
+            RefModel::Pctr(m) => vec![m.batch_size, m.d_emb],
+            RefModel::Nlu(m) => vec![m.batch_size, m.seq_len, m.d_model],
+        }
+    }
+
+    fn logits_dims(&self) -> Vec<usize> {
+        match self {
+            RefModel::Pctr(m) => vec![m.batch_size],
+            RefModel::Nlu(m) => vec![m.batch_size, m.num_classes],
+        }
+    }
+
+    /// Number of batch tensors following the params in the artifact inputs.
+    pub fn num_batch_inputs(&self) -> usize {
+        match self {
+            RefModel::Pctr(_) => 3, // cat_idx, x_num, y
+            RefModel::Nlu(_) => 2,  // token_ids, labels
+        }
+    }
+
+    /// Borrow the batch tensors (the artifact inputs after the params) as a
+    /// [`BatchRef`].
+    pub fn batch_ref<'a>(&self, batch: &'a [HostTensor]) -> Result<BatchRef<'a>> {
+        match self {
+            RefModel::Pctr(m) => Ok(BatchRef::Pctr {
+                nf: m.nf(),
+                nn: m.num_numeric,
+                cat: batch[0].as_i32()?,
+                num: batch[1].as_f32()?,
+                y: batch[2].as_f32()?,
+            }),
+            RefModel::Nlu(m) => Ok(BatchRef::Text {
+                seq_len: m.seq_len,
+                ids: batch[0].as_i32()?,
+                labels: batch[1].as_i32()?,
+            }),
+        }
+    }
+
+    /// Per-example clipped gradients for examples `[lo, hi)` — the unit of
+    /// work of the async engine and the reduction chunk of the sync path.
+    pub fn grads_chunk<V: ParamsView + ?Sized>(
+        &self,
+        view: &V,
+        batch: &BatchRef,
+        lo: usize,
+        hi: usize,
+        c1: f32,
+        c2: f32,
+    ) -> ChunkGrads {
+        match self {
+            RefModel::Pctr(m) => m.grads_chunk(view, batch, lo, hi, c1, c2),
+            RefModel::Nlu(m) => m.grads_chunk(view, batch, lo, hi, c1, c2),
+        }
+    }
+
+    /// Forward pass for examples `[lo, hi)`: per-example loss sum and flat
+    /// logits.
+    pub fn forward_chunk<V: ParamsView + ?Sized>(
+        &self,
+        view: &V,
+        batch: &BatchRef,
+        lo: usize,
+        hi: usize,
+    ) -> (f32, Vec<f32>) {
+        match self {
+            RefModel::Pctr(m) => m.forward_chunk(view, batch, lo, hi),
+            RefModel::Nlu(m) => m.forward_chunk(view, batch, lo, hi),
+        }
     }
 }
 
@@ -456,40 +650,40 @@ impl PctrModel {
 
 /// Accumulates [`ChunkGrads`] **in chunk order** into the full-batch output
 /// tuple.  Used identically by the sync `execute` loop and by the async
-/// engine's DP aggregation barrier.
-pub struct PctrGradsAcc {
+/// engine's DP aggregation barrier, for both model families.
+pub struct GradsAcc {
     loss_sum: f32,
-    mlp_grads: Vec<Vec<f32>>,
+    dense_grads: Vec<Vec<f32>>,
     zgrads: Vec<f32>,
     counts: Vec<f32>,
     scales: Vec<f32>,
 }
 
-impl PctrGradsAcc {
-    pub fn new(model: &PctrModel) -> PctrGradsAcc {
-        PctrGradsAcc {
+impl GradsAcc {
+    pub fn new(model: &RefModel) -> GradsAcc {
+        GradsAcc {
             loss_sum: 0.0,
-            mlp_grads: model
-                .mlp_shapes
+            dense_grads: model
+                .dense_grad_shapes()
                 .iter()
                 .map(|s| vec![0f32; s.iter().product()])
                 .collect(),
-            zgrads: vec![0f32; model.batch_size * model.d_emb],
-            counts: vec![0f32; model.total_vocab],
-            scales: vec![0f32; model.batch_size],
+            zgrads: vec![0f32; model.batch_size() * model.emb_cols()],
+            counts: vec![0f32; model.total_vocab()],
+            scales: vec![0f32; model.batch_size()],
         }
     }
 
     /// Fold one chunk in.  Must be called in ascending chunk order — the
     /// merge order is part of the numerical contract (module docs).
-    pub fn merge(&mut self, model: &PctrModel, chunk: ChunkGrads) {
+    pub fn merge(&mut self, model: &RefModel, chunk: ChunkGrads) {
         self.loss_sum += chunk.loss_sum;
-        for (acc, part) in self.mlp_grads.iter_mut().zip(&chunk.mlp_grads) {
+        for (acc, part) in self.dense_grads.iter_mut().zip(&chunk.dense_grads) {
             for (a, &p) in acc.iter_mut().zip(part) {
                 *a += p;
             }
         }
-        let d = model.d_emb;
+        let d = model.emb_cols();
         self.zgrads[chunk.lo * d..chunk.hi * d].copy_from_slice(&chunk.zgrads);
         for &(idx, v) in &chunk.counts {
             self.counts[idx as usize] += v;
@@ -498,22 +692,19 @@ impl PctrGradsAcc {
     }
 
     /// Final artifact output tuple, in manifest order:
-    /// `loss, grad_mlp_*…, zgrads_scaled, counts, scales`.
-    pub fn into_outputs(self, model: &PctrModel) -> Vec<HostTensor> {
-        let mut outs = Vec::with_capacity(3 + self.mlp_grads.len());
+    /// `loss, grad_*…, zgrads_scaled, counts, scales`.
+    pub fn into_outputs(self, model: &RefModel) -> Vec<HostTensor> {
+        let mut outs = Vec::with_capacity(4 + self.dense_grads.len());
         outs.push(HostTensor::f32(
             vec![],
-            vec![self.loss_sum / model.batch_size as f32],
+            vec![self.loss_sum / model.batch_size() as f32],
         ));
-        for (buf, shape) in self.mlp_grads.into_iter().zip(&model.mlp_shapes) {
-            outs.push(HostTensor::f32(shape.clone(), buf));
+        for (buf, shape) in self.dense_grads.into_iter().zip(model.dense_grad_shapes()) {
+            outs.push(HostTensor::f32(shape, buf));
         }
-        outs.push(HostTensor::f32(
-            vec![model.batch_size, model.d_emb],
-            self.zgrads,
-        ));
-        outs.push(HostTensor::f32(vec![model.total_vocab], self.counts));
-        outs.push(HostTensor::f32(vec![model.batch_size], self.scales));
+        outs.push(HostTensor::f32(model.zgrads_dims(), self.zgrads));
+        outs.push(HostTensor::f32(vec![model.total_vocab()], self.counts));
+        outs.push(HostTensor::f32(vec![model.batch_size()], self.scales));
         outs
     }
 }
@@ -522,24 +713,25 @@ impl PctrGradsAcc {
 // The backend
 // ---------------------------------------------------------------------------
 
-/// Native CPU executor implementing the artifact contract for pCTR models.
-/// Parsed model geometries are cached per model name (the hot path runs
-/// `execute` every step — mirroring `PjrtBackend`'s executable cache).
+/// Native CPU executor implementing the artifact contract for both model
+/// families.  Parsed model geometries are cached per model name (the hot
+/// path runs `execute` every step — mirroring `PjrtBackend`'s executable
+/// cache).
 #[derive(Default)]
 pub struct ReferenceBackend {
-    models: std::cell::RefCell<HashMap<String, PctrModel>>,
+    models: std::cell::RefCell<HashMap<String, RefModel>>,
 }
 
 impl ReferenceBackend {
-    fn model_for(&self, model: &ModelManifest) -> Result<PctrModel> {
-        if let Some(pm) = self.models.borrow().get(&model.name) {
-            return Ok(pm.clone());
+    fn model_for(&self, model: &ModelManifest) -> Result<RefModel> {
+        if let Some(rm) = self.models.borrow().get(&model.name) {
+            return Ok(rm.clone());
         }
-        let pm = PctrModel::from_manifest(model)?;
+        let rm = RefModel::from_manifest(model)?;
         self.models
             .borrow_mut()
-            .insert(model.name.clone(), pm.clone());
-        Ok(pm)
+            .insert(model.name.clone(), rm.clone());
+        Ok(rm)
     }
 
     pub fn execute(
@@ -549,43 +741,37 @@ impl ReferenceBackend {
         inputs: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
         let model = manifest.model(&art.model)?;
-        let pm = self.model_for(model)?;
-        let np = pm.num_params();
-        let b = pm.batch_size;
-        let nf = pm.nf();
-        let view = TensorView::new(&inputs[..np], &pm)?;
-        let batch = BatchRef {
-            nf,
-            nn: pm.num_numeric,
-            cat: inputs[np].as_i32()?,
-            num: inputs[np + 1].as_f32()?,
-            y: inputs[np + 2].as_f32()?,
-        };
+        let rm = self.model_for(model)?;
+        let np = rm.num_params();
+        let b = rm.batch_size();
+        let nb = rm.num_batch_inputs();
+        let view = TensorView::new(&inputs[..np], &rm)?;
+        let batch = rm.batch_ref(&inputs[np..np + nb])?;
         if art.name.ends_with("_grads") {
-            let c1 = inputs[np + 3].as_f32()?[0];
-            let c2 = inputs[np + 4].as_f32()?[0];
-            let mut acc = PctrGradsAcc::new(&pm);
+            let c1 = inputs[np + nb].as_f32()?[0];
+            let c2 = inputs[np + nb + 1].as_f32()?[0];
+            let mut acc = GradsAcc::new(&rm);
             let mut lo = 0;
             while lo < b {
                 let hi = (lo + REDUCE_CHUNK).min(b);
-                acc.merge(&pm, pm.grads_chunk(&view, &batch, lo, hi, c1, c2));
+                acc.merge(&rm, rm.grads_chunk(&view, &batch, lo, hi, c1, c2));
                 lo = hi;
             }
-            Ok(acc.into_outputs(&pm))
+            Ok(acc.into_outputs(&rm))
         } else if art.name.ends_with("_fwd") {
             let mut loss_sum = 0f32;
             let mut logits = Vec::with_capacity(b);
             let mut lo = 0;
             while lo < b {
                 let hi = (lo + REDUCE_CHUNK).min(b);
-                let (ls, lg) = pm.forward_chunk(&view, &batch, lo, hi);
+                let (ls, lg) = rm.forward_chunk(&view, &batch, lo, hi);
                 loss_sum += ls;
                 logits.extend(lg);
                 lo = hi;
             }
             Ok(vec![
                 HostTensor::f32(vec![], vec![loss_sum / b as f32]),
-                HostTensor::f32(vec![b], logits),
+                HostTensor::f32(rm.logits_dims(), logits),
             ])
         } else {
             bail!("reference runtime: unknown artifact kind {}", art.name)
@@ -683,8 +869,92 @@ fn push_pctr(lines: &mut Vec<String>, cfg: &BuiltinPctr) {
     }
 }
 
+struct BuiltinNlu {
+    model: &'static str,
+    artifact_prefix: &'static str,
+    vocab: usize,
+    d_model: usize,
+    num_heads: usize,
+    ff_dim: usize,
+    num_layers: usize,
+    seq_len: usize,
+    num_classes: usize,
+    batch_size: usize,
+}
+
+fn push_nlu(lines: &mut Vec<String>, cfg: &BuiltinNlu) {
+    let m = cfg.model;
+    let (d, ff, c) = (cfg.d_model, cfg.ff_dim, cfg.num_classes);
+    lines.push(format!("model {m} nlu"));
+    for (key, val) in [
+        ("vocab", cfg.vocab),
+        ("d_model", d),
+        ("num_heads", cfg.num_heads),
+        ("ff_dim", ff),
+        ("num_layers", cfg.num_layers),
+        ("seq_len", cfg.seq_len),
+        ("num_classes", c),
+        ("batch_size", cfg.batch_size),
+    ] {
+        lines.push(format!("attr {m} {key} {val}"));
+    }
+
+    // params: the trainable table, the frozen per-layer backbone in the
+    // native layout (transformer.rs), the trainable head
+    let mut params: Vec<(String, bool, Vec<usize>)> =
+        vec![("emb_table".to_string(), true, vec![cfg.vocab, d])];
+    for l in 0..cfg.num_layers {
+        for nm in ["wq", "wk", "wv", "wo"] {
+            params.push((format!("l{l}_{nm}"), false, vec![d, d]));
+            params.push((format!("l{l}_{nm}_b"), false, vec![d]));
+        }
+        params.push((format!("l{l}_ln1_g"), false, vec![d]));
+        params.push((format!("l{l}_ln1_b"), false, vec![d]));
+        params.push((format!("l{l}_ff1"), false, vec![d, ff]));
+        params.push((format!("l{l}_ff1_b"), false, vec![ff]));
+        params.push((format!("l{l}_ff2"), false, vec![ff, d]));
+        params.push((format!("l{l}_ff2_b"), false, vec![d]));
+        params.push((format!("l{l}_ln2_g"), false, vec![d]));
+        params.push((format!("l{l}_ln2_b"), false, vec![d]));
+    }
+    params.push(("head_w".to_string(), true, vec![d, c]));
+    params.push(("head_b".to_string(), true, vec![c]));
+    for (name, trainable, dims) in &params {
+        lines.push(format!(
+            "param {m} {name} {} {}",
+            *trainable as u8,
+            dims_str(dims)
+        ));
+    }
+
+    let (b, t) = (cfg.batch_size, cfg.seq_len);
+    for suffix in ["fwd", "grads"] {
+        let a = format!("{}_{suffix}", cfg.artifact_prefix);
+        lines.push(format!("artifact {a} {a}.hlo.txt {m}"));
+        for (name, _, dims) in &params {
+            lines.push(format!("in {a} {name} f32 {}", dims_str(dims)));
+        }
+        lines.push(format!("in {a} token_ids i32 {b},{t}"));
+        lines.push(format!("in {a} labels i32 {b}"));
+        if suffix == "grads" {
+            lines.push(format!("in {a} c1 f32 1"));
+            lines.push(format!("in {a} c2 f32 1"));
+            lines.push(format!("out {a} loss f32 scalar"));
+            lines.push(format!("out {a} grad_head_w f32 {d},{c}"));
+            lines.push(format!("out {a} grad_head_b f32 {c}"));
+            lines.push(format!("out {a} zgrads_scaled f32 {b},{t},{d}"));
+            lines.push(format!("out {a} counts f32 {}", cfg.vocab));
+            lines.push(format!("out {a} scales f32 {b}"));
+        } else {
+            lines.push(format!("out {a} loss f32 scalar"));
+            lines.push(format!("out {a} logits f32 {b},{c}"));
+        }
+    }
+}
+
 /// The built-in manifest: `criteo-small` (the paper's CPU-scale config,
-/// Table-3 vocabularies / 16) and `criteo-tiny` (test-sized).
+/// Table-3 vocabularies / 16) and `criteo-tiny` (test-sized), plus the NLU
+/// transformer pair `nlu-small` / `nlu-tiny`.
 pub fn builtin_manifest() -> Manifest {
     let mut lines: Vec<String> = Vec::new();
     push_pctr(
@@ -709,6 +979,36 @@ pub fn builtin_manifest() -> Manifest {
             num_hidden_layers: 2,
         },
     );
+    push_nlu(
+        &mut lines,
+        &BuiltinNlu {
+            model: "nlu-small",
+            artifact_prefix: "nlu_small",
+            vocab: 4096,
+            d_model: 64,
+            num_heads: 4,
+            ff_dim: 128,
+            num_layers: 3,
+            seq_len: 32,
+            num_classes: 2,
+            batch_size: 64,
+        },
+    );
+    push_nlu(
+        &mut lines,
+        &BuiltinNlu {
+            model: "nlu-tiny",
+            artifact_prefix: "nlu_tiny",
+            vocab: 512,
+            d_model: 16,
+            num_heads: 2,
+            ff_dim: 32,
+            num_layers: 2,
+            seq_len: 12,
+            num_classes: 2,
+            batch_size: 32,
+        },
+    );
     Manifest::parse(&lines.join("\n"))
         .context("built-in manifest must parse")
         .expect("built-in manifest is static")
@@ -730,6 +1030,19 @@ mod tests {
             let store = ParamStore::init(model, 1).unwrap();
             assert_eq!(store.params.len(), pm.num_params());
         }
+        for name in ["nlu-small", "nlu-tiny"] {
+            let model = m.model(name).unwrap();
+            let rm = RefModel::from_manifest(model).unwrap();
+            let store = ParamStore::init(model, 1).unwrap();
+            assert_eq!(store.params.len(), rm.num_params());
+            // only the table and the head train; the backbone is frozen
+            assert_eq!(
+                store.params.iter().filter(|p| p.trainable).count(),
+                3,
+                "{name}"
+            );
+            assert_eq!(store.params[0].name, "emb_table");
+        }
         assert!(m.artifact("pctr_grads").is_ok());
         assert!(m.artifact("pctr_tiny_fwd").is_ok());
         // grads artifact I/O arity: params + 3 batch + 2 clip inputs;
@@ -738,6 +1051,12 @@ mod tests {
         let pm = PctrModel::from_manifest(m.model("criteo-tiny").unwrap()).unwrap();
         assert_eq!(art.inputs.len(), pm.num_params() + 5);
         assert_eq!(art.outputs.len(), 1 + pm.mlp_shapes.len() + 3);
+        // same arity law for the nlu pair: params + 2 batch + 2 clip inputs;
+        // loss + head grads + 3 tail outputs
+        let art = m.artifact("nlu_tiny_grads").unwrap();
+        let rm = RefModel::from_manifest(m.model("nlu-tiny").unwrap()).unwrap();
+        assert_eq!(art.inputs.len(), rm.num_params() + 4);
+        assert_eq!(art.outputs.len(), 1 + 2 + 3);
     }
 
     #[test]
@@ -846,30 +1165,25 @@ mod tests {
         inputs.push(HostTensor::f32(vec![1], vec![1.0]));
         let art = m.artifact("pctr_tiny_grads").unwrap();
         let full = ReferenceBackend::default().execute(&m, art, &inputs).unwrap();
+        let rm = RefModel::Pctr(pm.clone());
         let np = pm.num_params();
-        let view = TensorView::new(&inputs[..np], &pm).unwrap();
-        let batch = BatchRef {
-            nf: pm.nf(),
-            nn: pm.num_numeric,
-            cat: inputs[np].as_i32().unwrap(),
-            num: inputs[np + 1].as_f32().unwrap(),
-            y: inputs[np + 2].as_f32().unwrap(),
-        };
+        let view = TensorView::new(&inputs[..np], &rm).unwrap();
+        let batch = rm.batch_ref(&inputs[np..np + 3]).unwrap();
         // compute chunks out of order, merge in order — as the engine does
         let mut chunks: Vec<ChunkGrads> = Vec::new();
         let mut lo = 0;
         while lo < pm.batch_size {
             let hi = (lo + REDUCE_CHUNK).min(pm.batch_size);
-            chunks.push(pm.grads_chunk(&view, &batch, lo, hi, 1.0, 1.0));
+            chunks.push(rm.grads_chunk(&view, &batch, lo, hi, 1.0, 1.0));
             lo = hi;
         }
         chunks.reverse();
         chunks.sort_by_key(|c| c.lo);
-        let mut acc = PctrGradsAcc::new(&pm);
+        let mut acc = GradsAcc::new(&rm);
         for c in chunks {
-            acc.merge(&pm, c);
+            acc.merge(&rm, c);
         }
-        let merged = acc.into_outputs(&pm);
+        let merged = acc.into_outputs(&rm);
         assert_eq!(full, merged, "chunked merge must be bit-identical");
     }
 

@@ -1,0 +1,1013 @@
+//! Native transformer forward/backward — the NLU half of the reference
+//! executor.
+//!
+//! Mirrors the JAX model in `python/compile/model.py` at the geometry the
+//! built-in manifests use: token embeddings plus a fixed sinusoidal position
+//! encoding feed a stack of post-norm encoder blocks (multi-head attention
+//! and a GELU MLP, each behind a residual + LayerNorm), mean-pooled into a
+//! linear classifier head.  The backbone is **frozen** (the paper's DP
+//! fine-tuning setting); the trainable parameters are the embedding table
+//! and the head, so the backward pass propagates ∂L/∂z through every block
+//! down to the per-token embedding outputs and produces:
+//!
+//! * per-example clipped head gradients (the dense DP-SGD path),
+//! * `s_i · ∂L/∂z_i` rows (`zgrads_scaled`, `(B, T, d)`) that Rust
+//!   scatter-adds into the row-sparse table gradient — exactly the pCTR
+//!   contract, so the whole selection/noise/update pipeline is shared,
+//! * the pre-noise contribution map over the vocabulary (Alg. 1 line 5),
+//!   with the per-example weight `min(1, C1/√u)` per *distinct* token
+//!   (`u` = distinct tokens in the example — the per-slot `1/mult` split of
+//!   the Python reference sums back to this).
+//!
+//! The per-example clip norm covers head + scattered embedding gradients;
+//! repeated tokens within an example add inside a row, so the scattered
+//! norm uses the pairwise Gram identity (`kernels/ref.py`), accumulated in
+//! a fixed loop order to keep the executor bit-deterministic.
+//!
+//! Everything here is a pure function of (params view, batch): chunked
+//! through [`ChunkGrads`] it satisfies the fixed-chunk reduction invariant
+//! of the parent module, which is what lets `train-async` run NLU
+//! bit-identically to `train`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::{BatchRef, ChunkGrads, ParamsView};
+use crate::runtime::ModelManifest;
+
+/// Dense-parameter slots per encoder layer (after the embedding table), in
+/// manifest order.
+pub const LAYER_PARAMS: usize = 16;
+
+const P_WQ: usize = 0;
+const P_WQ_B: usize = 1;
+const P_WK: usize = 2;
+const P_WK_B: usize = 3;
+const P_WV: usize = 4;
+const P_WV_B: usize = 5;
+const P_WO: usize = 6;
+const P_WO_B: usize = 7;
+const P_LN1_G: usize = 8;
+const P_LN1_B: usize = 9;
+const P_FF1: usize = 10;
+const P_FF1_B: usize = 11;
+const P_FF2: usize = 12;
+const P_FF2_B: usize = 13;
+const P_LN2_G: usize = 14;
+const P_LN2_B: usize = 15;
+
+const LN_EPS: f32 = 1e-5;
+
+/// Geometry of an NLU model, parsed once from the manifest.
+#[derive(Clone, Debug)]
+pub struct NluModel {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub num_heads: usize,
+    pub ff_dim: usize,
+    pub num_layers: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    /// sinusoidal position encoding, `(seq_len, d_model)` row-major
+    pub posenc: Vec<f32>,
+}
+
+/// The standard sinusoidal position encoding (`model.py::_posenc`).
+pub fn sinusoidal_posenc(seq_len: usize, d: usize) -> Vec<f32> {
+    let mut pe = vec![0f32; seq_len * d];
+    for pos in 0..seq_len {
+        for i in 0..d {
+            let angle =
+                pos as f64 / 10000f64.powf((2 * (i / 2)) as f64 / d as f64);
+            let v = if i % 2 == 0 { angle.sin() } else { angle.cos() };
+            pe[pos * d + i] = v as f32;
+        }
+    }
+    pe
+}
+
+impl NluModel {
+    pub fn from_manifest(model: &ModelManifest) -> Result<NluModel> {
+        if model.kind != "nlu" {
+            bail!(
+                "NluModel::from_manifest on kind `{}` for {}",
+                model.kind,
+                model.name
+            );
+        }
+        if model.attr_usize("emb_lora_rank").unwrap_or(0) != 0 {
+            bail!(
+                "native NLU executor trains the full embedding table only; \
+                 LoRA-on-embedding models ({}) need the `xla` backend",
+                model.name
+            );
+        }
+        let d = model.attr_usize("d_model")?;
+        let heads = model.attr_usize("num_heads")?;
+        if heads == 0 || d % heads != 0 {
+            bail!("{}: d_model {d} not divisible by num_heads {heads}", model.name);
+        }
+        let seq_len = model.attr_usize("seq_len")?;
+        let m = NluModel {
+            vocab: model.attr_usize("vocab")?,
+            d_model: d,
+            num_heads: heads,
+            ff_dim: model.attr_usize("ff_dim")?,
+            num_layers: model.attr_usize("num_layers")?,
+            seq_len,
+            num_classes: model.attr_usize("num_classes")?,
+            batch_size: model.attr_usize("batch_size")?,
+            posenc: sinusoidal_posenc(seq_len, d),
+        };
+        // The executor addresses parameters positionally; reject manifests
+        // whose inventory differs from the native layout (e.g. LoRA params
+        // from an artifact build) instead of silently misreading them.
+        let want = m.param_names();
+        if model.params.len() != want.len()
+            || model.params.iter().zip(&want).any(|(p, w)| &p.name != w)
+        {
+            bail!(
+                "model {}: parameter inventory does not match the native \
+                 transformer layout (adapter-bearing manifests need the \
+                 `xla` backend)",
+                model.name
+            );
+        }
+        Ok(m)
+    }
+
+    /// Parameter names in manifest order (the positional contract).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["emb_table".to_string()];
+        for l in 0..self.num_layers {
+            for nm in ["wq", "wk", "wv", "wo"] {
+                names.push(format!("l{l}_{nm}"));
+                names.push(format!("l{l}_{nm}_b"));
+            }
+            for nm in ["ln1_g", "ln1_b", "ff1", "ff1_b", "ff2", "ff2_b", "ln2_g", "ln2_b"] {
+                names.push(format!("l{l}_{nm}"));
+            }
+        }
+        names.push("head_w".to_string());
+        names.push("head_b".to_string());
+        names
+    }
+
+    pub fn num_params(&self) -> usize {
+        3 + LAYER_PARAMS * self.num_layers
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.num_heads
+    }
+
+    /// Dense-param index (the [`ParamsView::mlp`] space, table excluded) of
+    /// the classifier weight.
+    pub fn head_w_index(&self) -> usize {
+        LAYER_PARAMS * self.num_layers
+    }
+
+    pub fn head_b_index(&self) -> usize {
+        LAYER_PARAMS * self.num_layers + 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Small dense kernels (T is small; everything is plain row-major f32)
+// ---------------------------------------------------------------------------
+
+/// `out = x @ w + b` for `x: (t, d_in)`, `w: (d_in, d_out)`, row-major.
+fn affine(x: &[f32], w: &[f32], b: &[f32], d_in: usize, d_out: usize, out: &mut [f32]) {
+    let t = x.len() / d_in;
+    for r in 0..t {
+        let xr = &x[r * d_in..(r + 1) * d_in];
+        let or = &mut out[r * d_out..(r + 1) * d_out];
+        or.copy_from_slice(b);
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &w[i * d_out..(i + 1) * d_out];
+                for (ov, &wv) in or.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+/// `dx += dout @ wᵀ` for `w: (d_in, d_out)`.
+fn backprop_input(dout: &[f32], w: &[f32], d_in: usize, d_out: usize, dx: &mut [f32]) {
+    let t = dout.len() / d_out;
+    for r in 0..t {
+        let dor = &dout[r * d_out..(r + 1) * d_out];
+        let dxr = &mut dx[r * d_in..(r + 1) * d_in];
+        for i in 0..d_in {
+            let wrow = &w[i * d_out..(i + 1) * d_out];
+            let mut acc = 0f32;
+            for (&dv, &wv) in dor.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            dxr[i] += acc;
+        }
+    }
+}
+
+/// Per-row normalization state saved by the forward pass for the backward.
+struct LnCache {
+    /// normalized rows `(u - μ)/σ`, same shape as the input
+    xhat: Vec<f32>,
+    /// `1/σ` per row
+    inv_std: Vec<f32>,
+}
+
+impl LnCache {
+    fn zeros(t: usize, d: usize) -> LnCache {
+        LnCache { xhat: vec![0f32; t * d], inv_std: vec![0f32; t] }
+    }
+}
+
+/// Row-wise LayerNorm: `out = xhat * g + b`, caching `(xhat, 1/σ)`.
+fn layer_norm_fwd(u: &[f32], g: &[f32], b: &[f32], cache: &mut LnCache, out: &mut [f32]) {
+    let d = g.len();
+    let t = u.len() / d;
+    let inv_d = 1.0 / d as f32;
+    for r in 0..t {
+        let urow = &u[r * d..(r + 1) * d];
+        let mut mu = 0f32;
+        for &uv in urow {
+            mu += uv;
+        }
+        mu *= inv_d;
+        let mut var = 0f32;
+        for &uv in urow {
+            let c = uv - mu;
+            var += c * c;
+        }
+        var *= inv_d;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        cache.inv_std[r] = inv;
+        let xh = &mut cache.xhat[r * d..(r + 1) * d];
+        let orow = &mut out[r * d..(r + 1) * d];
+        for i in 0..d {
+            let xv = (urow[i] - mu) * inv;
+            xh[i] = xv;
+            orow[i] = xv * g[i] + b[i];
+        }
+    }
+}
+
+/// LayerNorm backward: `du += (dŷ − mean(dŷ) − x̂·mean(dŷ∘x̂)) / σ` with
+/// `dŷ = dy ∘ g`.
+fn layer_norm_bwd(dy: &[f32], g: &[f32], cache: &LnCache, du: &mut [f32]) {
+    let d = g.len();
+    let t = dy.len() / d;
+    let inv_d = 1.0 / d as f32;
+    let mut dxh = vec![0f32; d];
+    for r in 0..t {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xh = &cache.xhat[r * d..(r + 1) * d];
+        let mut m1 = 0f32;
+        let mut m2 = 0f32;
+        for i in 0..d {
+            let v = dyr[i] * g[i];
+            dxh[i] = v;
+            m1 += v;
+            m2 += v * xh[i];
+        }
+        m1 *= inv_d;
+        m2 *= inv_d;
+        let inv = cache.inv_std[r];
+        let dur = &mut du[r * d..(r + 1) * d];
+        for i in 0..d {
+            dur[i] += (dxh[i] - m1 - xh[i] * m2) * inv;
+        }
+    }
+}
+
+// GELU, tanh approximation (JAX's `jax.nn.gelu` default).
+const GELU_C: f32 = 0.797_884_6; // √(2/π)
+const GELU_A: f32 = 0.044_715;
+
+#[inline]
+fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+#[inline]
+fn gelu_prime(x: f32) -> f32 {
+    let x2 = x * x;
+    let u = GELU_C * (x + GELU_A * x * x2);
+    let th = u.tanh();
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * x2)
+}
+
+// ---------------------------------------------------------------------------
+// Forward (with activation caches) and backward
+// ---------------------------------------------------------------------------
+
+/// Saved activations of one encoder block, per example.
+struct LayerCache {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// softmax attention probabilities, `(heads, T, T)`
+    att: Vec<f32>,
+    ln1: LnCache,
+    ln2: LnCache,
+    /// pre-GELU MLP activations `(T, ff)`
+    a: Vec<f32>,
+}
+
+/// One example's forward state.
+struct Encoded {
+    layers: Vec<LayerCache>,
+    pooled: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl NluModel {
+    /// Forward one example from its token ids, caching what the backward
+    /// pass needs.
+    fn encode<V: ParamsView + ?Sized>(&self, view: &V, ids: &[i32]) -> Encoded {
+        let (t, d, ff) = (self.seq_len, self.d_model, self.ff_dim);
+        let (h, dh) = (self.num_heads, self.head_dim());
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut x = vec![0f32; t * d];
+        for (p, &id) in ids.iter().enumerate() {
+            view.emb_row(0, id as usize, &mut x[p * d..(p + 1) * d]);
+        }
+        for (xv, &pv) in x.iter_mut().zip(&self.posenc) {
+            *xv += pv;
+        }
+
+        let mut layers = Vec::with_capacity(self.num_layers);
+        for l in 0..self.num_layers {
+            let base = l * LAYER_PARAMS;
+            let mut q = vec![0f32; t * d];
+            let mut k = vec![0f32; t * d];
+            let mut v = vec![0f32; t * d];
+            affine(&x, view.mlp(base + P_WQ), view.mlp(base + P_WQ_B), d, d, &mut q);
+            affine(&x, view.mlp(base + P_WK), view.mlp(base + P_WK_B), d, d, &mut k);
+            affine(&x, view.mlp(base + P_WV), view.mlp(base + P_WV_B), d, d, &mut v);
+
+            let mut att = vec![0f32; h * t * t];
+            let mut ctx = vec![0f32; t * d];
+            for head in 0..h {
+                let off = head * dh;
+                for tq in 0..t {
+                    let arow = &mut att[head * t * t + tq * t..][..t];
+                    let qrow = &q[tq * d + off..tq * d + off + dh];
+                    let mut mx = f32::NEG_INFINITY;
+                    for s in 0..t {
+                        let krow = &k[s * d + off..s * d + off + dh];
+                        let mut dot = 0f32;
+                        for (&qv, &kv) in qrow.iter().zip(krow) {
+                            dot += qv * kv;
+                        }
+                        let score = dot * scale;
+                        arow[s] = score;
+                        if score > mx {
+                            mx = score;
+                        }
+                    }
+                    let mut denom = 0f32;
+                    for a in arow.iter_mut() {
+                        *a = (*a - mx).exp();
+                        denom += *a;
+                    }
+                    let inv = 1.0 / denom;
+                    for a in arow.iter_mut() {
+                        *a *= inv;
+                    }
+                    let crow = &mut ctx[tq * d + off..tq * d + off + dh];
+                    for s in 0..t {
+                        let w = arow[s];
+                        let vrow = &v[s * d + off..s * d + off + dh];
+                        for (cv, &vv) in crow.iter_mut().zip(vrow) {
+                            *cv += w * vv;
+                        }
+                    }
+                }
+            }
+
+            // wo projection, residual, LN1 (u1 built in place over attn_out)
+            let mut u1 = vec![0f32; t * d];
+            affine(&ctx, view.mlp(base + P_WO), view.mlp(base + P_WO_B), d, d, &mut u1);
+            for (uv, &xv) in u1.iter_mut().zip(&x) {
+                *uv += xv;
+            }
+            let mut ln1 = LnCache::zeros(t, d);
+            let mut x1 = vec![0f32; t * d];
+            layer_norm_fwd(
+                &u1,
+                view.mlp(base + P_LN1_G),
+                view.mlp(base + P_LN1_B),
+                &mut ln1,
+                &mut x1,
+            );
+
+            // GELU MLP, residual, LN2
+            let mut a = vec![0f32; t * ff];
+            affine(&x1, view.mlp(base + P_FF1), view.mlp(base + P_FF1_B), d, ff, &mut a);
+            let mut ga = vec![0f32; t * ff];
+            for (gv, &av) in ga.iter_mut().zip(&a) {
+                *gv = gelu(av);
+            }
+            let mut u2 = vec![0f32; t * d];
+            affine(&ga, view.mlp(base + P_FF2), view.mlp(base + P_FF2_B), ff, d, &mut u2);
+            for (uv, &xv) in u2.iter_mut().zip(&x1) {
+                *uv += xv;
+            }
+            let mut ln2 = LnCache::zeros(t, d);
+            let mut x2 = vec![0f32; t * d];
+            layer_norm_fwd(
+                &u2,
+                view.mlp(base + P_LN2_G),
+                view.mlp(base + P_LN2_B),
+                &mut ln2,
+                &mut x2,
+            );
+
+            layers.push(LayerCache { q, k, v, att, ln1, ln2, a });
+            x = x2;
+        }
+
+        // mean pool + classifier head
+        let mut pooled = vec![0f32; d];
+        for row in x.chunks(d) {
+            for (pv, &xv) in pooled.iter_mut().zip(row) {
+                *pv += xv;
+            }
+        }
+        let inv_t = 1.0 / t as f32;
+        for pv in &mut pooled {
+            *pv *= inv_t;
+        }
+        let hw = view.mlp(self.head_w_index());
+        let c = self.num_classes;
+        let mut logits = view.mlp(self.head_b_index()).to_vec();
+        for (i, &pv) in pooled.iter().enumerate() {
+            let wrow = &hw[i * c..(i + 1) * c];
+            for (lv, &wv) in logits.iter_mut().zip(wrow) {
+                *lv += pv * wv;
+            }
+        }
+        Encoded { layers, pooled, logits }
+    }
+
+    /// Backward one example from `∂L/∂logits`: returns
+    /// `(∂L/∂z (T,d), ∂L/∂head_w, ∂L/∂head_b)`, unclipped.
+    fn backward<V: ParamsView + ?Sized>(
+        &self,
+        view: &V,
+        enc: &Encoded,
+        dlogits: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (t, d, ff) = (self.seq_len, self.d_model, self.ff_dim);
+        let (h, dh) = (self.num_heads, self.head_dim());
+        let scale = 1.0 / (dh as f32).sqrt();
+        let c = self.num_classes;
+        let hw = view.mlp(self.head_w_index());
+
+        // head grads + pooled grad
+        let mut dhw = vec![0f32; d * c];
+        for (i, &pv) in enc.pooled.iter().enumerate() {
+            let row = &mut dhw[i * c..(i + 1) * c];
+            for (rv, &dl) in row.iter_mut().zip(dlogits) {
+                *rv = pv * dl;
+            }
+        }
+        let dhb = dlogits.to_vec();
+
+        // mean pool broadcasts ∂L/∂pooled / T to every position
+        let inv_t = 1.0 / t as f32;
+        let mut dpooled = vec![0f32; d];
+        for (i, dp) in dpooled.iter_mut().enumerate() {
+            let wrow = &hw[i * c..(i + 1) * c];
+            let mut acc = 0f32;
+            for (&wv, &dl) in wrow.iter().zip(dlogits) {
+                acc += wv * dl;
+            }
+            *dp = acc * inv_t;
+        }
+        let mut dx = vec![0f32; t * d];
+        for row in dx.chunks_mut(d) {
+            row.copy_from_slice(&dpooled);
+        }
+
+        for (l, cache) in enc.layers.iter().enumerate().rev() {
+            let base = l * LAYER_PARAMS;
+
+            // LN2 → residual split (x1 branch + MLP branch)
+            let mut du2 = vec![0f32; t * d];
+            layer_norm_bwd(&dx, view.mlp(base + P_LN2_G), &cache.ln2, &mut du2);
+            let mut dx1 = du2.clone();
+
+            // MLP backward (frozen weights: input grads only)
+            let mut dga = vec![0f32; t * ff];
+            backprop_input(&du2, view.mlp(base + P_FF2), ff, d, &mut dga);
+            let mut da = dga;
+            for (dv, &av) in da.iter_mut().zip(&cache.a) {
+                *dv *= gelu_prime(av);
+            }
+            backprop_input(&da, view.mlp(base + P_FF1), d, ff, &mut dx1);
+
+            // LN1 → residual split (layer input + attention branch)
+            let mut du1 = vec![0f32; t * d];
+            layer_norm_bwd(&dx1, view.mlp(base + P_LN1_G), &cache.ln1, &mut du1);
+            let mut dxin = du1.clone();
+
+            // wo
+            let mut dctx = vec![0f32; t * d];
+            backprop_input(&du1, view.mlp(base + P_WO), d, d, &mut dctx);
+
+            // attention backward, head by head
+            let mut dq = vec![0f32; t * d];
+            let mut dk = vec![0f32; t * d];
+            let mut dv = vec![0f32; t * d];
+            let mut datt = vec![0f32; t];
+            for head in 0..h {
+                let off = head * dh;
+                let att_h = &cache.att[head * t * t..(head + 1) * t * t];
+                for tq in 0..t {
+                    let arow = &att_h[tq * t..(tq + 1) * t];
+                    let dcrow = &dctx[tq * d + off..tq * d + off + dh];
+                    // dv[s] += att[tq,s] · dctx[tq];  datt[s] = ⟨dctx[tq], v[s]⟩
+                    for s in 0..t {
+                        let vrow = &cache.v[s * d + off..s * d + off + dh];
+                        let mut acc = 0f32;
+                        for (&dcv, &vv) in dcrow.iter().zip(vrow) {
+                            acc += dcv * vv;
+                        }
+                        datt[s] = acc;
+                        let w = arow[s];
+                        let dvrow = &mut dv[s * d + off..s * d + off + dh];
+                        for (dvv, &dcv) in dvrow.iter_mut().zip(dcrow) {
+                            *dvv += w * dcv;
+                        }
+                    }
+                    // softmax backward + score split into q and k
+                    let mut dot = 0f32;
+                    for (&aw, &dw) in arow.iter().zip(datt.iter()) {
+                        dot += aw * dw;
+                    }
+                    let qrow_base = tq * d + off;
+                    for s in 0..t {
+                        let ds = arow[s] * (datt[s] - dot) * scale;
+                        let krow = &cache.k[s * d + off..s * d + off + dh];
+                        for j in 0..dh {
+                            dq[qrow_base + j] += ds * krow[j];
+                            dk[s * d + off + j] += ds * cache.q[qrow_base + j];
+                        }
+                    }
+                }
+            }
+            backprop_input(&dq, view.mlp(base + P_WQ), d, d, &mut dxin);
+            backprop_input(&dk, view.mlp(base + P_WK), d, d, &mut dxin);
+            backprop_input(&dv, view.mlp(base + P_WV), d, d, &mut dxin);
+            dx = dxin;
+        }
+        // the position encoding is constant, so ∂L/∂z = ∂L/∂x₀
+        (dx, dhw, dhb)
+    }
+
+    /// Per-example clipped gradients for examples `[lo, hi)` — the NLU arm
+    /// of [`super::RefModel::grads_chunk`].
+    pub fn grads_chunk<V: ParamsView + ?Sized>(
+        &self,
+        view: &V,
+        batch: &BatchRef,
+        lo: usize,
+        hi: usize,
+        c1: f32,
+        c2: f32,
+    ) -> ChunkGrads {
+        let BatchRef::Text { ids, labels, .. } = *batch else {
+            panic!("nlu grads_chunk on a non-text batch (dispatch bug)")
+        };
+        let (t, d, c) = (self.seq_len, self.d_model, self.num_classes);
+        let emb_cols = t * d;
+        let mut out = ChunkGrads {
+            lo,
+            hi,
+            loss_sum: 0.0,
+            dense_grads: vec![vec![0f32; d * c], vec![0f32; c]],
+            zgrads: vec![0f32; (hi - lo) * emb_cols],
+            counts: Vec::new(),
+            scales: Vec::with_capacity(hi - lo),
+        };
+        let mut cmap: HashMap<u32, f32> = HashMap::with_capacity((hi - lo) * t);
+
+        for i in lo..hi {
+            let ids_i = &ids[i * t..(i + 1) * t];
+            let label = labels[i] as usize;
+            let enc = self.encode(view, ids_i);
+
+            // cross-entropy + softmax backward
+            let mut mx = f32::NEG_INFINITY;
+            for &lv in &enc.logits {
+                if lv > mx {
+                    mx = lv;
+                }
+            }
+            let mut denom = 0f32;
+            for &lv in &enc.logits {
+                denom += (lv - mx).exp();
+            }
+            let loss_i = mx + denom.ln() - enc.logits[label];
+            let inv = 1.0 / denom;
+            let mut dlogits: Vec<f32> =
+                enc.logits.iter().map(|&lv| (lv - mx).exp() * inv).collect();
+            dlogits[label] -= 1.0;
+
+            let (dz, dhw, dhb) = self.backward(view, &enc, &dlogits);
+
+            // ---- clip factor: head grads + scattered embedding rows ----
+            // Repeated tokens add within a row, so the scattered squared
+            // norm is Σ_{p,s: id_p = id_s} ⟨dz_p, dz_s⟩ (Gram identity) —
+            // computed in fixed (p, s) order for bit-determinism.
+            let mut sq = 0f32;
+            for &g in &dhw {
+                sq += g * g;
+            }
+            for &g in &dhb {
+                sq += g * g;
+            }
+            for p in 0..t {
+                let rp = &dz[p * d..(p + 1) * d];
+                for s in 0..t {
+                    if ids_i[p] == ids_i[s] {
+                        let rs = &dz[s * d..(s + 1) * d];
+                        let mut dot = 0f32;
+                        for (&av, &bv) in rp.iter().zip(rs) {
+                            dot += av * bv;
+                        }
+                        sq += dot;
+                    }
+                }
+            }
+            let norm = sq.max(1e-24).sqrt();
+            let s = (c2 / norm).min(1.0);
+
+            // ---- accumulate clipped grads into the chunk partials ----
+            out.loss_sum += loss_i;
+            for (acc, &g) in out.dense_grads[0].iter_mut().zip(&dhw) {
+                *acc += s * g;
+            }
+            for (acc, &g) in out.dense_grads[1].iter_mut().zip(&dhb) {
+                *acc += s * g;
+            }
+            let zrow = &mut out.zgrads[(i - lo) * emb_cols..(i - lo + 1) * emb_cols];
+            for (zo, &zv) in zrow.iter_mut().zip(&dz) {
+                *zo = s * zv;
+            }
+            out.scales.push(s);
+
+            // Contribution map: weight min(1, C1/√u) per distinct token,
+            // u = distinct tokens in the example (Alg. 1 line 5; matches
+            // model.py::_unique_token_weights summed per token).
+            let mut uniq = 0usize;
+            for p in 0..t {
+                if ids_i[..p].iter().all(|&x| x != ids_i[p]) {
+                    uniq += 1;
+                }
+            }
+            let w = (c1 / (uniq.max(1) as f32).sqrt()).min(1.0);
+            for p in 0..t {
+                if ids_i[..p].iter().all(|&x| x != ids_i[p]) {
+                    *cmap.entry(ids_i[p] as u32).or_insert(0.0) += w;
+                }
+            }
+        }
+        out.counts = cmap.into_iter().collect();
+        out
+    }
+
+    /// Forward pass for examples `[lo, hi)`: per-example CE loss sum and
+    /// flat `(hi-lo, num_classes)` logits.
+    pub fn forward_chunk<V: ParamsView + ?Sized>(
+        &self,
+        view: &V,
+        batch: &BatchRef,
+        lo: usize,
+        hi: usize,
+    ) -> (f32, Vec<f32>) {
+        let BatchRef::Text { ids, labels, .. } = *batch else {
+            panic!("nlu forward_chunk on a non-text batch (dispatch bug)")
+        };
+        let t = self.seq_len;
+        let mut loss_sum = 0f32;
+        let mut logits_out = Vec::with_capacity((hi - lo) * self.num_classes);
+        for i in lo..hi {
+            let enc = self.encode(view, &ids[i * t..(i + 1) * t]);
+            let mut mx = f32::NEG_INFINITY;
+            for &lv in &enc.logits {
+                if lv > mx {
+                    mx = lv;
+                }
+            }
+            let mut denom = 0f32;
+            for &lv in &enc.logits {
+                denom += (lv - mx).exp();
+            }
+            loss_sum += mx + denom.ln() - enc.logits[labels[i] as usize];
+            logits_out.extend_from_slice(&enc.logits);
+        }
+        (loss_sum, logits_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::reference::{builtin_manifest, RefModel, ReferenceBackend};
+    use crate::runtime::HostTensor;
+    use crate::util::rng::Xoshiro256;
+
+    /// Plain-vector [`ParamsView`] for gradient checks.
+    struct VecView {
+        table: Vec<f32>,
+        d: usize,
+        dense: Vec<Vec<f32>>,
+    }
+
+    impl ParamsView for VecView {
+        fn emb_row(&self, _feature: usize, row: usize, out: &mut [f32]) {
+            out.copy_from_slice(&self.table[row * self.d..(row + 1) * self.d]);
+        }
+
+        fn mlp(&self, index: usize) -> &[f32] {
+            &self.dense[index]
+        }
+    }
+
+    fn fd_model() -> NluModel {
+        NluModel {
+            vocab: 24,
+            d_model: 8,
+            num_heads: 2,
+            ff_dim: 12,
+            num_layers: 2,
+            seq_len: 4,
+            num_classes: 3,
+            batch_size: 4,
+            posenc: sinusoidal_posenc(4, 8),
+        }
+    }
+
+    fn rand_params(m: &NluModel, seed: u64) -> VecView {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let d = m.d_model;
+        let mut g = |n: usize, s: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.gauss() as f32 * s).collect()
+        };
+        let table = g(m.vocab * d, 0.3);
+        let ws = (d as f32).powf(-0.5);
+        let mut dense: Vec<Vec<f32>> = Vec::new();
+        for _l in 0..m.num_layers {
+            for _nm in 0..4 {
+                dense.push(g(d * d, ws));
+                dense.push(g(d, 0.05));
+            }
+            dense.push(g(d, 0.1).iter().map(|v| 1.0 + v).collect()); // ln1_g
+            dense.push(g(d, 0.05)); // ln1_b
+            dense.push(g(d * m.ff_dim, ws)); // ff1
+            dense.push(g(m.ff_dim, 0.05));
+            dense.push(g(m.ff_dim * d, (m.ff_dim as f32).powf(-0.5))); // ff2
+            dense.push(g(d, 0.05));
+            dense.push(g(d, 0.1).iter().map(|v| 1.0 + v).collect()); // ln2_g
+            dense.push(g(d, 0.05)); // ln2_b
+        }
+        dense.push(g(d * m.num_classes, 0.3)); // head_w
+        dense.push(g(m.num_classes, 0.1)); // head_b
+        VecView { table, d, dense }
+    }
+
+    // Batch with deliberate within-example token repeats (token 5 twice in
+    // example 0, token 9 twice in example 2, token 5 shared across 0 and 3).
+    const FD_IDS: [i32; 16] = [5, 5, 7, 2, 0, 1, 2, 3, 9, 11, 9, 4, 20, 6, 3, 5];
+    const FD_LABELS: [i32; 4] = [0, 2, 1, 0];
+
+    fn fd_check(got: f32, fd: f32, what: &str) {
+        let tol = 0.05 * got.abs().max(fd.abs()) + 3e-3;
+        assert!(
+            (got - fd).abs() <= tol,
+            "{what}: analytic {got} vs finite-difference {fd}"
+        );
+    }
+
+    #[test]
+    fn finite_difference_gradients_match() {
+        let m = fd_model();
+        let mut view = rand_params(&m, 1);
+        let (b, t, d) = (4usize, m.seq_len, m.d_model);
+        let batch = BatchRef::Text { seq_len: t, ids: &FD_IDS, labels: &FD_LABELS };
+        let g = m.grads_chunk(&view, &batch, 0, b, 1e9, 1e9);
+        assert!(g.scales.iter().all(|&s| s == 1.0), "huge C2 must not clip");
+        let eps = 1e-2f32;
+
+        // classifier head, bias and a spread of weight coordinates
+        let hb = m.head_b_index();
+        for c in 0..m.num_classes {
+            let orig = view.dense[hb][c];
+            view.dense[hb][c] = orig + eps;
+            let lp = m.forward_chunk(&view, &batch, 0, b).0;
+            view.dense[hb][c] = orig - eps;
+            let lm = m.forward_chunk(&view, &batch, 0, b).0;
+            view.dense[hb][c] = orig;
+            fd_check(g.dense_grads[1][c], (lp - lm) / (2.0 * eps), &format!("head_b[{c}]"));
+        }
+        let hw = m.head_w_index();
+        for &idx in &[0usize, 5, 10, 17, 23] {
+            let orig = view.dense[hw][idx];
+            view.dense[hw][idx] = orig + eps;
+            let lp = m.forward_chunk(&view, &batch, 0, b).0;
+            view.dense[hw][idx] = orig - eps;
+            let lm = m.forward_chunk(&view, &batch, 0, b).0;
+            view.dense[hw][idx] = orig;
+            fd_check(g.dense_grads[0][idx], (lp - lm) / (2.0 * eps), &format!("head_w[{idx}]"));
+        }
+
+        // embedding rows: the table gradient is the scatter-add of the
+        // per-position zgrads over token ids (repeats included)
+        for &(row, coord) in &[(5usize, 0usize), (5, 3), (7, 2), (2, 1), (9, 5), (20, 7)] {
+            let mut analytic = 0f32;
+            for (slot, &id) in FD_IDS.iter().enumerate() {
+                if id as usize == row {
+                    analytic += g.zgrads[slot * d + coord];
+                }
+            }
+            let orig = view.table[row * d + coord];
+            view.table[row * d + coord] = orig + eps;
+            let lp = m.forward_chunk(&view, &batch, 0, b).0;
+            view.table[row * d + coord] = orig - eps;
+            let lm = m.forward_chunk(&view, &batch, 0, b).0;
+            view.table[row * d + coord] = orig;
+            fd_check(analytic, (lp - lm) / (2.0 * eps), &format!("emb[{row},{coord}]"));
+        }
+
+        // a row no example touches does not affect the loss at all
+        let base = m.forward_chunk(&view, &batch, 0, b).0;
+        view.table[23 * d] += 0.5;
+        assert_eq!(base, m.forward_chunk(&view, &batch, 0, b).0);
+    }
+
+    #[test]
+    fn per_example_clip_caps_total_norm() {
+        let m = fd_model();
+        let view = rand_params(&m, 2);
+        let (t, d) = (m.seq_len, m.d_model);
+        let batch = BatchRef::Text { seq_len: t, ids: &FD_IDS, labels: &FD_LABELS };
+        let c2 = 0.05f32;
+        let mut clipped = 0;
+        for i in 0..4 {
+            let g = m.grads_chunk(&view, &batch, i, i + 1, 1.0, c2);
+            if g.scales[0] >= 1.0 {
+                continue;
+            }
+            clipped += 1;
+            // the clipped per-example norm (dense + scattered rows) is
+            // exactly C2
+            let mut sq = 0f64;
+            for buf in &g.dense_grads {
+                sq += buf.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            }
+            let ids_i = &FD_IDS[i * t..(i + 1) * t];
+            for p in 0..t {
+                for s in 0..t {
+                    if ids_i[p] == ids_i[s] {
+                        let rp = &g.zgrads[p * d..(p + 1) * d];
+                        let rs = &g.zgrads[s * d..(s + 1) * d];
+                        sq += rp
+                            .iter()
+                            .zip(rs)
+                            .map(|(&av, &bv)| av as f64 * bv as f64)
+                            .sum::<f64>();
+                    }
+                }
+            }
+            let norm = sq.sqrt();
+            assert!(
+                (norm - c2 as f64).abs() < 1e-4,
+                "example {i}: clipped norm {norm} != C2 {c2}"
+            );
+        }
+        assert!(clipped > 0, "no example clipped at C2 = {c2}");
+    }
+
+    #[test]
+    fn fwd_and_grads_agree_on_loss() {
+        let m = fd_model();
+        let view = rand_params(&m, 3);
+        let batch =
+            BatchRef::Text { seq_len: m.seq_len, ids: &FD_IDS, labels: &FD_LABELS };
+        let (fwd_loss, logits) = m.forward_chunk(&view, &batch, 0, 4);
+        assert_eq!(logits.len(), 4 * m.num_classes);
+        let g = m.grads_chunk(&view, &batch, 0, 4, 1e9, 1e9);
+        assert_eq!(fwd_loss, g.loss_sum, "fwd and grads losses must be bit-equal");
+    }
+
+    #[test]
+    fn contribution_map_uses_distinct_tokens() {
+        let m = fd_model();
+        let view = rand_params(&m, 4);
+        // example 0 repeats token 5: u = 3 distinct tokens {5, 7, 2}
+        let g = m.grads_chunk(
+            &view,
+            &BatchRef::Text { seq_len: m.seq_len, ids: &FD_IDS, labels: &FD_LABELS },
+            0,
+            1,
+            1e9,
+            1e9,
+        );
+        let counts: std::collections::HashMap<u32, f32> =
+            g.counts.iter().copied().collect();
+        let w = (1e9f32 / 3f32.sqrt()).min(1.0); // = 1.0
+        assert_eq!(counts.len(), 3);
+        assert_eq!(counts[&5], w, "repeated token counted once");
+        assert_eq!(counts[&7], w);
+        assert_eq!(counts[&2], w);
+    }
+
+    #[test]
+    fn builtin_nlu_executes_deterministically_and_points_downhill() {
+        use crate::models::ParamStore;
+        let man = builtin_manifest();
+        let model = man.model("nlu-tiny").unwrap();
+        let rm = RefModel::from_manifest(model).unwrap();
+        let (np, b) = (rm.num_params(), rm.batch_size());
+        let RefModel::Nlu(nm) = &rm else { panic!("nlu-tiny is nlu") };
+        let (t, d, vocab) = (nm.seq_len, nm.d_model, nm.vocab);
+        let store = ParamStore::init(model, 11).unwrap();
+        let mut rng = Xoshiro256::seed_from(5);
+        let ids: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32).collect();
+        let labels: Vec<i32> = (0..b).map(|_| rng.below(2) as i32).collect();
+        let mut inputs = store.tensors();
+        inputs.push(HostTensor::i32(vec![b, t], ids.clone()));
+        inputs.push(HostTensor::i32(vec![b], labels));
+
+        let backend = ReferenceBackend::default();
+        let art_f = man.artifact("nlu_tiny_fwd").unwrap();
+        let loss0 = backend.execute(&man, art_f, &inputs).unwrap()[0].scalar().unwrap();
+        assert!(loss0.is_finite() && loss0 > 0.0);
+
+        let mut ginputs = inputs.clone();
+        ginputs.push(HostTensor::f32(vec![1], vec![1e9]));
+        ginputs.push(HostTensor::f32(vec![1], vec![1e9]));
+        let art_g = man.artifact("nlu_tiny_grads").unwrap();
+        let g1 = backend.execute(&man, art_g, &ginputs).unwrap();
+        let g2 = backend.execute(&man, art_g, &ginputs).unwrap();
+        assert_eq!(g1, g2, "reference NLU execution must be deterministic");
+        assert_eq!(g1[0].scalar().unwrap(), loss0, "grads loss == fwd loss");
+
+        // one SGD step on the trainable params (head via dense grads,
+        // table via the zgrads scatter) must reduce the loss
+        let lr = 0.1f32 / b as f32;
+        let mut stepped = inputs;
+        for (out_i, param_i) in [(1, np - 2), (2, np - 1)] {
+            let gbuf = g1[out_i].as_f32().unwrap().to_vec();
+            let p = stepped[param_i].as_f32_mut().unwrap();
+            for (pv, &gv) in p.iter_mut().zip(&gbuf) {
+                *pv -= lr * gv;
+            }
+        }
+        let zg = g1[3].as_f32().unwrap().to_vec();
+        let table = stepped[0].as_f32_mut().unwrap();
+        for (slot, &id) in ids.iter().enumerate() {
+            let row = id as usize;
+            for k in 0..d {
+                table[row * d + k] -= lr * zg[slot * d + k];
+            }
+        }
+        let loss1 = backend.execute(&man, art_f, &stepped).unwrap()[0].scalar().unwrap();
+        assert!(loss1 < loss0, "loss did not decrease: {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn posenc_matches_reference_form() {
+        let pe = sinusoidal_posenc(4, 6);
+        assert_eq!(pe.len(), 24);
+        // position 0: sin(0)=0 on even dims, cos(0)=1 on odd dims
+        for i in 0..6 {
+            let want = if i % 2 == 0 { 0.0 } else { 1.0 };
+            assert!((pe[i] - want).abs() < 1e-6);
+        }
+        // values bounded and non-degenerate
+        assert!(pe.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        assert!(pe[6..].iter().any(|&v| v != 0.0 && v != 1.0));
+    }
+
+    #[test]
+    fn from_manifest_rejects_mismatched_inventories() {
+        let man = builtin_manifest();
+        let mut model = man.model("nlu-tiny").unwrap().clone();
+        model.params[1].name = "l0_lora_aq".to_string();
+        assert!(NluModel::from_manifest(&model).is_err());
+        let mut model = man.model("nlu-tiny").unwrap().clone();
+        model.attrs.insert("emb_lora_rank".into(), "8".into());
+        assert!(NluModel::from_manifest(&model).is_err());
+    }
+}

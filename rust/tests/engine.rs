@@ -2,7 +2,8 @@
 //! AOT artifacts needed):
 //!
 //! * sync-vs-async **exact** equivalence (loss history, utility, noised
-//!   coordinate counts) across worker/shard/microbatch settings;
+//!   coordinate counts) across worker/shard/microbatch settings — on both
+//!   the pCTR tower and the native NLU transformer;
 //! * the noise-draw-order invariant (a `ParamStore` sink and a sharded sink
 //!   consume the identical RNG stream and produce identical parameters);
 //! * sharded-store concurrent-update correctness under the in-repo property
@@ -12,7 +13,7 @@
 use sparse_dp_emb::config::RunConfig;
 use sparse_dp_emb::coordinator::step::{GradBundle, StepState};
 use sparse_dp_emb::coordinator::{Algorithm, Trainer};
-use sparse_dp_emb::data::{CriteoConfig, SynthCriteo};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
 use sparse_dp_emb::engine::{self, ShardedStore, ShardedTable};
 use sparse_dp_emb::models::ParamStore;
 use sparse_dp_emb::proptest::{check, ensure, usize_in};
@@ -34,6 +35,22 @@ fn gen_cfg(rt: &Runtime, cfg: &RunConfig) -> CriteoConfig {
     let model = rt.manifest.model(&cfg.model).unwrap();
     let vocabs = model.attr_usize_list("vocabs").unwrap();
     CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A)
+}
+
+fn tiny_nlu_cfg(algo: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "nlu-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 4;
+    cfg.eval_batches = 2;
+    cfg.c2 = 0.5;
+    cfg.tau = 2.0;
+    cfg
+}
+
+fn text_cfg(rt: &Runtime, cfg: &RunConfig) -> TextConfig {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    TextConfig::from_model(model, cfg.seed ^ 0xDA7A).unwrap()
 }
 
 fn assert_outcomes_identical(
@@ -76,9 +93,7 @@ fn async_outcome_is_invariant_to_engine_knobs() {
     let gcfg = gen_cfg(&rt, &base);
     let reference = engine::run_pctr(&base, &rt, gcfg.clone()).unwrap();
     // (grad workers, data workers, channel depth, shards, microbatch chunks)
-    for (gw, dw, depth, shards, mb) in
-        [(1, 1, 1, 1, 1), (3, 2, 2, 7, 2), (8, 4, 16, 64, 100)]
-    {
+    for (gw, dw, depth, shards, mb) in [(1, 1, 1, 1, 1), (3, 2, 2, 7, 2), (8, 4, 16, 64, 100)] {
         let mut cfg = base.clone();
         cfg.engine.grad_workers = gw;
         cfg.engine.data_workers = dw;
@@ -92,6 +107,68 @@ fn async_outcome_is_invariant_to_engine_knobs() {
             &format!("engine knobs ({gw},{dw},{depth},{shards},{mb})"),
         );
     }
+}
+
+#[test]
+fn sync_and_async_nlu_outcomes_match_exactly() {
+    // the acceptance bar of the native transformer executor: train and
+    // train-async produce bit-identical outcomes on the text workload
+    let rt = Runtime::builtin();
+    for algo in [Algorithm::NonPrivate, Algorithm::DpSgd, Algorithm::DpAdaFest] {
+        let cfg = tiny_nlu_cfg(algo);
+        let tcfg = text_cfg(&rt, &cfg);
+
+        let gen = SynthText::new(tcfg.clone());
+        let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+        let sync_out = trainer.run_text(&gen).unwrap();
+        assert!(sync_out.loss_history.iter().all(|l| l.is_finite()), "{algo:?}");
+
+        let async_out = engine::run_text(&cfg, &rt, tcfg).unwrap();
+        assert_outcomes_identical(&sync_out, &async_out, &format!("nlu {algo:?}"));
+    }
+}
+
+#[test]
+fn async_nlu_outcome_is_invariant_to_engine_knobs() {
+    let rt = Runtime::builtin();
+    let base = tiny_nlu_cfg(Algorithm::DpAdaFest);
+    let tcfg = text_cfg(&rt, &base);
+    let reference = engine::run_text(&base, &rt, tcfg.clone()).unwrap();
+    for (gw, dw, depth, shards, mb) in [(1, 1, 1, 1, 1), (3, 2, 2, 7, 2), (8, 4, 16, 64, 100)] {
+        let mut cfg = base.clone();
+        cfg.engine.grad_workers = gw;
+        cfg.engine.data_workers = dw;
+        cfg.engine.channel_depth = depth;
+        cfg.engine.shards = shards;
+        cfg.engine.microbatch_chunks = mb;
+        let out = engine::run_text(&cfg, &rt, tcfg.clone()).unwrap();
+        assert_outcomes_identical(
+            &reference,
+            &out,
+            &format!("nlu engine knobs ({gw},{dw},{depth},{shards},{mb})"),
+        );
+    }
+}
+
+#[test]
+fn generic_engine_run_matches_sync_on_both_kinds() {
+    // engine::run derives the data source from the manifest exactly like
+    // the sync CLI path, for pctr and nlu alike
+    let rt = Runtime::builtin();
+
+    let cfg = tiny_cfg(Algorithm::DpAdaFest);
+    let gen = SynthCriteo::new(gen_cfg(&rt, &cfg));
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let sync_out = trainer.run_pctr(&gen).unwrap();
+    let async_out = engine::run(&cfg, &rt).unwrap();
+    assert_outcomes_identical(&sync_out, &async_out, "engine::run pctr");
+
+    let cfg = tiny_nlu_cfg(Algorithm::DpAdaFest);
+    let gen = SynthText::new(text_cfg(&rt, &cfg));
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let sync_out = trainer.run_text(&gen).unwrap();
+    let async_out = engine::run(&cfg, &rt).unwrap();
+    assert_outcomes_identical(&sync_out, &async_out, "engine::run nlu");
 }
 
 #[test]
@@ -224,6 +301,22 @@ fn engine_handles_degenerate_configs_without_deadlock() {
     cfg.model = "no-such-model".into();
     let vocabs = vec![8usize];
     assert!(engine::run_pctr(&cfg, &rt, CriteoConfig::new(vocabs, 1)).is_err());
+}
+
+#[test]
+fn engine_rejects_mismatched_generator_geometry() {
+    // grad workers bypass Runtime::execute's shape checks, so the engine
+    // must validate generator geometry up front instead of silently
+    // scattering gradients onto wrong rows
+    let rt = Runtime::builtin();
+    let nlu = tiny_nlu_cfg(Algorithm::NonPrivate);
+    let wrong_seq = TextConfig::new(512, 16, 2, 1); // nlu-tiny has seq_len 12
+    assert!(engine::run_text(&nlu, &rt, wrong_seq).is_err());
+    let wrong_vocab = TextConfig::new(256, 12, 2, 1); // nlu-tiny has vocab 512
+    assert!(engine::run_text(&nlu, &rt, wrong_vocab).is_err());
+    let pctr = tiny_cfg(Algorithm::NonPrivate);
+    let wrong_features = CriteoConfig::new(vec![8, 8], 1); // criteo-tiny has 4
+    assert!(engine::run_pctr(&pctr, &rt, wrong_features).is_err());
 }
 
 #[test]

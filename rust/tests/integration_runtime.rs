@@ -1,20 +1,25 @@
-//! Integration tests over real AOT artifacts: load, execute, shape-check,
-//! and verify the numerical contract between the artifacts and the Rust
-//! coordinator.  Skipped gracefully if `make artifacts` has not run.
+//! Runtime integration: the artifact contract (shapes, determinism, clip
+//! bounds, contribution-map mass) checked end-to-end.
+//!
+//! The contract checks are parameterized over a runtime + model names and
+//! run **unconditionally** against the built-in reference manifest (pCTR
+//! and the native NLU transformer).  The same checks run a second time over
+//! real AOT artifacts when `artifacts/manifest.txt` exists and the `xla`
+//! feature is compiled in — that leg alone is gated, because it is the only
+//! part that needs the PJRT backend.
 
 use sparse_dp_emb::models::ParamStore;
 use sparse_dp_emb::runtime::{HostTensor, Runtime};
 use sparse_dp_emb::util::rng::Xoshiro256;
 
-fn runtime() -> Option<Runtime> {
+/// Artifact-gated runtime for the xla-specific leg only.
+fn artifact_runtime() -> Option<Runtime> {
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        eprintln!("skipping xla leg: artifacts/ not built (run `make artifacts`)");
         return None;
     }
     if !cfg!(feature = "xla") {
-        // These tests verify the PJRT/HLO artifact contract; the reference
-        // backend would execute (or, for NLU, reject) them natively.
-        eprintln!("skipping: artifacts present but built without --features xla");
+        eprintln!("skipping xla leg: artifacts present but built without --features xla");
         return None;
     }
     Some(Runtime::new("artifacts").expect("runtime init"))
@@ -22,9 +27,10 @@ fn runtime() -> Option<Runtime> {
 
 fn pctr_batch_tensors(
     rt: &Runtime,
+    model_name: &str,
     seed: u64,
 ) -> (Vec<HostTensor>, Vec<i32>, usize, usize) {
-    let model = rt.manifest.model("criteo-small").unwrap();
+    let model = rt.manifest.model(model_name).unwrap();
     let vocabs = model.attr_usize_list("vocabs").unwrap();
     let b = model.attr_usize("batch_size").unwrap();
     let nn = model.attr_usize("num_numeric").unwrap();
@@ -47,16 +53,14 @@ fn pctr_batch_tensors(
     )
 }
 
-#[test]
-fn pctr_fwd_shapes_and_determinism() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("criteo-small").unwrap();
+fn check_pctr_fwd(rt: &Runtime, model_name: &str, artifact: &str) {
+    let model = rt.manifest.model(model_name).unwrap();
     let store = ParamStore::init(model, 3).unwrap();
-    let (batch, _, b, _) = pctr_batch_tensors(&rt, 17);
+    let (batch, _, b, _) = pctr_batch_tensors(rt, model_name, 17);
 
     let mut inputs = store.tensors();
-    inputs.extend(batch.clone());
-    let out1 = rt.execute("pctr_fwd", &inputs).unwrap();
+    inputs.extend(batch);
+    let out1 = rt.execute(artifact, &inputs).unwrap();
     assert_eq!(out1.len(), 2);
     let loss = out1[0].scalar().unwrap();
     assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
@@ -64,27 +68,25 @@ fn pctr_fwd_shapes_and_determinism() {
 
     // executing twice with identical inputs is bit-identical (no hidden RNG
     // inside the artifact — all randomness is ours)
-    let out2 = rt.execute("pctr_fwd", &inputs).unwrap();
+    let out2 = rt.execute(artifact, &inputs).unwrap();
     assert_eq!(out1[0], out2[0]);
     assert_eq!(out1[1], out2[1]);
 }
 
-#[test]
-fn pctr_grads_contract() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("criteo-small").unwrap();
+fn check_pctr_grads(rt: &Runtime, model_name: &str, artifact: &str) {
+    let model = rt.manifest.model(model_name).unwrap();
     let store = ParamStore::init(model, 3).unwrap();
-    let art = rt.manifest.artifact("pctr_grads").unwrap();
+    let art = rt.manifest.artifact(artifact).unwrap();
     store.check_against(&art.inputs).unwrap();
 
-    let (batch, cat, b, nf) = pctr_batch_tensors(&rt, 11);
+    let (batch, cat, b, nf) = pctr_batch_tensors(rt, model_name, 11);
     let mut inputs = store.tensors();
     inputs.extend(batch);
     inputs.push(HostTensor::f32(vec![1], vec![1.0])); // c1
     inputs.push(HostTensor::f32(vec![1], vec![0.5])); // c2
-    let outs = rt.execute_named("pctr_grads", &inputs).unwrap();
+    let outs = rt.execute_named(artifact, &inputs).unwrap();
 
-    // (1) loss agrees with the fwd artifact at huge clip... here: finite
+    // (1) loss is finite
     let loss = outs["loss"].scalar().unwrap();
     assert!(loss.is_finite());
 
@@ -118,8 +120,8 @@ fn pctr_grads_contract() {
         w * (b * nf) as f64
     );
 
-    // (4) per-example clipped grad norm <= c2: check via zgrads + dense
-    //     grads... the scaled zgrads alone must satisfy ||zg_i|| <= c2
+    // (4) per-example clipped grad norm <= c2: the scaled zgrads alone must
+    //     satisfy ||zg_i|| <= c2
     let zg = outs["zgrads_scaled"].as_f32().unwrap();
     let d_total = zg.len() / b;
     for i in 0..b {
@@ -131,19 +133,18 @@ fn pctr_grads_contract() {
     }
 }
 
-#[test]
-fn nlu_grads_contract() {
-    let Some(rt) = runtime() else { return };
-    let model = rt.manifest.model("nlu-roberta").unwrap();
+fn check_nlu_grads(rt: &Runtime, model_name: &str, artifact: &str, probe_token: i32) {
+    let model = rt.manifest.model(model_name).unwrap();
     let store = ParamStore::init(model, 5).unwrap();
     let vocab = model.attr_usize("vocab").unwrap();
     let b = model.attr_usize("batch_size").unwrap();
     let t = model.attr_usize("seq_len").unwrap();
+    assert!((probe_token as usize) < vocab);
     let mut rng = Xoshiro256::seed_from(23);
     let mut ids: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32).collect();
     // force repeated tokens in example 0 to exercise the within-example sum
-    for p in 0..t {
-        ids[p] = 777;
+    for slot in ids.iter_mut().take(t) {
+        *slot = probe_token;
     }
     let labels: Vec<i32> = (0..b).map(|_| rng.below(2) as i32).collect();
 
@@ -152,7 +153,7 @@ fn nlu_grads_contract() {
     inputs.push(HostTensor::i32(vec![b], labels));
     inputs.push(HostTensor::f32(vec![1], vec![100.0])); // c1 loose
     inputs.push(HostTensor::f32(vec![1], vec![0.05])); // c2 tight
-    let outs = rt.execute_named("nlu_grads", &inputs).unwrap();
+    let outs = rt.execute_named(artifact, &inputs).unwrap();
 
     // scattered row norm for the all-repeated example obeys the clip
     let zg = outs["zgrads_scaled"].as_f32().unwrap();
@@ -166,15 +167,116 @@ fn nlu_grads_contract() {
     let norm: f64 = row.iter().map(|v| v * v).sum::<f64>().sqrt();
     assert!(norm <= 0.05 * (1.0 + 1e-3), "scattered norm {norm} > c2");
 
-    // counts: token 777 gets exactly 1 contribution from example 0 (unique
-    // within the example), plus whatever other examples add
+    // counts: the probe token gets exactly 1 contribution from example 0
+    // (unique within the example), plus whatever other examples add
     let counts = outs["counts"].as_f32().unwrap();
-    assert!(counts[777] >= 1.0 - 1e-4);
+    assert!(counts[probe_token as usize] >= 1.0 - 1e-4);
+
+    // determinism of the full grads tuple
+    let again = rt.execute_named(artifact, &inputs).unwrap();
+    assert_eq!(outs["zgrads_scaled"], again["zgrads_scaled"]);
+    assert_eq!(outs["counts"], again["counts"]);
+}
+
+// ---- reference runtime: unconditional, artifact-free ----
+
+#[test]
+fn reference_pctr_fwd_contract() {
+    check_pctr_fwd(&Runtime::builtin(), "criteo-small", "pctr_fwd");
 }
 
 #[test]
-fn artifact_rejects_bad_shapes() {
-    let Some(rt) = runtime() else { return };
+fn reference_pctr_grads_contract() {
+    check_pctr_grads(&Runtime::builtin(), "criteo-small", "pctr_grads");
+}
+
+#[test]
+fn reference_nlu_grads_contract() {
+    check_nlu_grads(&Runtime::builtin(), "nlu-tiny", "nlu_tiny_grads", 77);
+}
+
+#[test]
+fn reference_nlu_fwd_shapes_and_determinism() {
+    let rt = Runtime::builtin();
+    let model = rt.manifest.model("nlu-tiny").unwrap();
+    let store = ParamStore::init(model, 9).unwrap();
+    let (vocab, b, t) = (
+        model.attr_usize("vocab").unwrap(),
+        model.attr_usize("batch_size").unwrap(),
+        model.attr_usize("seq_len").unwrap(),
+    );
+    let c = model.attr_usize("num_classes").unwrap();
+    let mut rng = Xoshiro256::seed_from(31);
+    let ids: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32).collect();
+    let labels: Vec<i32> = (0..b).map(|_| rng.below(c as u64) as i32).collect();
+    let mut inputs = store.tensors();
+    inputs.push(HostTensor::i32(vec![b, t], ids));
+    inputs.push(HostTensor::i32(vec![b], labels));
+    let out1 = rt.execute("nlu_tiny_fwd", &inputs).unwrap();
+    assert_eq!(out1.len(), 2);
+    assert!(out1[0].scalar().unwrap().is_finite());
+    assert_eq!(out1[1].dims(), &[b, c]);
+    let out2 = rt.execute("nlu_tiny_fwd", &inputs).unwrap();
+    assert_eq!(out1, out2);
+}
+
+#[test]
+fn reference_nlu_sparse_rows_align_with_dense_scatter() {
+    // The row-sparse table gradient assembled from zgrads_scaled must equal
+    // a brute-force dense scatter-add over (example, position) token ids.
+    use sparse_dp_emb::coordinator::step::{assemble_text, output_plan, EmbTable, OutputKind};
+    use sparse_dp_emb::data::TextBatch;
+
+    let rt = Runtime::builtin();
+    let model = rt.manifest.model("nlu-tiny").unwrap();
+    let store = ParamStore::init(model, 5).unwrap();
+    let (vocab, b, t) = (
+        model.attr_usize("vocab").unwrap(),
+        model.attr_usize("batch_size").unwrap(),
+        model.attr_usize("seq_len").unwrap(),
+    );
+    let d = model.attr_usize("d_model").unwrap();
+    let mut rng = Xoshiro256::seed_from(41);
+    let ids: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32).collect();
+    let labels: Vec<i32> = (0..b).map(|_| rng.below(2) as i32).collect();
+    let mut inputs = store.tensors();
+    inputs.push(HostTensor::i32(vec![b, t], ids.clone()));
+    inputs.push(HostTensor::i32(vec![b], labels.clone()));
+    inputs.push(HostTensor::f32(vec![1], vec![1.0]));
+    inputs.push(HostTensor::f32(vec![1], vec![0.5]));
+    let outs = rt.execute("nlu_tiny_grads", &inputs).unwrap();
+
+    let art = rt.manifest.artifact("nlu_tiny_grads").unwrap();
+    let plan: Vec<OutputKind> = output_plan(art, &store).unwrap();
+    let tables = vec![EmbTable {
+        param_index: 0,
+        name: "emb_table".to_string(),
+        vocab,
+        dim: d,
+        row_offset: 0,
+        grad_offset: 0,
+    }];
+    let batch = TextBatch { batch_size: b, seq_len: t, ids: ids.clone(), labels };
+    let bundle = assemble_text(&plan, &outs, &tables, &batch, t, true).unwrap();
+    assert_eq!(bundle.table_grads.len(), 1);
+    let sparse_dense = bundle.table_grads[0].to_dense();
+
+    // brute-force dense reference
+    let zg_idx = art.output_index("zgrads_scaled").unwrap();
+    let zg = outs[zg_idx].as_f32().unwrap();
+    let mut want = vec![0f32; vocab * d];
+    for (slot, &id) in ids.iter().enumerate() {
+        let row = id as usize;
+        for k in 0..d {
+            want[row * d + k] += zg[slot * d + k];
+        }
+    }
+    assert_eq!(sparse_dense, want, "sparse rows must equal the dense scatter");
+}
+
+#[test]
+fn reference_rejects_bad_shapes() {
+    let rt = Runtime::builtin();
     let model = rt.manifest.model("criteo-small").unwrap();
     let store = ParamStore::init(model, 3).unwrap();
     let mut inputs = store.tensors();
@@ -182,4 +284,14 @@ fn artifact_rejects_bad_shapes() {
     inputs.push(HostTensor::i32(vec![4], vec![0, 0, 0, 0]));
     let err = rt.execute("pctr_fwd", &inputs).unwrap_err().to_string();
     assert!(err.contains("inputs"), "unexpected error: {err}");
+}
+
+// ---- xla leg: same contracts over real AOT artifacts (gated) ----
+
+#[test]
+fn xla_artifact_contracts() {
+    let Some(rt) = artifact_runtime() else { return };
+    check_pctr_fwd(&rt, "criteo-small", "pctr_fwd");
+    check_pctr_grads(&rt, "criteo-small", "pctr_grads");
+    check_nlu_grads(&rt, "nlu-roberta", "nlu_grads", 777);
 }

@@ -1,28 +1,19 @@
 //! End-to-end coordinator integration: every algorithm trains for a handful
-//! of steps on real artifacts; invariants across algorithms are checked
-//! (loss decreases non-privately, gradient-size ordering, survivor
-//! semantics, frozen embeddings untouched).
+//! of steps; invariants across algorithms are checked (loss decreases
+//! non-privately, gradient-size ordering, survivor semantics, frozen
+//! embeddings untouched).
+//!
+//! Everything here runs **unconditionally** over the built-in reference
+//! manifest — pCTR on `criteo-small`/`criteo-tiny`, NLU on the native
+//! transformer `nlu-tiny`.  Only the final section (artifact-only models:
+//! the RoBERTa/XLM-R stand-ins and the LoRA-on-embedding variants) keeps
+//! the `artifacts/manifest.txt` + `--features xla` gate.
 
 use sparse_dp_emb::config::RunConfig;
 use sparse_dp_emb::coordinator::{Algorithm, StreamingTrainer, Trainer};
 use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
 use sparse_dp_emb::runtime::Runtime;
 use sparse_dp_emb::util::rng::Xoshiro256;
-
-fn runtime() -> Option<Runtime> {
-    if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
-        return None;
-    }
-    if !cfg!(feature = "xla") {
-        // NLU models here require the PJRT backend; without it the
-        // reference runtime would reject them mid-test instead of skipping.
-        // (The pctr coverage runs artifact-free in tests/engine.rs.)
-        eprintln!("skipping: artifacts present but built without --features xla");
-        return None;
-    }
-    Some(Runtime::new("artifacts").expect("runtime init"))
-}
 
 fn base_cfg(algo: Algorithm) -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -40,9 +31,14 @@ fn criteo_gen(rt: &Runtime, cfg: &RunConfig) -> SynthCriteo {
     SynthCriteo::new(CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A))
 }
 
+fn text_gen(rt: &Runtime, cfg: &RunConfig) -> SynthText {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    SynthText::new(TextConfig::from_model(model, cfg.seed ^ 0xDA7A).unwrap())
+}
+
 #[test]
 fn nonprivate_loss_decreases() {
-    let Some(rt) = runtime() else { return };
+    let rt = Runtime::builtin();
     let mut cfg = base_cfg(Algorithm::NonPrivate);
     cfg.steps = 60;
     let gen = criteo_gen(&rt, &cfg);
@@ -57,12 +53,12 @@ fn nonprivate_loss_decreases() {
         last < first - 0.01,
         "loss did not decrease: {first:.4} -> {last:.4}"
     );
-    assert!(out.utility > 0.55, "AUC {africa}", africa = out.utility);
+    assert!(out.utility > 0.52, "AUC {}", out.utility);
 }
 
 #[test]
 fn all_algorithms_run_and_grad_size_ordering_holds() {
-    let Some(rt) = runtime() else { return };
+    let rt = Runtime::builtin();
     let mut sizes = std::collections::HashMap::new();
     for algo in [
         Algorithm::DpSgd,
@@ -107,7 +103,7 @@ fn all_algorithms_run_and_grad_size_ordering_holds() {
 
 #[test]
 fn dp_sgd_noises_every_embedding_coordinate() {
-    let Some(rt) = runtime() else { return };
+    let rt = Runtime::builtin();
     let cfg = base_cfg(Algorithm::DpSgd);
     let gen = criteo_gen(&rt, &cfg);
     let mut trainer = Trainer::new(cfg, &rt).unwrap();
@@ -121,7 +117,7 @@ fn dp_sgd_noises_every_embedding_coordinate() {
 
 #[test]
 fn tau_monotonically_shrinks_gradient_size() {
-    let Some(rt) = runtime() else { return };
+    let rt = Runtime::builtin();
     let mut prev = f64::INFINITY;
     for tau in [0.5, 5.0, 50.0] {
         let mut cfg = base_cfg(Algorithm::DpAdaFest);
@@ -140,20 +136,14 @@ fn tau_monotonically_shrinks_gradient_size() {
 
 #[test]
 fn frozen_embedding_is_untouched() {
-    let Some(rt) = runtime() else { return };
+    let rt = Runtime::builtin();
     let mut cfg = RunConfig::default();
-    cfg.model = "nlu-roberta".into();
+    cfg.model = "nlu-tiny".into();
     cfg.algorithm = Algorithm::DpSgd;
     cfg.freeze_embedding = true;
     cfg.steps = 3;
     cfg.eval_batches = 2;
-    let model = rt.manifest.model(&cfg.model).unwrap();
-    let gen = SynthText::new(TextConfig::new(
-        model.attr_usize("vocab").unwrap(),
-        model.attr_usize("seq_len").unwrap(),
-        model.attr_usize("num_classes").unwrap(),
-        3,
-    ));
+    let gen = text_gen(&rt, &cfg);
     let mut trainer = Trainer::new(cfg, &rt).unwrap();
     let emb_before = trainer
         .store
@@ -180,34 +170,33 @@ fn frozen_embedding_is_untouched() {
 }
 
 #[test]
-fn nlu_and_xlmr_train() {
-    let Some(rt) = runtime() else { return };
-    for model_name in ["nlu-roberta", "nlu-xlmr"] {
-        let mut cfg = RunConfig::default();
-        cfg.model = model_name.into();
-        cfg.algorithm = Algorithm::DpAdaFest;
-        cfg.steps = 4;
-        cfg.eval_batches = 2;
-        cfg.tau = 2.0;
-        let model = rt.manifest.model(&cfg.model).unwrap();
-        let gen = SynthText::new(TextConfig::new(
-            model.attr_usize("vocab").unwrap(),
-            model.attr_usize("seq_len").unwrap(),
-            model.attr_usize("num_classes").unwrap(),
-            7,
-        ));
-        let mut trainer = Trainer::new(cfg, &rt).unwrap();
-        let out = trainer.run_text(&gen).unwrap();
-        assert!(out.utility.is_finite() && out.utility >= 0.0);
-        assert!(out.reduction_factor > 1.0, "{model_name}: no reduction");
-    }
+fn nlu_trains_artifact_free() {
+    // the native transformer executor drives the full NLU pipeline with no
+    // AOT artifacts: DP-AdaFEST selection sparsifies the vocabulary
+    let rt = Runtime::builtin();
+    let mut cfg = RunConfig::default();
+    cfg.model = "nlu-tiny".into();
+    cfg.algorithm = Algorithm::DpAdaFest;
+    cfg.steps = 4;
+    cfg.eval_batches = 2;
+    cfg.tau = 2.0;
+    let gen = text_gen(&rt, &cfg);
+    let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    let out = trainer.run_text(&gen).unwrap();
+    assert!(out.loss_history.iter().all(|l| l.is_finite()));
+    assert!(out.utility.is_finite() && out.utility >= 0.0);
+    assert!(out.reduction_factor > 1.0, "nlu-tiny: no reduction");
 }
 
 #[test]
 fn streaming_protocol_runs_and_evals_future_days() {
-    let Some(rt) = runtime() else { return };
-    let mut cfg = base_cfg(Algorithm::DpAdaFestPlus);
+    let rt = Runtime::builtin();
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-tiny".into();
+    cfg.algorithm = Algorithm::DpAdaFestPlus;
+    cfg.c2 = 0.5;
     cfg.steps = 36; // 2/day
+    cfg.eval_batches = 4;
     cfg.streaming_period = 2;
     cfg.fest_top_k = 2048;
     let model = rt.manifest.model(&cfg.model).unwrap();
@@ -221,21 +210,47 @@ fn streaming_protocol_runs_and_evals_future_days() {
     assert!(out.outcome.utility.is_finite());
 }
 
+// ---- artifact-only models: xla-gated leg ----
+
+fn artifact_runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping xla leg: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping xla leg: artifacts present but built without --features xla");
+        return None;
+    }
+    Some(Runtime::new("artifacts").expect("runtime init"))
+}
+
 #[test]
-fn loraemb_model_trains_densely() {
-    let Some(rt) = runtime() else { return };
+fn xla_nlu_and_xlmr_train() {
+    let Some(rt) = artifact_runtime() else { return };
+    for model_name in ["nlu-roberta", "nlu-xlmr"] {
+        let mut cfg = RunConfig::default();
+        cfg.model = model_name.into();
+        cfg.algorithm = Algorithm::DpAdaFest;
+        cfg.steps = 4;
+        cfg.eval_batches = 2;
+        cfg.tau = 2.0;
+        let gen = text_gen(&rt, &cfg);
+        let mut trainer = Trainer::new(cfg, &rt).unwrap();
+        let out = trainer.run_text(&gen).unwrap();
+        assert!(out.utility.is_finite() && out.utility >= 0.0);
+        assert!(out.reduction_factor > 1.0, "{model_name}: no reduction");
+    }
+}
+
+#[test]
+fn xla_loraemb_model_trains_densely() {
+    let Some(rt) = artifact_runtime() else { return };
     let mut cfg = RunConfig::default();
     cfg.model = "nlu-roberta-loraemb16".into();
     cfg.algorithm = Algorithm::DpSgd;
     cfg.steps = 3;
     cfg.eval_batches = 2;
-    let model = rt.manifest.model(&cfg.model).unwrap();
-    let gen = SynthText::new(TextConfig::new(
-        model.attr_usize("vocab").unwrap(),
-        model.attr_usize("seq_len").unwrap(),
-        model.attr_usize("num_classes").unwrap(),
-        7,
-    ));
+    let gen = text_gen(&rt, &cfg);
     let mut trainer = Trainer::new(cfg, &rt).unwrap();
     let emb_lora_coords = trainer.store.get("emb_lora_a").unwrap().num_elements();
     let out = trainer.run_text(&gen).unwrap();
