@@ -7,7 +7,7 @@ pub enum Algorithm {
     NonPrivate,
     /// vanilla DP-SGD: dense Gaussian noise on every coordinate (Eq. 1)
     DpSgd,
-    /// DP-SGD with exponential selection [ZMH21] (baseline)
+    /// DP-SGD with exponential selection \[ZMH21\] (baseline)
     ExpSelection,
     /// DP-FEST (§3.1): frequency-filtered pre-selected buckets
     DpFest,
@@ -18,6 +18,7 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Does this algorithm clip and noise at all?
     pub fn is_private(self) -> bool {
         self != Algorithm::NonPrivate
     }
@@ -32,6 +33,7 @@ impl Algorithm {
         matches!(self, Algorithm::DpFest | Algorithm::DpAdaFestPlus)
     }
 
+    /// Every algorithm, in the paper's presentation order.
     pub fn all() -> [Algorithm; 6] {
         [
             Algorithm::NonPrivate,
@@ -43,6 +45,7 @@ impl Algorithm {
         ]
     }
 
+    /// The CLI/CSV name (round-trips through [`str::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             Algorithm::NonPrivate => "non-private",

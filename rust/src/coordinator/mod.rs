@@ -11,18 +11,22 @@
 //! The step mechanics live in [`step`] — shared verbatim with the
 //! asynchronous sharded engine ([`crate::engine`]), so the two paths are
 //! bit-for-bit equivalent (same noise stream, same batch streams, same
-//! reductions).
+//! reductions).  The §4.3 time-series protocol lives in [`streaming`]: one
+//! [`StreamSchedule`] drives both the synchronous [`StreamingTrainer`] and
+//! the engine's streaming mode.
 //!
 //! [`Algorithm`] enumerates the paper's methods and baselines:
-//! `NonPrivate`, `DpSgd` (dense noise), `ExpSelection` [ZMH21], `DpFest`
+//! `NonPrivate`, `DpSgd` (dense noise), `ExpSelection` \[ZMH21\], `DpFest`
 //! (§3.1), `DpAdaFest` (§3.2 / Algorithm 1), `DpAdaFestPlus` (§4.2).
+
+#![warn(missing_docs)]
 
 mod algorithm;
 pub mod step;
-mod streaming;
+pub mod streaming;
 mod trainer;
 
 pub use algorithm::Algorithm;
 pub use step::{EmbTable, ModelMeta, StepState, StepStats, TrainOutcome};
-pub use streaming::{StreamingOutcome, StreamingTrainer};
+pub use streaming::{StreamSchedule, StreamingOutcome, StreamingTrainer};
 pub use trainer::{pctr_frequency_counts, text_frequency_counts, Trainer};

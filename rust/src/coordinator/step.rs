@@ -50,10 +50,15 @@ use super::algorithm::Algorithm;
 /// One embedding table's geometry in the concatenated row space.
 #[derive(Clone, Debug)]
 pub struct EmbTable {
+    /// index of the table's parameter in the param store
     pub param_index: usize,
+    /// parameter name in the manifest (e.g. `table_03`, `emb_table`)
     pub name: String,
+    /// number of rows (buckets / tokens)
     pub vocab: usize,
+    /// embedding dimension
     pub dim: usize,
+    /// offset of this table's first row in the concatenated row space
     pub row_offset: usize,
     /// offset of this table's slice in the artifact's per-example grads
     pub grad_offset: usize,
@@ -62,19 +67,28 @@ pub struct EmbTable {
 /// Model-kind-specific metadata derived from the manifest.
 #[derive(Clone, Debug)]
 pub enum ModelMeta {
+    /// the Criteo-style pCTR tower
     Pctr {
+        /// examples per training batch
         batch_size: usize,
+        /// numeric (dense) input features
         num_numeric: usize,
+        /// categorical features (= embedding tables)
         num_features: usize,
     },
+    /// the NLU transformer classifier
     Nlu {
+        /// examples per training batch
         batch_size: usize,
+        /// tokens per example
         seq_len: usize,
+        /// classification classes
         num_classes: usize,
     },
 }
 
 impl ModelMeta {
+    /// The model's fixed training batch size.
     pub fn batch_size(&self) -> usize {
         match self {
             ModelMeta::Pctr { batch_size, .. } | ModelMeta::Nlu { batch_size, .. } => {
@@ -87,30 +101,50 @@ impl ModelMeta {
 /// How each grads-artifact output is consumed.
 #[derive(Clone, Debug)]
 pub enum OutputKind {
+    /// the scalar training loss
     Loss,
-    DenseGrad(usize), // param index
+    /// clipped-sum gradient of the dense parameter at this index
+    DenseGrad(usize),
+    /// the per-example scaled embedding gradients (`zgrads_scaled`)
     EmbGrads,
+    /// the pre-noise contribution map over the concatenated row space
     Counts,
+    /// per-example clip scales (diagnostic; unused by the update path)
     Scales,
 }
 
+/// Per-step bookkeeping returned by [`StepState::apply_update`].
 #[derive(Clone, Debug, Default)]
 pub struct StepStats {
+    /// training loss of the step's batch
     pub loss: f64,
+    /// embedding coordinates that received σ₂ noise
     pub emb_coords_noised: usize,
+    /// dense coordinates that received σ₂ noise
     pub dense_coords_noised: usize,
+    /// surviving embedding rows after selection
     pub survivors: usize,
+    /// embedding rows with a nonzero gradient before selection
     pub present_rows: usize,
 }
 
+/// What one full training run reports.
 #[derive(Clone, Debug)]
 pub struct TrainOutcome {
+    /// per-step training loss
     pub loss_history: Vec<f64>,
-    pub utility: f64, // AUC (pctr) or accuracy (nlu)
+    /// eval utility: AUC (pctr) or accuracy (nlu)
+    pub utility: f64,
+    /// mean eval loss
     pub eval_loss: f64,
+    /// mean noised embedding-gradient coordinates per step
     pub emb_grad_coords_per_step: f64,
+    /// dense-DP-SGD size over this run's gradient size (the paper's
+    /// headline reduction factor)
     pub reduction_factor: f64,
+    /// calibrated contribution-map noise multiplier
     pub sigma1: f64,
+    /// calibrated gradient noise multiplier
     pub sigma2: f64,
 }
 
@@ -119,7 +153,9 @@ pub struct TrainOutcome {
 /// from artifact outputs — identically in the sync and async paths.
 #[derive(Clone, Debug)]
 pub struct GradBundle {
+    /// the batch's training loss
     pub loss: f64,
+    /// per-table row-sparse clipped-sum gradients
     pub table_grads: Vec<RowSparseGrad>,
     /// dense pre-noise contribution map over the concatenated row space —
     /// materialised only for algorithms that consume it (the copy is
@@ -132,12 +168,14 @@ pub struct GradBundle {
 /// Destination of optimizer updates.  [`ParamStore`] applies in place; the
 /// engine's sharded store applies through per-shard locks.
 pub trait ParamSink {
+    /// Apply a row-sparse optimizer step to parameter `param_index`.
     fn apply_sparse(
         &mut self,
         param_index: usize,
         grad: &RowSparseGrad,
         opt: &Optimizer,
     ) -> Result<()>;
+    /// Apply a dense optimizer step to parameter `param_index`.
     fn apply_dense(
         &mut self,
         param_index: usize,
@@ -196,11 +234,16 @@ pub fn eval_batch_rng(seed: u64, index: u64) -> Xoshiro256 {
 /// Model geometry shared by both training paths.
 #[derive(Clone, Debug)]
 pub struct ModelGeometry {
+    /// kind-specific batch/feature metadata
     pub meta: ModelMeta,
+    /// the embedding tables, in feature order
     pub emb_tables: Vec<EmbTable>,
+    /// total rows across all tables (the concatenated row space)
     pub total_vocab: usize,
 }
 
+/// Derive the model geometry (batch shape, embedding tables, concatenated
+/// row space) from a manifest entry and its initialised param store.
 pub fn model_geometry(model: &ModelManifest, store: &ParamStore) -> Result<ModelGeometry> {
     let (meta, emb_tables, total_vocab) = match model.kind.as_str() {
         "pctr" => {
@@ -309,6 +352,7 @@ pub fn clip_values(cfg: &RunConfig) -> (f32, f32) {
     }
 }
 
+/// The clip norms as the scalar input tensors the artifacts expect.
 pub fn clip_inputs(cfg: &RunConfig) -> (HostTensor, HostTensor) {
     let (c1, c2) = clip_values(cfg);
     (
@@ -446,21 +490,34 @@ pub fn assemble_text(
 /// Everything Algorithm 1 mutates across steps, independent of how the
 /// gradients were computed or where the parameters live.
 pub struct StepState {
+    /// the run configuration
     pub cfg: RunConfig,
+    /// kind-specific model metadata
     pub meta: ModelMeta,
+    /// the embedding tables, in feature order
     pub emb_tables: Vec<EmbTable>,
+    /// total rows across all tables (the concatenated row space)
     pub total_vocab: usize,
+    /// the optimizer applied to every parameter
     pub opt: Optimizer,
+    /// the **single** DP RNG stream — every selection and noise draw
+    /// (module docs: noise-draw-order invariant)
     pub rng: Xoshiro256,
+    /// gradient-size bookkeeping (the paper's reduction factor)
     pub meter: GradSizeMeter,
+    /// calibrated contribution-map noise multiplier
     pub sigma1: f64,
+    /// calibrated gradient noise multiplier
     pub sigma2: f64,
     /// DP-FEST pre-selected rows (concatenated space), if applicable
     pub fest_selected: Option<SurvivorSet>,
+    /// per-step training loss so far
     pub loss_history: Vec<f64>,
 }
 
 impl StepState {
+    /// Initialise the step state for a run: derive the geometry, calibrate
+    /// (σ₁, σ₂), and seed the DP RNG stream.
     pub fn new(cfg: RunConfig, model: &ModelManifest, store: &ParamStore) -> Result<StepState> {
         let geom = model_geometry(model, store)?;
         let (sigma1, sigma2) = calibrate_noise(&cfg, geom.meta.batch_size())?;
@@ -483,6 +540,7 @@ impl StepState {
         })
     }
 
+    /// The model's fixed training batch size.
     pub fn batch_size(&self) -> usize {
         self.meta.batch_size()
     }
@@ -668,6 +726,7 @@ impl StepState {
         })
     }
 
+    /// Package the run's accumulated state into a [`TrainOutcome`].
     pub fn outcome(&self, utility: f64, eval_loss: f64) -> TrainOutcome {
         TrainOutcome {
             loss_history: self.loss_history.clone(),

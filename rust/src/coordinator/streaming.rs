@@ -10,142 +10,477 @@
 //! * `AllDays`   — oracle counts over the whole training range (upper bound);
 //! * `Streaming` — running sums re-published every period (the deployable
 //!   variant the paper finds nearly matches AllDays, Figure 5).
+//!
+//! ## One schedule, two executors
+//!
+//! The entire 24-day protocol — warmup passes, period boundaries, the
+//! cold-start sniff, the per-day step loop, and the eval-day batch streams —
+//! lives in [`StreamSchedule`], parameterised over a [`StreamDriver`] that
+//! supplies only the two operations that differ between training paths:
+//! running one step and recomputing the DP-FEST selection.  The synchronous
+//! [`StreamingTrainer`] and the async engine's streaming barrier
+//! (`engine::run_streaming`) both drive this one schedule, so the period
+//! boundaries, selection budget splits, and every RNG draw line up
+//! bit-for-bit by construction.
+//!
+//! ## Self-contained batch streams
+//!
+//! Every batch the protocol consumes comes from its own tagged RNG:
+//! training step `t` from [`step::train_batch_rng`]`(seed, t)` (day
+//! `t / steps_per_day`), warmup/sniff batch `i` from
+//! [`prior_batch_rng`]`(seed, i)`, and eval batch `j` of day `d` from
+//! [`step::eval_batch_rng`]`(seed, d·epd + j)`.  This is the streaming
+//! extension of the engine's batch-stream invariant: the async data workers
+//! can generate the day-ordered stream out of order and in parallel while
+//! remaining bit-identical to this synchronous loop.
 
 use anyhow::Result;
 
-use crate::data::{PctrBatch, SynthCriteo, EVAL_DAYS, TRAIN_DAYS};
+use crate::config::RunConfig;
+use crate::data::{CriteoConfig, PctrBatch, SynthCriteo, EVAL_DAYS, TRAIN_DAYS};
+use crate::runtime::ModelManifest;
 use crate::selection::{FrequencySource, FrequencyTracker};
 use crate::util::rng::Xoshiro256;
 
-use super::step::TrainOutcome;
+use super::step::{self, StepState, TrainOutcome};
 use super::trainer::Trainer;
 
-pub struct StreamingTrainer<'rt> {
-    pub trainer: Trainer<'rt>,
-    pub steps_per_day: u64,
-    pub eval_batches_per_day: usize,
+/// Warmup batches sampled from day 0 for the `FirstDay` source.
+const FIRST_DAY_WARMUP_BATCHES: u64 = 20;
+/// Warmup batches sampled per day for the `AllDays` oracle source.
+const ALL_DAYS_WARMUP_BATCHES_PER_DAY: u64 = 8;
+/// Day-0 batches sniffed when `Streaming` + DP-FEST starts cold.
+const COLD_START_SNIFF_BATCHES: u64 = 4;
+
+/// RNG for warmup / cold-start prior batch `index` — self-contained per
+/// batch and disjoint (by tag) from the train and eval streams.
+pub fn prior_batch_rng(seed: u64, index: u64) -> Xoshiro256 {
+    Xoshiro256::seed_from(seed ^ 0x57AE ^ (index + 1).wrapping_mul(0xA24BAED4963EE407))
 }
 
-#[derive(Clone, Debug)]
-pub struct StreamingOutcome {
-    pub outcome: TrainOutcome,
-    /// AUC per eval day (days 18..24) — distribution-shift profile
-    pub per_day_auc: Vec<f64>,
-    pub reselections: usize,
+/// Which simulated day training step `step` belongs to, at `steps_per_day`
+/// steps per day.  The **single** definition of the step→day mapping —
+/// [`StreamSchedule::day_of_step`] and the engine's data workers both call
+/// this, so the day a worker generates a batch for can never drift from
+/// the day [`StreamSchedule::run_days`] records it under.
+pub fn day_of_step(steps_per_day: u64, step: u64) -> usize {
+    ((step / steps_per_day.max(1)) as usize).min(TRAIN_DAYS - 1)
 }
 
-impl<'rt> StreamingTrainer<'rt> {
-    pub fn new(trainer: Trainer<'rt>, eval_batches_per_day: usize) -> Self {
-        let steps_per_day = (trainer.cfg().steps / TRAIN_DAYS as u64).max(1);
-        StreamingTrainer { trainer, steps_per_day, eval_batches_per_day }
+/// How many eval batches each held-out day (18..24) gets for a run config:
+/// half the plain-mode eval budget, at least one.  Shared by the `stream`
+/// and `train-async --stream` CLI paths and the streaming harnesses — the
+/// two backends are only bit-comparable while they split identically.
+pub fn eval_batches_per_day(cfg: &RunConfig) -> usize {
+    cfg.eval_batches.max(2) / 2
+}
+
+/// The drift-enabled synthetic-Criteo config of a streaming run: the
+/// model's vocabularies, the run seed's data tag, drift on.  The single
+/// derivation every streaming surface uses — the `stream` and
+/// `train-async --stream` CLI commands and the tab5/fig5 harnesses — which
+/// is what entitles them to compare outcomes bitwise.
+pub fn drift_gen_cfg(cfg: &RunConfig, model: &ModelManifest) -> Result<CriteoConfig> {
+    Ok(CriteoConfig::new(model.attr_usize_list("vocabs")?, cfg.seed ^ 0xDA7A).with_drift())
+}
+
+/// Aggregate one batch into per-feature `(bucket, count)` pairs, sorted by
+/// bucket id.  The async engine's data workers ship these alongside each
+/// batch; the sync path builds the identical pairs inline — either way the
+/// tracker receives the same integer sums.
+pub fn pctr_batch_counts(batch: &PctrBatch) -> Vec<Vec<(u32, u32)>> {
+    (0..batch.num_features)
+        .map(|f| {
+            let mut col: Vec<u32> =
+                (0..batch.batch_size).map(|i| batch.cat_of(i, f) as u32).collect();
+            col.sort_unstable();
+            let mut pairs: Vec<(u32, u32)> = Vec::new();
+            for b in col {
+                match pairs.last_mut() {
+                    Some((pb, c)) if *pb == b => *c += 1,
+                    _ => pairs.push((b, 1)),
+                }
+            }
+            pairs
+        })
+        .collect()
+}
+
+/// Record one batch's bucket observations into the tracker (all features).
+pub fn observe_batch(tracker: &mut FrequencyTracker, batch: &PctrBatch) {
+    for (f, pairs) in pctr_batch_counts(batch).iter().enumerate() {
+        tracker.merge_counts(f, pairs);
     }
+}
 
-    /// Run the full 24-day protocol. `gen` must be a drift-enabled
-    /// SynthCriteo.
-    pub fn run(&mut self, gen: &SynthCriteo) -> Result<StreamingOutcome> {
-        let cfg = self.trainer.cfg().clone();
+/// The two operations a training path must supply to run under a
+/// [`StreamSchedule`]; everything else (warmup, period boundaries, budget
+/// splits, batch streams) is shared, which is what keeps the sync trainer
+/// and the async engine bit-identical in streaming mode.
+pub trait StreamDriver {
+    /// Run training step `step` of `day`: obtain the step's batch (from
+    /// [`step::train_batch_rng`]`(seed, step)` at `day` — or from the data
+    /// workers, who generated exactly that), record its bucket observations
+    /// into `tracker`, and apply the DP update.
+    fn train_step(
+        &mut self,
+        step: u64,
+        day: usize,
+        tracker: &mut FrequencyTracker,
+    ) -> Result<()>;
+
+    /// Recompute the DP-FEST bucket pre-selection from published per-feature
+    /// dense counts, at the split selection budget `epsilon`.
+    fn select(&mut self, feature_counts: &[Vec<f64>], epsilon: f64) -> Result<()>;
+}
+
+/// The deterministic 24-day protocol: what happens on which day, which
+/// batches feed warmup/training/eval, and when DP-FEST reselects.
+///
+/// Derived once from a [`RunConfig`]; both executors hold the same values,
+/// so a `(cfg, seed)` pair fully determines the streaming run.
+#[derive(Clone, Debug)]
+pub struct StreamSchedule {
+    /// training steps per simulated day (`cfg.steps / 18`, at least 1)
+    pub steps_per_day: u64,
+    /// eval batches drawn per held-out day (days 18..24)
+    pub eval_batches_per_day: usize,
+    /// streaming period in days (`cfg.streaming_period`, at least 1)
+    pub period: usize,
+    /// which frequency counts feed DP-FEST reselection
+    pub source: FrequencySource,
+    /// whether the algorithm reselects at all (DP-FEST / DP-AdaFEST+)
+    pub uses_fest: bool,
+    /// `cfg.fest_epsilon` split equally over the expected reselections
+    /// (conservative basic composition; see [`StreamSchedule::new`])
+    pub fest_eps_per_selection: f64,
+    /// run seed — tags every batch stream
+    pub seed: u64,
+    /// examples per batch
+    pub batch_size: usize,
+}
+
+impl StreamSchedule {
+    /// Build the schedule for a run config.
+    ///
+    /// The FEST selection budget is split across the expected number of
+    /// reselections (equal split — conservative basic composition).  The
+    /// split budget is passed to each selection call directly: a previous
+    /// revision divided `cfg.fest_epsilon` in place, so a second run would
+    /// halve the already-halved budget.
+    pub fn new(
+        cfg: &RunConfig,
+        batch_size: usize,
+        eval_batches_per_day: usize,
+    ) -> StreamSchedule {
         let period = cfg.streaming_period.max(1);
-        let uses_fest = cfg.algorithm.uses_fest_selection();
         let source = cfg.freq_source;
-        let nf = self.trainer.emb_tables().len();
-        let vocabs: Vec<usize> =
-            self.trainer.emb_tables().iter().map(|t| t.vocab).collect();
-        let mut tracker = FrequencyTracker::new(nf, source);
-        let mut rng = Xoshiro256::seed_from(cfg.seed ^ 0x57AE);
-        let bsz = self.trainer.batch_size();
-
-        // Split the FEST selection budget across the expected number of
-        // reselections (basic composition over disjoint... conservatively:
-        // equal split).  The split budget is passed to each selection call
-        // directly — a previous revision divided `cfg.fest_epsilon` in
-        // place, so a second `run()` would halve the already-halved budget.
         let n_selections = match source {
             FrequencySource::FirstDay | FrequencySource::AllDays => 1,
-            FrequencySource::Streaming => (TRAIN_DAYS + period - 1) / period,
+            FrequencySource::Streaming => TRAIN_DAYS.div_ceil(period),
         };
-        let fest_eps_per_selection = cfg.fest_epsilon / n_selections as f64;
+        StreamSchedule {
+            steps_per_day: (cfg.steps / TRAIN_DAYS as u64).max(1),
+            eval_batches_per_day,
+            period,
+            source,
+            uses_fest: cfg.algorithm.uses_fest_selection(),
+            fest_eps_per_selection: cfg.fest_epsilon / n_selections as f64,
+            seed: cfg.seed,
+            batch_size,
+        }
+    }
+
+    /// Total training steps of the protocol (18 days × steps per day).
+    pub fn total_steps(&self) -> u64 {
+        TRAIN_DAYS as u64 * self.steps_per_day
+    }
+
+    /// Which simulated day training step `step` belongs to.
+    pub fn day_of_step(&self, step: u64) -> usize {
+        day_of_step(self.steps_per_day, step)
+    }
+
+    /// Whether the protocol consumes per-batch training counts: only the
+    /// `Streaming` source re-publishes running sums after warmup, and only
+    /// FEST-selecting algorithms ever read the published snapshot.  Both
+    /// executors gate their per-step counting on this — skipping it for
+    /// every other run changes nothing the protocol consumes.
+    pub fn needs_stream_counts(&self) -> bool {
+        self.uses_fest && self.source == FrequencySource::Streaming
+    }
+
+    /// Align `state`'s privacy calibration with the streamed step count.
+    /// The protocol runs [`total_steps`](StreamSchedule::total_steps) noisy
+    /// steps (18 days × steps/day), not `cfg.steps`, so when `cfg.steps` is
+    /// not a multiple of 18 the σ pair calibrated at construction covers
+    /// the wrong number of compositions — more DP draws than the advertised
+    /// ε on the low side, silently fewer steps on the high side.  Both
+    /// executors call this (idempotently) before the first noise draw.
+    pub fn recalibrate(&self, state: &mut StepState) -> Result<()> {
+        let total = self.total_steps();
+        if state.cfg.steps != total {
+            state.cfg.steps = total;
+            let (sigma1, sigma2) = step::calibrate_noise(&state.cfg, state.batch_size())?;
+            state.sigma1 = sigma1;
+            state.sigma2 = sigma2;
+        }
+        Ok(())
+    }
+
+    fn reselect(
+        &self,
+        tracker: &FrequencyTracker,
+        vocabs: &[usize],
+        driver: &mut impl StreamDriver,
+    ) -> Result<()> {
+        let counts: Vec<Vec<f64>> = (0..vocabs.len())
+            .map(|f| tracker.dense_counts(f, vocabs[f]))
+            .collect();
+        driver.select(&counts, self.fest_eps_per_selection)
+    }
+
+    /// Run the 18 training days: frequency-source warmup, period-boundary
+    /// publishes and reselections, and the per-day step loop.  `gen` must
+    /// be the drift-enabled generator; warmup/sniff batches are drawn here
+    /// (barrier-side in the async engine), training batches by the driver.
+    /// Returns the number of DP-FEST reselections performed.
+    pub fn run_days(
+        &self,
+        gen: &SynthCriteo,
+        tracker: &mut FrequencyTracker,
+        vocabs: &[usize],
+        driver: &mut impl StreamDriver,
+    ) -> Result<usize> {
         let mut reselections = 0usize;
 
-        let mut observe = |tracker: &mut FrequencyTracker, batch: &PctrBatch| {
-            for f in 0..nf {
-                let col: Vec<i32> =
-                    (0..batch.batch_size).map(|i| batch.cat_of(i, f)).collect();
-                tracker.observe(f, &col);
-            }
-        };
-
         // warmup / oracle pre-passes for the frequency source
-        match source {
+        match self.source {
             FrequencySource::FirstDay => {
-                for _ in 0..20 {
-                    let b = gen.batch(0, bsz, &mut rng);
-                    observe(&mut tracker, &b);
+                for i in 0..FIRST_DAY_WARMUP_BATCHES {
+                    let mut rng = prior_batch_rng(self.seed, i);
+                    observe_batch(tracker, &gen.batch(0, self.batch_size, &mut rng));
                 }
                 tracker.publish();
             }
             FrequencySource::AllDays => {
                 for day in 0..TRAIN_DAYS {
-                    for _ in 0..8 {
-                        let b = gen.batch(day, bsz, &mut rng);
-                        observe(&mut tracker, &b);
+                    for i in 0..ALL_DAYS_WARMUP_BATCHES_PER_DAY {
+                        let idx = day as u64 * ALL_DAYS_WARMUP_BATCHES_PER_DAY + i;
+                        let mut rng = prior_batch_rng(self.seed, idx);
+                        observe_batch(tracker, &gen.batch(day, self.batch_size, &mut rng));
                     }
                 }
                 tracker.publish();
             }
             FrequencySource::Streaming => {}
         }
-
-        let mut select = |trainer: &mut Trainer, tracker: &FrequencyTracker| -> Result<()> {
-            let counts: Vec<Vec<f64>> = (0..nf)
-                .map(|f| tracker.dense_counts(f, vocabs[f]))
-                .collect();
-            trainer.fest_select_with_eps(&counts, fest_eps_per_selection)?;
-            Ok(())
-        };
-
-        if uses_fest && source != FrequencySource::Streaming {
-            select(&mut self.trainer, &tracker)?;
+        if self.uses_fest && self.source != FrequencySource::Streaming {
+            self.reselect(tracker, vocabs, driver)?;
             reselections += 1;
         }
 
         for day in 0..TRAIN_DAYS {
             // period boundary: publish + (streaming) reselect
-            if day % period == 0 && source == FrequencySource::Streaming {
+            if day % self.period == 0 && self.source == FrequencySource::Streaming {
                 tracker.publish();
-                if uses_fest && (day > 0 || tracker.total_observed(0) > 0) {
-                    select(&mut self.trainer, &tracker)?;
+                if self.uses_fest && (day > 0 || tracker.total_observed(0) > 0) {
+                    self.reselect(tracker, vocabs, driver)?;
                     reselections += 1;
-                } else if uses_fest {
+                } else if self.uses_fest {
                     // cold start: select from a tiny day-0 sniff
-                    for _ in 0..4 {
-                        let b = gen.batch(0, bsz, &mut rng);
-                        observe(&mut tracker, &b);
+                    for i in 0..COLD_START_SNIFF_BATCHES {
+                        let mut rng = prior_batch_rng(self.seed, i);
+                        observe_batch(tracker, &gen.batch(0, self.batch_size, &mut rng));
                     }
                     tracker.publish();
-                    select(&mut self.trainer, &tracker)?;
+                    self.reselect(tracker, vocabs, driver)?;
                     reselections += 1;
                 }
             }
-            for _ in 0..self.steps_per_day {
-                let batch = gen.batch(day, bsz, &mut rng);
-                observe(&mut tracker, &batch);
-                self.trainer.step_pctr(&batch)?;
+            for s in 0..self.steps_per_day {
+                let t = day as u64 * self.steps_per_day + s;
+                driver.train_step(t, day, tracker)?;
             }
         }
+        Ok(reselections)
+    }
+
+    /// The eval batches of held-out day `day` (each from its own tagged
+    /// eval stream — identical across executors).
+    pub fn eval_day_batches(&self, gen: &SynthCriteo, day: usize) -> Vec<PctrBatch> {
+        (0..self.eval_batches_per_day)
+            .map(|j| {
+                let idx = (day * self.eval_batches_per_day + j) as u64;
+                let mut rng = step::eval_batch_rng(self.seed, idx);
+                gen.batch(day, self.batch_size, &mut rng)
+            })
+            .collect()
+    }
+
+    /// Evaluate on each held-out day (18..24) and on their union, through a
+    /// caller-supplied `(AUC, mean loss)` evaluator.  Returns
+    /// `(per-day AUC, combined AUC, combined eval loss)`.
+    pub fn eval_days(
+        &self,
+        gen: &SynthCriteo,
+        mut eval: impl FnMut(&[PctrBatch]) -> Result<(f64, f64)>,
+    ) -> Result<(Vec<f64>, f64, f64)> {
+        let mut per_day_auc = Vec::new();
+        let mut all: Vec<PctrBatch> = Vec::new();
+        for day in EVAL_DAYS {
+            let batches = self.eval_day_batches(gen, day);
+            let (auc, _) = eval(&batches)?;
+            per_day_auc.push(auc);
+            all.extend(batches);
+        }
+        let (auc_all, eval_loss) = eval(&all)?;
+        Ok((per_day_auc, auc_all, eval_loss))
+    }
+}
+
+/// The synchronous streaming trainer: a [`Trainer`] driven through the
+/// shared [`StreamSchedule`].
+pub struct StreamingTrainer<'rt> {
+    /// the wrapped synchronous trainer (owns store, state, artifacts)
+    pub trainer: Trainer<'rt>,
+    /// the deterministic 24-day protocol this run follows
+    pub schedule: StreamSchedule,
+}
+
+/// What a streaming run reports beyond the plain [`TrainOutcome`].
+#[derive(Clone, Debug)]
+pub struct StreamingOutcome {
+    /// the plain training outcome (utility = AUC over all eval days)
+    pub outcome: TrainOutcome,
+    /// AUC per eval day (days 18..24) — distribution-shift profile
+    pub per_day_auc: Vec<f64>,
+    /// how many DP-FEST reselections the run performed
+    pub reselections: usize,
+}
+
+impl<'rt> StreamingTrainer<'rt> {
+    /// Wrap a trainer; the schedule derives from its run config.
+    pub fn new(trainer: Trainer<'rt>, eval_batches_per_day: usize) -> Self {
+        let schedule =
+            StreamSchedule::new(trainer.cfg(), trainer.batch_size(), eval_batches_per_day);
+        StreamingTrainer { trainer, schedule }
+    }
+
+    /// Run the full 24-day protocol. `gen` must be a drift-enabled
+    /// SynthCriteo.
+    pub fn run(&mut self, gen: &SynthCriteo) -> Result<StreamingOutcome> {
+        self.schedule.recalibrate(&mut self.trainer.state)?;
+        let vocabs: Vec<usize> =
+            self.trainer.emb_tables().iter().map(|t| t.vocab).collect();
+        let mut tracker = FrequencyTracker::new(vocabs.len(), self.schedule.source);
+        let reselections = {
+            let mut driver = TrainerDriver {
+                trainer: &mut self.trainer,
+                gen,
+                count_batches: self.schedule.needs_stream_counts(),
+            };
+            self.schedule.run_days(gen, &mut tracker, &vocabs, &mut driver)?
+        };
 
         // evaluation on held-out future days
-        let mut per_day_auc = Vec::new();
-        let mut all_scores: Vec<PctrBatch> = Vec::new();
-        for day in EVAL_DAYS {
-            let batches: Vec<PctrBatch> = (0..self.eval_batches_per_day)
-                .map(|_| gen.batch(day, bsz, &mut rng))
-                .collect();
-            let (auc, _) = self.trainer.eval_pctr(&batches)?;
-            per_day_auc.push(auc);
-            all_scores.extend(batches);
-        }
-        let (auc_all, eval_loss) = self.trainer.eval_pctr(&all_scores)?;
+        let trainer = &self.trainer;
+        let (per_day_auc, auc_all, eval_loss) =
+            self.schedule.eval_days(gen, |batches| trainer.eval_pctr(batches))?;
         let outcome = self.trainer.outcome(auc_all, eval_loss);
         Ok(StreamingOutcome { outcome, per_day_auc, reselections })
+    }
+}
+
+/// [`StreamDriver`] over the synchronous trainer: generates each step's
+/// batch inline from its self-contained stream.
+struct TrainerDriver<'a, 'rt> {
+    trainer: &'a mut Trainer<'rt>,
+    gen: &'a SynthCriteo,
+    /// [`StreamSchedule::needs_stream_counts`] — skip per-batch counting
+    /// when nothing ever reads the published snapshot
+    count_batches: bool,
+}
+
+impl StreamDriver for TrainerDriver<'_, '_> {
+    fn train_step(
+        &mut self,
+        step: u64,
+        day: usize,
+        tracker: &mut FrequencyTracker,
+    ) -> Result<()> {
+        let mut rng = step::train_batch_rng(self.trainer.cfg().seed, step);
+        let batch = self.gen.batch(day, self.trainer.batch_size(), &mut rng);
+        if self.count_batches {
+            observe_batch(tracker, &batch);
+        }
+        self.trainer.step_pctr(&batch)?;
+        Ok(())
+    }
+
+    fn select(&mut self, feature_counts: &[Vec<f64>], epsilon: f64) -> Result<()> {
+        self.trainer.fest_select_with_eps(feature_counts, epsilon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Algorithm;
+
+    #[test]
+    fn schedule_totals_and_day_mapping() {
+        let mut cfg = RunConfig::default();
+        cfg.steps = 54; // 3/day
+        cfg.streaming_period = 4;
+        cfg.algorithm = Algorithm::DpFest;
+        cfg.freq_source = FrequencySource::Streaming;
+        let s = StreamSchedule::new(&cfg, 32, 2);
+        assert_eq!(s.steps_per_day, 3);
+        assert_eq!(s.total_steps(), 54);
+        assert_eq!(s.day_of_step(0), 0);
+        assert_eq!(s.day_of_step(3), 1);
+        assert_eq!(s.day_of_step(53), 17);
+        // ceil(18/4) = 5 reselections split the budget
+        assert!((s.fest_eps_per_selection - cfg.fest_epsilon / 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn non_multiple_steps_round_to_whole_days() {
+        let mut cfg = RunConfig::default();
+        cfg.steps = 100; // 5/day over 18 days -> 90 streamed steps
+        let s = StreamSchedule::new(&cfg, 16, 1);
+        assert_eq!(s.steps_per_day, 5);
+        assert_eq!(s.total_steps(), 90);
+    }
+
+    #[test]
+    fn batch_counts_are_sorted_and_complete() {
+        let b = PctrBatch {
+            batch_size: 5,
+            num_features: 2,
+            num_numeric: 0,
+            cat: vec![3, 0, 1, 1, 3, 0, 1, 2, 3, 1],
+            num: vec![],
+            y: vec![0.0; 5],
+        };
+        let counts = pctr_batch_counts(&b);
+        assert_eq!(counts[0], vec![(1, 2), (3, 3)]);
+        assert_eq!(counts[1], vec![(0, 2), (1, 2), (2, 1)]);
+        let total: u32 = counts.iter().flatten().map(|&(_, c)| c).sum();
+        assert_eq!(total as usize, 2 * 5);
+    }
+
+    #[test]
+    fn prior_stream_is_self_contained_and_distinct_from_train() {
+        let mut a = prior_batch_rng(7, 3);
+        let mut b = prior_batch_rng(7, 3);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = prior_batch_rng(7, 4);
+        let mut a2 = prior_batch_rng(7, 3);
+        assert_ne!(a2.next_u64(), c.next_u64());
+        let mut t = step::train_batch_rng(7, 3);
+        let mut a3 = prior_batch_rng(7, 3);
+        assert_ne!(a3.next_u64(), t.next_u64());
     }
 }

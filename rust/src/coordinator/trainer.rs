@@ -14,8 +14,11 @@ use crate::util::rng::Xoshiro256;
 use super::step::{self, ModelMeta, OutputKind, StepState, StepStats, TrainOutcome};
 pub use super::step::EmbTable;
 
+/// The synchronous trainer: one model, one runtime handle, one in-place
+/// parameter store, driven a batch at a time through the shared step core.
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
+    /// the model parameters, updated in place each step
     pub store: crate::models::ParamStore,
     /// Mutable Algorithm-1 state (selection, noise RNG, meter, history),
     /// shared structurally with the async engine.
@@ -26,6 +29,8 @@ pub struct Trainer<'rt> {
 }
 
 impl<'rt> Trainer<'rt> {
+    /// Initialise a trainer: locate the model's artifact pair, initialise
+    /// parameters, and calibrate the noise pair.
     pub fn new(cfg: RunConfig, rt: &'rt Runtime) -> Result<Trainer<'rt>> {
         let model = rt.manifest.model(&cfg.model)?;
         let store = crate::models::ParamStore::init(model, cfg.seed)?;
@@ -37,26 +42,32 @@ impl<'rt> Trainer<'rt> {
         Ok(Trainer { rt, store, state, grads_artifact, fwd_artifact, output_plan })
     }
 
+    /// The model's fixed training batch size.
     pub fn batch_size(&self) -> usize {
         self.state.batch_size()
     }
 
+    /// The run configuration this trainer was built with.
     pub fn cfg(&self) -> &RunConfig {
         &self.state.cfg
     }
 
+    /// Calibrated contribution-map noise multiplier.
     pub fn sigma1(&self) -> f64 {
         self.state.sigma1
     }
 
+    /// Calibrated gradient noise multiplier.
     pub fn sigma2(&self) -> f64 {
         self.state.sigma2
     }
 
+    /// Gradient-size bookkeeping (the paper's reduction factor).
     pub fn meter(&self) -> &GradSizeMeter {
         &self.state.meter
     }
 
+    /// The embedding tables, in feature order.
     pub fn emb_tables(&self) -> &[EmbTable] {
         &self.state.emb_tables
     }
@@ -199,6 +210,7 @@ impl<'rt> Trainer<'rt> {
         Ok(self.outcome(acc, eval_loss))
     }
 
+    /// Package the run's accumulated state into a [`TrainOutcome`].
     pub fn outcome(&self, utility: f64, eval_loss: f64) -> TrainOutcome {
         self.state.outcome(utility, eval_loss)
     }

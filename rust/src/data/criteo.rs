@@ -74,7 +74,13 @@ pub struct SynthCriteo {
     alphas: Vec<f64>,
     num_weights: Vec<f32>,
     bias: f32,
-    /// cached state for the most recent day (training iterates day order)
+    /// Cached state for the most recent day.  A `RefCell` (not a lock):
+    /// every consumer owns its generator — the sync trainers use one per
+    /// run, and each async data worker builds its own from the shared
+    /// [`CriteoConfig`].  Workers claim step indices in increasing order,
+    /// so per-worker day access is monotone and the cache almost always
+    /// hits even though the engine generates the day stream out of order
+    /// across workers.
     day_state: RefCell<Option<DayState>>,
 }
 

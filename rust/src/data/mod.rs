@@ -49,11 +49,13 @@ impl Generator {
         }
     }
 
-    /// One batch from the wrapped generator (day 0 for the pCTR substrate —
-    /// the engine has no streaming mode yet).
-    pub fn batch(&self, batch_size: usize, rng: &mut Xoshiro256) -> Batch {
+    /// One batch from the wrapped generator.  `day` selects the simulated
+    /// day of the pCTR substrate (meaningful when the config enables drift —
+    /// the engine's streaming mode); the text substrate is stationary and
+    /// ignores it.
+    pub fn batch(&self, day: usize, batch_size: usize, rng: &mut Xoshiro256) -> Batch {
         match self {
-            Generator::Pctr(g) => Batch::Pctr(g.batch(0, batch_size, rng)),
+            Generator::Pctr(g) => Batch::Pctr(g.batch(day, batch_size, rng)),
             Generator::Text(g) => Batch::Text(g.batch(batch_size, rng)),
         }
     }

@@ -10,6 +10,14 @@
 //! the privacy accounting and the trained model are bit-for-bit equal to
 //! the sync path regardless of worker count.
 //!
+//! In streaming mode (§4.3) the barrier additionally hosts the
+//! streaming-period boundaries: between steps it merges the data workers'
+//! per-batch frequency counts into the `FrequencyTracker`, publishes the
+//! running sums at each period start, and recomputes the FEST/AdaFEST+
+//! pre-selection — all on this one thread, so the selection Gumbel draws
+//! interleave with the noise stream exactly as in the sync streaming
+//! trainer (see `coordinator::streaming::StreamSchedule`).
+//!
 //! [`StepState::apply_update`]: crate::coordinator::step::StepState::apply_update
 
 use std::collections::BTreeMap;

@@ -7,10 +7,10 @@
 //!  data workers (N)          gradient workers (M)        aggregation barrier
 //!  ───────────────           ────────────────────        ───────────────────
 //!  step counter ──┐           ┌── ChunkTask ◀─────────────── dispatch per step
-//!  gen batch(t) ──┴─▶ bounded │   (16-example reduction       │
-//!                    channel  │    chunks, shared param       ▼
-//!  (t, batch) ──▶ BatchStream │    snapshot + sharded      merge chunks in order
-//!                  (reorder)  │    embedding reads)           │
+//!  gen batch(t) ──┴─▶ bounded │   (16-example reduction       │ (row cache +
+//!  [+ freq counts]   channel  │    chunks, per-step row       │  dense snapshot)
+//!  BatchMsg ──▶ BatchStream   │    cache + dense param        ▼
+//!                  (reorder)  │    snapshots, lock-free)   merge chunks in order
 //!                             └──▶ (chunk, grads) ──────────▶ select ∘ noise(σ₁σ₂)
 //!                                                             ∘ sharded update
 //! ```
@@ -22,7 +22,8 @@
 //! [`RefModel`](crate::runtime::reference::RefModel).
 //!
 //! **Bit-for-bit equivalence with the sync path** rests on three documented
-//! invariants (each with a test in `tests/engine.rs`, for both workloads):
+//! invariants (each with a test in `tests/engine.rs`, for both workloads;
+//! `docs/ENGINE.md` walks through them):
 //!
 //! 1. *Batch streams* — batch `t` comes from the self-contained RNG
 //!    `train_batch_rng(seed, t)`, so data workers can produce batches in
@@ -34,16 +35,31 @@
 //!    batch, serially, at the aggregation barrier, from the single
 //!    [`StepState`](crate::coordinator::step::StepState) RNG.
 //!
+//! **Streaming mode** ([`run_streaming`]) threads the paper's §4.3 time
+//! axis (days and streaming periods) through the same pipeline: the data
+//! workers map each step to its simulated day and aggregate per-batch
+//! frequency counts that travel with the batch messages, the aggregation
+//! barrier doubles as the streaming-period boundary — publish the running
+//! counts, recompute the FEST/AdaFEST+ bucket pre-selection under the
+//! split selection budget — and the held-out days 18..24 are evaluated
+//! per-day once the workers have shut down.  The whole day/period calendar
+//! lives in the shared [`StreamSchedule`], so the streaming run is
+//! bit-identical to the sync
+//! [`StreamingTrainer`](crate::coordinator::StreamingTrainer) for every
+//! [`FrequencySource`](crate::selection::FrequencySource) variant.
+//!
 //! The engine requires the reference runtime backend (PJRT artifacts have a
 //! fixed batch shape and cannot compute per-chunk partials); with `xla`
 //! artifacts use the sync trainer.
+
+#![warn(missing_docs)]
 
 mod aggregator;
 mod pipeline;
 mod sharded_store;
 
 pub use aggregator::collect_step;
-pub use pipeline::{BatchStream, ChunkTask, WorkerView};
+pub use pipeline::{BatchMsg, BatchStream, ChunkTask, DataPlan, RowCache, WorkerView};
 pub use sharded_store::{ShardedStore, ShardedTable};
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -53,20 +69,41 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::step::{self, ModelMeta, StepState, TrainOutcome};
-use crate::coordinator::{pctr_frequency_counts, text_frequency_counts};
+use crate::coordinator::step::{self, ModelMeta, OutputKind, StepState, TrainOutcome};
+use crate::coordinator::streaming::{StreamDriver, StreamSchedule};
+use crate::coordinator::{pctr_frequency_counts, text_frequency_counts, StreamingOutcome};
 use crate::data::{
     Batch, CriteoConfig, GenConfig, PctrBatch, SynthCriteo, SynthText, TextBatch,
     TextConfig,
 };
 use crate::models::ParamStore;
-use crate::runtime::reference::{RefModel, REDUCE_CHUNK};
+use crate::runtime::reference::{ChunkGrads, RefModel, REDUCE_CHUNK};
 use crate::runtime::Runtime;
+use crate::selection::FrequencyTracker;
 
 /// Run a full async training (train → eval) for whatever kind of model
 /// `cfg.model` names, deriving the synthetic data source from the manifest
 /// exactly as the sync CLI path does.  Returns the same [`TrainOutcome`] as
 /// the sync trainer — bitwise, given the same config and seed.
+///
+/// # Example
+///
+/// Train the built-in `criteo-tiny` model for two steps, no artifacts or
+/// network needed:
+///
+/// ```
+/// use sparse_dp_emb::config::RunConfig;
+/// use sparse_dp_emb::runtime::Runtime;
+///
+/// let rt = Runtime::builtin();
+/// let mut cfg = RunConfig::default();
+/// cfg.model = "criteo-tiny".into();
+/// cfg.steps = 2;
+/// cfg.eval_batches = 1;
+/// let outcome = sparse_dp_emb::engine::run(&cfg, &rt).unwrap();
+/// assert_eq!(outcome.loss_history.len(), 2);
+/// assert!(outcome.loss_history.iter().all(|l| l.is_finite()));
+/// ```
 pub fn run(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
     let model = rt.manifest.model(&cfg.model)?;
     let src = match model.kind.as_str() {
@@ -77,21 +114,183 @@ pub fn run(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
         "nlu" => GenConfig::Text(TextConfig::from_model(model, cfg.seed ^ 0xDA7A)?),
         other => bail!("unknown model kind {other}"),
     };
-    run_with(cfg, rt, src)
+    run_plain(cfg, rt, src)
 }
 
 /// Async pCTR training over an explicit generator config (harness/bench
 /// entry point; [`run`] derives the config from the manifest instead).
 pub fn run_pctr(cfg: &RunConfig, rt: &Runtime, gen_cfg: CriteoConfig) -> Result<TrainOutcome> {
-    run_with(cfg, rt, GenConfig::Pctr(gen_cfg))
+    run_plain(cfg, rt, GenConfig::Pctr(gen_cfg))
 }
 
 /// Async NLU training over an explicit generator config.
 pub fn run_text(cfg: &RunConfig, rt: &Runtime, gen_cfg: TextConfig) -> Result<TrainOutcome> {
-    run_with(cfg, rt, GenConfig::Text(gen_cfg))
+    run_plain(cfg, rt, GenConfig::Text(gen_cfg))
 }
 
-fn run_with(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcome> {
+/// Run the streaming (§4.3) 24-day protocol on the async engine: train on
+/// days 0..18 in day order with period-boundary frequency publishes and
+/// DP-FEST reselections at the aggregation barrier, then evaluate each
+/// held-out day 18..24.  `gen_cfg` should be drift-enabled
+/// ([`CriteoConfig::with_drift`]) to reproduce the paper's non-stationary
+/// setting.  `cfg.steps` rounds to whole days — `18 × max(1, steps/18)`
+/// streamed steps, so fewer than 18 requested steps still run one step
+/// per day — and σ is re-calibrated for the streamed step count
+/// ([`StreamSchedule::recalibrate`]).  Returns the same
+/// [`StreamingOutcome`] as the synchronous
+/// [`StreamingTrainer`](crate::coordinator::StreamingTrainer) — bitwise,
+/// for every `FrequencySource` and any worker/shard/depth setting.
+pub fn run_streaming(
+    cfg: &RunConfig,
+    rt: &Runtime,
+    gen_cfg: CriteoConfig,
+    eval_batches_per_day: usize,
+) -> Result<StreamingOutcome> {
+    match run_with(cfg, rt, GenConfig::Pctr(gen_cfg), Some(eval_batches_per_day))? {
+        Trained::Streaming(out) => Ok(out),
+        Trained::Plain(_) => unreachable!("streaming run_with returns Streaming"),
+    }
+}
+
+fn run_plain(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcome> {
+    match run_with(cfg, rt, src, None)? {
+        Trained::Plain(out) => Ok(out),
+        Trained::Streaming(_) => unreachable!("plain run_with returns Plain"),
+    }
+}
+
+/// What [`run_with`] produced, depending on the requested mode.
+enum Trained {
+    Plain(TrainOutcome),
+    Streaming(StreamingOutcome),
+}
+
+/// Everything the aggregation barrier needs to push one logical batch
+/// through the workers and apply its DP update: per-step snapshots (row
+/// cache + dense params), chunk dispatch, in-order merge, assembly, and
+/// the shared [`StepState::apply_update`].  Shared by the plain step loop
+/// and the streaming driver so the two modes cannot drift.
+struct StepExec<'a> {
+    rm: &'a RefModel,
+    estore: &'a ShardedStore,
+    emb_params: &'a [usize],
+    static_dense: &'a [Option<Arc<Vec<f32>>>],
+    plan: &'a [OutputKind],
+    task_tx: &'a mpsc::Sender<ChunkTask>,
+    res_rx: &'a mpsc::Receiver<(usize, ChunkGrads)>,
+    workers_down: &'a AtomicUsize,
+    n_chunks: usize,
+    chunks_per_task: usize,
+    nt: usize,
+    b: usize,
+    c1: f32,
+    c2: f32,
+    seq_len: usize,
+}
+
+impl StepExec<'_> {
+    fn run_step(&self, state: &mut StepState, batch: Batch) -> Result<()> {
+        if batch.batch_size() != self.b {
+            bail!("batch size {} != model batch {}", batch.batch_size(), self.b);
+        }
+        let batch = Arc::new(batch);
+        // Per-step read-only snapshots, taken after the previous step's
+        // updates: every embedding row the batch touches (gathered once,
+        // read lock-free by all workers — this is what keeps per-chunk
+        // per-shard lock traffic off the hot path) and the dense params
+        // (frozen entries are shared across steps).
+        let rows = Arc::new(RowCache::build(&batch, self.estore, self.emb_params));
+        let dense: Arc<Vec<Arc<Vec<f32>>>> = Arc::new(
+            self.static_dense
+                .iter()
+                .enumerate()
+                .map(|(j, frozen)| match frozen {
+                    Some(a) => Arc::clone(a),
+                    None => Arc::new(self.estore.dense_values(self.nt + j)),
+                })
+                .collect(),
+        );
+        let mut c0 = 0usize;
+        while c0 < self.n_chunks {
+            let hi = (c0 + self.chunks_per_task).min(self.n_chunks);
+            self.task_tx
+                .send(ChunkTask {
+                    chunks: c0..hi,
+                    batch: Arc::clone(&batch),
+                    rows: Arc::clone(&rows),
+                    dense: Arc::clone(&dense),
+                    c1: self.c1,
+                    c2: self.c2,
+                })
+                .ok()
+                .context("gradient workers terminated early")?;
+            c0 = hi;
+        }
+        let outs = collect_step(self.rm, self.n_chunks, self.res_rx, self.workers_down)?;
+        let need_counts = state.cfg.algorithm.uses_contribution_map();
+        let bundle = match batch.as_ref() {
+            Batch::Pctr(pb) => {
+                step::assemble_pctr(self.plan, &outs, &state.emb_tables, pb, need_counts)?
+            }
+            Batch::Text(tb) => step::assemble_text(
+                self.plan,
+                &outs,
+                &state.emb_tables,
+                tb,
+                self.seq_len,
+                need_counts,
+            )?,
+        };
+        let mut sink = self.estore;
+        state.apply_update(bundle, &mut sink)?;
+        Ok(())
+    }
+}
+
+/// [`StreamDriver`] over the engine internals: step `t`'s batch (and its
+/// pre-aggregated frequency counts) comes from the reordered data-worker
+/// stream, the update goes through the shared [`StepExec`], and DP-FEST
+/// reselection mutates the barrier's [`StepState`] exactly where the sync
+/// path would.
+struct EngineDriver<'a, 'b> {
+    stream: BatchStream,
+    exec: &'a StepExec<'b>,
+    state: &'a mut StepState,
+    /// [`StreamSchedule::needs_stream_counts`] — matches the data workers'
+    /// [`DataPlan::with_counts`], so counts are shipped iff they are read
+    count_batches: bool,
+}
+
+impl StreamDriver for EngineDriver<'_, '_> {
+    fn train_step(
+        &mut self,
+        step: u64,
+        _day: usize,
+        tracker: &mut FrequencyTracker,
+    ) -> Result<()> {
+        let msg = self.stream.next(step)?;
+        if self.count_batches {
+            let counts = msg
+                .counts
+                .context("data workers shipped no frequency counts in streaming mode")?;
+            for (f, pairs) in counts.iter().enumerate() {
+                tracker.merge_counts(f, pairs);
+            }
+        }
+        self.exec.run_step(self.state, msg.batch)
+    }
+
+    fn select(&mut self, feature_counts: &[Vec<f64>], epsilon: f64) -> Result<()> {
+        self.state.fest_select_with_eps(feature_counts, epsilon)
+    }
+}
+
+fn run_with(
+    cfg: &RunConfig,
+    rt: &Runtime,
+    src: GenConfig,
+    stream_eval_epd: Option<usize>,
+) -> Result<Trained> {
     if !rt.is_reference() {
         bail!(
             "the async engine requires the reference runtime backend \
@@ -141,9 +340,31 @@ fn run_with(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcom
         ModelMeta::Nlu { seq_len, num_classes, .. } => (seq_len, num_classes),
         ModelMeta::Pctr { .. } => (0, 0),
     };
+    let b = state.batch_size();
+
+    // Streaming mode follows the shared day/period calendar; it also
+    // overrides the step count (18 days × steps/day, with σ re-calibrated
+    // to match) and drives its own FEST selections at the period
+    // boundaries.  The pCTR generator config is destructured once here —
+    // every later streaming branch relies on it.
+    let streaming: Option<(StreamSchedule, CriteoConfig)> = match stream_eval_epd {
+        Some(epd) => {
+            let GenConfig::Pctr(g) = &src else {
+                bail!("streaming mode is for pctr models (the 24-day Criteo protocol)");
+            };
+            let sched = StreamSchedule::new(&state.cfg, b, epd);
+            sched.recalibrate(&mut state)?;
+            Some((sched, g.clone()))
+        }
+        None => None,
+    };
+    let steps = streaming.as_ref().map_or(state.cfg.steps, |(s, _)| s.total_steps());
 
     // FEST pre-selection — same prior pass and RNG stream as the sync path.
-    if state.cfg.algorithm.uses_fest_selection() && state.fest_selected.is_none() {
+    if streaming.is_none()
+        && state.cfg.algorithm.uses_fest_selection()
+        && state.fest_selected.is_none()
+    {
         match &src {
             GenConfig::Pctr(g) => {
                 let gen = SynthCriteo::new(g.clone());
@@ -164,12 +385,17 @@ fn run_with(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcom
     let ecfg = state.cfg.engine;
     let estore = ShardedStore::from_store(store, &emb_params, ecfg.shards.max(1))?;
 
-    let b = state.batch_size();
-    let steps = state.cfg.steps;
     let seed = state.cfg.seed;
     let (c1, c2) = step::clip_values(&state.cfg);
-    let n_chunks = (b + REDUCE_CHUNK - 1) / REDUCE_CHUNK;
+    let n_chunks = b.div_ceil(REDUCE_CHUNK);
     let chunks_per_task = ecfg.microbatch_chunks.clamp(1, n_chunks);
+    let dplan = DataPlan {
+        seed,
+        batch_size: b,
+        steps,
+        steps_per_day: streaming.as_ref().map(|(s, _)| s.steps_per_day),
+        with_counts: streaming.as_ref().is_some_and(|(s, _)| s.needs_stream_counts()),
+    };
 
     // Frozen dense params (the NLU transformer backbone) never receive
     // updates, so snapshot them once; only trainable dense params (the MLP
@@ -188,24 +414,24 @@ fn run_with(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcom
 
     let next_step = AtomicU64::new(0);
     let workers_down = AtomicUsize::new(0);
-    let (batch_tx, batch_rx) = mpsc::sync_channel::<(u64, Batch)>(ecfg.channel_depth.max(1));
+    let (batch_tx, batch_rx) = mpsc::sync_channel::<BatchMsg>(ecfg.channel_depth.max(1));
     let (task_tx, task_rx) = mpsc::channel::<ChunkTask>();
     let task_rx = Arc::new(Mutex::new(task_rx));
     let (res_tx, res_rx) = mpsc::channel();
 
-    std::thread::scope(|scope| -> Result<()> {
+    let reselections = std::thread::scope(|scope| -> Result<Option<usize>> {
         for _ in 0..ecfg.data_workers.max(1) {
             let tx = batch_tx.clone();
             let gcfg = src.clone();
             let next = &next_step;
-            scope.spawn(move || pipeline::data_worker(gcfg, seed, b, steps, next, tx));
+            scope.spawn(move || pipeline::data_worker(gcfg, dplan, next, tx));
         }
         drop(batch_tx); // aggregator detects data-worker exit via channel close
 
         for _ in 0..ecfg.grad_workers.max(1) {
             let rx = Arc::clone(&task_rx);
             let tx = res_tx.clone();
-            let (rm, estore, emb) = (&rm, &estore, &emb_params[..]);
+            let rm = &rm;
             let down = &workers_down;
             scope.spawn(move || {
                 // Bump the exit counter even on panic, so the aggregator
@@ -217,67 +443,57 @@ fn run_with(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcom
                     }
                 }
                 let _guard = ExitGuard(down);
-                pipeline::grad_worker(rm, estore, emb, &rx, &tx)
+                pipeline::grad_worker(rm, &rx, &tx)
             });
         }
         drop(res_tx);
 
         // ---- the aggregation loop (this thread) ----
-        let run_loop = |state: &mut StepState| -> Result<()> {
+        let run_loop = |state: &mut StepState| -> Result<Option<usize>> {
+            let exec = StepExec {
+                rm: &rm,
+                estore: &estore,
+                emb_params: &emb_params,
+                static_dense: &static_dense,
+                plan: &plan,
+                task_tx: &task_tx,
+                res_rx: &res_rx,
+                workers_down: &workers_down,
+                n_chunks,
+                chunks_per_task,
+                nt,
+                b,
+                c1,
+                c2,
+                seq_len,
+            };
             let mut stream = BatchStream::new(batch_rx);
-            for t in 0..steps {
-                let batch = Arc::new(stream.next(t)?);
-                if batch.batch_size() != b {
-                    bail!("batch size {} != model batch {b}", batch.batch_size());
+            match &streaming {
+                None => {
+                    for t in 0..steps {
+                        let msg = stream.next(t)?;
+                        exec.run_step(state, msg.batch)?;
+                    }
+                    Ok(None)
                 }
-                let dense: Arc<Vec<Arc<Vec<f32>>>> = Arc::new(
-                    static_dense
-                        .iter()
-                        .enumerate()
-                        .map(|(j, frozen)| match frozen {
-                            Some(a) => Arc::clone(a),
-                            None => Arc::new(estore.dense_values(nt + j)),
-                        })
-                        .collect(),
-                );
-                let mut c0 = 0usize;
-                while c0 < n_chunks {
-                    let c1_idx = (c0 + chunks_per_task).min(n_chunks);
-                    task_tx
-                        .send(ChunkTask {
-                            chunks: c0..c1_idx,
-                            batch: Arc::clone(&batch),
-                            dense: Arc::clone(&dense),
-                            c1,
-                            c2,
-                        })
-                        .ok()
-                        .context("gradient workers terminated early")?;
-                    c0 = c1_idx;
+                Some((sched, gcfg)) => {
+                    // barrier-side generator: warmup passes and the
+                    // cold-start sniff (training batches come from the
+                    // data workers)
+                    let gen = SynthCriteo::new(gcfg.clone());
+                    let vocabs: Vec<usize> =
+                        state.emb_tables.iter().map(|t| t.vocab).collect();
+                    let mut tracker = FrequencyTracker::new(vocabs.len(), sched.source);
+                    let mut driver = EngineDriver {
+                        stream,
+                        exec: &exec,
+                        state,
+                        count_batches: sched.needs_stream_counts(),
+                    };
+                    let n = sched.run_days(&gen, &mut tracker, &vocabs, &mut driver)?;
+                    Ok(Some(n))
                 }
-                let outs = collect_step(&rm, n_chunks, &res_rx, &workers_down)?;
-                let need_counts = state.cfg.algorithm.uses_contribution_map();
-                let bundle = match batch.as_ref() {
-                    Batch::Pctr(pb) => step::assemble_pctr(
-                        &plan,
-                        &outs,
-                        &state.emb_tables,
-                        pb,
-                        need_counts,
-                    )?,
-                    Batch::Text(tb) => step::assemble_text(
-                        &plan,
-                        &outs,
-                        &state.emb_tables,
-                        tb,
-                        seq_len,
-                        need_counts,
-                    )?,
-                };
-                let mut sink = &estore;
-                state.apply_update(bundle, &mut sink)?;
             }
-            Ok(())
         };
         let result = run_loop(&mut state);
         // Orderly shutdown on both the success and error paths: closing the
@@ -288,39 +504,58 @@ fn run_with(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcom
         result
     })?;
 
-    // ---- evaluation on the reassembled store (same stream as sync) ----
+    // ---- evaluation on the reassembled store (same streams as sync) ----
     let store = estore.into_store()?;
-    let (utility, eval_loss) = match &src {
-        GenConfig::Pctr(g) => {
-            let gen = SynthCriteo::new(g.clone());
-            let eval: Vec<PctrBatch> = (0..state.cfg.eval_batches)
-                .map(|i| {
-                    let mut rng = step::eval_batch_rng(seed, i as u64);
-                    gen.batch(0, b, &mut rng)
-                })
-                .collect();
-            step::eval_pctr(rt, &fwd_artifact, &store, &eval)?
+    match streaming {
+        Some((sched, gcfg)) => {
+            let gen = SynthCriteo::new(gcfg);
+            let (per_day_auc, auc_all, eval_loss) = sched
+                .eval_days(&gen, |batches| step::eval_pctr(rt, &fwd_artifact, &store, batches))?;
+            let outcome = state.outcome(auc_all, eval_loss);
+            Ok(Trained::Streaming(StreamingOutcome {
+                outcome,
+                per_day_auc,
+                reselections: reselections.unwrap_or(0),
+            }))
         }
-        GenConfig::Text(g) => {
-            let gen = SynthText::new(g.clone());
-            let eval: Vec<TextBatch> = (0..state.cfg.eval_batches)
-                .map(|i| {
-                    let mut rng = step::eval_batch_rng(seed, i as u64);
-                    gen.batch(b, &mut rng)
-                })
-                .collect();
-            step::eval_text(rt, &fwd_artifact, &store, &eval, num_classes)?
+        None => {
+            let (utility, eval_loss) = match &src {
+                GenConfig::Pctr(g) => {
+                    let gen = SynthCriteo::new(g.clone());
+                    let eval: Vec<PctrBatch> = (0..state.cfg.eval_batches)
+                        .map(|i| {
+                            let mut rng = step::eval_batch_rng(seed, i as u64);
+                            gen.batch(0, b, &mut rng)
+                        })
+                        .collect();
+                    step::eval_pctr(rt, &fwd_artifact, &store, &eval)?
+                }
+                GenConfig::Text(g) => {
+                    let gen = SynthText::new(g.clone());
+                    let eval: Vec<TextBatch> = (0..state.cfg.eval_batches)
+                        .map(|i| {
+                            let mut rng = step::eval_batch_rng(seed, i as u64);
+                            gen.batch(b, &mut rng)
+                        })
+                        .collect();
+                    step::eval_text(rt, &fwd_artifact, &store, &eval, num_classes)?
+                }
+            };
+            Ok(Trained::Plain(state.outcome(utility, eval_loss)))
         }
-    };
-    Ok(state.outcome(utility, eval_loss))
+    }
 }
 
 /// One row of a sync-vs-async throughput comparison.
 #[derive(Clone, Debug)]
 pub struct ThroughputRow {
+    /// which path produced the row (`"sync"` or `"async"`)
     pub path: &'static str,
+    /// gradient workers the engine ran with (1 for the sync row)
     pub grad_workers: usize,
+    /// wall-clock seconds for the full run
     pub secs: f64,
+    /// training steps per second
     pub steps_per_sec: f64,
     /// relative to the sync row (sync row reports 1.0)
     pub speedup: f64,

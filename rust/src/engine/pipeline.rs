@@ -3,15 +3,19 @@
 //!
 //! * **Data workers** claim step indices off a shared atomic counter and
 //!   generate that step's batch from its self-contained RNG
-//!   ([`step::train_batch_rng`]), sending `(step, batch)` over a bounded
+//!   ([`step::train_batch_rng`]), sending a [`BatchMsg`] over a bounded
 //!   channel — order across workers is irrelevant, the [`BatchStream`]
-//!   reorders.  Backpressure comes from the channel bound.
+//!   reorders.  Backpressure comes from the channel bound.  In streaming
+//!   mode the [`DataPlan`] maps each step to its simulated day and the
+//!   workers also aggregate the batch's per-feature bucket counts, so the
+//!   barrier can feed its `FrequencyTracker` without re-scanning batches.
 //! * **Gradient workers** pull [`ChunkTask`]s (a range of fixed 16-example
 //!   reduction chunks of the current step's batch), compute per-example
-//!   clipped gradients against a read-only view of the sharded store + a
-//!   dense-parameter snapshot, and send `(chunk_index, ChunkGrads)` to the
-//!   aggregation barrier.  The chunk math dispatches through [`RefModel`],
-//!   so the same worker body drives the Criteo tower and the transformer.
+//!   clipped gradients against the step's read-only snapshots — the
+//!   [`RowCache`] of every embedding row the batch touches plus the dense
+//!   parameters — and send `(chunk_index, ChunkGrads)` to the aggregation
+//!   barrier.  The chunk math dispatches through [`RefModel`], so the same
+//!   worker body drives the Criteo tower and the transformer.
 //!
 //! Shutdown is purely channel-driven: dropping the task sender ends the
 //! gradient workers, dropping the batch receiver ends the data workers
@@ -28,35 +32,137 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::coordinator::step;
+use crate::coordinator::streaming;
 use crate::data::{Batch, GenConfig, Generator};
 use crate::runtime::reference::{BatchRef, ChunkGrads, ParamsView, RefModel, REDUCE_CHUNK};
 
 use super::sharded_store::ShardedStore;
 
+/// What the data workers produce: which steps, how steps map to simulated
+/// days, and whether per-batch frequency counts ride along.
+#[derive(Clone, Copy, Debug)]
+pub struct DataPlan {
+    /// run seed — batch `t` derives from [`step::train_batch_rng`]`(seed, t)`
+    pub seed: u64,
+    /// examples per batch
+    pub batch_size: usize,
+    /// total number of training steps to produce
+    pub steps: u64,
+    /// streaming mode: steps per simulated day (`day = t / steps_per_day`);
+    /// `None` generates everything from day 0 (stationary)
+    pub steps_per_day: Option<u64>,
+    /// aggregate per-feature bucket counts for every batch (streaming mode —
+    /// they feed the barrier's `FrequencyTracker` at period boundaries)
+    pub with_counts: bool,
+}
+
+/// One data-worker message: step `step`'s batch, plus its per-feature
+/// `(bucket, count)` pairs when the [`DataPlan`] asks for them.
+pub struct BatchMsg {
+    /// which training step this batch belongs to
+    pub step: u64,
+    /// the generated batch
+    pub batch: Batch,
+    /// per-feature sorted `(bucket, count)` pairs (pCTR streaming mode only)
+    pub counts: Option<Vec<Vec<(u32, u32)>>>,
+}
+
 /// One unit of gradient work: reduction chunks `chunks` of the step's batch.
 pub struct ChunkTask {
+    /// which fixed 16-example reduction chunks of the batch to compute
     pub chunks: Range<usize>,
+    /// the step's batch (shared across the step's tasks)
     pub batch: Arc<Batch>,
+    /// per-step snapshot of every embedding row the batch touches,
+    /// read lock-free by the workers
+    pub rows: Arc<RowCache>,
     /// per-step snapshot of the dense (non-table) parameters, read-only;
     /// frozen entries are shared across steps (the engine clones only the
     /// trainable dense params each step)
     pub dense: Arc<Vec<Arc<Vec<f32>>>>,
+    /// contribution-map clip norm C₁
     pub c1: f32,
+    /// gradient clip norm C₂
     pub c2: f32,
 }
 
-/// [`ParamsView`] over the sharded store (embedding rows through per-shard
-/// locks) plus the step's dense snapshot (lock-free).
+/// Per-step read-only snapshot of every embedding row the batch touches.
+///
+/// Built once per step at the aggregation barrier — after the previous
+/// step's updates and before this step's dispatch, so it is bit-identical
+/// to what live per-shard reads would return — and shared with the
+/// gradient workers through the [`ChunkTask`]s.  Workers resolve
+/// [`ParamsView::emb_row`] by binary search into the snapshot instead of
+/// taking a shard lock per lookup: each unique row is gathered exactly
+/// once per step instead of once per chunk per worker (the ROADMAP
+/// lock-traffic item).
+pub struct RowCache {
+    feats: Vec<FeatRows>,
+}
+
+struct FeatRows {
+    /// sorted unique table-local rows of this feature present in the batch
+    rows: Vec<u32>,
+    /// row values packed in `rows` order
+    values: Vec<f32>,
+    dim: usize,
+}
+
+impl RowCache {
+    /// Gather the batch's unique rows, feature by feature, from the sharded
+    /// store (one locked read per unique row).
+    pub fn build(batch: &Batch, store: &ShardedStore, emb_params: &[usize]) -> RowCache {
+        let per_feature: Vec<Vec<u32>> = match batch {
+            Batch::Pctr(b) => (0..b.num_features)
+                .map(|f| (0..b.batch_size).map(|i| b.cat_of(i, f) as u32).collect())
+                .collect(),
+            Batch::Text(b) => vec![b.ids.iter().map(|&t| t as u32).collect()],
+        };
+        let feats = per_feature
+            .into_iter()
+            .zip(emb_params)
+            .map(|(mut rows, &param)| {
+                rows.sort_unstable();
+                rows.dedup();
+                let dim = store.emb_row_dim(param);
+                let mut values = vec![0f32; rows.len() * dim];
+                for (k, &row) in rows.iter().enumerate() {
+                    store.read_emb_row(param, row as usize, &mut values[k * dim..(k + 1) * dim]);
+                }
+                FeatRows { rows, values, dim }
+            })
+            .collect();
+        RowCache { feats }
+    }
+
+    /// The cached row, by feature and table-local row id.
+    ///
+    /// # Panics
+    /// If the row is not in the step's batch — the executors only ever read
+    /// batch rows, so a miss is a programming error, not a data condition.
+    #[inline]
+    pub fn row(&self, feature: usize, row: usize) -> &[f32] {
+        let fr = &self.feats[feature];
+        let k = fr
+            .rows
+            .binary_search(&(row as u32))
+            .expect("row outside the per-step cache");
+        &fr.values[k * fr.dim..(k + 1) * fr.dim]
+    }
+}
+
+/// [`ParamsView`] over the step's read-only snapshots: the [`RowCache`]
+/// (embedding rows, lock-free) plus the dense-parameter snapshot.
 pub struct WorkerView<'a> {
-    pub store: &'a ShardedStore,
-    /// param index of each embedding table, in feature order
-    pub emb_params: &'a [usize],
+    /// per-step snapshot of the batch's embedding rows
+    pub rows: &'a RowCache,
+    /// per-step snapshot of the dense (non-table) parameters
     pub dense: &'a [Arc<Vec<f32>>],
 }
 
 impl ParamsView for WorkerView<'_> {
     fn emb_row(&self, feature: usize, row: usize, out: &mut [f32]) {
-        self.store.read_emb_row(self.emb_params[feature], row, out);
+        out.copy_from_slice(self.rows.row(feature, row));
     }
 
     fn mlp(&self, index: usize) -> &[f32] {
@@ -67,21 +173,27 @@ impl ParamsView for WorkerView<'_> {
 /// Body of one data-worker thread.
 pub fn data_worker(
     gen_cfg: GenConfig,
-    seed: u64,
-    batch_size: usize,
-    steps: u64,
+    plan: DataPlan,
     next_step: &AtomicU64,
-    tx: SyncSender<(u64, Batch)>,
+    tx: SyncSender<BatchMsg>,
 ) {
     let gen = Generator::new(gen_cfg);
     loop {
         let step_idx = next_step.fetch_add(1, Ordering::Relaxed);
-        if step_idx >= steps {
+        if step_idx >= plan.steps {
             return;
         }
-        let mut rng = step::train_batch_rng(seed, step_idx);
-        let batch = gen.batch(batch_size, &mut rng);
-        if tx.send((step_idx, batch)).is_err() {
+        let day = match plan.steps_per_day {
+            Some(spd) => streaming::day_of_step(spd, step_idx),
+            None => 0,
+        };
+        let mut rng = step::train_batch_rng(plan.seed, step_idx);
+        let batch = gen.batch(day, plan.batch_size, &mut rng);
+        let counts = match (&batch, plan.with_counts) {
+            (Batch::Pctr(pb), true) => Some(streaming::pctr_batch_counts(pb)),
+            _ => None,
+        };
+        if tx.send(BatchMsg { step: step_idx, batch, counts }).is_err() {
             return; // aggregator gone — shut down
         }
     }
@@ -90,8 +202,6 @@ pub fn data_worker(
 /// Body of one gradient-worker thread.
 pub fn grad_worker(
     model: &RefModel,
-    store: &ShardedStore,
-    emb_params: &[usize],
     tasks: &Mutex<Receiver<ChunkTask>>,
     results: &Sender<(usize, ChunkGrads)>,
 ) {
@@ -99,7 +209,7 @@ pub fn grad_worker(
         // hold the lock only for the recv, not for the compute
         let task = { tasks.lock().unwrap().recv() };
         let Ok(task) = task else { return };
-        let view = WorkerView { store, emb_params, dense: task.dense.as_slice() };
+        let view = WorkerView { rows: task.rows.as_ref(), dense: task.dense.as_slice() };
         let batch = BatchRef::from_batch(&task.batch);
         let b = task.batch.batch_size();
         for chunk in task.chunks.clone() {
@@ -113,26 +223,27 @@ pub fn grad_worker(
     }
 }
 
-/// Reorders the data workers' out-of-order `(step, batch)` stream.
+/// Reorders the data workers' out-of-order [`BatchMsg`] stream.
 pub struct BatchStream {
-    rx: Receiver<(u64, Batch)>,
-    pending: BTreeMap<u64, Batch>,
+    rx: Receiver<BatchMsg>,
+    pending: BTreeMap<u64, BatchMsg>,
 }
 
 impl BatchStream {
-    pub fn new(rx: Receiver<(u64, Batch)>) -> BatchStream {
+    /// Wrap the receiving end of the data workers' channel.
+    pub fn new(rx: Receiver<BatchMsg>) -> BatchStream {
         BatchStream { rx, pending: BTreeMap::new() }
     }
 
-    /// Block until the batch for `step` is available.
-    pub fn next(&mut self, step: u64) -> Result<Batch> {
+    /// Block until the message for `step` is available.
+    pub fn next(&mut self, step: u64) -> Result<BatchMsg> {
         loop {
-            if let Some(b) = self.pending.remove(&step) {
-                return Ok(b);
+            if let Some(m) = self.pending.remove(&step) {
+                return Ok(m);
             }
             match self.rx.recv() {
-                Ok((s, b)) => {
-                    self.pending.insert(s, b);
+                Ok(m) => {
+                    self.pending.insert(m.step, m);
                 }
                 Err(_) => bail!("data workers exited before producing step {step}"),
             }

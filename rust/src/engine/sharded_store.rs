@@ -31,13 +31,17 @@ struct TableShard {
 
 /// One embedding table split into row-range shards.
 pub struct ShardedTable {
+    /// total row count of the table
     pub rows: usize,
+    /// row width (embedding dimension)
     pub dim: usize,
     rows_per_shard: usize,
     shards: Vec<Mutex<TableShard>>,
 }
 
 impl ShardedTable {
+    /// Split a row-major dense table into `num_shards` contiguous row
+    /// ranges (clamped to at most one shard per row).
     pub fn from_dense(
         rows: usize,
         dim: usize,
@@ -46,7 +50,7 @@ impl ShardedTable {
     ) -> ShardedTable {
         assert_eq!(values.len(), rows * dim, "table shape mismatch");
         let num_shards = num_shards.clamp(1, rows.max(1));
-        let rows_per_shard = (rows + num_shards - 1) / num_shards;
+        let rows_per_shard = rows.div_ceil(num_shards);
         let mut shards = Vec::with_capacity(num_shards);
         let mut row = 0;
         while row < rows {
@@ -60,6 +64,7 @@ impl ShardedTable {
         ShardedTable { rows, dim, rows_per_shard, shards }
     }
 
+    /// How many row-range shards the table was split into.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
@@ -236,8 +241,16 @@ impl ShardedStore {
         Ok(ShardedStore { model_name, kind, slots })
     }
 
+    /// Number of parameter slots (same indexing as the source store).
     pub fn num_params(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Row width (second dimension) of embedding parameter `index` — the
+    /// buffer size a [`read_emb_row`](ShardedStore::read_emb_row) caller
+    /// must provide, and what the engine's per-step row cache allocates.
+    pub fn emb_row_dim(&self, index: usize) -> usize {
+        self.slots[index].dims[1]
     }
 
     /// Embedding lookup for the gradient workers.

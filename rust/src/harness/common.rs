@@ -7,7 +7,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::config::RunConfig;
-use crate::coordinator::{Trainer, TrainOutcome};
+use crate::coordinator::{StreamingOutcome, StreamingTrainer, Trainer, TrainOutcome};
 use crate::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
 use crate::runtime::Runtime;
 
@@ -100,6 +100,29 @@ pub fn train_once(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
             trainer.run_text(&gen)
         }
         other => anyhow::bail!("unknown model kind {other}"),
+    }
+}
+
+/// One streaming (§4.3) run on the chosen backend: the synchronous
+/// [`StreamingTrainer`] or the async engine's streaming barrier
+/// (`engine::run_streaming`) — bit-identical outcomes, so the tab5/fig5
+/// harnesses can sweep on whichever path and compare freely.  Both
+/// backends derive their generators from `gen_cfg` alone (every batch
+/// stream is a self-contained tagged RNG), so the two cannot drift.
+pub fn streaming_once(
+    cfg: &RunConfig,
+    rt: &Runtime,
+    gen_cfg: &CriteoConfig,
+    engine: bool,
+) -> Result<StreamingOutcome> {
+    let eval_batches_per_day = crate::coordinator::streaming::eval_batches_per_day(cfg);
+    if engine {
+        crate::engine::run_streaming(cfg, rt, gen_cfg.clone(), eval_batches_per_day)
+    } else {
+        let gen = SynthCriteo::new(gen_cfg.clone());
+        let trainer = Trainer::new(cfg.clone(), rt)?;
+        let mut st = StreamingTrainer::new(trainer, eval_batches_per_day);
+        st.run(&gen)
     }
 }
 

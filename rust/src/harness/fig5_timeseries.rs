@@ -4,25 +4,29 @@
 //! and frequency sources (first-day / all-days / streaming), ε = 1.0.
 //! Figure 6: the combined DP-AdaFEST+ vs its parts at period 1 with
 //! streaming frequencies.
+//!
+//! Runs on either training path: the sync `StreamingTrainer` (`sweep
+//! fig5`/`fig6`) or the async engine's streaming mode (`sweep
+//! fig5-async`/`fig6-async`) — bit-identical by the engine's equivalence
+//! contract, so the async ids exist to exercise the scale path.
 
 use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::coordinator::{Algorithm, StreamingTrainer, Trainer};
-use crate::data::{CriteoConfig, SynthCriteo};
+use crate::coordinator::Algorithm;
+use crate::data::CriteoConfig;
 use crate::runtime::Runtime;
 use crate::selection::FrequencySource;
 
-use super::common::{print_table, write_csv, SweepRow};
+use super::common::{print_table, streaming_once, write_csv, SweepRow};
 
 fn streaming_run(
     cfg: &RunConfig,
     rt: &Runtime,
-    gen: &SynthCriteo,
+    gen_cfg: &CriteoConfig,
+    engine: bool,
 ) -> Result<(f64, f64, f64)> {
-    let trainer = Trainer::new(cfg.clone(), rt)?;
-    let mut st = StreamingTrainer::new(trainer, cfg.eval_batches.max(2) / 2);
-    let out = st.run(gen)?;
+    let out = streaming_once(cfg, rt, gen_cfg, engine)?;
     Ok((
         out.outcome.utility,
         out.outcome.reduction_factor,
@@ -30,22 +34,20 @@ fn streaming_run(
     ))
 }
 
-fn drift_gen(cfg: &RunConfig, rt: &Runtime) -> Result<SynthCriteo> {
+fn drift_cfg(cfg: &RunConfig, rt: &Runtime) -> Result<CriteoConfig> {
     let model = rt.manifest.model(&cfg.model)?;
-    let vocabs = model.attr_usize_list("vocabs")?;
-    Ok(SynthCriteo::new(
-        CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A).with_drift(),
-    ))
+    crate::coordinator::streaming::drift_gen_cfg(cfg, model)
 }
 
-pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, combined: bool) -> Result<()> {
+pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, combined: bool, engine: bool) -> Result<()> {
     let mut base = cfg.clone();
     base.epsilon = 1.0;
     if fast {
         base.steps = base.steps.min(72); // 4/day over 18 days
         base.eval_batches = base.eval_batches.min(8);
     }
-    let gen = drift_gen(&base, rt)?;
+    let gen_cfg = drift_cfg(&base, rt)?;
+    let backend = if engine { "async engine" } else { "sync" };
 
     let mut rows = Vec::new();
     if combined {
@@ -59,7 +61,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, combined: bool) -> Result<
         ] {
             let mut c = base.clone();
             c.algorithm = algo;
-            let (auc, red, coords) = streaming_run(&c, rt, &gen)?;
+            let (auc, red, coords) = streaming_run(&c, rt, &gen_cfg, engine)?;
             let mut r = SweepRow::default();
             r.push("algorithm", algo.name());
             r.push("auc", format!("{auc:.4}"));
@@ -68,8 +70,14 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, combined: bool) -> Result<
             println!("  [fig6] {}: auc={auc:.4} red={red:.1}x", algo.name());
             rows.push(r);
         }
-        print_table("Figure 6: combined on Criteo-time-series", &rows);
-        write_csv("fig6_timeseries_combined", &rows)?;
+        print_table(
+            &format!("Figure 6: combined on Criteo-time-series ({backend})"),
+            &rows,
+        );
+        write_csv(
+            if engine { "fig6_timeseries_combined_async" } else { "fig6_timeseries_combined" },
+            &rows,
+        )?;
         println!("\npaper shape check: dp-adafest-plus ≥ max(parts) in reduction at ~equal AUC");
         return Ok(());
     }
@@ -87,7 +95,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, combined: bool) -> Result<
             c.algorithm = Algorithm::DpFest;
             c.streaming_period = period;
             c.freq_source = source;
-            let (auc, red, _) = streaming_run(&c, rt, &gen)?;
+            let (auc, red, _) = streaming_run(&c, rt, &gen_cfg, engine)?;
             let mut r = SweepRow::default();
             r.push("period", period);
             r.push("algorithm", "dp-fest");
@@ -101,7 +109,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, combined: bool) -> Result<
         let mut c = base.clone();
         c.algorithm = Algorithm::DpAdaFest;
         c.streaming_period = period;
-        let (auc, red, _) = streaming_run(&c, rt, &gen)?;
+        let (auc, red, _) = streaming_run(&c, rt, &gen_cfg, engine)?;
         let mut r = SweepRow::default();
         r.push("period", period);
         r.push("algorithm", "dp-adafest");
@@ -111,8 +119,14 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, combined: bool) -> Result<
         println!("  [fig5] T={period} adafest: auc={auc:.4} red={red:.1}x");
         rows.push(r);
     }
-    print_table("Figure 5: time-series utility/efficiency", &rows);
-    write_csv("fig5_timeseries", &rows)?;
+    print_table(
+        &format!("Figure 5: time-series utility/efficiency ({backend})"),
+        &rows,
+    );
+    write_csv(
+        if engine { "fig5_timeseries_async" } else { "fig5_timeseries" },
+        &rows,
+    )?;
     println!(
         "\npaper shape check: streaming ≈ all-days ≫ first-day for DP-FEST; \
          dp-adafest beats dp-fest at equal utility"

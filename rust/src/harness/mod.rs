@@ -29,20 +29,24 @@ pub fn run_experiment(name: &str, cfg: &RunConfig, rt: &Runtime, fast: bool) -> 
         "fig1b" => fig1_sparsity::run(cfg, fast),
         "fig3" => fig3_tradeoff::run(cfg, rt, fast),
         "fig4" => fig4_combined::run(cfg, rt, fast),
-        "fig5" => fig5_timeseries::run(cfg, rt, fast, false),
-        "fig6" => fig5_timeseries::run(cfg, rt, fast, true),
+        "fig5" => fig5_timeseries::run(cfg, rt, fast, false, false),
+        "fig5-async" => fig5_timeseries::run(cfg, rt, fast, false, true),
+        "fig6" => fig5_timeseries::run(cfg, rt, fast, true, false),
+        "fig6-async" => fig5_timeseries::run(cfg, rt, fast, true, true),
         "fig7" => fig7_hparams::run(cfg, rt, fast, false),
         "fig8" => fig3_tradeoff::run_scatter(cfg, rt, fast),
         "fig9" => fig7_hparams::run(cfg, rt, fast, true),
         "tab1" => tab1_lora::run(cfg, rt, fast),
         "tab2" => tab2_vocab::run(cfg, rt, fast),
         "tab4" => tab4_wallclock::run(fast),
-        "tab5" => tab5_streaming::run(cfg, rt, fast),
+        "tab5" => tab5_streaming::run(cfg, rt, fast, false),
+        "tab5-async" => tab5_streaming::run(cfg, rt, fast, true),
         "tab6" => tab6_frozen::run(cfg, rt, fast),
         "lemma31" => lemma31::run(fast),
         "fullscale" => fullscale::run(cfg.seed, fast),
         other => bail!(
-            "unknown experiment {other} (want fig1b|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab6|lemma31|fullscale)"
+            "unknown experiment {other} (want fig1b|fig3|fig4|fig5|fig5-async|fig6|fig6-async|\
+             fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab5-async|tab6|lemma31|fullscale)"
         ),
     }
 }

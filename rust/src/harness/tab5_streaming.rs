@@ -5,25 +5,29 @@
 //! shrinks (more staleness sensitivity / fewer examples per update window),
 //! while non-private training is insensitive — evidence that DP training is
 //! more vulnerable to distribution shift.
+//!
+//! Runs on either training path: the sync `StreamingTrainer` (`sweep tab5`)
+//! or the async engine's streaming mode (`sweep tab5-async`) — the two are
+//! bit-identical, so the async variant exists to exercise/benchmark the
+//! scale path, not to change numbers.
 
 use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::coordinator::{Algorithm, StreamingTrainer, Trainer};
-use crate::data::{CriteoConfig, SynthCriteo};
+use crate::coordinator::Algorithm;
 use crate::runtime::Runtime;
 
-use super::common::{print_table, write_csv, SweepRow};
+use super::common::{print_table, streaming_once, write_csv, SweepRow};
 
-pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
+pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool, engine: bool) -> Result<()> {
     let mut base = cfg.clone();
     if fast {
         base.steps = base.steps.min(72);
         base.eval_batches = base.eval_batches.min(8);
     }
     let model = rt.manifest.model(&base.model)?;
-    let vocabs = model.attr_usize_list("vocabs")?;
-    let gen = SynthCriteo::new(CriteoConfig::new(vocabs, base.seed ^ 0xDA7A).with_drift());
+    let gen_cfg = crate::coordinator::streaming::drift_gen_cfg(&base, model)?;
+    let backend = if engine { "async engine" } else { "sync" };
 
     let periods: &[usize] = if fast { &[1, 18] } else { &[1, 2, 4, 8, 16, 18] };
     let epsilons: &[f64] = if fast { &[1.0] } else { &[1.0, 3.0, 8.0] };
@@ -37,9 +41,7 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
             c.algorithm = Algorithm::DpSgd;
             c.epsilon = eps;
             c.streaming_period = period;
-            let trainer = Trainer::new(c.clone(), rt)?;
-            let mut st = StreamingTrainer::new(trainer, c.eval_batches.max(2) / 2);
-            let out = st.run(&gen)?;
+            let out = streaming_once(&c, rt, &gen_cfg, engine)?;
             row.push(&format!("eps_{eps}"), format!("{:.4}", out.outcome.utility));
             println!("  [tab5] T={period} eps={eps}: auc={:.4}", out.outcome.utility);
         }
@@ -47,15 +49,16 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
         let mut c = base.clone();
         c.algorithm = Algorithm::NonPrivate;
         c.streaming_period = period;
-        let trainer = Trainer::new(c.clone(), rt)?;
-        let mut st = StreamingTrainer::new(trainer, c.eval_batches.max(2) / 2);
-        let out = st.run(&gen)?;
+        let out = streaming_once(&c, rt, &gen_cfg, engine)?;
         row.push("non_private", format!("{:.4}", out.outcome.utility));
         println!("  [tab5] T={period} non-private: auc={:.4}", out.outcome.utility);
         rows.push(row);
     }
-    print_table("Table 5: AUC vs streaming period", &rows);
-    write_csv("tab5_streaming", &rows)?;
+    print_table(&format!("Table 5: AUC vs streaming period ({backend})"), &rows);
+    write_csv(
+        if engine { "tab5_streaming_async" } else { "tab5_streaming" },
+        &rows,
+    )?;
     println!(
         "\npaper shape check: DP columns improve slightly with larger periods; \
          non-private column is ~flat"

@@ -27,7 +27,14 @@
 //! * [`engine`] — the asynchronous sharded engine: pipelined data workers →
 //!   per-example gradient workers → a DP aggregation barrier that draws all
 //!   noise once per logical batch.  Bit-for-bit equivalent to the sync path
-//!   at any worker count (`sparse-dp-emb train-async`).
+//!   at any worker count (`sparse-dp-emb train-async`); `docs/ENGINE.md`
+//!   is the architecture reference.
+//!
+//! Both paths also run the paper's §4.3 streaming (time-series) protocol
+//! through one shared calendar ([`coordinator::streaming::StreamSchedule`]):
+//! the sync [`coordinator::StreamingTrainer`] (`stream`) and the engine's
+//! streaming barrier ([`engine::run_streaming`], `train-async --stream`)
+//! produce bit-identical [`coordinator::StreamingOutcome`]s.
 //!
 //! Python never runs on the training path: `make artifacts` is an optional
 //! one-time build step and the resulting binary is self-contained.

@@ -4,8 +4,9 @@
 //! ```text
 //! sparse-dp-emb train       [--model criteo-small] [--algorithm dp-adafest] [--epsilon 1.0] ...
 //! sparse-dp-emb train-async [--engine-workers 4] [--engine-shards 16] ...   # pipelined engine
+//! sparse-dp-emb train-async --stream [--freq-source streaming] [--streaming-period 1] ...
 //! sparse-dp-emb stream      [--streaming-period 1] [--freq-source streaming] ...
-//! sparse-dp-emb sweep       <fig1b|fig3|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab6|lemma31> [--fast]
+//! sparse-dp-emb sweep       <fig1b|fig3|fig4|fig5[-async]|fig6[-async]|fig7|fig8|fig9|tab1|tab2|tab4|tab5[-async]|tab6|lemma31> [--fast]
 //! sparse-dp-emb account     [--epsilon 1.0] [--steps 200] ...   # privacy accounting only
 //! sparse-dp-emb info                                            # manifest / artifact inventory
 //! ```
@@ -15,6 +16,10 @@
 //! Both commands drive either model family: the built-in reference manifest
 //! covers `criteo-small`/`criteo-tiny` (pCTR) and `nlu-small`/`nlu-tiny`
 //! (native transformer), so no artifacts are needed for any of them.
+//! `train-async --stream` runs the §4.3 streaming (time-series) protocol on
+//! the engine, bit-identical to the sync `stream` command for the same
+//! seed/config (`--freq-source first-day|all-days|streaming`,
+//! `--streaming-period <days>`).
 //!
 //! Any `RunConfig` field can be overridden with `--key value`; `--config
 //! path` loads a `key = value` file first.
@@ -47,15 +52,26 @@ fn main() -> Result<()> {
     } else {
         false
     };
+    let stream = if let Some(pos) = args.iter().position(|a| a == "--stream") {
+        args.remove(pos);
+        true
+    } else {
+        false
+    };
     let positional = cfg.apply_args(&args)?;
     let Some(command) = positional.first() else {
         print_usage();
         bail!("no command given");
     };
+    if stream && command != "train-async" {
+        // not silently ignorable: `train --stream` is a likely typo for the
+        // `stream` subcommand and would otherwise train non-streaming
+        bail!("--stream only applies to train-async (did you mean the `stream` command?)");
+    }
 
     match command.as_str() {
         "train" => cmd_train(&cfg),
-        "train-async" => cmd_train_async(&cfg),
+        "train-async" => cmd_train_async(&cfg, stream),
         "stream" => cmd_stream(&cfg),
         "sweep" => {
             let exp = positional
@@ -76,6 +92,8 @@ fn main() -> Result<()> {
 fn print_usage() {
     eprintln!(
         "usage: sparse-dp-emb <train|train-async|stream|sweep|account|info> [--key value ...] [--fast]\n\
+         train-async also takes --stream (async §4.3 time-series protocol, \
+         with --freq-source / --streaming-period)\n\
          see rust/src/main.rs docs for the command list"
     );
 }
@@ -108,7 +126,7 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train_async(cfg: &RunConfig) -> Result<()> {
+fn cmd_train_async(cfg: &RunConfig, stream: bool) -> Result<()> {
     let rt = Runtime::new(&cfg.artifacts_dir)?;
     println!(
         "[train-async] platform={} {} workers={} data={} shards={} depth={}",
@@ -119,6 +137,33 @@ fn cmd_train_async(cfg: &RunConfig) -> Result<()> {
         cfg.engine.shards,
         cfg.engine.channel_depth,
     );
+    if stream {
+        // the async twin of `stream`: same drift generator, same seed
+        // derivation, bit-identical StreamingOutcome
+        let model = rt.manifest.model(&cfg.model)?.clone();
+        if model.kind != "pctr" {
+            bail!("--stream is for pctr models");
+        }
+        let gcfg = sparse_dp_emb::coordinator::streaming::drift_gen_cfg(cfg, &model)?;
+        println!(
+            "[train-async] streaming period={} source={:?}",
+            cfg.streaming_period, cfg.freq_source
+        );
+        let t0 = std::time::Instant::now();
+        let epd = sparse_dp_emb::coordinator::streaming::eval_batches_per_day(cfg);
+        let out = sparse_dp_emb::engine::run_streaming(cfg, &rt, gcfg, epd)?;
+        let dt = t0.elapsed();
+        println!(
+            "[train-async] {} streamed steps in {:.2?} ({:.1} steps/s)",
+            out.outcome.loss_history.len(),
+            dt,
+            out.outcome.loss_history.len() as f64 / dt.as_secs_f64()
+        );
+        println!("[train-async] per-eval-day AUC: {:?}", out.per_day_auc);
+        println!("[train-async] reselections: {}", out.reselections);
+        report(&out.outcome, &rt);
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
     let outcome = sparse_dp_emb::engine::run(cfg, &rt)?;
     let dt = t0.elapsed();
@@ -138,8 +183,8 @@ fn cmd_stream(cfg: &RunConfig) -> Result<()> {
     if model.kind != "pctr" {
         bail!("stream mode is for pctr models");
     }
-    let vocabs = model.attr_usize_list("vocabs")?;
-    let gen = SynthCriteo::new(CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A).with_drift());
+    let gen =
+        SynthCriteo::new(sparse_dp_emb::coordinator::streaming::drift_gen_cfg(cfg, &model)?);
     let trainer = Trainer::new(cfg.clone(), &rt)?;
     println!(
         "[stream] {} period={} source={:?}",
@@ -147,7 +192,8 @@ fn cmd_stream(cfg: &RunConfig) -> Result<()> {
         cfg.streaming_period,
         cfg.freq_source
     );
-    let mut st = StreamingTrainer::new(trainer, cfg.eval_batches.max(2) / 2);
+    let epd = sparse_dp_emb::coordinator::streaming::eval_batches_per_day(cfg);
+    let mut st = StreamingTrainer::new(trainer, epd);
     let out = st.run(&gen)?;
     println!("[stream] per-eval-day AUC: {:?}", out.per_day_auc);
     println!("[stream] reselections: {}", out.reselections);

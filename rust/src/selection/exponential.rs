@@ -1,4 +1,4 @@
-//! DP-SGD with exponential selection [ZMH21] — the prior-work baseline.
+//! DP-SGD with exponential selection \[ZMH21\] — the prior-work baseline.
 //!
 //! Per step, a fixed number `m` of embedding rows is sampled (without
 //! replacement) with probability proportional to

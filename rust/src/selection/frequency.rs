@@ -62,6 +62,20 @@ impl FrequencyTracker {
         }
     }
 
+    /// Merge pre-aggregated `(bucket, count)` pairs for one feature — the
+    /// form in which the async engine's data workers ship each batch's
+    /// observations to the aggregation barrier.  Addition commutes, so the
+    /// running sums are bit-identical to per-example [`observe`] calls no
+    /// matter how batches were counted or in what order they arrive.
+    ///
+    /// [`observe`]: FrequencyTracker::observe
+    pub fn merge_counts(&mut self, feature: usize, pairs: &[(u32, u32)]) {
+        let m = &mut self.counts[feature];
+        for &(b, c) in pairs {
+            *m.entry(b).or_insert(0) += c as u64;
+        }
+    }
+
     /// Publish the running counts to the selection snapshot (called at each
     /// streaming-period boundary).  `FirstDay` freezes after the first call.
     pub fn publish(&mut self) {
@@ -111,6 +125,18 @@ mod tests {
         t.observe(0, &[2, 2, 2]);
         t.publish(); // must be ignored
         assert_eq!(t.dense_counts(0, 3), vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn merge_counts_equals_per_example_observe() {
+        let mut a = FrequencyTracker::new(1, FrequencySource::Streaming);
+        let mut b = FrequencyTracker::new(1, FrequencySource::Streaming);
+        a.observe(0, &[3, 1, 3, 3, 7]);
+        b.merge_counts(0, &[(1, 1), (3, 3), (7, 1)]);
+        a.publish();
+        b.publish();
+        assert_eq!(a.dense_counts(0, 8), b.dense_counts(0, 8));
+        assert_eq!(a.total_observed(0), b.total_observed(0));
     }
 
     #[test]

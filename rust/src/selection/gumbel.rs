@@ -1,4 +1,4 @@
-//! One-shot DP top-k selection (paper Algorithm 2, following [DR21]).
+//! One-shot DP top-k selection (paper Algorithm 2, following \[DR21\]).
 //!
 //! Add i.i.d. `Gumbel(k/ε)`-style noise to bucket frequencies and return the
 //! indices of the k largest noisy counts.  With per-user contribution

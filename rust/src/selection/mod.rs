@@ -4,7 +4,7 @@
 //!   pre-training frequency filtering, with the per-feature ε/k budget split
 //!   of Appendix B.1.
 //! * [`exponential`] — the DP-SGD-with-exponential-selection baseline
-//!   [ZMH21] that Figures 3/8 compare against.
+//!   \[ZMH21\] that Figures 3/8 compare against.
 //! * [`frequency`] — streaming frequency tracking for the time-series
 //!   experiments (first-day / all-days / streaming-period sources, Fig. 5).
 

@@ -62,8 +62,8 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 /// xoshiro256++ PRNG. Not cryptographically secure — fine for simulation;
-/// a production DP deployment would swap in a CSPRNG here (single trait
-/// boundary: [`Rng`]).
+/// a production DP deployment would swap in a CSPRNG here (this type is
+/// the single substitution boundary).
 #[derive(Clone, Debug)]
 pub struct Xoshiro256 {
     s: [u64; 4],

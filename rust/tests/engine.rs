@@ -12,12 +12,13 @@
 
 use sparse_dp_emb::config::RunConfig;
 use sparse_dp_emb::coordinator::step::{GradBundle, StepState};
-use sparse_dp_emb::coordinator::{Algorithm, Trainer};
-use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
+use sparse_dp_emb::coordinator::{Algorithm, StreamingOutcome, StreamingTrainer, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig, TRAIN_DAYS};
 use sparse_dp_emb::engine::{self, ShardedStore, ShardedTable};
 use sparse_dp_emb::models::ParamStore;
 use sparse_dp_emb::proptest::{check, ensure, usize_in};
 use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::selection::FrequencySource;
 use sparse_dp_emb::sparse::{DenseState, Optimizer, RowSparseGrad};
 use sparse_dp_emb::util::rng::Xoshiro256;
 
@@ -317,6 +318,119 @@ fn engine_rejects_mismatched_generator_geometry() {
     let pctr = tiny_cfg(Algorithm::NonPrivate);
     let wrong_features = CriteoConfig::new(vec![8, 8], 1); // criteo-tiny has 4
     assert!(engine::run_pctr(&pctr, &rt, wrong_features).is_err());
+}
+
+// ---- streaming (§4.3) mode ----
+
+fn streaming_cfg(algo: Algorithm, source: FrequencySource, period: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 18; // 1 step/day over the 18 training days
+    cfg.eval_batches = 4;
+    cfg.c2 = 0.5;
+    cfg.fest_top_k = 64;
+    cfg.freq_source = source;
+    cfg.streaming_period = period;
+    cfg
+}
+
+fn sync_streaming(cfg: &RunConfig, rt: &Runtime, gcfg: &CriteoConfig) -> StreamingOutcome {
+    let gen = SynthCriteo::new(gcfg.clone());
+    let trainer = Trainer::new(cfg.clone(), rt).unwrap();
+    let mut st = StreamingTrainer::new(trainer, 2);
+    st.run(&gen).unwrap()
+}
+
+fn assert_streaming_identical(a: &StreamingOutcome, b: &StreamingOutcome, what: &str) {
+    assert_outcomes_identical(&a.outcome, &b.outcome, what);
+    assert_eq!(a.per_day_auc, b.per_day_auc, "{what}: per-day AUC");
+    assert_eq!(a.reselections, b.reselections, "{what}: reselections");
+}
+
+#[test]
+fn streaming_sync_and_async_match_for_all_frequency_sources() {
+    // The acceptance bar of the engine's streaming mode: for every
+    // FrequencySource, `run_streaming` reproduces the sync StreamingTrainer
+    // bit for bit — per-day AUCs, reselection count, loss history, final
+    // utility — at more than one worker/shard configuration.
+    let rt = Runtime::builtin();
+    for source in [
+        FrequencySource::FirstDay,
+        FrequencySource::AllDays,
+        FrequencySource::Streaming,
+    ] {
+        let cfg = streaming_cfg(Algorithm::DpFest, source, 4);
+        let gcfg = gen_cfg(&rt, &cfg).with_drift();
+        let sync_out = sync_streaming(&cfg, &rt, &gcfg);
+        assert!(sync_out.outcome.loss_history.iter().all(|l| l.is_finite()));
+        assert_eq!(sync_out.per_day_auc.len(), 6);
+        // reselection budget: frozen sources select once; streaming
+        // reselects at every period boundary, ceil(18/4) = 5 times
+        let expected = match source {
+            FrequencySource::Streaming => TRAIN_DAYS.div_ceil(4),
+            _ => 1,
+        };
+        assert_eq!(sync_out.reselections, expected, "{source:?}: reselections");
+        for (gw, dw, shards) in [(1, 1, 1), (4, 2, 16)] {
+            let mut c = cfg.clone();
+            c.engine.grad_workers = gw;
+            c.engine.data_workers = dw;
+            c.engine.shards = shards;
+            let async_out = engine::run_streaming(&c, &rt, gcfg.clone(), 2).unwrap();
+            assert_streaming_identical(
+                &sync_out,
+                &async_out,
+                &format!("{source:?} ({gw},{dw},{shards})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_async_invariant_to_period_and_engine_knobs() {
+    // DP-AdaFEST+ is the strictest case: periodic FEST Gumbel draws at the
+    // barrier interleave with per-batch contribution-map noise, so any
+    // drift in the streaming schedule shows up immediately.
+    let rt = Runtime::builtin();
+    for period in [1usize, 6] {
+        let cfg = streaming_cfg(Algorithm::DpAdaFestPlus, FrequencySource::Streaming, period);
+        let gcfg = gen_cfg(&rt, &cfg).with_drift();
+        let sync_out = sync_streaming(&cfg, &rt, &gcfg);
+        assert_eq!(sync_out.reselections, TRAIN_DAYS.div_ceil(period));
+        for (gw, dw, depth, shards, mb) in [(2, 2, 1, 7, 2), (6, 3, 16, 64, 100)] {
+            let mut c = cfg.clone();
+            c.engine.grad_workers = gw;
+            c.engine.data_workers = dw;
+            c.engine.channel_depth = depth;
+            c.engine.shards = shards;
+            c.engine.microbatch_chunks = mb;
+            let async_out = engine::run_streaming(&c, &rt, gcfg.clone(), 2).unwrap();
+            assert_streaming_identical(
+                &sync_out,
+                &async_out,
+                &format!("period {period} ({gw},{dw},{depth},{shards},{mb})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_without_fest_never_reselects_and_still_matches() {
+    // DP-SGD on the time axis (the Table-5 setting): no reselection events,
+    // but the day-ordered batch streams and per-day eval must still agree.
+    // `steps` is deliberately not a multiple of 18: both executors must
+    // round to whole days (18 streamed steps) and re-calibrate σ for the
+    // streamed step count, identically.
+    let rt = Runtime::builtin();
+    let mut cfg = streaming_cfg(Algorithm::DpSgd, FrequencySource::Streaming, 2);
+    cfg.steps = 20; // -> 1 step/day, 18 streamed steps
+    let gcfg = gen_cfg(&rt, &cfg).with_drift();
+    let sync_out = sync_streaming(&cfg, &rt, &gcfg);
+    assert_eq!(sync_out.reselections, 0);
+    assert_eq!(sync_out.outcome.loss_history.len(), 18);
+    let async_out = engine::run_streaming(&cfg, &rt, gcfg, 2).unwrap();
+    assert_streaming_identical(&sync_out, &async_out, "dp-sgd streaming");
 }
 
 #[test]
