@@ -1,0 +1,241 @@
+"""f64 mirror of the native Rust transformer executor's backward formulas.
+
+`rust/src/runtime/reference/transformer.rs` hand-derives the backward pass
+for both embedding parametrizations (`EmbParam::Full` and
+`EmbParam::LoRA`).  This file re-implements the forward and the *same*
+analytic backward in NumPy f64 and central-differences the summed loss —
+the acceptance bar for the formulas is a relative error <= 1e-4 per
+coordinate (observed: ~1e-7; the in-tree f32 Rust tests necessarily use a
+machine-precision-aware bound, see `fd_check` there).
+
+Pure NumPy — runs without jax, unlike the kernel/pytest suites next door.
+"""
+
+import numpy as np
+import pytest
+
+GELU_C = 0.7978845608028654  # sqrt(2/pi), transformer.rs::GELU_C
+GELU_A = 0.044715
+LN_EPS = 1e-5
+
+
+def posenc(T, d):
+    pe = np.zeros((T, d))
+    for pos in range(T):
+        for i in range(d):
+            ang = pos / (10000.0 ** ((2 * (i // 2)) / d))
+            pe[pos, i] = np.sin(ang) if i % 2 == 0 else np.cos(ang)
+    return pe
+
+
+def gelu(x):
+    u = GELU_C * (x + GELU_A * x ** 3)
+    return 0.5 * x * (1.0 + np.tanh(u))
+
+
+def gelu_prime(x):
+    u = GELU_C * (x + GELU_A * x ** 3)
+    th = np.tanh(u)
+    return 0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (
+        1.0 + 3.0 * GELU_A * x * x
+    )
+
+
+def ln_fwd(u, g, b):
+    mu = u.mean(-1, keepdims=True)
+    var = ((u - mu) ** 2).mean(-1, keepdims=True)
+    inv = 1.0 / np.sqrt(var + LN_EPS)
+    xhat = (u - mu) * inv
+    return xhat * g + b, (xhat, inv)
+
+
+def ln_bwd(dy, g, cache):
+    xhat, inv = cache
+    dxh = dy * g
+    m1 = dxh.mean(-1, keepdims=True)
+    m2 = (dxh * xhat).mean(-1, keepdims=True)
+    return (dxh - m1 - xhat * m2) * inv
+
+
+class Mirror:
+    """One-example forward/backward, mirroring transformer.rs layouts."""
+
+    def __init__(self, V, d, h, ff, L, T, C, rank=0, seed=0):
+        rng = np.random.default_rng(seed)
+        self.V, self.d, self.h, self.ff = V, d, h, ff
+        self.L, self.T, self.C, self.rank = L, T, C, rank
+        self.pe = posenc(T, d)
+        self.E = rng.normal(0, 0.3, (V, d))
+        if rank:
+            self.A = rng.normal(0, 0.3, (V, rank))
+            self.B = rng.normal(0, 0.4, (rank, d))  # nonzero: A-path carries signal
+        ws = d ** -0.5
+        self.layers = []
+        for _ in range(L):
+            self.layers.append(dict(
+                wq=rng.normal(0, ws, (d, d)), bq=rng.normal(0, 0.05, d),
+                wk=rng.normal(0, ws, (d, d)), bk=rng.normal(0, 0.05, d),
+                wv=rng.normal(0, ws, (d, d)), bv=rng.normal(0, 0.05, d),
+                wo=rng.normal(0, ws, (d, d)), bo=rng.normal(0, 0.05, d),
+                g1=1 + rng.normal(0, 0.1, d), b1=rng.normal(0, 0.05, d),
+                ff1=rng.normal(0, ws, (d, ff)), bf1=rng.normal(0, 0.05, ff),
+                ff2=rng.normal(0, ff ** -0.5, (ff, d)), bf2=rng.normal(0, 0.05, d),
+                g2=1 + rng.normal(0, 0.1, d), b2=rng.normal(0, 0.05, d),
+            ))
+        self.hw = rng.normal(0, 0.3, (d, C))
+        self.hb = rng.normal(0, 0.1, C)
+
+    def encode(self, ids):
+        dh = self.d // self.h
+        z = self.E[ids].copy()
+        if self.rank:
+            z = z + self.A[ids] @ self.B
+        x = z + self.pe
+        caches = []
+        for lay in self.layers:
+            q = x @ lay["wq"] + lay["bq"]
+            k = x @ lay["wk"] + lay["bk"]
+            v = x @ lay["wv"] + lay["bv"]
+            ctx = np.zeros_like(x)
+            atts = []
+            for hh in range(self.h):
+                sl = slice(hh * dh, (hh + 1) * dh)
+                sc = q[:, sl] @ k[:, sl].T / np.sqrt(dh)
+                att = np.exp(sc - sc.max(-1, keepdims=True))
+                att /= att.sum(-1, keepdims=True)
+                ctx[:, sl] = att @ v[:, sl]
+                atts.append(att)
+            u1 = ctx @ lay["wo"] + lay["bo"] + x
+            x1, ln1 = ln_fwd(u1, lay["g1"], lay["b1"])
+            a = x1 @ lay["ff1"] + lay["bf1"]
+            u2 = gelu(a) @ lay["ff2"] + lay["bf2"] + x1
+            x2, ln2 = ln_fwd(u2, lay["g2"], lay["b2"])
+            caches.append(dict(q=q, k=k, v=v, atts=atts, ln1=ln1, ln2=ln2, a=a))
+            x = x2
+        pooled = x.mean(0)
+        return caches, pooled, pooled @ self.hw + self.hb
+
+    def loss_one(self, ids, label):
+        _, _, logits = self.encode(ids)
+        m = logits.max()
+        return m + np.log(np.exp(logits - m).sum()) - logits[label]
+
+    def backward_one(self, ids, label):
+        dh = self.d // self.h
+        caches, pooled, logits = self.encode(ids)
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        dlog = p.copy()
+        dlog[label] -= 1.0
+        dhw = np.outer(pooled, dlog)
+        dhb = dlog.copy()
+        dx = np.tile((self.hw @ dlog) / self.T, (self.T, 1))
+        for lay, c in zip(reversed(self.layers), reversed(caches)):
+            du2 = ln_bwd(dx, lay["g2"], c["ln2"])
+            dx1 = du2.copy()
+            da = (du2 @ lay["ff2"].T) * gelu_prime(c["a"])
+            dx1 += da @ lay["ff1"].T
+            du1 = ln_bwd(dx1, lay["g1"], c["ln1"])
+            dxin = du1.copy()
+            dctx = du1 @ lay["wo"].T
+            dq = np.zeros_like(dx)
+            dk = np.zeros_like(dx)
+            dv = np.zeros_like(dx)
+            for hh in range(self.h):
+                sl = slice(hh * dh, (hh + 1) * dh)
+                att = c["atts"][hh]
+                datt = dctx[:, sl] @ c["v"][:, sl].T
+                dv[:, sl] += att.T @ dctx[:, sl]
+                dot = (att * datt).sum(-1, keepdims=True)
+                ds = att * (datt - dot) / np.sqrt(dh)
+                dq[:, sl] += ds @ c["k"][:, sl]
+                dk[:, sl] += ds.T @ c["q"][:, sl]
+            dxin += dq @ lay["wq"].T + dk @ lay["wk"].T + dv @ lay["wv"].T
+            dx = dxin
+        dz = dx
+        if self.rank:
+            return dz, dz @ self.B.T, self.A[ids].T @ dz, dhw, dhb
+        return dz, None, None, dhw, dhb
+
+
+# The Rust FD batch: repeats within example 0 (token 5) and example 2
+# (token 9), and token 5 shared across examples 0 and 3.
+IDS = np.array([5, 5, 7, 2, 0, 1, 2, 3, 9, 11, 9, 4, 20, 6, 3, 5]).reshape(4, 4)
+LABELS = [0, 2, 1, 0]
+TOL = 1e-4  # the acceptance tolerance; observed errors are ~1e-7
+
+
+def central_diff(f, arr, idx, eps=1e-6):
+    orig = arr[idx]
+    arr[idx] = orig + eps
+    lp = f()
+    arr[idx] = orig - eps
+    lm = f()
+    arr[idx] = orig
+    return (lp - lm) / (2 * eps)
+
+
+def batch_grads(m):
+    agg = {"hw": 0.0, "hb": 0.0, "B": 0.0}
+    scat = np.zeros((m.V, m.rank or m.d))
+    for i in range(4):
+        dz, da_rows, dB, dhw, dhb = m.backward_one(IDS[i], LABELS[i])
+        agg["hw"] = agg["hw"] + dhw
+        agg["hb"] = agg["hb"] + dhb
+        if m.rank:
+            agg["B"] = agg["B"] + dB
+            np.add.at(scat, IDS[i], da_rows)
+        else:
+            np.add.at(scat, IDS[i], dz)
+    return agg, scat
+
+
+def relerr(a, f):
+    scale = max(abs(a), abs(f), 1e-12)
+    return abs(a - f) / scale
+
+
+@pytest.mark.parametrize("rank", [0, 3])
+def test_backward_matches_central_differences(rank):
+    m = Mirror(V=24, d=8, h=2, ff=12, L=2, T=4, C=3, rank=rank, seed=1)
+    total = lambda: sum(m.loss_one(IDS[i], LABELS[i]) for i in range(4))
+    agg, scat = batch_grads(m)
+    for c in range(3):
+        assert relerr(agg["hb"][c], central_diff(total, m.hb, c)) < TOL
+    for idx in [(0, 0), (3, 1), (7, 2)]:
+        assert relerr(agg["hw"][idx], central_diff(total, m.hw, idx)) < TOL
+    if rank:
+        for idx in [(0, 0), (1, 3), (2, 7)]:
+            assert relerr(agg["B"][idx], central_diff(total, m.B, idx)) < TOL
+        for idx in [(5, 0), (5, 2), (7, 1), (2, 0), (9, 2), (20, 1)]:
+            assert relerr(scat[idx], central_diff(total, m.A, idx)) < TOL
+        # an A row no example touches carries exactly zero gradient
+        assert scat[23, 0] == 0.0
+        assert abs(central_diff(total, m.A, (23, 0))) < 1e-12
+    else:
+        for idx in [(5, 0), (5, 3), (7, 2), (2, 1), (9, 5), (20, 7)]:
+            assert relerr(scat[idx], central_diff(total, m.E, idx)) < TOL
+
+
+@pytest.mark.parametrize("rank", [0, 3])
+def test_gram_identity_equals_dense_scatter(rank):
+    # The clip factor's scattered squared norm (pairwise Gram identity over
+    # same-token slots) must equal the norm of the dense scatter-add — in
+    # the original token order and under permutations of each example.
+    m = Mirror(V=24, d=8, h=2, ff=12, L=2, T=4, C=3, rank=rank, seed=1)
+    for i in range(4):
+        for perm_seed in range(3):
+            perm = np.random.default_rng(perm_seed).permutation(4)
+            ids = IDS[i][perm]
+            dz, da_rows, _, _, _ = m.backward_one(ids, LABELS[i])
+            rows = da_rows if rank else dz
+            gram = sum(
+                rows[p] @ rows[s]
+                for p in range(4)
+                for s in range(4)
+                if ids[p] == ids[s]
+            )
+            scat = np.zeros((m.V, rows.shape[1]))
+            np.add.at(scat, ids, rows)
+            dense_sq = (scat ** 2).sum()
+            assert abs(gram - dense_sq) <= 1e-9 * max(1.0, dense_sq)

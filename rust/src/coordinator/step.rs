@@ -47,16 +47,20 @@ use crate::util::rng::Xoshiro256;
 
 use super::algorithm::Algorithm;
 
-/// One embedding table's geometry in the concatenated row space.
+/// One embedding table's geometry in the concatenated row space.  "Table"
+/// means whatever parameter the model trains row-sparsely: a per-feature
+/// Criteo table, the NLU token table, or the LoRA `emb_lora_a` factor
+/// (token rows of the adapter rank).
 #[derive(Clone, Debug)]
 pub struct EmbTable {
     /// index of the table's parameter in the param store
     pub param_index: usize,
-    /// parameter name in the manifest (e.g. `table_03`, `emb_table`)
+    /// parameter name in the manifest (e.g. `table_03`, `emb_table`,
+    /// `emb_lora_a`)
     pub name: String,
     /// number of rows (buckets / tokens)
     pub vocab: usize,
-    /// embedding dimension
+    /// row width (embedding dimension, or the LoRA rank)
     pub dim: usize,
     /// offset of this table's first row in the concatenated row space
     pub row_offset: usize,
@@ -277,6 +281,10 @@ pub fn model_geometry(model: &ModelManifest, store: &ParamStore) -> Result<Model
         }
         "nlu" => {
             let vocab = model.attr_usize("vocab")?;
+            // LoRA-on-embedding models train the (V, r) A factor
+            // row-sparsely in place of the (V, d) table; the B factor and
+            // the head ride the dense path (output_plan sees their
+            // `grad_*` outputs).
             let emb_lora = model.attr_usize("emb_lora_rank").unwrap_or(0);
             let (pname, dim) = if emb_lora > 0 {
                 ("emb_lora_a".to_string(), emb_lora)

@@ -107,9 +107,16 @@ pub fn pctr_batch_counts(batch: &PctrBatch) -> Vec<Vec<(u32, u32)>> {
 }
 
 /// Record one batch's bucket observations into the tracker (all features).
+/// Goes straight through [`FrequencyTracker::observe`] — the sort-based
+/// pre-aggregation of [`pctr_batch_counts`] only pays off when the pairs
+/// travel over the engine's worker→barrier channel; the running sums are
+/// bit-identical either way (integer addition commutes).
 pub fn observe_batch(tracker: &mut FrequencyTracker, batch: &PctrBatch) {
-    for (f, pairs) in pctr_batch_counts(batch).iter().enumerate() {
-        tracker.merge_counts(f, pairs);
+    let mut col: Vec<i32> = Vec::with_capacity(batch.batch_size);
+    for f in 0..batch.num_features {
+        col.clear();
+        col.extend((0..batch.batch_size).map(|i| batch.cat_of(i, f)));
+        tracker.observe(f, &col);
     }
 }
 

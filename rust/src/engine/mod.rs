@@ -17,9 +17,13 @@
 //!
 //! The pipeline is **kind-generic**: [`run`] derives the data source from
 //! the model manifest and drives either workload — the Criteo tower
-//! ([`run_pctr`]) or the NLU transformer ([`run_text`]) — through the same
-//! worker bodies, with the chunk math dispatched by
-//! [`RefModel`](crate::runtime::reference::RefModel).
+//! ([`run_pctr`]) or the NLU transformer ([`run_text`]), with the full
+//! embedding table or its LoRA reparametrization — through the same worker
+//! bodies, with the chunk math dispatched by
+//! [`RefModel`](crate::runtime::reference::RefModel).  The sparse table the
+//! engine shards and row-caches is whatever parameter the manifest
+//! designates row-sparse (`table_*`, `emb_table`, or the LoRA `emb_lora_a`
+//! factor), so the LoRA models ride the same snapshots.
 //!
 //! **Bit-for-bit equivalence with the sync path** rests on three documented
 //! invariants (each with a test in `tests/engine.rs`, for both workloads;
@@ -105,6 +109,14 @@ use crate::selection::FrequencyTracker;
 /// assert!(outcome.loss_history.iter().all(|l| l.is_finite()));
 /// ```
 pub fn run(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
+    run_with_params(cfg, rt).map(|(outcome, _)| outcome)
+}
+
+/// Like [`run`], but also return the final [`ParamStore`] — for
+/// checkpointing, and for the bit-exactness tests that compare the engine's
+/// final parameters against the sync trainer's store coordinate for
+/// coordinate (`tests/engine.rs` does this on the LoRA models).
+pub fn run_with_params(cfg: &RunConfig, rt: &Runtime) -> Result<(TrainOutcome, ParamStore)> {
     let model = rt.manifest.model(&cfg.model)?;
     let src = match model.kind.as_str() {
         "pctr" => GenConfig::Pctr(CriteoConfig::new(
@@ -114,7 +126,10 @@ pub fn run(cfg: &RunConfig, rt: &Runtime) -> Result<TrainOutcome> {
         "nlu" => GenConfig::Text(TextConfig::from_model(model, cfg.seed ^ 0xDA7A)?),
         other => bail!("unknown model kind {other}"),
     };
-    run_plain(cfg, rt, src)
+    match run_with(cfg, rt, src, None)? {
+        Trained::Plain(outcome, store) => Ok((outcome, store)),
+        Trained::Streaming(_) => unreachable!("plain run_with returns Plain"),
+    }
 }
 
 /// Async pCTR training over an explicit generator config (harness/bench
@@ -154,14 +169,15 @@ pub fn run_streaming(
 
 fn run_plain(cfg: &RunConfig, rt: &Runtime, src: GenConfig) -> Result<TrainOutcome> {
     match run_with(cfg, rt, src, None)? {
-        Trained::Plain(out) => Ok(out),
+        Trained::Plain(out, _) => Ok(out),
         Trained::Streaming(_) => unreachable!("plain run_with returns Plain"),
     }
 }
 
-/// What [`run_with`] produced, depending on the requested mode.
+/// What [`run_with`] produced, depending on the requested mode.  Plain runs
+/// carry the final parameter store out (see [`run_with_params`]).
 enum Trained {
-    Plain(TrainOutcome),
+    Plain(TrainOutcome, ParamStore),
     Streaming(StreamingOutcome),
 }
 
@@ -541,7 +557,7 @@ fn run_with(
                     step::eval_text(rt, &fwd_artifact, &store, &eval, num_classes)?
                 }
             };
-            Ok(Trained::Plain(state.outcome(utility, eval_loss)))
+            Ok(Trained::Plain(state.outcome(utility, eval_loss), store))
         }
     }
 }

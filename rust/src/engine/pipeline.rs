@@ -86,7 +86,9 @@ pub struct ChunkTask {
     pub c2: f32,
 }
 
-/// Per-step read-only snapshot of every embedding row the batch touches.
+/// Per-step read-only snapshot of every embedding row the batch touches —
+/// rows of the full table, or of the LoRA `emb_lora_a` factor when that is
+/// the model's sparse table (the row width comes from the sharded store).
 ///
 /// Built once per step at the aggregation barrier — after the previous
 /// step's updates and before this step's dispatch, so it is bit-identical

@@ -126,23 +126,28 @@ pub fn streaming_once(
     }
 }
 
-/// Prefer `name` when the loaded manifest has it *and* the active backend
-/// can execute it; fall back to the named built-in reference model
-/// otherwise, so the NLU harnesses run with zero artifacts.  The
-/// executability check matters: an on-disk artifact manifest can be driven
-/// by the reference backend (no `xla` feature), and its LoRA-bearing NLU
-/// inventories are not natively executable.
-pub fn model_or_builtin(rt: &Runtime, name: &str, fallback: &str) -> String {
-    let executable = |n: &str| match rt.manifest.model(n) {
+/// Whether the active backend can actually run `name`: the model must be in
+/// the loaded manifest, and on the reference backend its inventory must be
+/// natively executable (an on-disk artifact manifest can be driven by the
+/// reference backend when the `xla` feature is off, but e.g. its
+/// attention-LoRA NLU inventories are not).
+pub fn model_executable(rt: &Runtime, name: &str) -> bool {
+    match rt.manifest.model(name) {
         Ok(model) => {
             !rt.is_reference()
                 || crate::runtime::reference::RefModel::from_manifest(model).is_ok()
         }
         Err(_) => false,
-    };
-    if executable(name) {
+    }
+}
+
+/// Prefer `name` when the loaded manifest has it *and* the active backend
+/// can execute it ([`model_executable`]); fall back to the named built-in
+/// reference model otherwise, so the NLU harnesses run with zero artifacts.
+pub fn model_or_builtin(rt: &Runtime, name: &str, fallback: &str) -> String {
+    if model_executable(rt, name) {
         name.to_string()
-    } else if executable(fallback) {
+    } else if model_executable(rt, fallback) {
         println!("[harness] model {name} unavailable on this runtime — using built-in {fallback}");
         fallback.to_string()
     } else {

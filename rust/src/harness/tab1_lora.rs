@@ -4,8 +4,12 @@
 //! LoRA's embedding "gradient size" is exact arithmetic: training (A, B)
 //! instead of the (V×d) table densifies (V·r + r·d) coordinates per step, so
 //! its reduction vs DP-SGD is `V·d / (V·r + r·d)`.  Utility per rank is
-//! *measured* by training the `nlu_loraemb{r}` artifacts (r ∈ {4, 16, 64})
-//! under dense DP-SGD, exactly the baseline the paper describes.
+//! *measured* by training the `nlu-roberta-loraemb{r}` artifact models when
+//! built (r ∈ {4, 16, 64}), falling back to the built-in
+//! `nlu-small-lora{r}` reference models otherwise — the rank rows run
+//! artifact-free on the native LoRA executor
+//! (`runtime/reference/transformer.rs`), under dense DP-SGD, exactly the
+//! baseline the paper describes.
 
 use anyhow::Result;
 
@@ -14,8 +18,8 @@ use crate::coordinator::Algorithm;
 use crate::runtime::Runtime;
 
 use super::common::{
-    best_reduction_within, model_or_builtin, print_table, train_once, write_csv,
-    SweepPoint, SweepRow,
+    best_reduction_within, model_executable, model_or_builtin, print_table, train_once,
+    write_csv, SweepPoint, SweepRow,
 };
 use super::fig3_tradeoff::sweep_algorithm;
 
@@ -36,23 +40,26 @@ pub fn run(cfg: &RunConfig, rt: &Runtime, fast: bool) -> Result<()> {
     let baseline = train_once(&dpsgd, rt)?;
     println!("DP-SGD (full embedding) utility: {:.4}", baseline.utility);
 
-    // model geometry for the analytic LoRA sizes
-    let model = rt.manifest.model(&base.model)?;
-    let v = model.attr_usize("vocab")? as f64;
-    let d = model.attr_usize("d_model")? as f64;
-
     // DP-AdaFEST sweep (measured reductions)
     let ada_points = sweep_algorithm(&base, rt, Algorithm::DpAdaFest, fast)?;
 
-    // LoRA points: measured utility per rank artifact, analytic size
+    // LoRA points: measured utility per rank, analytic size from that
+    // model's own (V, d) geometry
     let ranks: &[usize] = if fast { &[16] } else { &[4, 16, 64] };
     let mut lora_points: Vec<SweepPoint> = Vec::new();
     for &r in ranks {
-        let mname = format!("nlu-roberta-loraemb{r}");
-        if rt.manifest.models.get(&mname).is_none() {
-            println!("  (skipping LoRA r={r}: artifact not built)");
+        let mname = model_or_builtin(
+            rt,
+            &format!("nlu-roberta-loraemb{r}"),
+            &format!("nlu-small-lora{r}"),
+        );
+        if !model_executable(rt, &mname) {
+            println!("  (skipping LoRA r={r}: {mname} not runnable on this backend)");
             continue;
         }
+        let lmodel = rt.manifest.model(&mname)?;
+        let v = lmodel.attr_usize("vocab")? as f64;
+        let d = lmodel.attr_usize("d_model")? as f64;
         let mut c = base.clone();
         c.model = mname;
         c.algorithm = Algorithm::DpSgd; // dense noise on A and B — the LoRA baseline

@@ -17,9 +17,10 @@
 //! Two execution backends drive the models ([`runtime`]): the PJRT client
 //! over AOT artifacts (`--features xla`), and a pure-Rust **reference
 //! executor** for both model families — the pCTR tower and a native
-//! transformer for the NLU workload (the default — no Python build step,
-//! no external crates) — whose fixed-chunk reductions also power the async
-//! engine.
+//! transformer for the NLU workload, with the embedding trainable as the
+//! full table or as a LoRA adapter pair (the default — no Python build
+//! step, no external crates) — whose fixed-chunk reductions also power the
+//! async engine.  `docs/RUNTIME.md` is the layer's architecture reference.
 //!
 //! Two training paths share one step core ([`coordinator::step`]):
 //!

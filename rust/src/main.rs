@@ -15,7 +15,9 @@
 //! exact same outcome as `train` for the same seed/config — only faster.
 //! Both commands drive either model family: the built-in reference manifest
 //! covers `criteo-small`/`criteo-tiny` (pCTR) and `nlu-small`/`nlu-tiny`
-//! (native transformer), so no artifacts are needed for any of them.
+//! (native transformer) plus their LoRA-on-embedding variants
+//! `nlu-small-lora{4,16,64}`/`nlu-tiny-lora{4,16}` (Table 1's rank axis),
+//! so no artifacts are needed for any of them.
 //! `train-async --stream` runs the §4.3 streaming (time-series) protocol on
 //! the engine, bit-identical to the sync `stream` command for the same
 //! seed/config (`--freq-source first-day|all-days|streaming`,

@@ -2,9 +2,12 @@
 //!
 //! The coordinator owns every parameter as a host tensor; artifacts are pure
 //! functions of (params, batch).  Initialisation follows the same
-//! conventions as `python/compile/model.py` (tables N(0, 0.05), He for MLP
-//! weights, zeros for biases and LoRA-B, ones for LayerNorm gains) — the
+//! conventions as `python/compile/model.py` (tables N(0, 0.05), fan-in
+//! scaling for the LoRA A factor, He for MLP weights, zeros for biases and
+//! LoRA-B — adapters begin as identity, ones for LayerNorm gains) — the
 //! Rust init is canonical, the Python one exists only for pytest.
+
+#![warn(missing_docs)]
 
 use anyhow::{bail, Context, Result};
 
@@ -12,20 +15,34 @@ use crate::runtime::{HostTensor, ModelManifest};
 use crate::sparse::DenseState;
 use crate::util::rng::Xoshiro256;
 
+/// Whether a parameter name denotes a row-sparse embedding table (the
+/// paper's sparse noise/update path): a per-feature Criteo table, the NLU
+/// token table, or the LoRA `emb_lora_a` factor (whose rows are token
+/// rows of rank `r`).
+fn is_row_sparse(name: &str) -> bool {
+    name.starts_with("table_") || name == "emb_table" || name == "emb_lora_a"
+}
+
 /// One named parameter plus its optimizer slot state.
 #[derive(Clone, Debug)]
 pub struct Param {
+    /// manifest parameter name
     pub name: String,
+    /// whether the parameter receives updates (frozen otherwise)
     pub trainable: bool,
+    /// the parameter values, row-major
     pub tensor: HostTensor,
+    /// per-coordinate optimizer state (Adagrad accumulator)
     pub opt_state: DenseState,
 }
 
 impl Param {
+    /// The parameter's tensor dimensions.
     pub fn dims(&self) -> &[usize] {
         self.tensor.dims()
     }
 
+    /// Total coordinate count.
     pub fn num_elements(&self) -> usize {
         self.tensor.len()
     }
@@ -44,10 +61,14 @@ pub enum ParamRole {
     Frozen,
 }
 
+/// The full parameter inventory of one model, in manifest order.
 #[derive(Clone, Debug)]
 pub struct ParamStore {
+    /// manifest model name
     pub model_name: String,
+    /// model kind (`pctr` | `nlu`)
     pub kind: String,
+    /// the parameters, in manifest order (the artifact input prefix)
     pub params: Vec<Param>,
 }
 
@@ -97,23 +118,19 @@ impl ParamStore {
         })
     }
 
+    /// Role of parameter `name` in the DP update (unknown names count as
+    /// frozen).
     pub fn role(&self, name: &str) -> ParamRole {
         let p = self.params.iter().find(|p| p.name == name);
         match p {
             Some(p) if !p.trainable => ParamRole::Frozen,
-            Some(p)
-                if p.name.starts_with("table_")
-                    || p.name == "emb_table"
-                    || p.name == "emb_lora_a" =>
-            {
-                let _ = p;
-                ParamRole::EmbeddingTable
-            }
+            Some(p) if is_row_sparse(&p.name) => ParamRole::EmbeddingTable,
             Some(_) => ParamRole::Dense,
             None => ParamRole::Frozen,
         }
     }
 
+    /// Position of parameter `name` in the store (= manifest order).
     pub fn index_of(&self, name: &str) -> Result<usize> {
         self.params
             .iter()
@@ -121,10 +138,12 @@ impl ParamStore {
             .with_context(|| format!("no param {name} in store"))
     }
 
+    /// Look a parameter up by name.
     pub fn get(&self, name: &str) -> Result<&Param> {
         Ok(&self.params[self.index_of(name)?])
     }
 
+    /// Look a parameter up by name, mutably.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Param> {
         let i = self.index_of(name)?;
         Ok(&mut self.params[i])
@@ -136,30 +155,22 @@ impl ParamStore {
     }
 
     /// Embedding-table coordinate count (the DP-SGD dense-noise baseline for
-    /// the gradient-size reduction factor).
+    /// the gradient-size reduction factor).  On a LoRA model this is the A
+    /// factor's `V·r` — the baseline the paper's Table 1 compares against.
     pub fn embedding_coords(&self) -> usize {
         self.params
             .iter()
-            .filter(|p| {
-                p.trainable
-                    && (p.name.starts_with("table_")
-                        || p.name == "emb_table"
-                        || p.name == "emb_lora_a")
-            })
+            .filter(|p| p.trainable && is_row_sparse(&p.name))
             .map(|p| p.num_elements())
             .sum()
     }
 
-    /// Trainable dense (non-embedding) coordinate count.
+    /// Trainable dense (non-embedding) coordinate count (`emb_lora_b`
+    /// included — the B factor rides the dense DP-SGD path).
     pub fn dense_coords(&self) -> usize {
         self.params
             .iter()
-            .filter(|p| {
-                p.trainable
-                    && !(p.name.starts_with("table_")
-                        || p.name == "emb_table"
-                        || p.name == "emb_lora_a")
-            })
+            .filter(|p| p.trainable && !is_row_sparse(&p.name))
             .map(|p| p.num_elements())
             .sum()
     }
@@ -247,6 +258,38 @@ param tiny frozen_x 0 2,2
         let c = model.attr_usize("num_classes").unwrap();
         assert_eq!(store.embedding_coords(), v * d);
         assert_eq!(store.dense_coords(), d * c + c);
+    }
+
+    #[test]
+    fn nlu_lora_roles_and_init() {
+        // the LoRA-on-embedding layout: trainable (A, B, head), frozen
+        // table + backbone; A fan-in-scaled random, B exactly zero
+        let m = crate::runtime::reference::builtin_manifest();
+        let model = m.model("nlu-tiny-lora4").unwrap();
+        let store = ParamStore::init(model, 3).unwrap();
+        assert_eq!(store.role("emb_lora_a"), ParamRole::EmbeddingTable);
+        assert_eq!(store.role("emb_lora_b"), ParamRole::Dense);
+        assert_eq!(store.role("emb_table"), ParamRole::Frozen);
+        assert_eq!(store.role("head_w"), ParamRole::Dense);
+        assert_eq!(store.role("l0_wq"), ParamRole::Frozen);
+        let a = store.get("emb_lora_a").unwrap();
+        assert!(a.trainable);
+        assert!(a.tensor.as_f32().unwrap().iter().any(|&v| v != 0.0));
+        // B starts at zero: the adapter begins as identity (z = E[id])
+        let b = store.get("emb_lora_b").unwrap();
+        assert!(b.trainable);
+        assert!(b.tensor.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        // the frozen table is still randomly initialised
+        let e = store.get("emb_table").unwrap();
+        assert!(!e.trainable);
+        assert!(e.tensor.as_f32().unwrap().iter().any(|&v| v != 0.0));
+        // gradient-size baselines: A is the sparse baseline, B + head dense
+        let v = model.attr_usize("vocab").unwrap();
+        let d = model.attr_usize("d_model").unwrap();
+        let c = model.attr_usize("num_classes").unwrap();
+        let r = model.attr_usize("emb_lora_rank").unwrap();
+        assert_eq!(store.embedding_coords(), v * r);
+        assert_eq!(store.dense_coords(), r * d + d * c + c);
     }
 
     #[test]

@@ -8,35 +8,50 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+/// One ordered artifact input or output.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// tensor name (e.g. `emb_table`, `token_ids`, `loss`)
     pub name: String,
-    pub dtype: String, // "f32" | "i32"
+    /// element type: `"f32"` | `"i32"`
+    pub dtype: String,
+    /// dimensions (empty = rank-0 scalar)
     pub dims: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count of the spec'd shape.
     pub fn num_elements(&self) -> usize {
         self.dims.iter().product()
     }
 }
 
+/// One model parameter: name, trainability, shape.
 #[derive(Clone, Debug)]
 pub struct ParamSpec {
+    /// parameter name (the positional contract with the executors)
     pub name: String,
+    /// whether the parameter receives updates
     pub trainable: bool,
+    /// parameter dimensions
     pub dims: Vec<usize>,
 }
 
+/// One model: kind, free-form attrs, ordered parameter inventory.
 #[derive(Clone, Debug, Default)]
 pub struct ModelManifest {
+    /// model name (the `--model` value)
     pub name: String,
-    pub kind: String, // "pctr" | "nlu"
+    /// model kind: `"pctr"` | `"nlu"`
+    pub kind: String,
+    /// free-form key → value attributes (geometry, ranks, batch size…)
     pub attrs: HashMap<String, String>,
+    /// the parameters, in artifact-input order
     pub params: Vec<ParamSpec>,
 }
 
 impl ModelManifest {
+    /// Read attr `key` as an integer.
     pub fn attr_usize(&self, key: &str) -> Result<usize> {
         self.attrs
             .get(key)
@@ -45,6 +60,7 @@ impl ModelManifest {
             .with_context(|| format!("model {}: attr {key} not an integer", self.name))
     }
 
+    /// Read attr `key` as a comma-separated integer list.
     pub fn attr_usize_list(&self, key: &str) -> Result<Vec<usize>> {
         let raw = self
             .attrs
@@ -55,6 +71,7 @@ impl ModelManifest {
             .collect()
     }
 
+    /// Look a parameter spec up by name.
     pub fn param(&self, name: &str) -> Result<&ParamSpec> {
         self.params
             .iter()
@@ -63,16 +80,23 @@ impl ModelManifest {
     }
 }
 
+/// One executable artifact: HLO file, owning model, ordered I/O specs.
 #[derive(Clone, Debug)]
 pub struct ArtifactManifest {
+    /// artifact name (e.g. `pctr_grads`, `nlu_tiny_lora4_fwd`)
     pub name: String,
+    /// HLO-text file name relative to the artifacts directory
     pub file: String,
+    /// name of the model this artifact computes over
     pub model: String,
+    /// ordered input specs (params first, then batch, then clip norms)
     pub inputs: Vec<TensorSpec>,
+    /// ordered output specs
     pub outputs: Vec<TensorSpec>,
 }
 
 impl ArtifactManifest {
+    /// Position of output `name` in the output tuple.
     pub fn output_index(&self, name: &str) -> Result<usize> {
         self.outputs
             .iter()
@@ -81,9 +105,12 @@ impl ArtifactManifest {
     }
 }
 
+/// The full model + artifact inventory one runtime executes against.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// models by name
     pub models: HashMap<String, ModelManifest>,
+    /// artifacts by name
     pub artifacts: HashMap<String, ArtifactManifest>,
 }
 
@@ -97,6 +124,8 @@ fn parse_dims(tok: &str) -> Result<Vec<usize>> {
 }
 
 impl Manifest {
+    /// Parse the flat line-oriented manifest grammar (see
+    /// `aot.py::write_flat_manifest` for the emitter).
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut m = Manifest::default();
         for (lineno, line) in text.lines().enumerate() {
@@ -178,18 +207,21 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Read and parse a manifest file.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
         Manifest::parse(&text)
     }
 
+    /// Look an artifact up by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactManifest> {
         self.artifacts
             .get(name)
             .with_context(|| format!("no artifact {name} in manifest"))
     }
 
+    /// Look a model up by name.
     pub fn model(&self, name: &str) -> Result<&ModelManifest> {
         self.models
             .get(name)

@@ -14,6 +14,13 @@
 //! if compiled in) and otherwise falls back to the built-in reference
 //! manifest.  Executables are compiled/validated once per artifact and
 //! cached for the life of the process.
+//!
+//! `docs/RUNTIME.md` is the architecture reference for this layer: the
+//! manifest contract, backend resolution, the [`reference::RefModel`]
+//! dispatch, the LoRA-on-embedding parametrization, and the
+//! finite-difference verification method behind the native executors.
+
+#![warn(missing_docs)]
 
 mod manifest;
 #[cfg(feature = "xla")]
@@ -34,9 +41,13 @@ use anyhow::{bail, Result};
 /// the §Perf pass.
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
+    /// artifact executions so far
     pub executions: u64,
+    /// host→device input marshalling time (PJRT only)
     pub marshal_in: Duration,
+    /// time spent inside artifact execution
     pub execute: Duration,
+    /// device→host output marshalling time (PJRT only)
     pub marshal_out: Duration,
 }
 
@@ -46,7 +57,9 @@ enum Backend {
     Pjrt(pjrt::PjrtBackend),
 }
 
+/// A loaded manifest plus the backend that executes its artifacts.
 pub struct Runtime {
+    /// the model/artifact inventory this runtime executes against
     pub manifest: Manifest,
     backend: Backend,
     stats: RefCell<RuntimeStats>,
@@ -87,7 +100,8 @@ impl Runtime {
         }
         eprintln!(
             "[runtime] {} not found — using the built-in reference manifest \
-             (criteo-small / criteo-tiny / nlu-small / nlu-tiny)",
+             (criteo-small / criteo-tiny / nlu-small / nlu-tiny and the \
+             nlu-*-lora{{4,16,64}} variants)",
             manifest_path.display()
         );
         Ok(Runtime::builtin())
@@ -95,6 +109,31 @@ impl Runtime {
 
     /// The artifact-free runtime: built-in manifest + reference executor.
     /// Infallible — used by tests and benches.
+    ///
+    /// # Example
+    ///
+    /// Every built-in model trains end-to-end with zero artifacts — the
+    /// LoRA-on-embedding Table-1 setting included.  Two steps of
+    /// `nlu-tiny-lora4` on the sync trainer:
+    ///
+    /// ```
+    /// use sparse_dp_emb::config::RunConfig;
+    /// use sparse_dp_emb::coordinator::Trainer;
+    /// use sparse_dp_emb::data::{SynthText, TextConfig};
+    /// use sparse_dp_emb::runtime::Runtime;
+    ///
+    /// let rt = Runtime::builtin();
+    /// let mut cfg = RunConfig::default();
+    /// cfg.model = "nlu-tiny-lora4".into();
+    /// cfg.steps = 2;
+    /// cfg.eval_batches = 1;
+    /// let model = rt.manifest.model(&cfg.model).unwrap();
+    /// let gen = SynthText::new(TextConfig::from_model(model, cfg.seed ^ 0xDA7A).unwrap());
+    /// let mut trainer = Trainer::new(cfg, &rt).unwrap();
+    /// let outcome = trainer.run_text(&gen).unwrap();
+    /// assert_eq!(outcome.loss_history.len(), 2);
+    /// assert!(outcome.loss_history.iter().all(|l| l.is_finite()));
+    /// ```
     pub fn builtin() -> Runtime {
         Runtime {
             manifest: reference::builtin_manifest(),
@@ -103,6 +142,7 @@ impl Runtime {
         }
     }
 
+    /// Name of the executing platform (`reference-cpu`, or PJRT's).
     pub fn platform(&self) -> String {
         match &self.backend {
             Backend::Reference(_) => "reference-cpu".to_string(),
@@ -194,6 +234,7 @@ impl Runtime {
             .collect())
     }
 
+    /// Snapshot of the cumulative execution counters.
     pub fn stats(&self) -> RuntimeStats {
         self.stats.borrow().clone()
     }

@@ -16,6 +16,7 @@ use super::manifest::{ArtifactManifest, Manifest};
 use super::tensor::HostTensor;
 use super::RuntimeStats;
 
+/// The PJRT CPU client plus its per-artifact executable cache.
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -23,11 +24,13 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Create the CPU client; artifacts compile lazily on first use.
     pub fn new(dir: PathBuf) -> Result<PjrtBackend> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(PjrtBackend { client, dir, exes: RefCell::new(HashMap::new()) })
     }
 
+    /// The PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -52,6 +55,8 @@ impl PjrtBackend {
         Ok(())
     }
 
+    /// Execute one artifact on the PJRT client, recording marshalling and
+    /// execution time into `stats`.
     pub fn execute(
         &self,
         manifest: &Manifest,

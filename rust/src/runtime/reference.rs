@@ -12,10 +12,13 @@
 //!   position embeddings into a frozen transformer encoder (attention + MLP
 //!   blocks) with a trainable classifier head, hand-derived backward, and
 //!   the same sparse per-token `zgrads_scaled` rows the pCTR path surfaces.
+//!   The trainable embedding side is either the full table or a LoRA
+//!   adapter pair ([`EmbParam`]) — the Table-1 rank rows run natively.
 //!
-//! A **built-in manifest** (`criteo-small` / `criteo-tiny` plus `nlu-small`
-//! / `nlu-tiny`) lets the whole CLI and test suite run with zero build-time
-//! artifacts on both workloads.
+//! A **built-in manifest** (`criteo-small` / `criteo-tiny`, `nlu-small` /
+//! `nlu-tiny`, and the LoRA-on-embedding variants `nlu-small-lora{4,16,64}`
+//! / `nlu-tiny-lora{4,16}`) lets the whole CLI and test suite run with zero
+//! build-time artifacts on both workloads, every Table-1 row included.
 //!
 //! ## Fixed-chunk reduction invariant
 //!
@@ -31,7 +34,7 @@
 
 pub mod transformer;
 
-pub use transformer::NluModel;
+pub use transformer::{EmbParam, NluModel};
 
 use std::collections::HashMap;
 
@@ -53,6 +56,7 @@ pub const CRITEO_VOCABS: [usize; 26] = [
     27, 1550, 44262, 10, 5485, 2161, 3, 56473, 17, 15, 27360, 104, 12934,
 ];
 
+/// Numeric (dense) input features of the Criteo rows.
 pub const NUM_NUMERIC: usize = 13;
 
 /// The paper's embedding-dimension rule `int(2 · V^0.25)` (Appendix D.1.1).
@@ -67,20 +71,30 @@ pub fn embedding_dim(vocab: usize) -> usize {
 /// Geometry of a pCTR model, parsed once from the manifest.
 #[derive(Clone, Debug)]
 pub struct PctrModel {
+    /// per-feature vocabulary sizes
     pub vocabs: Vec<usize>,
+    /// per-feature embedding dimensions
     pub dims: Vec<usize>,
+    /// per-feature row offsets in the concatenated row space
     pub offsets: Vec<usize>,
+    /// total rows across all tables
     pub total_vocab: usize,
+    /// examples per training batch
     pub batch_size: usize,
+    /// hidden width of the ReLU MLP tower
     pub hidden_dim: usize,
+    /// hidden layers in the tower
     pub num_hidden_layers: usize,
+    /// numeric (dense) input features
     pub num_numeric: usize,
+    /// concatenated embedding width `Σ dims`
     pub d_emb: usize,
     /// dims of every MLP param in order: w0, b0, …, wout, bout
     pub mlp_shapes: Vec<Vec<usize>>,
 }
 
 impl PctrModel {
+    /// Parse a pCTR manifest entry into the tower's geometry.
     pub fn from_manifest(model: &ModelManifest) -> Result<PctrModel> {
         if model.kind != "pctr" {
             bail!(
@@ -119,14 +133,17 @@ impl PctrModel {
         })
     }
 
+    /// Number of categorical features (= embedding tables).
     pub fn nf(&self) -> usize {
         self.vocabs.len()
     }
 
+    /// Total parameter count (tables + MLP stack).
     pub fn num_params(&self) -> usize {
         self.nf() + self.mlp_shapes.len()
     }
 
+    /// MLP input width: concatenated embeddings + numeric features.
     pub fn in_dim(&self) -> usize {
         self.d_emb + self.num_numeric
     }
@@ -149,6 +166,8 @@ pub struct TensorView<'a> {
 }
 
 impl<'a> TensorView<'a> {
+    /// Borrow a model's parameter tensors (tables first — the manifest
+    /// prefix) as a [`ParamsView`].
     pub fn new(params: &'a [HostTensor], model: &RefModel) -> Result<TensorView<'a>> {
         let nt = model.num_tables();
         if params.len() != model.num_params() {
@@ -183,21 +202,32 @@ impl ParamsView for TensorView<'_> {
 /// kinds, so a mismatch inside a chunk function is a programming error.
 #[derive(Clone, Copy)]
 pub enum BatchRef<'a> {
+    /// a Criteo-style batch (categorical + numeric features, click labels)
     Pctr {
+        /// categorical features per example
         nf: usize,
+        /// numeric features per example
         nn: usize,
+        /// `(B, nf)` categorical bucket ids, row-major
         cat: &'a [i32],
+        /// `(B, nn)` numeric values, row-major
         num: &'a [f32],
+        /// `(B,)` click labels
         y: &'a [f32],
     },
+    /// a text-classification batch (token ids, class labels)
     Text {
+        /// tokens per example
         seq_len: usize,
+        /// `(B, T)` token ids, row-major
         ids: &'a [i32],
+        /// `(B,)` class labels
         labels: &'a [i32],
     },
 }
 
 impl<'a> BatchRef<'a> {
+    /// Borrow an owned pCTR batch.
     pub fn from_pctr(b: &'a PctrBatch) -> BatchRef<'a> {
         BatchRef::Pctr {
             nf: b.num_features,
@@ -208,10 +238,12 @@ impl<'a> BatchRef<'a> {
         }
     }
 
+    /// Borrow an owned text batch.
     pub fn from_text(b: &'a TextBatch) -> BatchRef<'a> {
         BatchRef::Text { seq_len: b.seq_len, ids: &b.ids, labels: &b.labels }
     }
 
+    /// Borrow either kind of owned batch.
     pub fn from_batch(b: &'a Batch) -> BatchRef<'a> {
         match b {
             Batch::Pctr(p) => BatchRef::from_pctr(p),
@@ -227,18 +259,24 @@ impl<'a> BatchRef<'a> {
 /// Outputs of one reduction chunk (`[lo, hi)` examples), for either model
 /// family.
 pub struct ChunkGrads {
+    /// first example of the chunk (inclusive)
     pub lo: usize,
+    /// last example of the chunk (exclusive)
     pub hi: usize,
+    /// summed per-example losses of the chunk
     pub loss_sum: f32,
     /// clipped-sum grads per trainable dense param, in grads-artifact output
-    /// order (pCTR: the MLP stack; NLU: head_w then head_b)
+    /// order (pCTR: the MLP stack; NLU: `emb_lora_b` when present, then
+    /// head_w, head_b)
     pub dense_grads: Vec<Vec<f32>>,
     /// `s_i · ∂L/∂z_i` rows, `(hi-lo) × emb_cols` row-major, where
-    /// `emb_cols` is `Σ dims` (pCTR) or `T · d_model` (NLU)
+    /// `emb_cols` is `Σ dims` (pCTR) or `T` times the sparse-table row
+    /// width (NLU: `d_model`, or the LoRA rank)
     pub zgrads: Vec<f32>,
     /// sparse contribution-map partial (per-bucket value accumulated in
     /// example order within the chunk)
     pub counts: Vec<(u32, f32)>,
+    /// per-example clip factors `s_i = min(1, C2/‖g_i‖)`
     pub scales: Vec<f32>,
 }
 
@@ -499,11 +537,14 @@ impl PctrModel {
 /// async engine's gradient workers) is generic over this enum.
 #[derive(Clone, Debug)]
 pub enum RefModel {
+    /// the Criteo pCTR tower
     Pctr(PctrModel),
+    /// the NLU transformer (full-table or LoRA-on-embedding)
     Nlu(NluModel),
 }
 
 impl RefModel {
+    /// Parse a manifest entry into whichever native executor covers it.
     pub fn from_manifest(model: &ModelManifest) -> Result<RefModel> {
         match model.kind.as_str() {
             "pctr" => Ok(RefModel::Pctr(PctrModel::from_manifest(model)?)),
@@ -515,6 +556,7 @@ impl RefModel {
         }
     }
 
+    /// The model's fixed training batch size.
     pub fn batch_size(&self) -> usize {
         match self {
             RefModel::Pctr(m) => m.batch_size,
@@ -522,6 +564,7 @@ impl RefModel {
         }
     }
 
+    /// Total parameter count (the artifact-input prefix length).
     pub fn num_params(&self) -> usize {
         match self {
             RefModel::Pctr(m) => m.num_params(),
@@ -537,22 +580,27 @@ impl RefModel {
         }
     }
 
-    /// Row width of each embedding table, in table order.
+    /// Row width of each embedding table, in table order.  For a LoRA NLU
+    /// model the sparse table is the `emb_lora_a` factor, so its width is
+    /// the adapter rank.
     pub fn table_dims(&self) -> Vec<usize> {
         match self {
             RefModel::Pctr(m) => m.dims.clone(),
-            RefModel::Nlu(m) => vec![m.d_model],
+            RefModel::Nlu(m) => vec![m.emb_dim()],
         }
     }
 
-    /// Per-example width of the `zgrads_scaled` output.
+    /// Per-example width of the scattered embedding-grads output
+    /// (`zgrads_scaled` / `aout_grads_scaled`).
     pub fn emb_cols(&self) -> usize {
         match self {
             RefModel::Pctr(m) => m.d_emb,
-            RefModel::Nlu(m) => m.seq_len * m.d_model,
+            RefModel::Nlu(m) => m.seq_len * m.emb_dim(),
         }
     }
 
+    /// Total rows of the concatenated row space (the contribution-map
+    /// width).
     pub fn total_vocab(&self) -> usize {
         match self {
             RefModel::Pctr(m) => m.total_vocab,
@@ -564,16 +612,14 @@ impl RefModel {
     pub fn dense_grad_shapes(&self) -> Vec<Vec<usize>> {
         match self {
             RefModel::Pctr(m) => m.mlp_shapes.clone(),
-            RefModel::Nlu(m) => {
-                vec![vec![m.d_model, m.num_classes], vec![m.num_classes]]
-            }
+            RefModel::Nlu(m) => m.dense_grad_shapes(),
         }
     }
 
     fn zgrads_dims(&self) -> Vec<usize> {
         match self {
             RefModel::Pctr(m) => vec![m.batch_size, m.d_emb],
-            RefModel::Nlu(m) => vec![m.batch_size, m.seq_len, m.d_model],
+            RefModel::Nlu(m) => vec![m.batch_size, m.seq_len, m.emb_dim()],
         }
     }
 
@@ -660,6 +706,7 @@ pub struct GradsAcc {
 }
 
 impl GradsAcc {
+    /// An empty accumulator sized for one full batch of `model`.
     pub fn new(model: &RefModel) -> GradsAcc {
         GradsAcc {
             loss_sum: 0.0,
@@ -734,6 +781,8 @@ impl ReferenceBackend {
         Ok(rm)
     }
 
+    /// Execute a `*_fwd` or `*_grads` artifact natively: inputs and outputs
+    /// follow the manifest's ordered specs exactly (the AOT contract).
     pub fn execute(
         &self,
         manifest: &Manifest,
@@ -880,11 +929,14 @@ struct BuiltinNlu {
     seq_len: usize,
     num_classes: usize,
     batch_size: usize,
+    /// 0 = the full table trains; r > 0 = frozen table + rank-r LoRA
+    /// adapters on the embedding (the Table-1 `loraemb{r}` setting)
+    emb_lora_rank: usize,
 }
 
 fn push_nlu(lines: &mut Vec<String>, cfg: &BuiltinNlu) {
     let m = cfg.model;
-    let (d, ff, c) = (cfg.d_model, cfg.ff_dim, cfg.num_classes);
+    let (d, ff, c, r) = (cfg.d_model, cfg.ff_dim, cfg.num_classes, cfg.emb_lora_rank);
     lines.push(format!("model {m} nlu"));
     for (key, val) in [
         ("vocab", cfg.vocab),
@@ -898,11 +950,23 @@ fn push_nlu(lines: &mut Vec<String>, cfg: &BuiltinNlu) {
     ] {
         lines.push(format!("attr {m} {key} {val}"));
     }
+    if r > 0 {
+        lines.push(format!("attr {m} emb_lora_rank {r}"));
+    }
 
-    // params: the trainable table, the frozen per-layer backbone in the
-    // native layout (transformer.rs), the trainable head
-    let mut params: Vec<(String, bool, Vec<usize>)> =
-        vec![("emb_table".to_string(), true, vec![cfg.vocab, d])];
+    // params: the sparse table slot (the full trainable table, or the
+    // LoRA A factor followed by the frozen table and the B factor), the
+    // frozen per-layer backbone in the native layout (transformer.rs),
+    // the trainable head
+    let mut params: Vec<(String, bool, Vec<usize>)> = if r > 0 {
+        vec![
+            ("emb_lora_a".to_string(), true, vec![cfg.vocab, r]),
+            ("emb_table".to_string(), false, vec![cfg.vocab, d]),
+            ("emb_lora_b".to_string(), true, vec![r, d]),
+        ]
+    } else {
+        vec![("emb_table".to_string(), true, vec![cfg.vocab, d])]
+    };
     for l in 0..cfg.num_layers {
         for nm in ["wq", "wk", "wv", "wo"] {
             params.push((format!("l{l}_{nm}"), false, vec![d, d]));
@@ -940,9 +1004,16 @@ fn push_nlu(lines: &mut Vec<String>, cfg: &BuiltinNlu) {
             lines.push(format!("in {a} c1 f32 1"));
             lines.push(format!("in {a} c2 f32 1"));
             lines.push(format!("out {a} loss f32 scalar"));
+            if r > 0 {
+                lines.push(format!("out {a} grad_emb_lora_b f32 {r},{d}"));
+            }
             lines.push(format!("out {a} grad_head_w f32 {d},{c}"));
             lines.push(format!("out {a} grad_head_b f32 {c}"));
-            lines.push(format!("out {a} zgrads_scaled f32 {b},{t},{d}"));
+            if r > 0 {
+                lines.push(format!("out {a} aout_grads_scaled f32 {b},{t},{r}"));
+            } else {
+                lines.push(format!("out {a} zgrads_scaled f32 {b},{t},{d}"));
+            }
             lines.push(format!("out {a} counts f32 {}", cfg.vocab));
             lines.push(format!("out {a} scales f32 {b}"));
         } else {
@@ -952,9 +1023,54 @@ fn push_nlu(lines: &mut Vec<String>, cfg: &BuiltinNlu) {
     }
 }
 
+/// The `nlu-small` geometry, at the given embedding-LoRA rank (0 = full
+/// table).
+fn builtin_nlu_small(
+    model: &'static str,
+    artifact_prefix: &'static str,
+    emb_lora_rank: usize,
+) -> BuiltinNlu {
+    BuiltinNlu {
+        model,
+        artifact_prefix,
+        vocab: 4096,
+        d_model: 64,
+        num_heads: 4,
+        ff_dim: 128,
+        num_layers: 3,
+        seq_len: 32,
+        num_classes: 2,
+        batch_size: 64,
+        emb_lora_rank,
+    }
+}
+
+/// The `nlu-tiny` geometry, at the given embedding-LoRA rank.
+fn builtin_nlu_tiny(
+    model: &'static str,
+    artifact_prefix: &'static str,
+    emb_lora_rank: usize,
+) -> BuiltinNlu {
+    BuiltinNlu {
+        model,
+        artifact_prefix,
+        vocab: 512,
+        d_model: 16,
+        num_heads: 2,
+        ff_dim: 32,
+        num_layers: 2,
+        seq_len: 12,
+        num_classes: 2,
+        batch_size: 32,
+        emb_lora_rank,
+    }
+}
+
 /// The built-in manifest: `criteo-small` (the paper's CPU-scale config,
-/// Table-3 vocabularies / 16) and `criteo-tiny` (test-sized), plus the NLU
-/// transformer pair `nlu-small` / `nlu-tiny`.
+/// Table-3 vocabularies / 16) and `criteo-tiny` (test-sized), the NLU
+/// transformer pair `nlu-small` / `nlu-tiny`, and their LoRA-on-embedding
+/// variants `nlu-small-lora{4,16,64}` (the Table-1 rank rows) and
+/// `nlu-tiny-lora{4,16}` (test-sized).
 pub fn builtin_manifest() -> Manifest {
     let mut lines: Vec<String> = Vec::new();
     push_pctr(
@@ -979,36 +1095,13 @@ pub fn builtin_manifest() -> Manifest {
             num_hidden_layers: 2,
         },
     );
-    push_nlu(
-        &mut lines,
-        &BuiltinNlu {
-            model: "nlu-small",
-            artifact_prefix: "nlu_small",
-            vocab: 4096,
-            d_model: 64,
-            num_heads: 4,
-            ff_dim: 128,
-            num_layers: 3,
-            seq_len: 32,
-            num_classes: 2,
-            batch_size: 64,
-        },
-    );
-    push_nlu(
-        &mut lines,
-        &BuiltinNlu {
-            model: "nlu-tiny",
-            artifact_prefix: "nlu_tiny",
-            vocab: 512,
-            d_model: 16,
-            num_heads: 2,
-            ff_dim: 32,
-            num_layers: 2,
-            seq_len: 12,
-            num_classes: 2,
-            batch_size: 32,
-        },
-    );
+    push_nlu(&mut lines, &builtin_nlu_small("nlu-small", "nlu_small", 0));
+    push_nlu(&mut lines, &builtin_nlu_tiny("nlu-tiny", "nlu_tiny", 0));
+    push_nlu(&mut lines, &builtin_nlu_small("nlu-small-lora4", "nlu_small_lora4", 4));
+    push_nlu(&mut lines, &builtin_nlu_small("nlu-small-lora16", "nlu_small_lora16", 16));
+    push_nlu(&mut lines, &builtin_nlu_small("nlu-small-lora64", "nlu_small_lora64", 64));
+    push_nlu(&mut lines, &builtin_nlu_tiny("nlu-tiny-lora4", "nlu_tiny_lora4", 4));
+    push_nlu(&mut lines, &builtin_nlu_tiny("nlu-tiny-lora16", "nlu_tiny_lora16", 16));
     Manifest::parse(&lines.join("\n"))
         .context("built-in manifest must parse")
         .expect("built-in manifest is static")
@@ -1043,6 +1136,29 @@ mod tests {
             );
             assert_eq!(store.params[0].name, "emb_table");
         }
+        for name in [
+            "nlu-small-lora4",
+            "nlu-small-lora16",
+            "nlu-small-lora64",
+            "nlu-tiny-lora4",
+            "nlu-tiny-lora16",
+        ] {
+            let model = m.model(name).unwrap();
+            let rm = RefModel::from_manifest(model).unwrap();
+            let store = ParamStore::init(model, 1).unwrap();
+            assert_eq!(store.params.len(), rm.num_params());
+            // A/B factors + head train; the table and backbone are frozen
+            assert_eq!(
+                store.params.iter().filter(|p| p.trainable).count(),
+                4,
+                "{name}"
+            );
+            // the sparse A factor leads (the table-prefix contract)
+            assert_eq!(store.params[0].name, "emb_lora_a");
+            assert!(!store.get("emb_table").unwrap().trainable, "{name}");
+            let rank = model.attr_usize("emb_lora_rank").unwrap();
+            assert_eq!(rm.table_dims(), vec![rank], "{name}");
+        }
         assert!(m.artifact("pctr_grads").is_ok());
         assert!(m.artifact("pctr_tiny_fwd").is_ok());
         // grads artifact I/O arity: params + 3 batch + 2 clip inputs;
@@ -1057,6 +1173,12 @@ mod tests {
         let rm = RefModel::from_manifest(m.model("nlu-tiny").unwrap()).unwrap();
         assert_eq!(art.inputs.len(), rm.num_params() + 4);
         assert_eq!(art.outputs.len(), 1 + 2 + 3);
+        // LoRA pair: one extra dense grad (emb_lora_b) in the outputs
+        let art = m.artifact("nlu_tiny_lora4_grads").unwrap();
+        let rm = RefModel::from_manifest(m.model("nlu-tiny-lora4").unwrap()).unwrap();
+        assert_eq!(art.inputs.len(), rm.num_params() + 4);
+        assert_eq!(art.outputs.len(), 1 + 3 + 3);
+        assert_eq!(art.output_index("aout_grads_scaled").unwrap(), 4);
     }
 
     #[test]

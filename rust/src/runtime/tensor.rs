@@ -12,36 +12,54 @@ use anyhow::Context;
 /// use; scalars are rank-0).
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostTensor {
-    F32 { dims: Vec<usize>, data: Vec<f32> },
-    I32 { dims: Vec<usize>, data: Vec<i32> },
+    /// an f32 tensor
+    F32 {
+        /// dimensions (empty = rank-0 scalar)
+        dims: Vec<usize>,
+        /// row-major values
+        data: Vec<f32>,
+    },
+    /// an i32 tensor
+    I32 {
+        /// dimensions (empty = rank-0 scalar)
+        dims: Vec<usize>,
+        /// row-major values
+        data: Vec<i32>,
+    },
 }
 
 impl HostTensor {
+    /// Build an f32 tensor (panics on shape/data mismatch).
     pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
         HostTensor::F32 { dims, data }
     }
 
+    /// Build an i32 tensor (panics on shape/data mismatch).
     pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
         HostTensor::I32 { dims, data }
     }
 
+    /// A rank-0 f32 scalar.
     pub fn scalar_f32(v: f32) -> Self {
         HostTensor::F32 { dims: vec![], data: vec![v] }
     }
 
+    /// An all-zeros f32 tensor of the given shape.
     pub fn zeros_f32(dims: Vec<usize>) -> Self {
         let n = dims.iter().product();
         HostTensor::F32 { dims, data: vec![0.0; n] }
     }
 
+    /// The tensor's dimensions.
     pub fn dims(&self) -> &[usize] {
         match self {
             HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::F32 { data, .. } => data.len(),
@@ -49,10 +67,12 @@ impl HostTensor {
         }
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// `"f32"` or `"i32"` — the manifest's dtype vocabulary.
     pub fn dtype_str(&self) -> &'static str {
         match self {
             HostTensor::F32 { .. } => "f32",
@@ -60,6 +80,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the values as f32 (errors on an i32 tensor).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),
@@ -67,6 +88,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the values mutably as f32 (errors on an i32 tensor).
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),
@@ -74,6 +96,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the values as i32 (errors on an f32 tensor).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32 { data, .. } => Ok(data),
@@ -81,6 +104,7 @@ impl HostTensor {
         }
     }
 
+    /// Take the f32 values out (errors on an i32 tensor).
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
             HostTensor::F32 { data, .. } => Ok(data),

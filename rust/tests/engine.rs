@@ -152,6 +152,74 @@ fn async_nlu_outcome_is_invariant_to_engine_knobs() {
 }
 
 #[test]
+fn sync_and_async_lora_outcomes_and_params_match_exactly() {
+    // The acceptance bar of the native LoRA-on-embedding executor: on the
+    // Table-1 rank models, `train` and `train-async` produce bit-identical
+    // outcomes AND bit-identical final parameters — the sharded A factor,
+    // the dense B factor, the head — at several worker/shard settings.
+    let rt = Runtime::builtin();
+    for model in ["nlu-tiny-lora4", "nlu-tiny-lora16"] {
+        for algo in [Algorithm::DpSgd, Algorithm::DpAdaFest] {
+            let mut cfg = tiny_nlu_cfg(algo);
+            cfg.model = model.into();
+            let tcfg = text_cfg(&rt, &cfg);
+
+            let gen = SynthText::new(tcfg.clone());
+            let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+            let sync_out = trainer.run_text(&gen).unwrap();
+            assert!(sync_out.loss_history.iter().all(|l| l.is_finite()), "{model} {algo:?}");
+
+            for (gw, dw, shards, mb) in [(1, 1, 1, 1), (4, 2, 16, 2)] {
+                let mut c = cfg.clone();
+                c.engine.grad_workers = gw;
+                c.engine.data_workers = dw;
+                c.engine.shards = shards;
+                c.engine.microbatch_chunks = mb;
+                let (async_out, async_store) = engine::run_with_params(&c, &rt).unwrap();
+                let what = format!("{model} {algo:?} ({gw},{dw},{shards},{mb})");
+                assert_outcomes_identical(&sync_out, &async_out, &what);
+                assert_eq!(
+                    trainer.store.params.len(),
+                    async_store.params.len(),
+                    "{what}: param count"
+                );
+                for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
+                    assert_eq!(pa.name, pb.name, "{what}");
+                    assert_eq!(
+                        pa.tensor.as_f32().unwrap(),
+                        pb.tensor.as_f32().unwrap(),
+                        "{what}: param {} diverged",
+                        pa.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lora_reduction_baseline_counts_adapter_coords() {
+    // On a LoRA model the dense-DP-SGD baseline of the reduction factor is
+    // the adapter size (V·r rows of A), not the (V·d) table — under plain
+    // DP-SGD every A coordinate is noised each step, so the factor is 1.
+    let rt = Runtime::builtin();
+    let mut cfg = tiny_nlu_cfg(Algorithm::DpSgd);
+    cfg.model = "nlu-tiny-lora4".into();
+    cfg.steps = 2;
+    let out = engine::run(&cfg, &rt).unwrap();
+    let model = rt.manifest.model("nlu-tiny-lora4").unwrap();
+    let store = ParamStore::init(model, cfg.seed).unwrap();
+    let a_coords = store.get("emb_lora_a").unwrap().num_elements();
+    assert!(
+        (out.emb_grad_coords_per_step - a_coords as f64).abs() < 1.0,
+        "dense noise must cover exactly the A factor: {} vs {}",
+        out.emb_grad_coords_per_step,
+        a_coords
+    );
+    assert!((out.reduction_factor - 1.0).abs() < 1e-9);
+}
+
+#[test]
 fn generic_engine_run_matches_sync_on_both_kinds() {
     // engine::run derives the data source from the manifest exactly like
     // the sync CLI path, for pctr and nlu alike
