@@ -175,18 +175,20 @@ def central_diff(f, arr, idx, eps=1e-6):
     return (lp - lm) / (2 * eps)
 
 
-def batch_grads(m):
+def batch_grads(m, ids=None, labels=None):
+    ids = IDS if ids is None else ids
+    labels = LABELS if labels is None else labels
     agg = {"hw": 0.0, "hb": 0.0, "B": 0.0}
     scat = np.zeros((m.V, m.rank or m.d))
-    for i in range(4):
-        dz, da_rows, dB, dhw, dhb = m.backward_one(IDS[i], LABELS[i])
+    for i in range(len(labels)):
+        dz, da_rows, dB, dhw, dhb = m.backward_one(ids[i], labels[i])
         agg["hw"] = agg["hw"] + dhw
         agg["hb"] = agg["hb"] + dhb
         if m.rank:
             agg["B"] = agg["B"] + dB
-            np.add.at(scat, IDS[i], da_rows)
+            np.add.at(scat, ids[i], da_rows)
         else:
-            np.add.at(scat, IDS[i], dz)
+            np.add.at(scat, ids[i], dz)
     return agg, scat
 
 
@@ -214,6 +216,37 @@ def test_backward_matches_central_differences(rank):
         assert abs(central_diff(total, m.A, (23, 0))) < 1e-12
     else:
         for idx in [(5, 0), (5, 3), (7, 2), (2, 1), (9, 5), (20, 7)]:
+            assert relerr(scat[idx], central_diff(total, m.E, idx)) < TOL
+
+
+# The Rust kernel suite's off-tile geometry (seq_len 5, d_model 12, ff 9 —
+# none multiples of the blocked kernels' 4x8 register tile) and batch, from
+# transformer.rs::finite_difference_gradients_match_off_tile_shapes.
+IDS_OFFTILE = np.array([3, 3, 7, 1, 9, 2, 8, 3, 1, 1]).reshape(2, 5)
+LABELS_OFFTILE = [1, 0]
+
+
+@pytest.mark.parametrize("rank", [0, 3])
+def test_backward_matches_central_differences_offtile(rank):
+    # the kernel-shaped case: every matmul the Rust executor runs at this
+    # geometry exercises edge tiles, so the mirrored formulas double-check
+    # the same seq_len/d_model/ff pair the Rust FD suite uses
+    m = Mirror(V=24, d=12, h=2, ff=9, L=2, T=5, C=3, rank=rank, seed=2)
+    total = lambda: sum(
+        m.loss_one(IDS_OFFTILE[i], LABELS_OFFTILE[i]) for i in range(2)
+    )
+    agg, scat = batch_grads(m, IDS_OFFTILE, LABELS_OFFTILE)
+    for c in range(3):
+        assert relerr(agg["hb"][c], central_diff(total, m.hb, c)) < TOL
+    for idx in [(0, 0), (7, 2), (11, 1)]:
+        assert relerr(agg["hw"][idx], central_diff(total, m.hw, idx)) < TOL
+    if rank:
+        for idx in [(0, 0), (1, 8), (2, 11)]:
+            assert relerr(agg["B"][idx], central_diff(total, m.B, idx)) < TOL
+        for idx in [(3, 0), (3, 2), (7, 1), (1, 0), (9, 2), (8, 1)]:
+            assert relerr(scat[idx], central_diff(total, m.A, idx)) < TOL
+    else:
+        for idx in [(3, 0), (3, 11), (7, 8), (1, 5), (9, 2), (8, 10)]:
             assert relerr(scat[idx], central_diff(total, m.E, idx)) < TOL
 
 

@@ -1,0 +1,157 @@
+//! `cargo bench --bench kernels` — the blocked kernel subsystem vs the
+//! retired scalar loops, at `nlu-small`-shaped matmuls, plus an `nlu-small`
+//! gradient-step microbench on the kernel-backed executor.
+//!
+//! The scalar baselines below are the loops `runtime/reference/
+//! transformer.rs` retired (bias-initialised affine with the zero skip;
+//! fresh-dot backprop) — the same chains the kernels replicate bit-for-bit
+//! (`tests/kernels.rs`), so this is a pure layout/blocking comparison.
+//! Pass `--full` for longer runs; the default sizing is the CI smoke.
+
+use std::time::Instant;
+
+use sparse_dp_emb::kernels::{self, MatInit, MatShape};
+use sparse_dp_emb::runtime::reference::{builtin_manifest, BatchRef, RefModel, TensorView};
+use sparse_dp_emb::runtime::HostTensor;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+/// The retired `affine`: `out = x·W + bias`, bias-first chain, zero skip.
+fn scalar_affine(x: &[f32], w: &[f32], b: &[f32], d_in: usize, d_out: usize, out: &mut [f32]) {
+    let t = x.len() / d_in;
+    for r in 0..t {
+        let xr = &x[r * d_in..(r + 1) * d_in];
+        let or = &mut out[r * d_out..(r + 1) * d_out];
+        or.copy_from_slice(b);
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv != 0.0 {
+                let wrow = &w[i * d_out..(i + 1) * d_out];
+                for (ov, &wv) in or.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+}
+
+/// The retired `backprop_input`: `dx += dout·Wᵀ`, fresh dot per element.
+fn scalar_backprop(dout: &[f32], w: &[f32], d_in: usize, d_out: usize, dx: &mut [f32]) {
+    let t = dout.len() / d_out;
+    for r in 0..t {
+        let dor = &dout[r * d_out..(r + 1) * d_out];
+        let dxr = &mut dx[r * d_in..(r + 1) * d_in];
+        for (i, dp) in dxr.iter_mut().enumerate() {
+            let wrow = &w[i * d_out..(i + 1) * d_out];
+            let mut acc = 0f32;
+            for (&dv, &wv) in dor.iter().zip(wrow) {
+                acc += dv * wv;
+            }
+            *dp += acc;
+        }
+    }
+}
+
+fn gauss(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gauss() as f32).collect()
+}
+
+/// Time `f` over `reps` calls, returning seconds per call.
+fn time(reps: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn bench_matmul_pair(name: &str, t: usize, k: usize, n: usize, reps: usize) {
+    let mut rng = Xoshiro256::seed_from(7);
+    let x = gauss(&mut rng, t * k);
+    let w = gauss(&mut rng, k * n);
+    let b = gauss(&mut rng, n);
+    let mut out = vec![0f32; t * n];
+
+    let scalar = time(reps, || {
+        scalar_affine(&x, &w, &b, k, n, &mut out);
+        std::hint::black_box(&out);
+    });
+    let blocked = time(reps, || {
+        kernels::matmul(&x, &w, &mut out, MatShape::packed(t, k, n), MatInit::Bias(&b));
+        std::hint::black_box(&out);
+    });
+
+    let mut dx = vec![0f32; t * k];
+    let scalar_b = time(reps, || {
+        scalar_backprop(&out, &w, k, n, &mut dx);
+        std::hint::black_box(&dx);
+    });
+    let blocked_b = time(reps, || {
+        kernels::matmul_bt(&out, &w, &mut dx, MatShape::packed_bt(t, n, k), MatInit::Accumulate);
+        std::hint::black_box(&dx);
+    });
+
+    println!(
+        "  {name:<26} fwd {:>9.1}ns -> {:>9.1}ns  ({:>4.2}x)   bwd {:>9.1}ns -> {:>9.1}ns  ({:>4.2}x)",
+        scalar * 1e9,
+        blocked * 1e9,
+        scalar / blocked,
+        scalar_b * 1e9,
+        blocked_b * 1e9,
+        scalar_b / blocked_b,
+    );
+}
+
+/// One `nlu-small` gradient step (full batch, all reduction chunks) on the
+/// kernel-backed executor.
+fn bench_nlu_small_step(reps: usize) {
+    let man = builtin_manifest();
+    let model = man.model("nlu-small").expect("builtin");
+    let rm = RefModel::from_manifest(model).expect("native");
+    let store = sparse_dp_emb::models::ParamStore::init(model, 11).expect("init");
+    let RefModel::Nlu(nm) = &rm else { panic!("nlu-small is nlu") };
+    let (b, t, vocab) = (nm.batch_size, nm.seq_len, nm.vocab);
+    let mut rng = Xoshiro256::seed_from(5);
+    let ids: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32).collect();
+    let labels: Vec<i32> = (0..b).map(|_| rng.below(2) as i32).collect();
+    let params: Vec<HostTensor> = store.tensors();
+    let view = TensorView::new(&params[..rm.num_params()], &rm).expect("view");
+    let batch = BatchRef::Text { seq_len: t, ids: &ids, labels: &labels };
+
+    let secs = time(reps, || {
+        let mut lo = 0;
+        while lo < b {
+            let hi = (lo + sparse_dp_emb::runtime::reference::REDUCE_CHUNK).min(b);
+            std::hint::black_box(rm.grads_chunk(&view, &batch, lo, hi, 1.0, 1.0));
+            lo = hi;
+        }
+    });
+    println!(
+        "  nlu-small grads step       {:>8.2}ms  ({:.0} examples/s)",
+        secs * 1e3,
+        b as f64 / secs
+    );
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let reps = if full { 20_000 } else { 2_000 };
+
+    println!("blocked kernels vs retired scalar loops (per-call, {reps} reps)\n");
+    println!("nlu-small shapes:");
+    bench_matmul_pair("qkv/proj  32x64 . 64x64", 32, 64, 64, reps);
+    bench_matmul_pair("mlp-in    32x64 . 64x128", 32, 64, 128, reps);
+    bench_matmul_pair("mlp-out   32x128 . 128x64", 32, 128, 64, reps);
+    println!("\nlarger shapes (blocking + L1 panel reuse dominate):");
+    bench_matmul_pair("192x192 . 192x192", 192, 192, 192, reps / 20 + 1);
+    bench_matmul_pair("512x256 . 256x256", 512, 256, 256, reps / 100 + 1);
+
+    println!("\nexecutor microbench (kernel-backed, serial):");
+    bench_nlu_small_step(if full { 200 } else { 20 });
+
+    // the threaded fan-out on a shape above the par-min-work floor
+    kernels::set_threads(4);
+    println!("\nthreaded (kernel_threads = 4, large shape only):");
+    bench_matmul_pair("512x256 . 256x256  t=4", 512, 256, 256, reps / 100 + 1);
+    kernels::set_threads(1);
+}

@@ -28,6 +28,14 @@ pub struct EngineConfig {
     pub shards: usize,
     /// 16-example reduction chunks dispatched per task (`--engine-microbatch`)
     pub microbatch_chunks: usize,
+    /// threads the blocked executor kernels may fan output tiles across
+    /// (`--engine-kernel-threads`; 1 = serial, the default).  Applied by
+    /// both trainers at run start (`crate::kernels::set_threads`); like the
+    /// other knobs it cannot change results — kernel threading partitions
+    /// output rows and never splits an accumulation chain.  Large calls
+    /// only (see `crate::kernels::par_min_work`); prefer `--engine-workers`
+    /// for engine runs, which already parallelise across examples.
+    pub kernel_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -38,6 +46,7 @@ impl Default for EngineConfig {
             channel_depth: 8,
             shards: 16,
             microbatch_chunks: 1,
+            kernel_threads: 1,
         }
     }
 }
@@ -171,6 +180,9 @@ impl RunConfig {
             "engine_microbatch" => {
                 self.engine.microbatch_chunks = v.parse().context("engine_microbatch")?
             }
+            "engine_kernel_threads" => {
+                self.engine.kernel_threads = v.parse().context("engine_kernel_threads")?
+            }
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -287,12 +299,14 @@ mod tests {
                 "--engine-shards=3".to_string(),
                 "--engine-microbatch".to_string(),
                 "2".to_string(),
+                "--engine-kernel-threads=4".to_string(),
             ])
             .unwrap();
         assert_eq!(rest, vec!["train-async"]);
         assert_eq!(c.engine.grad_workers, 7);
         assert_eq!(c.engine.shards, 3);
         assert_eq!(c.engine.microbatch_chunks, 2);
+        assert_eq!(c.engine.kernel_threads, 4);
         assert_eq!(c.engine.data_workers, EngineConfig::default().data_workers);
     }
 

@@ -32,6 +32,9 @@ impl<'rt> Trainer<'rt> {
     /// Initialise a trainer: locate the model's artifact pair, initialise
     /// parameters, and calibrate the noise pair.
     pub fn new(cfg: RunConfig, rt: &'rt Runtime) -> Result<Trainer<'rt>> {
+        // Apply the executor-kernel threading knob (bit-exact at any
+        // setting; `config::EngineConfig::kernel_threads`).
+        crate::kernels::set_threads(cfg.engine.kernel_threads);
         let model = rt.manifest.model(&cfg.model)?;
         let store = crate::models::ParamStore::init(model, cfg.seed)?;
         let (grads_artifact, fwd_artifact) =

@@ -399,6 +399,11 @@ fn run_with(
 
     let emb_params: Vec<usize> = state.emb_tables.iter().map(|t| t.param_index).collect();
     let ecfg = state.cfg.engine;
+    // Throughput-only, like every engine knob: kernel threading partitions
+    // output tiles across threads without splitting any accumulation chain,
+    // so the run stays bit-identical at any setting (tests/kernels.rs,
+    // tests/engine.rs).
+    crate::kernels::set_threads(ecfg.kernel_threads);
     let estore = ShardedStore::from_store(store, &emb_params, ecfg.shards.max(1))?;
 
     let seed = state.cfg.seed;

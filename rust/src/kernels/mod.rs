@@ -1,0 +1,618 @@
+//! Cache-blocked, register-tiled dense kernels for the native executors.
+//!
+//! The reference runtime's hot path — the NLU transformer's attention and
+//! MLP matmuls, and the pCTR tower's affine stack — used to run as scalar
+//! triple loops.  This module replaces them with blocked kernels that are
+//! **bit-identical** to those retired loops, which is what lets the rest of
+//! the system (sync==async equivalence, Gram==scatter clipping, the FD
+//! gradchecks) carry over untouched.
+//!
+//! ## The bit-exactness argument
+//!
+//! Each output element of every kernel is produced by exactly one
+//! *accumulation chain*: an initial value (0, a bias entry, or a fresh dot
+//! product later added onto the output once — see [`MatInit`]), followed by
+//! the `k` multiply-add terms **in ascending k order**, exactly as the
+//! scalar loop ordered them.  Blocking changes only the *interleaving
+//! across* output elements (i/j tiles; f32 ops on different elements are
+//! independent), never the order *within* a chain — there is deliberately
+//! no k-blocking, because splitting a chain through memory would be the one
+//! transformation able to change rounding.  Threading ([`set_threads`])
+//! partitions output **rows** across threads and nothing else, so it cannot
+//! reorder a chain either.  `tests/kernels.rs` pins all of this with
+//! `to_bits` equality against naive in-test oracles over random shapes and
+//! strides.
+//!
+//! Like the retired loops, [`matmul`], [`matmul_at`], and [`add_bias_gelu`]
+//! skip multiply-adds whose A-operand is exactly `0.0` (the pCTR tower's
+//! post-ReLU activations and the LoRA `A` rows are sparse); the oracle
+//! defines this skip as part of the chain.  A few retired call sites (the
+//! attention dq/dk/dv loops, the head outer product) had *no* skip; for
+//! those the equivalence is scoped to finite operands — a `+0.0`-initialised
+//! chain can never reach `-0.0` in round-to-nearest, so skipping a `±0.0`
+//! term is bit-invisible there, but a signed-zero store or a `0·∞` term
+//! could differ in non-finite/signed-zero corners no trained model reaches.
+//!
+//! ## Layout
+//!
+//! All operands are row-major `f32` with an explicit row pitch
+//! ([`MatShape`]'s `ra`/`rb`/`rc` — pitch ≥ logical width), which is what
+//! lets the attention kernels run directly on per-head column slices of the
+//! `(T, d)` activation buffers (pitch `d`, width `d/heads`) without any
+//! packing or copies.
+//!
+//! ## Tiling
+//!
+//! The register tile is [`MR`]×[`NR`] (4×8): [`NR`] accumulator chains per
+//! A row are held across the whole k loop (instead of round-tripping the
+//! output row through memory every k step, as the scalar loops did), and
+//! [`MR`] A rows share each B panel load.  The k×[`NR`] B panel a j-tile
+//! streams is at most a few KiB and stays in L1 across the i sweep.  Edge
+//! tiles (dims not divisible by 4/8) run the same chains at reduced width.
+
+#![warn(missing_docs)]
+
+mod pool;
+
+pub use pool::{
+    fan_out_count, par_min_work, set_par_min_work, set_threads, threads, DEFAULT_PAR_MIN_WORK,
+};
+
+/// Register-tile height: A rows processed together per tile.
+pub const MR: usize = 4;
+/// Register-tile width: accumulator chains held per A row.
+pub const NR: usize = 8;
+
+/// Logical geometry of one kernel call: an `(m × n)` output contracted over
+/// `k`, with the row pitches of the three operands.  What A's and B's rows
+/// mean depends on the kernel — see each kernel's docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatShape {
+    /// output rows
+    pub m: usize,
+    /// contraction length
+    pub k: usize,
+    /// output columns
+    pub n: usize,
+    /// row pitch of A (≥ its logical width)
+    pub ra: usize,
+    /// row pitch of B
+    pub rb: usize,
+    /// row pitch of C (the output)
+    pub rc: usize,
+}
+
+impl MatShape {
+    /// Packed (pitch = width) shape for [`matmul`]: `A (m×k) · B (k×n)`.
+    pub fn packed(m: usize, k: usize, n: usize) -> MatShape {
+        MatShape { m, k, n, ra: k, rb: n, rc: n }
+    }
+
+    /// Packed shape for [`matmul_bt`]: `A (m×k) · Bᵀ` with `B (n×k)`.
+    pub fn packed_bt(m: usize, k: usize, n: usize) -> MatShape {
+        MatShape { m, k, n, ra: k, rb: k, rc: n }
+    }
+
+    /// Packed shape for [`matmul_at`]: `Aᵀ · B` with `A (k×m)`, `B (k×n)`.
+    pub fn packed_at(m: usize, k: usize, n: usize) -> MatShape {
+        MatShape { m, k, n, ra: m, rb: n, rc: n }
+    }
+}
+
+/// How each output element's accumulation chain starts and lands — the
+/// three patterns the retired scalar loops used:
+#[derive(Clone, Copy, Debug)]
+pub enum MatInit<'a> {
+    /// chain starts at `0.0`; the result is **stored** (a buffer the old
+    /// loop zero-initialised and accumulated into in place)
+    Zero,
+    /// chain starts at `0.0`; the result is **added onto** the existing
+    /// output once (the old `out[i] += dot` pattern)
+    Accumulate,
+    /// chain starts at `bias[j]` (the output column's bias) and is stored —
+    /// the old affine's `copy_from_slice(bias)`-then-accumulate pattern
+    Bias(&'a [f32]),
+}
+
+/// Minimal buffer length for `rows` rows at `pitch` whose last row only
+/// needs `cols` elements.
+fn min_len(rows: usize, pitch: usize, cols: usize) -> usize {
+    if rows == 0 || cols == 0 {
+        0
+    } else {
+        (rows - 1) * pitch + cols
+    }
+}
+
+fn check_out(out: &[f32], sh: &MatShape, init: &MatInit<'_>, kernel: &str) {
+    assert!(
+        out.len() >= min_len(sh.m, sh.rc, sh.n),
+        "{kernel}: output too short for {sh:?}"
+    );
+    if let MatInit::Bias(bias) = init {
+        assert!(bias.len() >= sh.n, "{kernel}: bias shorter than n ({sh:?})");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul: C = A · B
+// ---------------------------------------------------------------------------
+
+/// `C (m×n) ←[init] A (m×k) · B (k×n)`.
+///
+/// Chain per element `(i, j)`: start per [`MatInit`], then
+/// `+= A[i,kk] · B[kk,j]` for `kk = 0..k` ascending, skipping terms with
+/// `A[i,kk] == 0.0` — the retired `affine` loop exactly.
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: MatInit<'_>) {
+    assert!(a.len() >= min_len(sh.m, sh.ra, sh.k), "matmul: A too short for {sh:?}");
+    assert!(b.len() >= min_len(sh.k, sh.rb, sh.n), "matmul: B too short for {sh:?}");
+    check_out(out, &sh, &init, "matmul");
+    if sh.m == 0 || sh.n == 0 {
+        return;
+    }
+    pool::dispatch_rows(out, sh.rc, sh.m, sh.m * sh.k * sh.n, |r0, rows, block| {
+        matmul_rows(a, b, block, sh, init, r0, rows);
+    });
+}
+
+/// One row block of [`matmul`]: rows `[r0, r0 + rows)` of A/C, with `out`
+/// starting at row `r0`'s first element.
+fn matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    let mut i0 = 0;
+    while i0 < rows {
+        let h = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < sh.n {
+            let w = NR.min(sh.n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            if let MatInit::Bias(bias) = init {
+                for accr in acc.iter_mut().take(h) {
+                    accr[..w].copy_from_slice(&bias[j0..j0 + w]);
+                }
+            }
+            for kk in 0..sh.k {
+                let bb = kk * sh.rb + j0;
+                if w == NR {
+                    // full-width hot path: fixed-size B panel row, so the
+                    // 8 chains per A row unroll and vectorise
+                    let brow: &[f32; NR] =
+                        b[bb..bb + NR].try_into().expect("len checked");
+                    for r in 0..h {
+                        let av = a[(r0 + i0 + r) * sh.ra + kk];
+                        if av != 0.0 {
+                            let accr = &mut acc[r];
+                            for l in 0..NR {
+                                accr[l] += av * brow[l];
+                            }
+                        }
+                    }
+                } else {
+                    let brow = &b[bb..bb + w];
+                    for r in 0..h {
+                        let av = a[(r0 + i0 + r) * sh.ra + kk];
+                        if av != 0.0 {
+                            for (accv, &bv) in acc[r][..w].iter_mut().zip(brow) {
+                                *accv += av * bv;
+                            }
+                        }
+                    }
+                }
+            }
+            store_tile(out, sh.rc, &acc, init, (i0, j0, h, w));
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// Land a finished accumulator tile on the output per the [`MatInit`] mode;
+/// `tile` is `(i0, j0, h, w)` — the tile's origin and extent.
+fn store_tile(
+    out: &mut [f32],
+    rc: usize,
+    acc: &[[f32; NR]; MR],
+    init: MatInit<'_>,
+    tile: (usize, usize, usize, usize),
+) {
+    let (i0, j0, h, w) = tile;
+    for r in 0..h {
+        let orow = &mut out[(i0 + r) * rc + j0..(i0 + r) * rc + j0 + w];
+        if let MatInit::Accumulate = init {
+            for (ov, &v) in orow.iter_mut().zip(&acc[r][..w]) {
+                *ov += v;
+            }
+        } else {
+            orow.copy_from_slice(&acc[r][..w]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul_bt: C = A · Bᵀ
+// ---------------------------------------------------------------------------
+
+/// `C (m×n) ←[init] A (m×k) · Bᵀ` with `B (n×k)` — both operands row-major
+/// over `k`, the layout of every backward input-gradient (`dx = dy · Wᵀ`)
+/// and of the attention score/`datt` dot products.
+///
+/// Chain per element `(i, j)`: start per [`MatInit`], then
+/// `+= A[i,kk] · B[j,kk]` for `kk = 0..k` ascending, no zero-skip — the
+/// retired `backprop_input` loop exactly.
+pub fn matmul_bt(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: MatInit<'_>) {
+    assert!(a.len() >= min_len(sh.m, sh.ra, sh.k), "matmul_bt: A too short for {sh:?}");
+    assert!(b.len() >= min_len(sh.n, sh.rb, sh.k), "matmul_bt: B too short for {sh:?}");
+    check_out(out, &sh, &init, "matmul_bt");
+    if sh.m == 0 || sh.n == 0 {
+        return;
+    }
+    pool::dispatch_rows(out, sh.rc, sh.m, sh.m * sh.k * sh.n, |r0, rows, block| {
+        matmul_bt_rows(a, b, block, sh, init, r0, rows);
+    });
+}
+
+fn matmul_bt_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    let mut i0 = 0;
+    while i0 < rows {
+        let h = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < sh.n {
+            let w = NR.min(sh.n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            if let MatInit::Bias(bias) = init {
+                for accr in acc.iter_mut().take(h) {
+                    accr[..w].copy_from_slice(&bias[j0..j0 + w]);
+                }
+            }
+            // B row starts for the j tile (each streams contiguously in kk)
+            let mut bstart = [0usize; NR];
+            for (l, bs) in bstart[..w].iter_mut().enumerate() {
+                *bs = (j0 + l) * sh.rb;
+            }
+            for kk in 0..sh.k {
+                for r in 0..h {
+                    let av = a[(r0 + i0 + r) * sh.ra + kk];
+                    for l in 0..w {
+                        acc[r][l] += av * b[bstart[l] + kk];
+                    }
+                }
+            }
+            store_tile(out, sh.rc, &acc, init, (i0, j0, h, w));
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul_at: C = Aᵀ · B
+// ---------------------------------------------------------------------------
+
+/// `C (m×n) ←[init] Aᵀ · B` with `A (k×m)`, `B (k×n)` — the
+/// sum-of-outer-products layout of every weight-style gradient
+/// (`∂L/∂B = Σ_p A[p]ᵀ ∂L/∂z_p`, attention `dv`/`dk`, the head outer
+/// product).
+///
+/// Chain per element `(i, j)`: start per [`MatInit`], then
+/// `+= A[p,i] · B[p,j]` for `p = 0..k` ascending, skipping terms with
+/// `A[p,i] == 0.0` — the retired LoRA `∂L/∂B` loop exactly.
+pub fn matmul_at(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: MatInit<'_>) {
+    assert!(a.len() >= min_len(sh.k, sh.ra, sh.m), "matmul_at: A too short for {sh:?}");
+    assert!(b.len() >= min_len(sh.k, sh.rb, sh.n), "matmul_at: B too short for {sh:?}");
+    check_out(out, &sh, &init, "matmul_at");
+    if sh.m == 0 || sh.n == 0 {
+        return;
+    }
+    pool::dispatch_rows(out, sh.rc, sh.m, sh.m * sh.k * sh.n, |r0, rows, block| {
+        matmul_at_rows(a, b, block, sh, init, r0, rows);
+    });
+}
+
+fn matmul_at_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    let mut i0 = 0;
+    while i0 < rows {
+        let h = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < sh.n {
+            let w = NR.min(sh.n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            if let MatInit::Bias(bias) = init {
+                for accr in acc.iter_mut().take(h) {
+                    accr[..w].copy_from_slice(&bias[j0..j0 + w]);
+                }
+            }
+            for p in 0..sh.k {
+                let brow = &b[p * sh.rb + j0..p * sh.rb + j0 + w];
+                for r in 0..h {
+                    let av = a[p * sh.ra + r0 + i0 + r];
+                    if av != 0.0 {
+                        for (accv, &bv) in acc[r][..w].iter_mut().zip(brow) {
+                            *accv += av * bv;
+                        }
+                    }
+                }
+            }
+            store_tile(out, sh.rc, &acc, init, (i0, j0, h, w));
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused bias + GELU affine
+// ---------------------------------------------------------------------------
+
+// GELU, tanh approximation (JAX's `jax.nn.gelu` default).
+const GELU_C: f32 = 0.797_884_6; // √(2/π)
+const GELU_A: f32 = 0.044_715;
+
+/// GELU (tanh approximation — `jax.nn.gelu`'s default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// Derivative of [`gelu`].
+#[inline]
+pub fn gelu_prime(x: f32) -> f32 {
+    let x2 = x * x;
+    let u = GELU_C * (x + GELU_A * x * x2);
+    let th = u.tanh();
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * x2)
+}
+
+/// The MLP's first affine with its GELU fused into the tile store:
+/// `pre (m×n) = X (m×k) · W (k×n) + bias` and `post = gelu(pre)` in one
+/// pass.  The backward needs the pre-activations, so both land.
+///
+/// Chain per element: starts at `bias[j]` and folds `k` ascending with the
+/// `X == 0.0` skip — exactly [`matmul`] with [`MatInit::Bias`]; the GELU is
+/// applied to each finished chain value at store time, so `pre`/`post` are
+/// bit-identical to running the retired affine and a separate `gelu` pass.
+pub fn add_bias_gelu(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    pre: &mut [f32],
+    post: &mut [f32],
+    sh: MatShape,
+) {
+    assert!(x.len() >= min_len(sh.m, sh.ra, sh.k), "add_bias_gelu: X too short for {sh:?}");
+    assert!(w.len() >= min_len(sh.k, sh.rb, sh.n), "add_bias_gelu: W too short for {sh:?}");
+    assert!(bias.len() >= sh.n, "add_bias_gelu: bias shorter than n ({sh:?})");
+    assert!(
+        pre.len() >= min_len(sh.m, sh.rc, sh.n) && post.len() >= min_len(sh.m, sh.rc, sh.n),
+        "add_bias_gelu: output too short for {sh:?}"
+    );
+    if sh.m == 0 || sh.n == 0 {
+        return;
+    }
+    pool::dispatch_rows2(
+        pre,
+        post,
+        sh.rc,
+        sh.m,
+        sh.m * sh.k * sh.n,
+        |r0, rows, pb, gb| {
+            add_bias_gelu_rows(x, w, bias, (pb, gb), sh, r0, rows);
+        },
+    );
+}
+
+fn add_bias_gelu_rows(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: (&mut [f32], &mut [f32]),
+    sh: MatShape,
+    r0: usize,
+    rows: usize,
+) {
+    let (pre, post) = out;
+    let mut i0 = 0;
+    while i0 < rows {
+        let h = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < sh.n {
+            let wd = NR.min(sh.n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            for accr in acc.iter_mut().take(h) {
+                accr[..wd].copy_from_slice(&bias[j0..j0 + wd]);
+            }
+            for kk in 0..sh.k {
+                let wrow = &w[kk * sh.rb + j0..kk * sh.rb + j0 + wd];
+                for r in 0..h {
+                    let xv = x[(r0 + i0 + r) * sh.ra + kk];
+                    if xv != 0.0 {
+                        for (accv, &wv) in acc[r][..wd].iter_mut().zip(wrow) {
+                            *accv += xv * wv;
+                        }
+                    }
+                }
+            }
+            for r in 0..h {
+                let base = (i0 + r) * sh.rc + j0;
+                let prow = &mut pre[base..base + wd];
+                prow.copy_from_slice(&acc[r][..wd]);
+                for (gv, &av) in post[base..base + wd].iter_mut().zip(&acc[r][..wd]) {
+                    *gv = gelu(av);
+                }
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax row primitives
+// ---------------------------------------------------------------------------
+
+/// In-place scaled softmax over each of `rows` rows of `x` (logical width
+/// `cols`, row pitch `pitch`): scale, subtract the row max, exponentiate,
+/// normalise — the exact pass structure (and op order) of the retired
+/// attention loop, which computed `score = dot · scale` while tracking the
+/// max, then exponentiated accumulating the denominator, then multiplied by
+/// its reciprocal.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize, pitch: usize, scale: f32) {
+    assert!(x.len() >= min_len(rows, pitch, cols), "softmax_rows: buffer too short");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    pool::dispatch_rows(x, pitch, rows, rows * cols * 16, |_, nrows, block| {
+        for r in 0..nrows {
+            let row = &mut block[r * pitch..r * pitch + cols];
+            let mut mx = f32::NEG_INFINITY;
+            for v in row.iter_mut() {
+                *v *= scale;
+                if *v > mx {
+                    mx = *v;
+                }
+            }
+            let mut denom = 0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                denom += *v;
+            }
+            let inv = 1.0 / denom;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    });
+}
+
+/// Softmax backward over rows, in place over `d`: with `att` the forward
+/// probabilities (pitch `ra`) and `d` holding `∂L/∂att` (pitch `rd`),
+/// rewrite each row as `d[j] ← att[j] · (d[j] − Σ_s att[s]·d[s]) · scale`
+/// — the score gradient, with the dot accumulated in ascending `s` exactly
+/// as the retired loop did.
+pub fn softmax_rows_bwd(
+    att: &[f32],
+    d: &mut [f32],
+    rows: usize,
+    cols: usize,
+    ra: usize,
+    rd: usize,
+    scale: f32,
+) {
+    assert!(att.len() >= min_len(rows, ra, cols), "softmax_rows_bwd: att too short");
+    assert!(d.len() >= min_len(rows, rd, cols), "softmax_rows_bwd: d too short");
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    pool::dispatch_rows(d, rd, rows, rows * cols * 4, |r0, nrows, block| {
+        for r in 0..nrows {
+            let arow = &att[(r0 + r) * ra..(r0 + r) * ra + cols];
+            let drow = &mut block[r * rd..r * rd + cols];
+            let mut dot = 0f32;
+            for (&aw, &dw) in arow.iter().zip(drow.iter()) {
+                dot += aw * dw;
+            }
+            for (dv, &aw) in drow.iter_mut().zip(arow) {
+                *dv = aw * (*dv - dot) * scale;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_shapes_have_tight_pitches() {
+        let want = MatShape { m: 2, k: 3, n: 5, ra: 3, rb: 5, rc: 5 };
+        assert_eq!(MatShape::packed(2, 3, 5), want);
+        assert_eq!(MatShape::packed_bt(2, 3, 5).rb, 3);
+        assert_eq!(MatShape::packed_at(2, 3, 5).ra, 2);
+    }
+
+    #[test]
+    fn matmul_identity_and_bias() {
+        // (2×2) identity times B, plus a bias
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let b = [1.0, 2.0, 3.0, 4.0];
+        let bias = [10.0, 20.0];
+        let mut out = [0f32; 4];
+        matmul(&a, &b, &mut out, MatShape::packed(2, 2, 2), MatInit::Bias(&bias));
+        assert_eq!(out, [11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn bt_and_at_transpose_correctly() {
+        // A (2×3), B stored transposed / A stored transposed
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bt = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0]; // B (2×3) = rows of I
+        let mut out = [0f32; 4];
+        matmul_bt(&a, &bt, &mut out, MatShape::packed_bt(2, 3, 2), MatInit::Zero);
+        assert_eq!(out, [1.0, 2.0, 4.0, 5.0]);
+
+        let at = [1.0, 4.0, 2.0, 5.0, 3.0, 6.0]; // Aᵀ stored as (3×2)
+        let b3 = [1.0, 0.0, 1.0]; // B (3×1)
+        let mut out2 = [0f32; 2];
+        matmul_at(&at, &b3, &mut out2, MatShape::packed_at(2, 3, 1), MatInit::Zero);
+        assert_eq!(out2, [1.0 + 3.0, 4.0 + 6.0]);
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops_or_bias_copies() {
+        let mut out = [7f32; 3];
+        // k = 0, Bias: output is the bias
+        matmul(&[], &[], &mut out, MatShape::packed(1, 0, 3), MatInit::Bias(&[1.0, 2.0, 3.0]));
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        // m = 0 / n = 0: untouched
+        let mut keep = [5f32; 4];
+        matmul(&[], &[1.0; 4], &mut keep, MatShape::packed(0, 1, 4), MatInit::Zero);
+        matmul_bt(&[1.0], &[], &mut keep, MatShape::packed_bt(1, 1, 0), MatInit::Zero);
+        assert_eq!(keep, [5.0; 4]);
+    }
+
+    #[test]
+    fn softmax_rows_normalise() {
+        let mut x = [0.0, 0.0, 1.0, 0.0, 0.0, 2.0];
+        softmax_rows(&mut x, 2, 3, 3, 1.0);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x[5] > x[3] && x[2] > x[0]);
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-5);
+        // derivative by central difference
+        let eps = 1e-3f32;
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 1.9] {
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((gelu_prime(x) - fd).abs() < 1e-3, "gelu'({x})");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Opt-in thread fan-out over output row blocks, plus the process-wide
+//! kernel knobs.
+//!
+//! Every blocked kernel computes each output element with one fixed
+//! k-accumulation chain (see the parent module); parallelism therefore only
+//! ever **partitions the output rows across threads** — no chain is ever
+//! split, so the fan-out cannot reorder a single floating-point operation
+//! and the threaded result is bit-identical to the serial one by
+//! construction.
+//!
+//! The fan-out is rayon-free and `std`-only: [`dispatch_rows`] splits the
+//! output into contiguous row blocks and runs each block on a scoped thread
+//! (`std::thread::scope`), which keeps borrowed operands safe without any
+//! `'static` gymnastics.  Scoped spawns cost tens of microseconds, so the
+//! fan-out only engages when a call is worth it: `threads() > 1` **and** the
+//! call's multiply-add count reaches [`par_min_work`].  At the built-in
+//! model shapes a per-example kernel call never reaches the default floor —
+//! the engine's gradient workers already parallelise across examples, and
+//! nesting a second level of threads under them would oversubscribe — so
+//! the knob is off (`threads = 1`) unless explicitly requested
+//! (`--engine-kernel-threads`, [`set_threads`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default [`par_min_work`] floor: a kernel call fans out only when
+/// `m·k·n` (its multiply-add count) reaches ~1M, the point where the
+/// scoped-spawn overhead is comfortably amortised.
+pub const DEFAULT_PAR_MIN_WORK: usize = 1 << 20;
+
+static THREADS: AtomicUsize = AtomicUsize::new(1);
+static PAR_MIN_WORK: AtomicUsize = AtomicUsize::new(DEFAULT_PAR_MIN_WORK);
+static FAN_OUTS: AtomicUsize = AtomicUsize::new(0);
+
+/// Kernel calls that actually fanned out across threads since process
+/// start.  Diagnostics: the knobs are process-wide and every trainer
+/// resets them at run start, so a test claiming threaded coverage asserts
+/// this advanced during its run instead of trusting the globals stayed put.
+pub fn fan_out_count() -> usize {
+    FAN_OUTS.load(Ordering::Relaxed)
+}
+
+/// Set the kernel thread count (1 = serial, the default).  Process-wide:
+/// the engine applies `EngineConfig::kernel_threads` here at run start, and
+/// the sync trainer does the same from its config.  Changing it never
+/// changes any kernel's output bits — only how many threads compute them.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current kernel thread count (see [`set_threads`]).
+pub fn threads() -> usize {
+    THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// Set the fan-out floor: calls with fewer than `work` multiply-adds stay
+/// serial even when [`threads`] > 1.  Tests set 0 to force the threaded
+/// tiling at tiny shapes; [`DEFAULT_PAR_MIN_WORK`] restores the default.
+pub fn set_par_min_work(work: usize) {
+    PAR_MIN_WORK.store(work, Ordering::Relaxed);
+}
+
+/// Current fan-out floor (see [`set_par_min_work`]).
+pub fn par_min_work() -> usize {
+    PAR_MIN_WORK.load(Ordering::Relaxed)
+}
+
+/// How many threads a call over `rows` output rows and `work` multiply-adds
+/// should fan out to (1 = stay serial).
+fn planned_threads(rows: usize, work: usize) -> usize {
+    let t = threads();
+    if t <= 1 || rows < 2 || work < par_min_work() {
+        return 1;
+    }
+    t.min(rows)
+}
+
+/// `(first_row, row_count)` per block: `rows` split into `t` contiguous
+/// blocks, remainder spread over the leading blocks.
+fn row_blocks(rows: usize, t: usize) -> Vec<(usize, usize)> {
+    let base = rows / t;
+    let extra = rows % t;
+    let mut out = Vec::with_capacity(t);
+    let mut r0 = 0;
+    for b in 0..t {
+        let n = base + usize::from(b < extra);
+        out.push((r0, n));
+        r0 += n;
+    }
+    out
+}
+
+/// Split `buf` (row pitch `pitch`) into one `&mut` slab per block; the last
+/// slab takes the remainder so a final partial row (pitch > logical width)
+/// stays in bounds.
+fn split_rows_mut<'a>(
+    mut buf: &'a mut [f32],
+    pitch: usize,
+    blocks: &[(usize, usize)],
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(blocks.len());
+    for &(_, n) in &blocks[..blocks.len() - 1] {
+        let tmp = buf;
+        let (head, tail) = tmp.split_at_mut(n * pitch);
+        out.push(head);
+        buf = tail;
+    }
+    out.push(buf);
+    out
+}
+
+/// Run `run(first_row, row_count, block)` over `out` (row pitch `pitch`,
+/// `rows` logical rows), fanning the row blocks out across threads when the
+/// call is large enough (see module docs).  `block` starts at `first_row`'s
+/// first element.
+pub(crate) fn dispatch_rows<F>(out: &mut [f32], pitch: usize, rows: usize, work: usize, run: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let t = planned_threads(rows, work);
+    if t <= 1 {
+        run(0, rows, out);
+        return;
+    }
+    FAN_OUTS.fetch_add(1, Ordering::Relaxed);
+    let blocks = row_blocks(rows, t);
+    let parts = split_rows_mut(out, pitch, &blocks);
+    std::thread::scope(|s| {
+        let run = &run;
+        let mut pairs: Vec<_> = blocks.iter().copied().zip(parts).collect();
+        let ((r0, n), part) = pairs.pop().expect("blocks are non-empty");
+        for ((rb, nb), pb) in pairs {
+            s.spawn(move || run(rb, nb, pb));
+        }
+        run(r0, n, part);
+    });
+}
+
+/// Two-output variant of [`dispatch_rows`] for kernels that write a pair of
+/// same-shaped buffers (the fused bias+GELU kernel's pre- and
+/// post-activation outputs); both are split at the same row boundaries.
+pub(crate) fn dispatch_rows2<F>(
+    o1: &mut [f32],
+    o2: &mut [f32],
+    pitch: usize,
+    rows: usize,
+    work: usize,
+    run: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    let t = planned_threads(rows, work);
+    if t <= 1 {
+        run(0, rows, o1, o2);
+        return;
+    }
+    FAN_OUTS.fetch_add(1, Ordering::Relaxed);
+    let blocks = row_blocks(rows, t);
+    let p1 = split_rows_mut(o1, pitch, &blocks);
+    let p2 = split_rows_mut(o2, pitch, &blocks);
+    std::thread::scope(|s| {
+        let run = &run;
+        let mut triples: Vec<_> = blocks
+            .iter()
+            .copied()
+            .zip(p1.into_iter().zip(p2))
+            .collect();
+        let ((r0, n), (a, b)) = triples.pop().expect("blocks are non-empty");
+        for ((rb, nb), (ab, bb)) in triples {
+            s.spawn(move || run(rb, nb, ab, bb));
+        }
+        run(r0, n, a, b);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_blocks_cover_exactly() {
+        for rows in 1..40 {
+            for t in 1..=rows.min(9) {
+                let blocks = row_blocks(rows, t);
+                assert_eq!(blocks.len(), t);
+                let mut next = 0;
+                for (r0, n) in blocks {
+                    assert_eq!(r0, next, "contiguous");
+                    assert!(n >= 1, "no empty block at t <= rows");
+                    next = r0 + n;
+                }
+                assert_eq!(next, rows);
+            }
+        }
+    }
+
+    #[test]
+    fn split_rows_mut_partitions_buffer() {
+        let mut buf = vec![0f32; 3 * 5 + 2]; // 4 rows at pitch 5, last partial
+        let blocks = row_blocks(4, 2);
+        let parts = split_rows_mut(&mut buf, 5, &blocks);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].len(), 2 * 5);
+        assert_eq!(parts[1].len(), 5 + 2); // remainder, incl. the partial row
+    }
+
+    #[test]
+    fn dispatch_runs_every_row_once() {
+        // threaded dispatch touches each logical row exactly once
+        struct Restore;
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                set_threads(1);
+                set_par_min_work(DEFAULT_PAR_MIN_WORK);
+            }
+        }
+        let _restore = Restore;
+        set_threads(3);
+        set_par_min_work(0);
+        let rows = 10;
+        let pitch = 4;
+        let mut buf = vec![0f32; rows * pitch];
+        dispatch_rows(&mut buf, pitch, rows, usize::MAX, |r0, n, block| {
+            for r in 0..n {
+                for c in 0..pitch {
+                    block[r * pitch + c] += (r0 + r) as f32;
+                }
+            }
+        });
+        for (r, row) in buf.chunks(pitch).enumerate() {
+            assert!(row.iter().all(|&v| v == r as f32), "row {r}");
+        }
+    }
+}

@@ -20,7 +20,10 @@
 //! transformer for the NLU workload, with the embedding trainable as the
 //! full table or as a LoRA adapter pair (the default — no Python build
 //! step, no external crates) — whose fixed-chunk reductions also power the
-//! async engine.  `docs/RUNTIME.md` is the layer's architecture reference.
+//! async engine.  The native executors' matmuls run on the blocked,
+//! register-tiled kernel subsystem ([`kernels`]), bit-identical to the
+//! scalar loops it retired.  `docs/RUNTIME.md` is the layer's architecture
+//! reference.
 //!
 //! Two training paths share one step core ([`coordinator::step`]):
 //!
@@ -51,6 +54,7 @@ pub mod data;
 pub mod engine;
 pub mod filtering;
 pub mod harness;
+pub mod kernels;
 pub mod metrics;
 pub mod models;
 pub mod runtime;

@@ -13,6 +13,10 @@
 //!
 //! `train-async` runs the asynchronous sharded engine and produces the
 //! exact same outcome as `train` for the same seed/config — only faster.
+//! Both commands execute on the blocked-kernel native executors
+//! (`rust/src/kernels/`); `--engine-kernel-threads N` additionally fans
+//! large kernel calls' output tiles across `N` threads (bit-exact at any
+//! setting, like every engine knob).
 //! Both commands drive either model family: the built-in reference manifest
 //! covers `criteo-small`/`criteo-tiny` (pCTR) and `nlu-small`/`nlu-tiny`
 //! (native transformer) plus their LoRA-on-embedding variants

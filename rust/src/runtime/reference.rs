@@ -43,6 +43,7 @@ use anyhow::{bail, Context, Result};
 use super::manifest::{ArtifactManifest, Manifest, ModelManifest};
 use super::tensor::HostTensor;
 use crate::data::{Batch, PctrBatch, TextBatch};
+use crate::kernels::{self, MatInit, MatShape};
 
 /// Examples per reduction chunk (see module docs).  Changing this value
 /// changes every f32 reduction result; it is part of the numerical contract
@@ -345,22 +346,21 @@ impl PctrModel {
             }
             h0[d_emb..].copy_from_slice(&num[i * self.num_numeric..(i + 1) * self.num_numeric]);
 
-            // ---- forward, storing post-ReLU activations ----
+            // ---- forward, storing post-ReLU activations (each layer is a
+            // 1×hidden blocked matmul with the bias-initialised chain and
+            // the post-ReLU zero skip the scalar loop had) ----
             let mut hs: Vec<Vec<f32>> = Vec::with_capacity(layers + 1);
             hs.push(h0);
             for l in 0..layers {
-                let w = view.mlp(2 * l);
-                let bias = view.mlp(2 * l + 1);
                 let prev = &hs[l];
-                let mut h = bias.to_vec();
-                for (k, &x) in prev.iter().enumerate() {
-                    if x != 0.0 {
-                        let row = &w[k * hidden..(k + 1) * hidden];
-                        for (hj, &wj) in h.iter_mut().zip(row) {
-                            *hj += x * wj;
-                        }
-                    }
-                }
+                let mut h = vec![0f32; hidden];
+                kernels::matmul(
+                    prev,
+                    view.mlp(2 * l),
+                    &mut h,
+                    MatShape::packed(1, prev.len(), hidden),
+                    MatInit::Bias(view.mlp(2 * l + 1)),
+                );
                 for v in &mut h {
                     if *v < 0.0 {
                         *v = 0.0;
@@ -401,16 +401,14 @@ impl PctrModel {
                 let sq_da: f32 = da.iter().map(|v| v * v).sum();
                 sq_parts[2 * l] = sq_prev * sq_da;
                 sq_parts[2 * l + 1] = sq_da;
-                let w = view.mlp(2 * l);
                 let mut dprev = vec![0f32; prev.len()];
-                for (k, dp) in dprev.iter_mut().enumerate() {
-                    let row = &w[k * hidden..(k + 1) * hidden];
-                    let mut acc = 0f32;
-                    for (&wj, &dj) in row.iter().zip(&da) {
-                        acc += wj * dj;
-                    }
-                    *dp = acc;
-                }
+                kernels::matmul_bt(
+                    &da,
+                    view.mlp(2 * l),
+                    &mut dprev,
+                    MatShape::packed_bt(1, hidden, prev.len()),
+                    MatInit::Zero,
+                );
                 da_rev.push(da);
                 dh = dprev;
             }
@@ -498,17 +496,14 @@ impl PctrModel {
                 .copy_from_slice(&num[i * self.num_numeric..(i + 1) * self.num_numeric]);
             let mut prev = h0.clone();
             for l in 0..layers {
-                let w = view.mlp(2 * l);
-                let bias = view.mlp(2 * l + 1);
-                let mut h = bias.to_vec();
-                for (k, &x) in prev.iter().enumerate() {
-                    if x != 0.0 {
-                        let row = &w[k * hidden..(k + 1) * hidden];
-                        for (hj, &wj) in h.iter_mut().zip(row) {
-                            *hj += x * wj;
-                        }
-                    }
-                }
+                let mut h = vec![0f32; hidden];
+                kernels::matmul(
+                    &prev,
+                    view.mlp(2 * l),
+                    &mut h,
+                    MatShape::packed(1, prev.len(), hidden),
+                    MatInit::Bias(view.mlp(2 * l + 1)),
+                );
                 for v in &mut h {
                     if *v < 0.0 {
                         *v = 0.0;

@@ -43,12 +43,19 @@
 //! through [`ChunkGrads`] it satisfies the fixed-chunk reduction invariant
 //! of the parent module, which is what lets `train-async` run NLU
 //! bit-identically to `train`.
+//!
+//! All matmuls — QKV/scores/context/projection, the GELU MLP, the LoRA
+//! factors, the head — run on the blocked, register-tiled kernels of
+//! [`crate::kernels`], which keep each output element's k-accumulation
+//! chain in the retired scalar order (bit-identical by construction;
+//! `tests/kernels.rs` pins it with `to_bits` equality).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
 use super::{BatchRef, ChunkGrads, ParamsView};
+use crate::kernels::{self, gelu_prime, MatInit, MatShape};
 use crate::runtime::ModelManifest;
 
 /// Dense-parameter slots per encoder layer (after the embedding table), in
@@ -296,43 +303,13 @@ impl NluModel {
 }
 
 // ---------------------------------------------------------------------------
-// Small dense kernels (T is small; everything is plain row-major f32)
+// Row-wise primitives the kernel subsystem does not cover (LayerNorm and the
+// Gram-identity clip norm).  All matmuls — attention QKV/scores/context/
+// projection, the GELU MLP, the LoRA factors, the classifier head — run on
+// the blocked kernels of `crate::kernels`, bit-identical to the scalar
+// loops they retired (the k-accumulation order is preserved; see the
+// kernels module docs and `tests/kernels.rs`).
 // ---------------------------------------------------------------------------
-
-/// `out = x @ w + b` for `x: (t, d_in)`, `w: (d_in, d_out)`, row-major.
-fn affine(x: &[f32], w: &[f32], b: &[f32], d_in: usize, d_out: usize, out: &mut [f32]) {
-    let t = x.len() / d_in;
-    for r in 0..t {
-        let xr = &x[r * d_in..(r + 1) * d_in];
-        let or = &mut out[r * d_out..(r + 1) * d_out];
-        or.copy_from_slice(b);
-        for (i, &xv) in xr.iter().enumerate() {
-            if xv != 0.0 {
-                let wrow = &w[i * d_out..(i + 1) * d_out];
-                for (ov, &wv) in or.iter_mut().zip(wrow) {
-                    *ov += xv * wv;
-                }
-            }
-        }
-    }
-}
-
-/// `dx += dout @ wᵀ` for `w: (d_in, d_out)`.
-fn backprop_input(dout: &[f32], w: &[f32], d_in: usize, d_out: usize, dx: &mut [f32]) {
-    let t = dout.len() / d_out;
-    for r in 0..t {
-        let dor = &dout[r * d_out..(r + 1) * d_out];
-        let dxr = &mut dx[r * d_in..(r + 1) * d_in];
-        for i in 0..d_in {
-            let wrow = &w[i * d_out..(i + 1) * d_out];
-            let mut acc = 0f32;
-            for (&dv, &wv) in dor.iter().zip(wrow) {
-                acc += dv * wv;
-            }
-            dxr[i] += acc;
-        }
-    }
-}
 
 /// Per-row normalization state saved by the forward pass for the backward.
 struct LnCache {
@@ -404,24 +381,6 @@ fn layer_norm_bwd(dy: &[f32], g: &[f32], cache: &LnCache, du: &mut [f32]) {
             dur[i] += (dxh[i] - m1 - xh[i] * m2) * inv;
         }
     }
-}
-
-// GELU, tanh approximation (JAX's `jax.nn.gelu` default).
-const GELU_C: f32 = 0.797_884_6; // √(2/π)
-const GELU_A: f32 = 0.044_715;
-
-#[inline]
-fn gelu(x: f32) -> f32 {
-    let u = GELU_C * (x + GELU_A * x * x * x);
-    0.5 * x * (1.0 + u.tanh())
-}
-
-#[inline]
-fn gelu_prime(x: f32) -> f32 {
-    let x2 = x * x;
-    let u = GELU_C * (x + GELU_A * x * x2);
-    let th = u.tanh();
-    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * GELU_A * x2)
 }
 
 /// Accumulate onto `sq` the squared norm of the scatter-add of per-slot
@@ -496,18 +455,17 @@ impl NluModel {
                 aout = vec![0f32; t * rank];
                 for (p, &id) in ids.iter().enumerate() {
                     let row = id as usize;
-                    let xr = &mut x[p * d..(p + 1) * d];
-                    xr.copy_from_slice(&table[row * d..(row + 1) * d]);
                     let ar = &mut aout[p * rank..(p + 1) * rank];
                     view.emb_row(0, row, ar);
-                    for (j, &av) in ar.iter().enumerate() {
-                        if av != 0.0 {
-                            let brow = &bmat[j * d..(j + 1) * d];
-                            for (xv, &bv) in xr.iter_mut().zip(brow) {
-                                *xv += av * bv;
-                            }
-                        }
-                    }
+                    // z_p = E[id_p] + A[id_p]·B: a 1×d matmul whose chain
+                    // starts at the frozen table row (Bias init)
+                    kernels::matmul(
+                        ar,
+                        bmat,
+                        &mut x[p * d..(p + 1) * d],
+                        MatShape::packed(1, rank, d),
+                        MatInit::Bias(&table[row * d..(row + 1) * d]),
+                    );
                 }
             }
         }
@@ -521,53 +479,40 @@ impl NluModel {
             let mut q = vec![0f32; t * d];
             let mut k = vec![0f32; t * d];
             let mut v = vec![0f32; t * d];
-            affine(&x, view.mlp(base + P_WQ), view.mlp(base + P_WQ_B), d, d, &mut q);
-            affine(&x, view.mlp(base + P_WK), view.mlp(base + P_WK_B), d, d, &mut k);
-            affine(&x, view.mlp(base + P_WV), view.mlp(base + P_WV_B), d, d, &mut v);
+            let aff = MatShape::packed(t, d, d);
+            let bias = |p: usize| MatInit::Bias(view.mlp(base + p));
+            kernels::matmul(&x, view.mlp(base + P_WQ), &mut q, aff, bias(P_WQ_B));
+            kernels::matmul(&x, view.mlp(base + P_WK), &mut k, aff, bias(P_WK_B));
+            kernels::matmul(&x, view.mlp(base + P_WV), &mut v, aff, bias(P_WV_B));
 
+            // Per-head attention on column slices of the (t, d) activation
+            // buffers: scores = (q_h · k_hᵀ)·scale through the softmax rows,
+            // then ctx_h = att_h · v_h — pitch d, width dh, no packing.
             let mut att = vec![0f32; h * t * t];
             let mut ctx = vec![0f32; t * d];
             for head in 0..h {
                 let off = head * dh;
-                for tq in 0..t {
-                    let arow = &mut att[head * t * t + tq * t..][..t];
-                    let qrow = &q[tq * d + off..tq * d + off + dh];
-                    let mut mx = f32::NEG_INFINITY;
-                    for s in 0..t {
-                        let krow = &k[s * d + off..s * d + off + dh];
-                        let mut dot = 0f32;
-                        for (&qv, &kv) in qrow.iter().zip(krow) {
-                            dot += qv * kv;
-                        }
-                        let score = dot * scale;
-                        arow[s] = score;
-                        if score > mx {
-                            mx = score;
-                        }
-                    }
-                    let mut denom = 0f32;
-                    for a in arow.iter_mut() {
-                        *a = (*a - mx).exp();
-                        denom += *a;
-                    }
-                    let inv = 1.0 / denom;
-                    for a in arow.iter_mut() {
-                        *a *= inv;
-                    }
-                    let crow = &mut ctx[tq * d + off..tq * d + off + dh];
-                    for s in 0..t {
-                        let w = arow[s];
-                        let vrow = &v[s * d + off..s * d + off + dh];
-                        for (cv, &vv) in crow.iter_mut().zip(vrow) {
-                            *cv += w * vv;
-                        }
-                    }
-                }
+                let att_h = &mut att[head * t * t..(head + 1) * t * t];
+                kernels::matmul_bt(
+                    &q[off..],
+                    &k[off..],
+                    att_h,
+                    MatShape { m: t, k: dh, n: t, ra: d, rb: d, rc: t },
+                    MatInit::Zero,
+                );
+                kernels::softmax_rows(att_h, t, t, t, scale);
+                kernels::matmul(
+                    att_h,
+                    &v[off..],
+                    &mut ctx[off..],
+                    MatShape { m: t, k: t, n: dh, ra: t, rb: d, rc: d },
+                    MatInit::Zero,
+                );
             }
 
             // wo projection, residual, LN1 (u1 built in place over attn_out)
             let mut u1 = vec![0f32; t * d];
-            affine(&ctx, view.mlp(base + P_WO), view.mlp(base + P_WO_B), d, d, &mut u1);
+            kernels::matmul(&ctx, view.mlp(base + P_WO), &mut u1, aff, bias(P_WO_B));
             for (uv, &xv) in u1.iter_mut().zip(&x) {
                 *uv += xv;
             }
@@ -581,15 +526,26 @@ impl NluModel {
                 &mut x1,
             );
 
-            // GELU MLP, residual, LN2
+            // GELU MLP (bias + GELU fused into the first matmul's store —
+            // `a` keeps the pre-activations for the backward), residual, LN2
             let mut a = vec![0f32; t * ff];
-            affine(&x1, view.mlp(base + P_FF1), view.mlp(base + P_FF1_B), d, ff, &mut a);
             let mut ga = vec![0f32; t * ff];
-            for (gv, &av) in ga.iter_mut().zip(&a) {
-                *gv = gelu(av);
-            }
+            kernels::add_bias_gelu(
+                &x1,
+                view.mlp(base + P_FF1),
+                view.mlp(base + P_FF1_B),
+                &mut a,
+                &mut ga,
+                MatShape::packed(t, d, ff),
+            );
             let mut u2 = vec![0f32; t * d];
-            affine(&ga, view.mlp(base + P_FF2), view.mlp(base + P_FF2_B), ff, d, &mut u2);
+            kernels::matmul(
+                &ga,
+                view.mlp(base + P_FF2),
+                &mut u2,
+                MatShape::packed(t, ff, d),
+                MatInit::Bias(view.mlp(base + P_FF2_B)),
+            );
             for (uv, &xv) in u2.iter_mut().zip(&x1) {
                 *uv += xv;
             }
@@ -618,15 +574,15 @@ impl NluModel {
         for pv in &mut pooled {
             *pv *= inv_t;
         }
-        let hw = view.mlp(self.head_w_index());
         let c = self.num_classes;
-        let mut logits = view.mlp(self.head_b_index()).to_vec();
-        for (i, &pv) in pooled.iter().enumerate() {
-            let wrow = &hw[i * c..(i + 1) * c];
-            for (lv, &wv) in logits.iter_mut().zip(wrow) {
-                *lv += pv * wv;
-            }
-        }
+        let mut logits = vec![0f32; c];
+        kernels::matmul(
+            &pooled,
+            view.mlp(self.head_w_index()),
+            &mut logits,
+            MatShape::packed(1, d, c),
+            MatInit::Bias(view.mlp(self.head_b_index())),
+        );
         Encoded { layers, pooled, logits, aout }
     }
 
@@ -644,34 +600,39 @@ impl NluModel {
         let c = self.num_classes;
         let hw = view.mlp(self.head_w_index());
 
-        // head grads + pooled grad
+        // head grads (∂L/∂head_w = pooled ⊗ dlogits) + pooled grad
         let mut dhw = vec![0f32; d * c];
-        for (i, &pv) in enc.pooled.iter().enumerate() {
-            let row = &mut dhw[i * c..(i + 1) * c];
-            for (rv, &dl) in row.iter_mut().zip(dlogits) {
-                *rv = pv * dl;
-            }
-        }
+        kernels::matmul_at(
+            &enc.pooled,
+            dlogits,
+            &mut dhw,
+            MatShape::packed_at(d, 1, c),
+            MatInit::Zero,
+        );
         let dhb = dlogits.to_vec();
 
         // mean pool broadcasts ∂L/∂pooled / T to every position
         let inv_t = 1.0 / t as f32;
         let mut dpooled = vec![0f32; d];
-        for (i, dp) in dpooled.iter_mut().enumerate() {
-            let wrow = &hw[i * c..(i + 1) * c];
-            let mut acc = 0f32;
-            for (&wv, &dl) in wrow.iter().zip(dlogits) {
-                acc += wv * dl;
-            }
-            *dp = acc * inv_t;
+        kernels::matmul_bt(
+            dlogits,
+            hw,
+            &mut dpooled,
+            MatShape::packed_bt(1, c, d),
+            MatInit::Zero,
+        );
+        for dp in &mut dpooled {
+            *dp *= inv_t;
         }
         let mut dx = vec![0f32; t * d];
         for row in dx.chunks_mut(d) {
             row.copy_from_slice(&dpooled);
         }
 
+        let mut datt = vec![0f32; t * t];
         for (l, cache) in enc.layers.iter().enumerate().rev() {
             let base = self.dense_base() + l * LAYER_PARAMS;
+            let bp = MatShape::packed_bt(t, d, d); // dX += dY · Wᵀ, W (d×d)
 
             // LN2 → residual split (x1 branch + MLP branch)
             let mut du2 = vec![0f32; t * d];
@@ -679,13 +640,24 @@ impl NluModel {
             let mut dx1 = du2.clone();
 
             // MLP backward (frozen weights: input grads only)
-            let mut dga = vec![0f32; t * ff];
-            backprop_input(&du2, view.mlp(base + P_FF2), ff, d, &mut dga);
-            let mut da = dga;
+            let mut da = vec![0f32; t * ff];
+            kernels::matmul_bt(
+                &du2,
+                view.mlp(base + P_FF2),
+                &mut da,
+                MatShape::packed_bt(t, d, ff),
+                MatInit::Accumulate,
+            );
             for (dv, &av) in da.iter_mut().zip(&cache.a) {
                 *dv *= gelu_prime(av);
             }
-            backprop_input(&da, view.mlp(base + P_FF1), d, ff, &mut dx1);
+            kernels::matmul_bt(
+                &da,
+                view.mlp(base + P_FF1),
+                &mut dx1,
+                MatShape::packed_bt(t, ff, d),
+                MatInit::Accumulate,
+            );
 
             // LN1 → residual split (layer input + attention branch)
             let mut du1 = vec![0f32; t * d];
@@ -694,52 +666,29 @@ impl NluModel {
 
             // wo
             let mut dctx = vec![0f32; t * d];
-            backprop_input(&du1, view.mlp(base + P_WO), d, d, &mut dctx);
+            kernels::matmul_bt(&du1, view.mlp(base + P_WO), &mut dctx, bp, MatInit::Accumulate);
 
-            // attention backward, head by head
+            // attention backward, head by head, on the same per-head column
+            // slices as the forward:
+            //   datt = dctx_h · v_hᵀ        dv_h = att_hᵀ · dctx_h
+            //   ds   = softmax_bwd(att_h)   dq_h = ds · k_h,  dk_h = dsᵀ · q_h
             let mut dq = vec![0f32; t * d];
             let mut dk = vec![0f32; t * d];
             let mut dv = vec![0f32; t * d];
-            let mut datt = vec![0f32; t];
             for head in 0..h {
                 let off = head * dh;
                 let att_h = &cache.att[head * t * t..(head + 1) * t * t];
-                for tq in 0..t {
-                    let arow = &att_h[tq * t..(tq + 1) * t];
-                    let dcrow = &dctx[tq * d + off..tq * d + off + dh];
-                    // dv[s] += att[tq,s] · dctx[tq];  datt[s] = ⟨dctx[tq], v[s]⟩
-                    for s in 0..t {
-                        let vrow = &cache.v[s * d + off..s * d + off + dh];
-                        let mut acc = 0f32;
-                        for (&dcv, &vv) in dcrow.iter().zip(vrow) {
-                            acc += dcv * vv;
-                        }
-                        datt[s] = acc;
-                        let w = arow[s];
-                        let dvrow = &mut dv[s * d + off..s * d + off + dh];
-                        for (dvv, &dcv) in dvrow.iter_mut().zip(dcrow) {
-                            *dvv += w * dcv;
-                        }
-                    }
-                    // softmax backward + score split into q and k
-                    let mut dot = 0f32;
-                    for (&aw, &dw) in arow.iter().zip(datt.iter()) {
-                        dot += aw * dw;
-                    }
-                    let qrow_base = tq * d + off;
-                    for s in 0..t {
-                        let ds = arow[s] * (datt[s] - dot) * scale;
-                        let krow = &cache.k[s * d + off..s * d + off + dh];
-                        for j in 0..dh {
-                            dq[qrow_base + j] += ds * krow[j];
-                            dk[s * d + off + j] += ds * cache.q[qrow_base + j];
-                        }
-                    }
-                }
+                let wide = MatShape { m: t, k: dh, n: t, ra: d, rb: d, rc: t };
+                let thin = MatShape { m: t, k: t, n: dh, ra: t, rb: d, rc: d };
+                kernels::matmul_bt(&dctx[off..], &cache.v[off..], &mut datt, wide, MatInit::Zero);
+                kernels::matmul_at(att_h, &dctx[off..], &mut dv[off..], thin, MatInit::Zero);
+                kernels::softmax_rows_bwd(att_h, &mut datt, t, t, t, t, scale);
+                kernels::matmul(&datt, &cache.k[off..], &mut dq[off..], thin, MatInit::Zero);
+                kernels::matmul_at(&datt, &cache.q[off..], &mut dk[off..], thin, MatInit::Zero);
             }
-            backprop_input(&dq, view.mlp(base + P_WQ), d, d, &mut dxin);
-            backprop_input(&dk, view.mlp(base + P_WK), d, d, &mut dxin);
-            backprop_input(&dv, view.mlp(base + P_WV), d, d, &mut dxin);
+            kernels::matmul_bt(&dq, view.mlp(base + P_WQ), &mut dxin, bp, MatInit::Accumulate);
+            kernels::matmul_bt(&dk, view.mlp(base + P_WK), &mut dxin, bp, MatInit::Accumulate);
+            kernels::matmul_bt(&dv, view.mlp(base + P_WV), &mut dxin, bp, MatInit::Accumulate);
             dx = dxin;
         }
         // the position encoding is constant, so ∂L/∂z = ∂L/∂x₀
@@ -809,29 +758,25 @@ impl NluModel {
             let (erows, db) = match self.emb {
                 EmbParam::Full => (dz, Vec::new()),
                 EmbParam::LoRA { rank } => {
+                    // ∂L/∂A[id] = ∂L/∂z · Bᵀ (per-token rows), and the dense
+                    // factor grad ∂L/∂B = Σ_p A[id_p]ᵀ · ∂L/∂z_p
                     let bmat = view.mlp(M_LORA_B);
                     let mut da = vec![0f32; t * rank];
+                    kernels::matmul_bt(
+                        &dz,
+                        bmat,
+                        &mut da,
+                        MatShape::packed_bt(t, d, rank),
+                        MatInit::Zero,
+                    );
                     let mut db = vec![0f32; rank * d];
-                    for p in 0..t {
-                        let dzr = &dz[p * d..(p + 1) * d];
-                        let ar = &enc.aout[p * rank..(p + 1) * rank];
-                        let dar = &mut da[p * rank..(p + 1) * rank];
-                        for j in 0..rank {
-                            let brow = &bmat[j * d..(j + 1) * d];
-                            let mut acc = 0f32;
-                            for (&dv, &bv) in dzr.iter().zip(brow) {
-                                acc += dv * bv;
-                            }
-                            dar[j] = acc;
-                            let av = ar[j];
-                            if av != 0.0 {
-                                let dbrow = &mut db[j * d..(j + 1) * d];
-                                for (dbv, &dv) in dbrow.iter_mut().zip(dzr) {
-                                    *dbv += av * dv;
-                                }
-                            }
-                        }
-                    }
+                    kernels::matmul_at(
+                        &enc.aout,
+                        &dz,
+                        &mut db,
+                        MatShape::packed_at(rank, t, d),
+                        MatInit::Zero,
+                    );
                     (da, db)
                 }
             };
@@ -1083,6 +1028,134 @@ mod tests {
         let base = m.forward_chunk(&view, &batch, 0, b).0;
         view.table[23 * d] += 0.5;
         assert_eq!(base, m.forward_chunk(&view, &batch, 0, b).0);
+    }
+
+    /// Geometry deliberately off the kernel register tile (MR=4, NR=8):
+    /// seq_len 5, d_model 12, ff_dim 9 — every blocked matmul runs edge
+    /// tiles, which must carry the same exact k-chains as the full ones.
+    fn fd_offtile_model() -> NluModel {
+        NluModel {
+            vocab: 24,
+            d_model: 12,
+            num_heads: 2,
+            ff_dim: 9,
+            num_layers: 2,
+            seq_len: 5,
+            num_classes: 3,
+            batch_size: 2,
+            posenc: sinusoidal_posenc(5, 12),
+            emb: EmbParam::Full,
+        }
+    }
+
+    // Off-tile batch: token 3 repeated within example 0, token 1 within
+    // example 1, tokens 3/1 shared across examples.
+    const FD_IDS_OFFTILE: [i32; 10] = [3, 3, 7, 1, 9, 2, 8, 3, 1, 1];
+    const FD_LABELS_OFFTILE: [i32; 2] = [1, 0];
+
+    #[test]
+    fn finite_difference_gradients_match_off_tile_shapes() {
+        // the FD protocol of `finite_difference_gradients_match`, re-run at
+        // a seq_len/d_model/ff pair that is NOT a multiple of the kernel
+        // block size, for both embedding parametrizations
+        for rank in [0usize, 3] {
+            let m = match rank {
+                0 => fd_offtile_model(),
+                r => NluModel { emb: EmbParam::LoRA { rank: r }, ..fd_offtile_model() },
+            };
+            let mut view = rand_params(&m, 21 + rank as u64);
+            let b = 2usize;
+            let batch = BatchRef::Text {
+                seq_len: m.seq_len,
+                ids: &FD_IDS_OFFTILE,
+                labels: &FD_LABELS_OFFTILE,
+            };
+            let g = m.grads_chunk(&view, &batch, 0, b, 1e9, 1e9);
+            assert!(g.scales.iter().all(|&s| s == 1.0), "huge C2 must not clip");
+            let eps = 1e-2f32;
+            let hoff = g.dense_grads.len() - 2;
+
+            // classifier head
+            let hb = m.head_b_index();
+            for c in 0..m.num_classes {
+                let orig = view.dense[hb][c];
+                view.dense[hb][c] = orig + eps;
+                let lp = m.forward_chunk(&view, &batch, 0, b).0;
+                view.dense[hb][c] = orig - eps;
+                let lm = m.forward_chunk(&view, &batch, 0, b).0;
+                view.dense[hb][c] = orig;
+                fd_check(
+                    g.dense_grads[hoff + 1][c],
+                    (lp - lm) / (2.0 * eps),
+                    &format!("offtile r{rank} head_b[{c}]"),
+                );
+            }
+            let hw = m.head_w_index();
+            for &idx in &[0usize, 7, 20, 35] {
+                let orig = view.dense[hw][idx];
+                view.dense[hw][idx] = orig + eps;
+                let lp = m.forward_chunk(&view, &batch, 0, b).0;
+                view.dense[hw][idx] = orig - eps;
+                let lm = m.forward_chunk(&view, &batch, 0, b).0;
+                view.dense[hw][idx] = orig;
+                fd_check(
+                    g.dense_grads[hoff][idx],
+                    (lp - lm) / (2.0 * eps),
+                    &format!("offtile r{rank} head_w[{idx}]"),
+                );
+            }
+
+            // the dense LoRA-B factor, when present
+            if rank > 0 {
+                for &idx in &[0usize, 17, 35] {
+                    let orig = view.dense[1][idx];
+                    view.dense[1][idx] = orig + eps;
+                    let lp = m.forward_chunk(&view, &batch, 0, b).0;
+                    view.dense[1][idx] = orig - eps;
+                    let lm = m.forward_chunk(&view, &batch, 0, b).0;
+                    view.dense[1][idx] = orig;
+                    fd_check(
+                        g.dense_grads[0][idx],
+                        (lp - lm) / (2.0 * eps),
+                        &format!("offtile emb_lora_b[{idx}]"),
+                    );
+                }
+            }
+
+            // embedding / adapter rows via the zgrads scatter (repeats
+            // included); coords chosen inside the edge tiles
+            let w = m.emb_dim();
+            let coords: &[(usize, usize)] = if rank == 0 {
+                &[(3, 0), (3, 11), (7, 8), (1, 5), (9, 2), (8, 10)]
+            } else {
+                &[(3, 0), (3, 2), (7, 1), (1, 0), (9, 2), (8, 1)]
+            };
+            for &(row, coord) in coords {
+                let mut analytic = 0f32;
+                for (slot, &id) in FD_IDS_OFFTILE.iter().enumerate() {
+                    if id as usize == row {
+                        analytic += g.zgrads[slot * w + coord];
+                    }
+                }
+                let orig = view.table[row * w + coord];
+                view.table[row * w + coord] = orig + eps;
+                let lp = m.forward_chunk(&view, &batch, 0, b).0;
+                view.table[row * w + coord] = orig - eps;
+                let lm = m.forward_chunk(&view, &batch, 0, b).0;
+                view.table[row * w + coord] = orig;
+                fd_check(
+                    analytic,
+                    (lp - lm) / (2.0 * eps),
+                    &format!("offtile r{rank} emb[{row},{coord}]"),
+                );
+            }
+
+            // an untouched row stays bit-inert
+            let base = m.forward_chunk(&view, &batch, 0, b).0;
+            view.table[23 * w] += 0.5;
+            assert_eq!(base, m.forward_chunk(&view, &batch, 0, b).0);
+            view.table[23 * w] -= 0.5;
+        }
     }
 
     #[test]

@@ -152,6 +152,72 @@ fn async_nlu_outcome_is_invariant_to_engine_knobs() {
 }
 
 #[test]
+fn sync_and_async_match_exactly_with_threaded_kernels() {
+    // The threaded-kernel acceptance bar: a serial sync run and an async
+    // run with the executor-kernel fan-out forced on (kernel_threads = 3,
+    // par-min-work floor 0 so even nlu-tiny-sized tiles split across
+    // threads) must agree bit-for-bit on outcomes AND final parameters —
+    // parallel output tiling never reorders an accumulation chain.
+    use sparse_dp_emb::kernels;
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            kernels::set_threads(1);
+            kernels::set_par_min_work(kernels::DEFAULT_PAR_MIN_WORK);
+        }
+    }
+    let _restore = Restore;
+    let rt = Runtime::builtin();
+    for model in ["nlu-tiny", "nlu-tiny-lora4"] {
+        let mut cfg = tiny_nlu_cfg(Algorithm::DpAdaFest);
+        cfg.model = model.into();
+        cfg.steps = 3;
+        let tcfg = text_cfg(&rt, &cfg);
+
+        // serial reference (kernel_threads defaults to 1)
+        kernels::set_par_min_work(kernels::DEFAULT_PAR_MIN_WORK);
+        let gen = SynthText::new(tcfg.clone());
+        let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+        let sync_out = trainer.run_text(&gen).unwrap();
+
+        // Threaded async: every kernel call fans its output rows out.  The
+        // knobs are process-wide and every sibling test's Trainer::new /
+        // engine run resets the thread count to 1 at its own start, so a
+        // racing test can snap this run back to serial mid-way — which
+        // would be bit-identical and silently gut the threaded coverage.
+        // Nothing in this process ever writes 3 except this run, so
+        // `threads() == 3` *after* the run proves the knob held for its
+        // whole duration (and the pool counter proves fan-outs happened);
+        // otherwise a race interfered — retry.
+        let mut c = cfg.clone();
+        c.engine.kernel_threads = 3;
+        c.engine.grad_workers = 2;
+        c.engine.shards = 4;
+        let mut attempt = 0;
+        let (async_out, async_store) = loop {
+            kernels::set_par_min_work(0);
+            let before = kernels::fan_out_count();
+            let res = engine::run_with_params(&c, &rt).unwrap();
+            if kernels::fan_out_count() > before && kernels::threads() == 3 {
+                break res;
+            }
+            attempt += 1;
+            assert!(attempt < 20, "kernel fan-out never engaged across 20 runs");
+        };
+        let what = format!("{model} threaded kernels");
+        assert_outcomes_identical(&sync_out, &async_out, &what);
+        for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
+            assert_eq!(
+                pa.tensor.as_f32().unwrap(),
+                pb.tensor.as_f32().unwrap(),
+                "{what}: param {} diverged",
+                pa.name
+            );
+        }
+    }
+}
+
+#[test]
 fn sync_and_async_lora_outcomes_and_params_match_exactly() {
     // The acceptance bar of the native LoRA-on-embedding executor: on the
     // Table-1 rank models, `train` and `train-async` produce bit-identical

@@ -1,0 +1,446 @@
+//! Property-test suite locking down the blocked kernel subsystem
+//! (`rust/src/kernels/`): every blocked, register-tiled kernel must be
+//! **bit-identical** (`f32::to_bits` equality, never approximate) to the
+//! naive scalar loop it retired, over random shapes and row pitches —
+//! including dims that are not multiples of the 4×8 register tile, 0/1-
+//! sized edges, pitch > width slack (which the kernels must not touch),
+//! and the strided per-head column-slice layout the attention path uses.
+//!
+//! The in-test oracles below *are* the retired loops: one accumulation
+//! chain per output element — init per `MatInit`, k terms in ascending
+//! order, the documented `A == 0.0` skip — written as plain triple loops.
+//! A second pass re-runs every comparison with the thread fan-out forced on
+//! (`set_threads(4)`, `set_par_min_work(0)`): parallel output tiling must
+//! not move a single bit.
+
+use std::sync::{Mutex, MutexGuard};
+
+use sparse_dp_emb::kernels::{self, gelu, MatInit, MatShape, DEFAULT_PAR_MIN_WORK};
+use sparse_dp_emb::proptest::{check, usize_in, CaseResult};
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+/// The kernel threading knobs are process-wide; serialize the tests that
+/// set them so each one observes the mode it configured.
+fn config_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore the default (serial) kernel configuration on drop, panic
+/// included.
+struct SerialOnDrop;
+impl Drop for SerialOnDrop {
+    fn drop(&mut self) {
+        kernels::set_threads(1);
+        kernels::set_par_min_work(DEFAULT_PAR_MIN_WORK);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The retired scalar loops, as oracles
+// ---------------------------------------------------------------------------
+
+fn chain_land(out: &mut f32, acc: f32, init: &MatInit<'_>) {
+    match init {
+        MatInit::Accumulate => *out += acc,
+        _ => *out = acc,
+    }
+}
+
+fn chain_start(j: usize, init: &MatInit<'_>) -> f32 {
+    match init {
+        MatInit::Bias(b) => b[j],
+        _ => 0.0,
+    }
+}
+
+/// `C = A·B`: chain starts per init, k ascending, skip `A == 0.0`.
+fn oracle_matmul(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: &MatInit<'_>) {
+    for i in 0..sh.m {
+        for j in 0..sh.n {
+            let mut acc = chain_start(j, init);
+            for kk in 0..sh.k {
+                let av = a[i * sh.ra + kk];
+                if av != 0.0 {
+                    acc += av * b[kk * sh.rb + j];
+                }
+            }
+            chain_land(&mut out[i * sh.rc + j], acc, init);
+        }
+    }
+}
+
+/// `C = A·Bᵀ`: chain starts per init, k ascending, no skip.
+fn oracle_matmul_bt(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: &MatInit<'_>) {
+    for i in 0..sh.m {
+        for j in 0..sh.n {
+            let mut acc = chain_start(j, init);
+            for kk in 0..sh.k {
+                acc += a[i * sh.ra + kk] * b[j * sh.rb + kk];
+            }
+            chain_land(&mut out[i * sh.rc + j], acc, init);
+        }
+    }
+}
+
+/// `C = Aᵀ·B`: chain starts per init, p ascending, skip `A == 0.0`.
+fn oracle_matmul_at(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: &MatInit<'_>) {
+    for i in 0..sh.m {
+        for j in 0..sh.n {
+            let mut acc = chain_start(j, init);
+            for p in 0..sh.k {
+                let av = a[p * sh.ra + i];
+                if av != 0.0 {
+                    acc += av * b[p * sh.rb + j];
+                }
+            }
+            chain_land(&mut out[i * sh.rc + j], acc, init);
+        }
+    }
+}
+
+/// The retired affine + separate GELU pass.
+fn oracle_add_bias_gelu(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    pre: &mut [f32],
+    post: &mut [f32],
+    sh: MatShape,
+) {
+    oracle_matmul(x, w, pre, sh, &MatInit::Bias(bias));
+    for i in 0..sh.m {
+        for j in 0..sh.n {
+            post[i * sh.rc + j] = gelu(pre[i * sh.rc + j]);
+        }
+    }
+}
+
+/// The retired attention softmax: scale while tracking the max, exp with a
+/// running denominator, multiply by the reciprocal.
+fn oracle_softmax_rows(x: &mut [f32], rows: usize, cols: usize, pitch: usize, scale: f32) {
+    for r in 0..rows {
+        let row = &mut x[r * pitch..r * pitch + cols];
+        let mut mx = f32::NEG_INFINITY;
+        for v in row.iter_mut() {
+            *v *= scale;
+            if *v > mx {
+                mx = *v;
+            }
+        }
+        let mut denom = 0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            denom += *v;
+        }
+        let inv = 1.0 / denom;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+fn oracle_softmax_rows_bwd(
+    att: &[f32],
+    d: &mut [f32],
+    rows: usize,
+    cols: usize,
+    pitches: (usize, usize),
+    scale: f32,
+) {
+    let (ra, rd) = pitches;
+    for r in 0..rows {
+        let arow = &att[r * ra..r * ra + cols];
+        let drow = &mut d[r * rd..r * rd + cols];
+        let mut dot = 0f32;
+        for (&aw, &dw) in arow.iter().zip(drow.iter()) {
+            dot += aw * dw;
+        }
+        for (dv, &aw) in drow.iter_mut().zip(arow) {
+            *dv = aw * (*dv - dot) * scale;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random-case generation
+// ---------------------------------------------------------------------------
+
+/// A dim drawn to hit tile edges often: 0/1 edges, sub-tile, exact
+/// multiples of MR/NR, and off-tile values.
+fn dim(rng: &mut Xoshiro256) -> usize {
+    const POOL: [usize; 12] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 12, 16, 17];
+    POOL[rng.below(POOL.len() as u64) as usize]
+}
+
+/// Random data with exact zeros injected (the skip path) and slack filled
+/// with garbage the kernels must preserve.
+fn operand(rng: &mut Xoshiro256, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if rng.uniform() < 0.15 {
+                0.0
+            } else {
+                (rng.gauss() * 1.5) as f32
+            }
+        })
+        .collect()
+}
+
+fn rand_shape(rng: &mut Xoshiro256) -> MatShape {
+    let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+    MatShape {
+        m,
+        k,
+        n,
+        ra: 0, // flavor-specific; filled by callers
+        rb: 0,
+        rc: n + usize_in(rng, 0, 3),
+    }
+}
+
+fn rand_init(rng: &mut Xoshiro256, bias: &[f32]) -> (&'static str, MatInitOwned) {
+    match rng.below(3) {
+        0 => ("zero", MatInitOwned::Zero),
+        1 => ("acc", MatInitOwned::Accumulate),
+        _ => ("bias", MatInitOwned::Bias(bias.to_vec())),
+    }
+}
+
+/// Owned stand-in for `MatInit` so a case can build it before borrowing.
+enum MatInitOwned {
+    Zero,
+    Accumulate,
+    Bias(Vec<f32>),
+}
+
+impl MatInitOwned {
+    fn as_init(&self) -> MatInit<'_> {
+        match self {
+            MatInitOwned::Zero => MatInit::Zero,
+            MatInitOwned::Accumulate => MatInit::Accumulate,
+            MatInitOwned::Bias(b) => MatInit::Bias(b),
+        }
+    }
+}
+
+fn bits_eq(got: &[f32], want: &[f32], what: &str) -> CaseResult {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(format!(
+                "{what}: bit mismatch at {i}: {g:?} vs {w:?} ({:#x} vs {:#x})",
+                g.to_bits(),
+                w.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Buffer length for `rows` rows at `pitch`, plus extra slack whose bits
+/// must survive the call untouched.
+fn buf_len(rows: usize, pitch: usize, cols: usize, slack: usize) -> usize {
+    let need = if rows == 0 || cols == 0 { 0 } else { (rows - 1) * pitch + cols };
+    need + slack
+}
+
+/// One full matmul-family case at the current thread configuration:
+/// generate shapes/strides/operands, run kernel vs oracle on identical
+/// output prefills, compare every bit (slack included).
+fn matmul_family_case(rng: &mut Xoshiro256) -> CaseResult {
+    let mut sh = rand_shape(rng);
+    let flavor = rng.below(3);
+    // logical widths of A/B rows per flavor, then random pitch slack
+    let (wa, rows_a, wb, rows_b) = match flavor {
+        0 => (sh.k, sh.m, sh.n, sh.k), // matmul: A (m×k), B (k×n)
+        1 => (sh.k, sh.m, sh.k, sh.n), // bt: A (m×k), B (n×k)
+        _ => (sh.m, sh.k, sh.n, sh.k), // at: A (k×m), B (k×n)
+    };
+    sh.ra = wa + usize_in(rng, 0, 3);
+    sh.rb = wb + usize_in(rng, 0, 3);
+    let a = operand(rng, buf_len(rows_a, sh.ra, wa, 2));
+    let b = operand(rng, buf_len(rows_b, sh.rb, wb, 2));
+    let bias = operand(rng, sh.n);
+    let (init_name, owned) = rand_init(rng, &bias);
+    let init = owned.as_init();
+
+    let prefill = operand(rng, buf_len(sh.m, sh.rc, sh.n, 3));
+    let mut got = prefill.clone();
+    let mut want = prefill;
+    match flavor {
+        0 => {
+            kernels::matmul(&a, &b, &mut got, sh, init);
+            oracle_matmul(&a, &b, &mut want, sh, &init);
+        }
+        1 => {
+            kernels::matmul_bt(&a, &b, &mut got, sh, init);
+            oracle_matmul_bt(&a, &b, &mut want, sh, &init);
+        }
+        _ => {
+            kernels::matmul_at(&a, &b, &mut got, sh, init);
+            oracle_matmul_at(&a, &b, &mut want, sh, &init);
+        }
+    }
+    bits_eq(&got, &want, &format!("flavor {flavor} init {init_name} {sh:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// The properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn blocked_matmuls_bit_match_scalar_oracles() {
+    let _guard = config_lock();
+    let _restore = SerialOnDrop;
+    kernels::set_threads(1);
+    check("matmul family == scalar oracle (serial)", 400, matmul_family_case);
+}
+
+#[test]
+fn threaded_tiling_bit_matches_scalar_oracles() {
+    // the same property with the row fan-out forced on at every shape:
+    // parallel output tiling must not reorder any accumulation chain
+    let _guard = config_lock();
+    let _restore = SerialOnDrop;
+    kernels::set_threads(4);
+    kernels::set_par_min_work(0);
+    check("matmul family == scalar oracle (threaded)", 400, matmul_family_case);
+}
+
+#[test]
+fn add_bias_gelu_bit_matches_affine_plus_gelu() {
+    let _guard = config_lock();
+    let _restore = SerialOnDrop;
+    for threads in [1usize, 4] {
+        kernels::set_threads(threads);
+        kernels::set_par_min_work(if threads > 1 { 0 } else { DEFAULT_PAR_MIN_WORK });
+        check("add_bias_gelu == affine ∘ gelu", 200, |rng| {
+            let mut sh = rand_shape(rng);
+            sh.ra = sh.k + usize_in(rng, 0, 2);
+            sh.rb = sh.n + usize_in(rng, 0, 2);
+            let x = operand(rng, buf_len(sh.m, sh.ra, sh.k, 2));
+            let w = operand(rng, buf_len(sh.k, sh.rb, sh.n, 2));
+            let bias = operand(rng, sh.n);
+            let prefill_a = operand(rng, buf_len(sh.m, sh.rc, sh.n, 2));
+            let prefill_g = operand(rng, buf_len(sh.m, sh.rc, sh.n, 2));
+            let (mut got_a, mut got_g) = (prefill_a.clone(), prefill_g.clone());
+            let (mut want_a, mut want_g) = (prefill_a, prefill_g);
+            kernels::add_bias_gelu(&x, &w, &bias, &mut got_a, &mut got_g, sh);
+            oracle_add_bias_gelu(&x, &w, &bias, &mut want_a, &mut want_g, sh);
+            bits_eq(&got_a, &want_a, &format!("pre-activations {sh:?}"))?;
+            bits_eq(&got_g, &want_g, &format!("gelu outputs {sh:?}"))
+        });
+    }
+}
+
+#[test]
+fn softmax_rows_bit_match_scalar_oracle() {
+    let _guard = config_lock();
+    let _restore = SerialOnDrop;
+    for threads in [1usize, 3] {
+        kernels::set_threads(threads);
+        kernels::set_par_min_work(if threads > 1 { 0 } else { DEFAULT_PAR_MIN_WORK });
+        check("softmax fwd/bwd == scalar oracle", 200, |rng| {
+            let rows = dim(rng);
+            let cols = dim(rng).max(1); // an empty row has no softmax
+            let pitch = cols + usize_in(rng, 0, 3);
+            let scale = (0.2 + rng.uniform() * 2.0) as f32;
+            let x0 = operand(rng, buf_len(rows, pitch, cols, 2));
+            let mut got = x0.clone();
+            let mut want = x0;
+            kernels::softmax_rows(&mut got, rows, cols, pitch, scale);
+            oracle_softmax_rows(&mut want, rows, cols, pitch, scale);
+            bits_eq(&got, &want, &format!("softmax fwd {rows}x{cols}+{pitch}"))?;
+
+            // backward over the forward's probabilities
+            let rd = cols + usize_in(rng, 0, 2);
+            let d0 = operand(rng, buf_len(rows, rd, cols, 2));
+            let mut dg = d0.clone();
+            let mut dw = d0;
+            kernels::softmax_rows_bwd(&got, &mut dg, rows, cols, pitch, rd, scale);
+            oracle_softmax_rows_bwd(&got, &mut dw, rows, cols, (pitch, rd), scale);
+            bits_eq(&dg, &dw, &format!("softmax bwd {rows}x{cols}"))
+        });
+    }
+}
+
+#[test]
+fn attention_head_slices_bit_match_oracle() {
+    // The exact strided layout the transformer uses: per-head column
+    // slices of (t, d) buffers, pitch d, width d/heads — scores, context,
+    // and the dv/dk transposed products, serial and threaded.
+    let _guard = config_lock();
+    let _restore = SerialOnDrop;
+    for threads in [1usize, 4] {
+        kernels::set_threads(threads);
+        kernels::set_par_min_work(if threads > 1 { 0 } else { DEFAULT_PAR_MIN_WORK });
+        check("attention head-slice kernels", 120, |rng| {
+            let t = usize_in(rng, 1, 9);
+            let heads = usize_in(rng, 1, 3);
+            let dh = usize_in(rng, 1, 9);
+            let d = heads * dh;
+            let q = operand(rng, t * d);
+            let k = operand(rng, t * d);
+            let v = operand(rng, t * d);
+            for head in 0..heads {
+                let off = head * dh;
+                let wide = MatShape { m: t, k: dh, n: t, ra: d, rb: d, rc: t };
+                let thin = MatShape { m: t, k: t, n: dh, ra: t, rb: d, rc: d };
+                let mut att_g = vec![0f32; t * t];
+                let mut att_w = vec![0f32; t * t];
+                kernels::matmul_bt(&q[off..], &k[off..], &mut att_g, wide, MatInit::Zero);
+                oracle_matmul_bt(&q[off..], &k[off..], &mut att_w, wide, &MatInit::Zero);
+                bits_eq(&att_g, &att_w, "head scores")?;
+
+                let mut ctx_g = vec![0f32; t * d];
+                let mut ctx_w = vec![0f32; t * d];
+                kernels::matmul(&att_g, &v[off..], &mut ctx_g[off..], thin, MatInit::Zero);
+                oracle_matmul(&att_w, &v[off..], &mut ctx_w[off..], thin, &MatInit::Zero);
+                bits_eq(&ctx_g, &ctx_w, "head context")?;
+
+                let mut dv_g = vec![0f32; t * d];
+                let mut dv_w = vec![0f32; t * d];
+                kernels::matmul_at(&att_g, &q[off..], &mut dv_g[off..], thin, MatInit::Zero);
+                oracle_matmul_at(&att_w, &q[off..], &mut dv_w[off..], thin, &MatInit::Zero);
+                bits_eq(&dv_g, &dv_w, "head transposed product")?;
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn zero_and_unit_dim_grid_is_exact() {
+    // exhaustive 0/1/edge grid — the shapes property sampling might miss
+    let _guard = config_lock();
+    let _restore = SerialOnDrop;
+    kernels::set_threads(1);
+    let mut rng = Xoshiro256::seed_from(0xED6E);
+    for m in [0usize, 1, 2, 5] {
+        for k in [0usize, 1, 3] {
+            for n in [0usize, 1, 2, 9] {
+                let sh = MatShape::packed(m, k, n);
+                let a = operand(&mut rng, m * k);
+                let b = operand(&mut rng, k * n);
+                let bias = operand(&mut rng, n);
+                for owned in [
+                    MatInitOwned::Zero,
+                    MatInitOwned::Accumulate,
+                    MatInitOwned::Bias(bias.clone()),
+                ] {
+                    let init = owned.as_init();
+                    let prefill = operand(&mut rng, m * n);
+                    let mut got = prefill.clone();
+                    let mut want = prefill;
+                    kernels::matmul(&a, &b, &mut got, sh, init);
+                    oracle_matmul(&a, &b, &mut want, sh, &init);
+                    bits_eq(&got, &want, &format!("grid {m}x{k}x{n}"))
+                        .unwrap_or_else(|e| panic!("{e}"));
+                }
+            }
+        }
+    }
+}
