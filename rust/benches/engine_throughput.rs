@@ -14,6 +14,7 @@ use sparse_dp_emb::coordinator::Algorithm;
 use sparse_dp_emb::data::CriteoConfig;
 use sparse_dp_emb::engine;
 use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::telemetry::{BenchRow, BenchSnapshot, BENCH_SCHEMA_VERSION};
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
@@ -40,4 +41,32 @@ fn main() {
         );
     }
     println!("\n(outcomes asserted bit-identical across all rows)");
+
+    // tracked snapshot: CI's bench smoke regenerates BENCH_engine.json from
+    // this same path (see docs/OBSERVABILITY.md for the schema)
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".into());
+    let snap = BenchSnapshot {
+        schema_version: BENCH_SCHEMA_VERSION,
+        bench: "engine_throughput".into(),
+        model: cfg.model.clone(),
+        algorithm: "dp-adafest".into(),
+        steps: cfg.steps,
+        provenance: format!(
+            "cargo bench --bench engine_throughput{} (timings are machine-dependent; \
+             compare rows within one snapshot, not across machines)",
+            if full { " -- --full" } else { "" }
+        ),
+        rows: rows
+            .iter()
+            .map(|r| BenchRow {
+                path: r.path.to_string(),
+                grad_workers: r.grad_workers as u64,
+                secs: r.secs,
+                steps_per_sec: r.steps_per_sec,
+                speedup: r.speedup,
+            })
+            .collect(),
+    };
+    std::fs::write(&out, snap.to_json_pretty()).unwrap();
+    println!("wrote {out}");
 }

@@ -94,6 +94,10 @@ pub struct RunConfig {
 
     pub artifacts_dir: String,
 
+    /// telemetry JSONL sink path (`--metrics-out`); empty = disabled.
+    /// Purely observational: enabling it cannot change trained results.
+    pub metrics_out: String,
+
     /// async engine knobs (throughput-only; no effect on results)
     pub engine: EngineConfig,
 }
@@ -123,6 +127,7 @@ impl Default for RunConfig {
             memory_efficient_filtering: true,
             freeze_embedding: false,
             artifacts_dir: "artifacts".into(),
+            metrics_out: String::new(),
             engine: EngineConfig::default(),
         }
     }
@@ -167,6 +172,7 @@ impl RunConfig {
             }
             "freeze_embedding" => self.freeze_embedding = parse_bool(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
+            "metrics_out" => self.metrics_out = v.into(),
             "engine_workers" => {
                 self.engine.grad_workers = v.parse().context("engine_workers")?
             }
@@ -308,6 +314,21 @@ mod tests {
         assert_eq!(c.engine.microbatch_chunks, 2);
         assert_eq!(c.engine.kernel_threads, 4);
         assert_eq!(c.engine.data_workers, EngineConfig::default().data_workers);
+    }
+
+    #[test]
+    fn metrics_out_flag_parses() {
+        let mut c = RunConfig::default();
+        assert!(c.metrics_out.is_empty());
+        let rest = c
+            .apply_args(&[
+                "train-async".to_string(),
+                "--metrics-out".to_string(),
+                "/tmp/run.jsonl".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(rest, vec!["train-async"]);
+        assert_eq!(c.metrics_out, "/tmp/run.jsonl");
     }
 
     #[test]

@@ -30,9 +30,11 @@
 //!
 //! [`Trainer`]: super::Trainer
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
-use crate::accounting::calibrate_sigma;
+use crate::accounting::{calibrate_sigma, compose_sigmas, gaussian_epsilon};
 use crate::config::RunConfig;
 use crate::data::{PctrBatch, TextBatch};
 use crate::filtering::{ContributionMap, SurvivorSet};
@@ -43,6 +45,7 @@ use crate::selection::{dp_top_k_per_feature, exponential_select};
 use crate::sparse::{
     add_dense_noise, add_row_noise, GradSizeMeter, Optimizer, RowSparseGrad,
 };
+use crate::telemetry::{RunSummary, Stage, StepRecord, Telemetry};
 use crate::util::rng::Xoshiro256;
 
 use super::algorithm::Algorithm;
@@ -150,6 +153,9 @@ pub struct TrainOutcome {
     pub sigma1: f64,
     /// calibrated gradient noise multiplier
     pub sigma2: f64,
+    /// end-of-run telemetry totals (stage timings, queue high-water marks,
+    /// cumulative privacy spend) — see `docs/OBSERVABILITY.md`
+    pub telemetry: RunSummary,
 }
 
 /// Everything the grads artifact returns for one logical batch, in a form
@@ -521,6 +527,13 @@ pub struct StepState {
     pub fest_selected: Option<SurvivorSet>,
     /// per-step training loss so far
     pub loss_history: Vec<f64>,
+    /// passive telemetry hub, shared (via `Arc`) with the engine's workers.
+    /// Probing it never draws randomness or reorders reductions, so it
+    /// cannot perturb the bit-exactness invariants above.
+    pub tele: Arc<Telemetry>,
+    /// privacy ε consumed by selection mechanisms so far (FEST top-k
+    /// budgets, per-step exponential-selection budgets)
+    pub eps_selection_spent: f64,
 }
 
 impl StepState {
@@ -533,6 +546,9 @@ impl StepState {
         meter.set_baselines(store.embedding_coords(), store.dense_coords());
         let opt = Optimizer::new(cfg.optimizer, cfg.lr);
         let rng = Xoshiro256::seed_from(cfg.seed ^ 0xDEADBEEF);
+        let tele = Arc::new(Telemetry::with_sink(
+            (!cfg.metrics_out.is_empty()).then_some(cfg.metrics_out.as_str()),
+        )?);
         Ok(StepState {
             cfg,
             meta: geom.meta,
@@ -545,6 +561,8 @@ impl StepState {
             sigma2,
             fest_selected: None,
             loss_history: Vec::new(),
+            tele,
+            eps_selection_spent: 0.0,
         })
     }
 
@@ -590,7 +608,34 @@ impl StepState {
         ids.sort_unstable();
         ids.dedup();
         self.fest_selected = Some(SurvivorSet::from_sorted(ids));
+        self.eps_selection_spent += epsilon;
         Ok(())
+    }
+
+    /// Cumulative privacy ε spent after `steps_done` training steps, at the
+    /// run's effective δ: selection spend plus the closed-form Gaussian
+    /// bound for the composed noise ([`compose_sigmas`] of σ₁/σ₂ when a
+    /// contribution map is in play, else σ₂ alone, tightened by √t).
+    ///
+    /// This is a *pessimistic upper bound* — it ignores subsampling
+    /// amplification (the exact PLD accountant is far too expensive to run
+    /// per step), so it is always ≥ the ε the run was calibrated for.
+    /// Non-private runs spend 0.
+    pub fn eps_spent(&self, steps_done: u64) -> f64 {
+        if !self.cfg.algorithm.is_private() || steps_done == 0 {
+            return 0.0;
+        }
+        let sigma_eff = if self.sigma1 > 0.0 {
+            compose_sigmas(self.sigma1, self.sigma2)
+        } else {
+            self.sigma2
+        };
+        if sigma_eff <= 0.0 {
+            return f64::INFINITY;
+        }
+        let delta = self.cfg.effective_delta();
+        self.eps_selection_spent
+            + gaussian_epsilon(delta, sigma_eff / (steps_done as f64).sqrt())
     }
 
     /// Shared post-gradient logic: survivor selection, noise, updates.
@@ -607,8 +652,12 @@ impl StepState {
         let algo = self.cfg.algorithm;
         let noise2 = self.sigma2 * self.cfg.c2; // gradient noise stddev
         let present_rows: usize = table_grads.iter().map(|g| g.nnz_rows()).sum();
+        // span guards borrow the hub through a local Arc so they can overlap
+        // the `&mut self` borrows below; timing is passive (clock reads only)
+        let tele = Arc::clone(&self.tele);
 
         // ---- survivor selection (embedding row set to noise & update) ----
+        let select_span = tele.span(Stage::Select);
         let mut survivors_len = 0usize;
         let survivor_set: Option<SurvivorSet> = match algo {
             Algorithm::NonPrivate | Algorithm::DpSgd => None,
@@ -629,6 +678,7 @@ impl StepState {
                     self.cfg.c2,
                     &mut self.rng,
                 );
+                self.eps_selection_spent += self.cfg.epsilon / self.cfg.steps as f64;
                 Some(SurvivorSet::from_sorted(ids))
             }
             Algorithm::DpFest => Some(
@@ -659,6 +709,7 @@ impl StepState {
                 }
             }
         };
+        drop(select_span);
 
         // ---- embedding updates ----
         let mut emb_coords = 0usize;
@@ -672,10 +723,14 @@ impl StepState {
                 // dense path: densify + dense noise + dense update
                 for (t, g) in self.emb_tables.iter().zip(&table_grads) {
                     let mut dense = g.to_dense();
-                    emb_coords += add_dense_noise(&mut dense, noise2, &mut self.rng);
+                    {
+                        let _span = tele.span(Stage::Noise);
+                        emb_coords += add_dense_noise(&mut dense, noise2, &mut self.rng);
+                    }
                     for v in &mut dense {
                         *v /= b;
                     }
+                    let _span = tele.span(Stage::Scatter);
                     sink.apply_dense(t.param_index, &dense, &self.opt)?;
                 }
             }
@@ -683,6 +738,7 @@ impl StepState {
                 for (t, g) in self.emb_tables.iter().zip(&mut table_grads) {
                     g.scale(1.0 / b);
                     emb_coords += g.nnz_coords();
+                    let _span = tele.span(Stage::Scatter);
                     sink.apply_sparse(t.param_index, g, &self.opt)?;
                 }
             }
@@ -704,8 +760,12 @@ impl StepState {
                             g.add_row_scaled(local, 0.0, &zero); // ensure presence
                         }
                     }
-                    emb_coords += add_row_noise(g, noise2, &mut self.rng);
+                    {
+                        let _span = tele.span(Stage::Noise);
+                        emb_coords += add_row_noise(g, noise2, &mut self.rng);
+                    }
                     g.scale(1.0 / b);
+                    let _span = tele.span(Stage::Scatter);
                     sink.apply_sparse(t.param_index, g, &self.opt)?;
                 }
             }
@@ -715,16 +775,34 @@ impl StepState {
         let mut dense_coords = 0usize;
         for (pi, mut gbuf) in dense_grads {
             if algo.is_private() {
+                let _span = tele.span(Stage::Noise);
                 dense_coords += add_dense_noise(&mut gbuf, noise2, &mut self.rng);
             }
             for v in &mut gbuf {
                 *v /= b;
             }
+            let _span = tele.span(Stage::Scatter);
             sink.apply_dense(pi, &gbuf, &self.opt)?;
         }
 
         self.meter.record_step(emb_coords, dense_coords);
         self.loss_history.push(loss);
+        let step = self.loss_history.len() as u64;
+        self.tele.record_step(&StepRecord {
+            step,
+            loss,
+            present_rows: present_rows as u64,
+            survivors: survivor_set.map(|_| survivors_len as u64),
+            emb_coords_noised: emb_coords as u64,
+            dense_coords_noised: dense_coords as u64,
+            reduction_factor: if emb_coords == 0 {
+                f64::INFINITY
+            } else {
+                self.meter.emb_dense_baseline as f64 / emb_coords as f64
+            },
+            eps_spent: self.eps_spent(step),
+            delta: self.cfg.effective_delta(),
+        })?;
         Ok(StepStats {
             loss,
             emb_coords_noised: emb_coords,
@@ -734,8 +812,18 @@ impl StepState {
         })
     }
 
-    /// Package the run's accumulated state into a [`TrainOutcome`].
+    /// Package the run's accumulated state into a [`TrainOutcome`], capture
+    /// the telemetry [`RunSummary`], and write the sink's final summary line
+    /// (a failed summary write warns on stderr rather than failing the run —
+    /// the trained result is already in hand).
     pub fn outcome(&self, utility: f64, eval_loss: f64) -> TrainOutcome {
+        let telemetry = self.tele.summary(
+            self.eps_spent(self.loss_history.len() as u64),
+            self.cfg.effective_delta(),
+        );
+        if let Err(e) = self.tele.write_summary(&telemetry) {
+            eprintln!("warning: metrics summary not written: {e:#}");
+        }
         TrainOutcome {
             loss_history: self.loss_history.clone(),
             utility,
@@ -744,6 +832,7 @@ impl StepState {
             reduction_factor: self.meter.reduction_factor(),
             sigma1: self.sigma1,
             sigma2: self.sigma2,
+            telemetry,
         }
     }
 }
@@ -771,7 +860,8 @@ pub fn eval_pctr(
     Ok((acc.auc(), acc.mean_loss()))
 }
 
-/// Evaluate on text batches: returns (accuracy, mean loss).
+/// Evaluate on text batches: returns (accuracy, mean loss).  Both metrics
+/// are weighted by example count, so a ragged final batch cannot skew them.
 pub fn eval_text(
     rt: &Runtime,
     fwd_artifact: &str,
@@ -786,13 +876,13 @@ pub fn eval_text(
         let mut inputs = store.tensors();
         inputs.extend(batch.to_tensors());
         let outs = rt.execute(fwd_artifact, &inputs)?;
-        loss_sum += outs[0].scalar()?;
+        loss_sum += outs[0].scalar()? * batch.batch_size as f64;
         let logits = outs[1].as_f32()?;
         correct_w += metrics::accuracy_from_logits(logits, &batch.labels, num_classes)
             * batch.batch_size as f64;
         n += batch.batch_size;
     }
-    Ok((correct_w / n as f64, loss_sum / batches.len() as f64))
+    Ok((correct_w / n as f64, loss_sum / n as f64))
 }
 
 #[cfg(test)]

@@ -9,6 +9,7 @@ use crate::config::RunConfig;
 use crate::data::{PctrBatch, SynthCriteo, TextBatch};
 use crate::runtime::Runtime;
 use crate::sparse::GradSizeMeter;
+use crate::telemetry::Stage;
 use crate::util::rng::Xoshiro256;
 
 use super::step::{self, ModelMeta, OutputKind, StepState, StepStats, TrainOutcome};
@@ -102,15 +103,20 @@ impl<'rt> Trainer<'rt> {
         let (c1, c2) = step::clip_inputs(&self.state.cfg);
         inputs.push(c1);
         inputs.push(c2);
-        let outs = self.rt.execute(&self.grads_artifact, &inputs)?;
+        let tele = self.state.tele.clone();
+        let outs = tele.time(Stage::ChunkCompute, || {
+            self.rt.execute(&self.grads_artifact, &inputs)
+        })?;
         let need_counts = self.state.cfg.algorithm.uses_contribution_map();
-        let bundle = step::assemble_pctr(
-            &self.output_plan,
-            &outs,
-            &self.state.emb_tables,
-            batch,
-            need_counts,
-        )?;
+        let bundle = tele.time(Stage::Assemble, || {
+            step::assemble_pctr(
+                &self.output_plan,
+                &outs,
+                &self.state.emb_tables,
+                batch,
+                need_counts,
+            )
+        })?;
         self.state.apply_update(bundle, &mut self.store)
     }
 
@@ -129,16 +135,21 @@ impl<'rt> Trainer<'rt> {
         let (c1, c2) = step::clip_inputs(&self.state.cfg);
         inputs.push(c1);
         inputs.push(c2);
-        let outs = self.rt.execute(&self.grads_artifact, &inputs)?;
+        let tele = self.state.tele.clone();
+        let outs = tele.time(Stage::ChunkCompute, || {
+            self.rt.execute(&self.grads_artifact, &inputs)
+        })?;
         let need_counts = self.state.cfg.algorithm.uses_contribution_map();
-        let bundle = step::assemble_text(
-            &self.output_plan,
-            &outs,
-            &self.state.emb_tables,
-            batch,
-            seq_len,
-            need_counts,
-        )?;
+        let bundle = tele.time(Stage::Assemble, || {
+            step::assemble_text(
+                &self.output_plan,
+                &outs,
+                &self.state.emb_tables,
+                batch,
+                seq_len,
+                need_counts,
+            )
+        })?;
         self.state.apply_update(bundle, &mut self.store)
     }
 
@@ -174,7 +185,10 @@ impl<'rt> Trainer<'rt> {
         let bsz = self.batch_size();
         for t in 0..self.state.cfg.steps {
             let mut rng = step::train_batch_rng(seed, t);
-            let batch = gen.batch(0, bsz, &mut rng);
+            let batch = self
+                .state
+                .tele
+                .time(Stage::DataGenerate, || gen.batch(0, bsz, &mut rng));
             self.step_pctr(&batch)?;
         }
         let eval: Vec<PctrBatch> = (0..self.state.cfg.eval_batches)
@@ -200,7 +214,10 @@ impl<'rt> Trainer<'rt> {
         let bsz = self.batch_size();
         for t in 0..self.state.cfg.steps {
             let mut rng = step::train_batch_rng(seed, t);
-            let batch = gen.batch(bsz, &mut rng);
+            let batch = self
+                .state
+                .tele
+                .time(Stage::DataGenerate, || gen.batch(bsz, &mut rng));
             self.step_text(&batch)?;
         }
         let eval: Vec<TextBatch> = (0..self.state.cfg.eval_batches)

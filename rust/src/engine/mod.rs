@@ -84,6 +84,7 @@ use crate::models::ParamStore;
 use crate::runtime::reference::{ChunkGrads, RefModel, REDUCE_CHUNK};
 use crate::runtime::Runtime;
 use crate::selection::FrequencyTracker;
+use crate::telemetry::{Queue, Stage};
 
 /// Run a full async training (train → eval) for whatever kind of model
 /// `cfg.model` names, deriving the synthetic data source from the manifest
@@ -210,11 +211,13 @@ impl StepExec<'_> {
             bail!("batch size {} != model batch {}", batch.batch_size(), self.b);
         }
         let batch = Arc::new(batch);
+        let tele = Arc::clone(&state.tele);
         // Per-step read-only snapshots, taken after the previous step's
         // updates: every embedding row the batch touches (gathered once,
         // read lock-free by all workers — this is what keeps per-chunk
         // per-shard lock traffic off the hot path) and the dense params
         // (frozen entries are shared across steps).
+        let snap_span = tele.span(Stage::Snapshot);
         let rows = Arc::new(RowCache::build(&batch, self.estore, self.emb_params));
         let dense: Arc<Vec<Arc<Vec<f32>>>> = Arc::new(
             self.static_dense
@@ -226,9 +229,14 @@ impl StepExec<'_> {
                 })
                 .collect(),
         );
+        drop(snap_span);
         let mut c0 = 0usize;
         while c0 < self.n_chunks {
             let hi = (c0 + self.chunks_per_task).min(self.n_chunks);
+            // gauge up before the send, so in-flight + claimed-but-unfinished
+            // work is what the depth reads (the task channel is unbounded —
+            // the send itself never blocks)
+            tele.queue_inc(Queue::Task);
             self.task_tx
                 .send(ChunkTask {
                     chunks: c0..hi,
@@ -242,8 +250,11 @@ impl StepExec<'_> {
                 .context("gradient workers terminated early")?;
             c0 = hi;
         }
-        let outs = collect_step(self.rm, self.n_chunks, self.res_rx, self.workers_down)?;
+        let outs = tele.time(Stage::Collect, || {
+            collect_step(self.rm, self.n_chunks, self.res_rx, self.workers_down)
+        })?;
         let need_counts = state.cfg.algorithm.uses_contribution_map();
+        let assemble_span = tele.span(Stage::Assemble);
         let bundle = match batch.as_ref() {
             Batch::Pctr(pb) => {
                 step::assemble_pctr(self.plan, &outs, &state.emb_tables, pb, need_counts)?
@@ -257,6 +268,7 @@ impl StepExec<'_> {
                 need_counts,
             )?,
         };
+        drop(assemble_span);
         let mut sink = self.estore;
         state.apply_update(bundle, &mut sink)?;
         Ok(())
@@ -440,12 +452,16 @@ fn run_with(
     let task_rx = Arc::new(Mutex::new(task_rx));
     let (res_tx, res_rx) = mpsc::channel();
 
+    // The telemetry hub travels to every worker by Arc — probing it is
+    // atomics and clock reads only, so instrumented workers stay bit-exact.
+    let tele = Arc::clone(&state.tele);
     let reselections = std::thread::scope(|scope| -> Result<Option<usize>> {
         for _ in 0..ecfg.data_workers.max(1) {
             let tx = batch_tx.clone();
             let gcfg = src.clone();
             let next = &next_step;
-            scope.spawn(move || pipeline::data_worker(gcfg, dplan, next, tx));
+            let tl = Arc::clone(&tele);
+            scope.spawn(move || pipeline::data_worker(gcfg, dplan, next, tx, &tl));
         }
         drop(batch_tx); // aggregator detects data-worker exit via channel close
 
@@ -454,6 +470,7 @@ fn run_with(
             let tx = res_tx.clone();
             let rm = &rm;
             let down = &workers_down;
+            let tl = Arc::clone(&tele);
             scope.spawn(move || {
                 // Bump the exit counter even on panic, so the aggregator
                 // can tell a dead worker from a slow one (aggregator.rs).
@@ -464,7 +481,7 @@ fn run_with(
                     }
                 }
                 let _guard = ExitGuard(down);
-                pipeline::grad_worker(rm, &rx, &tx)
+                pipeline::grad_worker(rm, &rx, &tx, &tl)
             });
         }
         drop(res_tx);
@@ -488,7 +505,7 @@ fn run_with(
                 c2,
                 seq_len,
             };
-            let mut stream = BatchStream::new(batch_rx);
+            let mut stream = BatchStream::with_telemetry(batch_rx, Arc::clone(&tele));
             match &streaming {
                 None => {
                     for t in 0..steps {
@@ -574,7 +591,8 @@ pub struct ThroughputRow {
     pub path: &'static str,
     /// gradient workers the engine ran with (1 for the sync row)
     pub grad_workers: usize,
-    /// wall-clock seconds for the full run
+    /// wall-clock seconds for the run (train + eval), taken from the run's
+    /// telemetry clock — the same clock the JSONL traces are measured on
     pub secs: f64,
     /// training steps per second
     pub steps_per_sec: f64,
@@ -586,7 +604,9 @@ pub struct ThroughputRow {
 /// cache, runs the sync trainer once, then the engine at each worker count,
 /// asserting the loss histories bit-identical throughout.  Shared by the
 /// tab4 harness and `benches/engine_throughput.rs` so the protocol cannot
-/// drift between them.
+/// drift between them.  Wall clock is single-sourced from each run's
+/// telemetry ([`crate::telemetry::RunSummary::wall_secs`]) rather than an
+/// ad-hoc `Instant` around the call.
 pub fn compare_throughput(
     cfg: &RunConfig,
     rt: &Runtime,
@@ -598,11 +618,10 @@ pub fn compare_throughput(
     let _ = Trainer::new(cfg.clone(), rt)?;
 
     let mut rows = Vec::with_capacity(1 + worker_counts.len());
-    let t0 = std::time::Instant::now();
     let mut trainer = Trainer::new(cfg.clone(), rt)?;
     let gen = SynthCriteo::new(gen_cfg.clone());
     let sync_out = trainer.run_pctr(&gen)?;
-    let sync_secs = t0.elapsed().as_secs_f64();
+    let sync_secs = sync_out.telemetry.wall_secs;
     let sync_sps = cfg.steps as f64 / sync_secs;
     rows.push(ThroughputRow {
         path: "sync",
@@ -615,9 +634,8 @@ pub fn compare_throughput(
     for &workers in worker_counts {
         let mut c = cfg.clone();
         c.engine.grad_workers = workers;
-        let t0 = std::time::Instant::now();
         let out = run_pctr(&c, rt, gen_cfg.clone())?;
-        let secs = t0.elapsed().as_secs_f64();
+        let secs = out.telemetry.wall_secs;
         if out.loss_history != sync_out.loss_history {
             bail!("async engine ({workers} workers) diverged from the sync trainer");
         }

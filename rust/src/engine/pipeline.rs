@@ -35,6 +35,7 @@ use crate::coordinator::step;
 use crate::coordinator::streaming;
 use crate::data::{Batch, GenConfig, Generator};
 use crate::runtime::reference::{BatchRef, ChunkGrads, ParamsView, RefModel, REDUCE_CHUNK};
+use crate::telemetry::{Queue, Stage, Telemetry};
 
 use super::sharded_store::ShardedStore;
 
@@ -178,6 +179,7 @@ pub fn data_worker(
     plan: DataPlan,
     next_step: &AtomicU64,
     tx: SyncSender<BatchMsg>,
+    tele: &Telemetry,
 ) {
     let gen = Generator::new(gen_cfg);
     loop {
@@ -190,11 +192,18 @@ pub fn data_worker(
             None => 0,
         };
         let mut rng = step::train_batch_rng(plan.seed, step_idx);
+        let gen_span = tele.span(Stage::DataGenerate);
         let batch = gen.batch(day, plan.batch_size, &mut rng);
         let counts = match (&batch, plan.with_counts) {
             (Batch::Pctr(pb), true) => Some(streaming::pctr_batch_counts(pb)),
             _ => None,
         };
+        drop(gen_span);
+        // gauge up *before* the (possibly blocking) send so the depth also
+        // counts producers stalled on a full channel — backpressure shows as
+        // depth pinned at `channel_depth + data_workers`
+        tele.queue_inc(Queue::Batch);
+        let _span = tele.span(Stage::DataSend);
         if tx.send(BatchMsg { step: step_idx, batch, counts }).is_err() {
             return; // aggregator gone — shut down
         }
@@ -206,18 +215,25 @@ pub fn grad_worker(
     model: &RefModel,
     tasks: &Mutex<Receiver<ChunkTask>>,
     results: &Sender<(usize, ChunkGrads)>,
+    tele: &Telemetry,
 ) {
     loop {
         // hold the lock only for the recv, not for the compute
-        let task = { tasks.lock().unwrap().recv() };
+        let task = {
+            let _span = tele.span(Stage::TaskWait);
+            tasks.lock().unwrap().recv()
+        };
         let Ok(task) = task else { return };
+        tele.queue_dec(Queue::Task);
         let view = WorkerView { rows: task.rows.as_ref(), dense: task.dense.as_slice() };
         let batch = BatchRef::from_batch(&task.batch);
         let b = task.batch.batch_size();
         for chunk in task.chunks.clone() {
             let lo = chunk * REDUCE_CHUNK;
             let hi = (lo + REDUCE_CHUNK).min(b);
-            let out = model.grads_chunk(&view, &batch, lo, hi, task.c1, task.c2);
+            let out = tele.time(Stage::ChunkCompute, || {
+                model.grads_chunk(&view, &batch, lo, hi, task.c1, task.c2)
+            });
             if results.send((chunk, out)).is_err() {
                 return;
             }
@@ -229,12 +245,19 @@ pub fn grad_worker(
 pub struct BatchStream {
     rx: Receiver<BatchMsg>,
     pending: BTreeMap<u64, BatchMsg>,
+    tele: Option<Arc<Telemetry>>,
 }
 
 impl BatchStream {
     /// Wrap the receiving end of the data workers' channel.
     pub fn new(rx: Receiver<BatchMsg>) -> BatchStream {
-        BatchStream { rx, pending: BTreeMap::new() }
+        BatchStream { rx, pending: BTreeMap::new(), tele: None }
+    }
+
+    /// Like [`BatchStream::new`], but receive waits and queue-depth changes
+    /// are reported to `tele`.
+    pub fn with_telemetry(rx: Receiver<BatchMsg>, tele: Arc<Telemetry>) -> BatchStream {
+        BatchStream { rx, pending: BTreeMap::new(), tele: Some(tele) }
     }
 
     /// Block until the message for `step` is available.
@@ -243,8 +266,18 @@ impl BatchStream {
             if let Some(m) = self.pending.remove(&step) {
                 return Ok(m);
             }
-            match self.rx.recv() {
+            let received = match &self.tele {
+                Some(tele) => {
+                    let _span = tele.span(Stage::BatchWait);
+                    self.rx.recv()
+                }
+                None => self.rx.recv(),
+            };
+            match received {
                 Ok(m) => {
+                    if let Some(tele) = &self.tele {
+                        tele.queue_dec(Queue::Batch);
+                    }
                     self.pending.insert(m.step, m);
                 }
                 Err(_) => bail!("data workers exited before producing step {step}"),

@@ -193,6 +193,7 @@ mod tests {
                 reduction_factor: reduction,
                 sigma1: 0.0,
                 sigma2: 0.0,
+                telemetry: Default::default(),
             },
         }
     }

@@ -15,6 +15,7 @@ use crate::data::CriteoConfig;
 use crate::engine;
 use crate::runtime::Runtime;
 use crate::sparse::{add_dense_noise, add_row_noise, Optimizer, RowSparseGrad};
+use crate::telemetry::Stopwatch;
 use crate::util::bench::fmt_dur;
 use crate::util::rng::Xoshiro256;
 
@@ -46,7 +47,8 @@ pub fn time_updates(
         .collect();
 
     // dense path: dense grad buffer + dense noise + dense update
-    let t0 = std::time::Instant::now();
+    // (timed on the telemetry stopwatch — same clock as the run traces)
+    let t0 = Stopwatch::start();
     let mut dense_grad = vec![0f32; vocab * dim];
     for rows in &act {
         for v in dense_grad.iter_mut() {
@@ -61,10 +63,10 @@ pub fn time_updates(
         add_dense_noise(&mut dense_grad, 1.0, &mut rng);
         opt.dense_step(&mut table, &dense_grad, &mut state);
     }
-    let dense_secs = t0.elapsed().as_secs_f64();
+    let dense_secs = t0.elapsed_secs();
 
     // sparse path: row-sparse grad + row noise + scatter update
-    let t1 = std::time::Instant::now();
+    let t1 = Stopwatch::start();
     for rows in &act {
         let mut g = RowSparseGrad::with_capacity(vocab, dim, batch);
         for &r in rows {
@@ -73,7 +75,7 @@ pub fn time_updates(
         add_row_noise(&mut g, 1.0, &mut rng);
         opt.sparse_step(&mut table, &g, &mut state);
     }
-    let sparse_secs = t1.elapsed().as_secs_f64();
+    let sparse_secs = t1.elapsed_secs();
 
     UpdateTiming { vocab, dense_secs, sparse_secs }
 }

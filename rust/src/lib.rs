@@ -34,6 +34,11 @@
 //!   at any worker count (`sparse-dp-emb train-async`); `docs/ENGINE.md`
 //!   is the architecture reference.
 //!
+//! Both paths are instrumented by a passive [`telemetry`] subsystem —
+//! per-stage span timers, channel queue-depth gauges, and per-step
+//! sparsity/privacy metrics streamed as JSONL via `--metrics-out`
+//! (`docs/OBSERVABILITY.md`) — without perturbing bit-exactness.
+//!
 //! Both paths also run the paper's §4.3 streaming (time-series) protocol
 //! through one shared calendar ([`coordinator::streaming::StreamSchedule`]):
 //! the sync [`coordinator::StreamingTrainer`] (`stream`) and the engine's
@@ -60,6 +65,7 @@ pub mod models;
 pub mod runtime;
 pub mod selection;
 pub mod sparse;
+pub mod telemetry;
 pub mod util;
 
 pub mod proptest;

@@ -155,29 +155,28 @@ fn cmd_train_async(cfg: &RunConfig, stream: bool) -> Result<()> {
             "[train-async] streaming period={} source={:?}",
             cfg.streaming_period, cfg.freq_source
         );
-        let t0 = std::time::Instant::now();
         let epd = sparse_dp_emb::coordinator::streaming::eval_batches_per_day(cfg);
         let out = sparse_dp_emb::engine::run_streaming(cfg, &rt, gcfg, epd)?;
-        let dt = t0.elapsed();
+        // wall clock comes from the run's own telemetry (single timing source)
+        let secs = out.outcome.telemetry.wall_secs;
         println!(
-            "[train-async] {} streamed steps in {:.2?} ({:.1} steps/s)",
+            "[train-async] {} streamed steps in {:.2}s ({:.1} steps/s)",
             out.outcome.loss_history.len(),
-            dt,
-            out.outcome.loss_history.len() as f64 / dt.as_secs_f64()
+            secs,
+            out.outcome.loss_history.len() as f64 / secs
         );
         println!("[train-async] per-eval-day AUC: {:?}", out.per_day_auc);
         println!("[train-async] reselections: {}", out.reselections);
         report(&out.outcome, &rt);
         return Ok(());
     }
-    let t0 = std::time::Instant::now();
     let outcome = sparse_dp_emb::engine::run(cfg, &rt)?;
-    let dt = t0.elapsed();
+    let secs = outcome.telemetry.wall_secs;
     println!(
-        "[train-async] {} steps in {:.2?} ({:.1} steps/s)",
+        "[train-async] {} steps in {:.2}s ({:.1} steps/s)",
         cfg.steps,
-        dt,
-        cfg.steps as f64 / dt.as_secs_f64()
+        secs,
+        cfg.steps as f64 / secs
     );
     report(&outcome, &rt);
     Ok(())
@@ -282,4 +281,26 @@ fn report(outcome: &sparse_dp_emb::coordinator::TrainOutcome, rt: &Runtime) {
         "runtime: {} execs, marshal-in {:?}, execute {:?}, marshal-out {:?}",
         s.executions, s.marshal_in, s.execute, s.marshal_out
     );
+
+    let t = &outcome.telemetry;
+    println!("\n=== telemetry ===");
+    println!(
+        "steps: {}  wall: {:.2}s  eps_spent: {:.4}  delta: {:.2e}",
+        t.steps, t.wall_secs, t.eps_spent, t.delta
+    );
+    if t.batch_queue_max > 0 || t.task_queue_max > 0 {
+        println!(
+            "queue max depth: batch={} task={}",
+            t.batch_queue_max, t.task_queue_max
+        );
+    }
+    for s in &t.stages {
+        println!(
+            "  {:<14} {:>10.3}s  x{}",
+            s.stage.name(),
+            s.nanos as f64 / 1e9,
+            s.count
+        );
+    }
+    println!("(per-step traces: pass --metrics-out <path> for JSONL)");
 }

@@ -71,27 +71,35 @@ pub fn accuracy_from_logits(logits: &[f32], labels: &[i32], num_classes: usize) 
 pub struct EvalAccumulator {
     pub scores: Vec<f32>,
     pub labels: Vec<f32>,
+    /// example-weighted loss total (each batch's mean loss × its size)
     pub loss_sum: f64,
     pub batches: usize,
+    pub examples: usize,
 }
 
 impl EvalAccumulator {
+    /// Record one eval batch: its per-example scores/labels and its *mean*
+    /// loss (the loss is re-weighted by the batch size internally).
     pub fn push(&mut self, scores: &[f32], labels: &[f32], loss: f64) {
+        debug_assert_eq!(scores.len(), labels.len());
         self.scores.extend_from_slice(scores);
         self.labels.extend_from_slice(labels);
-        self.loss_sum += loss;
+        self.loss_sum += loss * scores.len() as f64;
         self.batches += 1;
+        self.examples += scores.len();
     }
 
     pub fn auc(&self) -> f64 {
         auc(&self.scores, &self.labels)
     }
 
+    /// Mean loss per *example*, so a ragged final batch carries exactly its
+    /// share of the weight (a plain per-batch mean would skew it).
     pub fn mean_loss(&self) -> f64 {
-        if self.batches == 0 {
+        if self.examples == 0 {
             f64::NAN
         } else {
-            self.loss_sum / self.batches as f64
+            self.loss_sum / self.examples as f64
         }
     }
 }
@@ -162,6 +170,19 @@ mod tests {
         // logit 0 → loss ln 2 regardless of label
         let l = logloss_from_logits(&[0.0, 0.0], &[0.0, 1.0]);
         assert!((l - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_loss_weights_by_example_count() {
+        let mut acc = EvalAccumulator::default();
+        // full batch of 4 at mean loss 1.0, ragged final batch of 1 at 6.0
+        acc.push(&[0.1, 0.2, 0.3, 0.4], &[0.0, 1.0, 0.0, 1.0], 1.0);
+        acc.push(&[0.5], &[1.0], 6.0);
+        // example-weighted: (4*1 + 1*6) / 5 = 2.0 (a batch mean would say 3.5)
+        assert_eq!(acc.mean_loss(), 2.0);
+        assert_eq!(acc.batches, 2);
+        assert_eq!(acc.examples, 5);
+        assert!(EvalAccumulator::default().mean_loss().is_nan());
     }
 
     #[test]

@@ -1,0 +1,825 @@
+#![warn(missing_docs)]
+//! Passive run telemetry: per-stage span timers, channel queue-depth gauges,
+//! paper-semantic per-step metrics, and a JSONL sink.
+//!
+//! The subsystem is zero-dependency (no tracing/prometheus in the offline
+//! crate set) and **strictly passive**: every probe is an atomic counter or a
+//! monotonic-clock read.  Nothing here draws randomness, reorders reductions,
+//! or alters the channel protocol, so the engine's three bit-exactness
+//! invariants hold with telemetry enabled — the sync==async equality suite
+//! runs with a live sink to enforce exactly that.
+//!
+//! Three layers of signal:
+//!
+//! * **Pipeline spans** ([`Stage`]) — wall time per engine stage (data-worker
+//!   generate, channel send/recv waits, chunk compute, barrier
+//!   collect/noise/scatter), accumulated into lock-free cells.
+//! * **Queue gauges** ([`Queue`]) — instantaneous and high-water depth of the
+//!   batch and task channels, for backpressure visibility.  Producers
+//!   increment *before* a blocking send, so the depth counts in-flight plus
+//!   blocked messages and never goes negative.
+//! * **Paper gauges** ([`StepRecord`]) — unique rows touched, survivors after
+//!   selection, per-step gradient-size reduction factor vs. the dense `V·d`
+//!   baseline, and cumulative `(ε, δ)` spent.  Both trainers emit these from
+//!   the shared step core, so two traces are comparable row-for-row.
+//!
+//! The JSONL schema and the span taxonomy are documented in
+//! `docs/OBSERVABILITY.md`.  Bench snapshots (`BENCH_engine.json`) reuse the
+//! same hand-rolled [`json::Json`] layer via [`BenchSnapshot`].
+
+pub mod json;
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use json::Json;
+
+/// A pipeline stage measured by a [`Span`].
+///
+/// The first six stages only tick in the async engine (the sync trainer has
+/// no channels); `ChunkCompute` through `Scatter` tick in both back ends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Data worker: synthesize one batch (example generation + encoding).
+    DataGenerate,
+    /// Data worker: blocking send of a batch into the bounded batch channel.
+    DataSend,
+    /// Step loop: blocking receive waiting for the next in-order batch.
+    BatchWait,
+    /// Step loop: build the read-only parameter snapshot (row cache + dense).
+    Snapshot,
+    /// Grad worker: blocking receive waiting for the next chunk task.
+    TaskWait,
+    /// Per-chunk backward pass (fixed 16-example reduction chunks).
+    ChunkCompute,
+    /// Step loop: merge chunk results in chunk order at the barrier.
+    Collect,
+    /// Assemble the merged chunks into a gradient bundle.
+    Assemble,
+    /// Survivor selection (FEST / AdaFEST / exponential mechanism).
+    Select,
+    /// Noise injection (dense or row-sparse Gaussian).
+    Noise,
+    /// Scatter: apply the noised update back into the parameter store.
+    Scatter,
+}
+
+impl Stage {
+    /// Number of stages (length of [`Stage::ALL`]).
+    pub const COUNT: usize = 11;
+
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::DataGenerate,
+        Stage::DataSend,
+        Stage::BatchWait,
+        Stage::Snapshot,
+        Stage::TaskWait,
+        Stage::ChunkCompute,
+        Stage::Collect,
+        Stage::Assemble,
+        Stage::Select,
+        Stage::Noise,
+        Stage::Scatter,
+    ];
+
+    /// Stable snake_case identifier used in the JSONL schema.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::DataGenerate => "data_generate",
+            Stage::DataSend => "data_send",
+            Stage::BatchWait => "batch_wait",
+            Stage::Snapshot => "snapshot",
+            Stage::TaskWait => "task_wait",
+            Stage::ChunkCompute => "chunk_compute",
+            Stage::Collect => "collect",
+            Stage::Assemble => "assemble",
+            Stage::Select => "select",
+            Stage::Noise => "noise",
+            Stage::Scatter => "scatter",
+        }
+    }
+}
+
+/// A channel whose depth is tracked by a gauge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Queue {
+    /// The bounded batch channel (data workers → step loop).
+    Batch,
+    /// The unbounded chunk-task channel (step loop → grad workers).
+    Task,
+}
+
+#[derive(Default)]
+struct StageCell {
+    nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+#[derive(Default)]
+struct QueueGauge {
+    depth: AtomicI64,
+    max: AtomicI64,
+}
+
+impl QueueGauge {
+    fn inc(&self) {
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max.fetch_max(d, Ordering::Relaxed);
+    }
+
+    fn dec(&self) {
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed).max(0) as u64
+    }
+}
+
+struct SinkState {
+    w: Option<BufWriter<File>>,
+    /// `(nanos, count)` per stage at the previous record, for per-step deltas.
+    last: [(u64, u64); Stage::COUNT],
+}
+
+/// Shared telemetry hub for one training run.
+///
+/// One instance lives in the step state and is shared (via `Arc`) with every
+/// pipeline worker.  All mutation is through `&self` — relaxed atomics for
+/// counters and a mutex only around the optional JSONL writer — so a single
+/// hub can be probed concurrently from every thread of the engine.
+pub struct Telemetry {
+    stages: [StageCell; Stage::COUNT],
+    batch_queue: QueueGauge,
+    task_queue: QueueGauge,
+    records: AtomicU64,
+    started: Instant,
+    sink: Mutex<SinkState>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+impl Telemetry {
+    /// A hub with no sink: counters and spans work, `record_step` only counts.
+    pub fn new() -> Telemetry {
+        Telemetry {
+            stages: std::array::from_fn(|_| StageCell::default()),
+            batch_queue: QueueGauge::default(),
+            task_queue: QueueGauge::default(),
+            records: AtomicU64::new(0),
+            started: Instant::now(),
+            sink: Mutex::new(SinkState {
+                w: None,
+                last: [(0, 0); Stage::COUNT],
+            }),
+        }
+    }
+
+    /// A hub that additionally streams JSONL to `path` (`None` → no sink,
+    /// same as [`Telemetry::new`]).  The file is created eagerly so a bad
+    /// path fails at startup, not mid-run.
+    pub fn with_sink(path: Option<&str>) -> Result<Telemetry> {
+        let tele = Telemetry::new();
+        if let Some(path) = path {
+            let file = File::create(path)
+                .with_context(|| format!("creating metrics sink {path}"))?;
+            tele.sink.lock().unwrap().w = Some(BufWriter::new(file));
+        }
+        Ok(tele)
+    }
+
+    /// Start a span for `stage`; elapsed wall time is added when the returned
+    /// guard drops.
+    #[must_use = "a span measures until dropped — bind it across the timed region"]
+    pub fn span(&self, stage: Stage) -> Span<'_> {
+        Span {
+            tele: self,
+            stage,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Run `f` under a span for `stage` and return its result.
+    pub fn time<T>(&self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let _span = self.span(stage);
+        f()
+    }
+
+    /// Add one completed occurrence of `stage` taking `nanos`.
+    pub fn add_nanos(&self, stage: Stage, nanos: u64) {
+        let cell = &self.stages[stage as usize];
+        cell.nanos.fetch_add(nanos, Ordering::Relaxed);
+        cell.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accumulated `(nanos, count)` for `stage`.
+    pub fn stage_total(&self, stage: Stage) -> (u64, u64) {
+        let cell = &self.stages[stage as usize];
+        (
+            cell.nanos.load(Ordering::Relaxed),
+            cell.count.load(Ordering::Relaxed),
+        )
+    }
+
+    fn gauge(&self, q: Queue) -> &QueueGauge {
+        match q {
+            Queue::Batch => &self.batch_queue,
+            Queue::Task => &self.task_queue,
+        }
+    }
+
+    /// Note one message entering queue `q` (call *before* a blocking send).
+    pub fn queue_inc(&self, q: Queue) {
+        self.gauge(q).inc();
+    }
+
+    /// Note one message leaving queue `q` (call after a successful receive).
+    pub fn queue_dec(&self, q: Queue) {
+        self.gauge(q).dec();
+    }
+
+    /// Instantaneous depth of queue `q` (in-flight plus blocked producers).
+    pub fn queue_depth(&self, q: Queue) -> u64 {
+        self.gauge(q).depth()
+    }
+
+    /// High-water depth of queue `q` over the run so far.
+    pub fn queue_max(&self, q: Queue) -> u64 {
+        self.gauge(q).max()
+    }
+
+    /// Number of step records emitted so far.
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    /// Wall seconds since this hub was created — the run's single clock.
+    pub fn wall_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Emit one per-step record.  Always counts the step; with a sink, also
+    /// writes a `"type":"step"` JSONL line carrying the paper gauges, the
+    /// current queue depths, and per-stage `(nanos, count)` *deltas* since
+    /// the previous record.
+    pub fn record_step(&self, rec: &StepRecord) -> Result<()> {
+        self.records.fetch_add(1, Ordering::Relaxed);
+        let mut sink = self.sink.lock().unwrap();
+        let state = &mut *sink;
+        let Some(w) = state.w.as_mut() else {
+            return Ok(());
+        };
+        let mut stages = Vec::new();
+        for stage in Stage::ALL {
+            let (nanos, count) = self.stage_total(stage);
+            let (last_nanos, last_count) = state.last[stage as usize];
+            state.last[stage as usize] = (nanos, count);
+            if count > last_count || nanos > last_nanos {
+                stages.push((
+                    stage.name().to_string(),
+                    Json::Obj(vec![
+                        ("nanos".into(), Json::num((nanos - last_nanos) as f64)),
+                        ("count".into(), Json::num((count - last_count) as f64)),
+                    ]),
+                ));
+            }
+        }
+        let line = Json::Obj(vec![
+            ("type".into(), Json::str("step")),
+            ("step".into(), Json::num(rec.step as f64)),
+            ("loss".into(), Json::num(rec.loss)),
+            ("present_rows".into(), Json::num(rec.present_rows as f64)),
+            (
+                "survivors".into(),
+                match rec.survivors {
+                    Some(s) => Json::num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "emb_coords_noised".into(),
+                Json::num(rec.emb_coords_noised as f64),
+            ),
+            (
+                "dense_coords_noised".into(),
+                Json::num(rec.dense_coords_noised as f64),
+            ),
+            ("reduction_factor".into(), Json::num(rec.reduction_factor)),
+            ("eps_spent".into(), Json::num(rec.eps_spent)),
+            ("delta".into(), Json::num(rec.delta)),
+            (
+                "batch_queue".into(),
+                Json::num(self.queue_depth(Queue::Batch) as f64),
+            ),
+            (
+                "task_queue".into(),
+                Json::num(self.queue_depth(Queue::Task) as f64),
+            ),
+            ("stages".into(), Json::Obj(stages)),
+        ]);
+        writeln!(w, "{line}").context("writing metrics step record")?;
+        w.flush().context("flushing metrics sink")?;
+        Ok(())
+    }
+
+    /// Snapshot the run totals into a [`RunSummary`].
+    pub fn summary(&self, eps_spent: f64, delta: f64) -> RunSummary {
+        RunSummary {
+            steps: self.records(),
+            wall_secs: self.wall_secs(),
+            batch_queue_max: self.queue_max(Queue::Batch),
+            task_queue_max: self.queue_max(Queue::Task),
+            eps_spent,
+            delta,
+            stages: Stage::ALL
+                .iter()
+                .filter_map(|&stage| {
+                    let (nanos, count) = self.stage_total(stage);
+                    (count > 0).then_some(StageTotal { stage, nanos, count })
+                })
+                .collect(),
+        }
+    }
+
+    /// Write a `"type":"summary"` JSONL line to the sink (no-op without one).
+    pub fn write_summary(&self, summary: &RunSummary) -> Result<()> {
+        let mut sink = self.sink.lock().unwrap();
+        let Some(w) = sink.w.as_mut() else {
+            return Ok(());
+        };
+        writeln!(w, "{}", summary.to_json()).context("writing metrics summary")?;
+        w.flush().context("flushing metrics sink")?;
+        Ok(())
+    }
+}
+
+/// RAII timer for one occurrence of a [`Stage`]; accumulates on drop.
+pub struct Span<'a> {
+    tele: &'a Telemetry,
+    stage: Stage,
+    t0: Instant,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.tele
+            .add_nanos(self.stage, self.t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Monotonic stopwatch — the one clock for ad-hoc wall timing, so harness
+/// rows and telemetry traces are measured identically.
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`Stopwatch::start`].
+    pub fn elapsed_secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Paper-semantic gauges for one optimizer step, emitted identically by the
+/// sync trainer and the async engine from the shared step core.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    /// 1-based step index.
+    pub step: u64,
+    /// Mean training loss of the step's batch.
+    pub loss: f64,
+    /// Unique embedding rows touched by the batch (before selection).
+    pub present_rows: u64,
+    /// Rows surviving FEST/AdaFEST/exponential selection; `None` for
+    /// algorithms without a selection stage.
+    pub survivors: Option<u64>,
+    /// Embedding coordinates that received noise this step.
+    pub emb_coords_noised: u64,
+    /// Dense-layer coordinates that received noise this step.
+    pub dense_coords_noised: u64,
+    /// This step's gradient-size reduction vs. the dense `V·d` baseline
+    /// (infinite when nothing was noised, serialized as `null`).
+    pub reduction_factor: f64,
+    /// Cumulative privacy ε spent through this step (closed-form bound).
+    pub eps_spent: f64,
+    /// The δ at which `eps_spent` is stated.
+    pub delta: f64,
+}
+
+/// Per-stage accumulated totals inside a [`RunSummary`].
+#[derive(Clone, Copy, Debug)]
+pub struct StageTotal {
+    /// Which stage.
+    pub stage: Stage,
+    /// Total wall nanoseconds across all occurrences.
+    pub nanos: u64,
+    /// Number of occurrences.
+    pub count: u64,
+}
+
+/// End-of-run telemetry totals, returned from both trainers inside
+/// `TrainOutcome` and written as the final JSONL `"type":"summary"` line.
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    /// Number of optimizer steps recorded.
+    pub steps: u64,
+    /// Wall seconds from step-state creation to summary capture.
+    pub wall_secs: f64,
+    /// High-water depth of the batch channel (0 for the sync trainer).
+    pub batch_queue_max: u64,
+    /// High-water depth of the chunk-task channel (0 for the sync trainer).
+    pub task_queue_max: u64,
+    /// Cumulative privacy ε spent over the run (closed-form bound).
+    pub eps_spent: f64,
+    /// The δ at which `eps_spent` is stated.
+    pub delta: f64,
+    /// Accumulated `(nanos, count)` per stage that ever ticked.
+    pub stages: Vec<StageTotal>,
+}
+
+impl RunSummary {
+    /// Total for one stage, if it ticked during the run.
+    pub fn stage(&self, stage: Stage) -> Option<&StageTotal> {
+        self.stages.iter().find(|t| t.stage == stage)
+    }
+
+    /// The JSON object written as the `"type":"summary"` JSONL line.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("type".into(), Json::str("summary")),
+            ("steps".into(), Json::num(self.steps as f64)),
+            ("wall_secs".into(), Json::num(self.wall_secs)),
+            (
+                "batch_queue_max".into(),
+                Json::num(self.batch_queue_max as f64),
+            ),
+            (
+                "task_queue_max".into(),
+                Json::num(self.task_queue_max as f64),
+            ),
+            ("eps_spent".into(), Json::num(self.eps_spent)),
+            ("delta".into(), Json::num(self.delta)),
+            (
+                "stages".into(),
+                Json::Obj(
+                    self.stages
+                        .iter()
+                        .map(|t| {
+                            (
+                                t.stage.name().to_string(),
+                                Json::Obj(vec![
+                                    ("nanos".into(), Json::num(t.nanos as f64)),
+                                    ("count".into(), Json::num(t.count as f64)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Current `BENCH_*.json` schema version; bump on any breaking field change.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// One sync/async throughput row inside a [`BenchSnapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRow {
+    /// Execution path label (`"sync"` or `"async"`).
+    pub path: String,
+    /// Gradient workers used (1 for the sync path).
+    pub grad_workers: u64,
+    /// Wall seconds for the timed run.
+    pub secs: f64,
+    /// Optimizer steps per second.
+    pub steps_per_sec: f64,
+    /// Speedup vs. the sync baseline row.
+    pub speedup: f64,
+}
+
+/// The tracked perf snapshot written by the engine throughput bench and the
+/// CI bench smoke (`BENCH_engine.json`).  Hand-rolled JSON round-trip keeps
+/// the on-disk schema stable across PRs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchSnapshot {
+    /// Schema version ([`BENCH_SCHEMA_VERSION`]).
+    pub schema_version: u64,
+    /// Bench target name (e.g. `"engine_throughput"`).
+    pub bench: String,
+    /// Model manifest the bench ran on.
+    pub model: String,
+    /// Training algorithm under test.
+    pub algorithm: String,
+    /// Steps per timed run.
+    pub steps: u64,
+    /// Where the numbers came from (e.g. the CI job) — snapshots from
+    /// different machines are not comparable, so this is part of the record.
+    pub provenance: String,
+    /// Timing rows; empty when the snapshot is a placeholder awaiting CI.
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchSnapshot {
+    /// The snapshot as a JSON value.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "schema_version".into(),
+                Json::num(self.schema_version as f64),
+            ),
+            ("bench".into(), Json::str(self.bench.clone())),
+            ("model".into(), Json::str(self.model.clone())),
+            ("algorithm".into(), Json::str(self.algorithm.clone())),
+            ("steps".into(), Json::num(self.steps as f64)),
+            ("provenance".into(), Json::str(self.provenance.clone())),
+            (
+                "rows".into(),
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::Obj(vec![
+                                ("path".into(), Json::str(r.path.clone())),
+                                (
+                                    "grad_workers".into(),
+                                    Json::num(r.grad_workers as f64),
+                                ),
+                                ("secs".into(), Json::num(r.secs)),
+                                ("steps_per_sec".into(), Json::num(r.steps_per_sec)),
+                                ("speedup".into(), Json::num(r.speedup)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Multi-line rendering for the checked-in file (trailing newline).
+    pub fn to_json_pretty(&self) -> String {
+        let mut s = self.to_json().pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Parse and validate a snapshot (inverse of [`BenchSnapshot::to_json`]).
+    pub fn parse(text: &str) -> Result<BenchSnapshot> {
+        let v = Json::parse(text)?;
+        let field = |k: &str| v.get(k).with_context(|| format!("missing field `{k}`"));
+        let str_field = |k: &str| -> Result<String> {
+            Ok(field(k)?
+                .as_str()
+                .with_context(|| format!("field `{k}` is not a string"))?
+                .to_string())
+        };
+        let u64_field = |j: &Json, k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("field `{k}` is not a non-negative integer"))
+        };
+        let f64_field = |j: &Json, k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("field `{k}` is not a number"))
+        };
+        let schema_version = u64_field(&v, "schema_version")?;
+        if schema_version != BENCH_SCHEMA_VERSION {
+            bail!(
+                "unsupported bench schema version {schema_version} \
+                 (expected {BENCH_SCHEMA_VERSION})"
+            );
+        }
+        let mut rows = Vec::new();
+        for row in field("rows")?
+            .as_arr()
+            .context("field `rows` is not an array")?
+        {
+            rows.push(BenchRow {
+                path: row
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .context("row field `path` is not a string")?
+                    .to_string(),
+                grad_workers: u64_field(row, "grad_workers")?,
+                secs: f64_field(row, "secs")?,
+                steps_per_sec: f64_field(row, "steps_per_sec")?,
+                speedup: f64_field(row, "speedup")?,
+            });
+        }
+        Ok(BenchSnapshot {
+            schema_version,
+            bench: str_field("bench")?,
+            model: str_field("model")?,
+            algorithm: str_field("algorithm")?,
+            steps: u64_field(&v, "steps")?,
+            provenance: str_field("provenance")?,
+            rows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate_nanos_and_counts() {
+        let tele = Telemetry::new();
+        for _ in 0..3 {
+            let _span = tele.span(Stage::Select);
+            std::hint::black_box(());
+        }
+        tele.add_nanos(Stage::Select, 1_000);
+        let (nanos, count) = tele.stage_total(Stage::Select);
+        assert_eq!(count, 4);
+        assert!(nanos >= 1_000);
+        assert_eq!(tele.stage_total(Stage::Noise), (0, 0));
+    }
+
+    #[test]
+    fn queue_gauges_track_depth_and_high_water() {
+        let tele = Telemetry::new();
+        tele.queue_inc(Queue::Batch);
+        tele.queue_inc(Queue::Batch);
+        tele.queue_dec(Queue::Batch);
+        assert_eq!(tele.queue_depth(Queue::Batch), 1);
+        assert_eq!(tele.queue_max(Queue::Batch), 2);
+        // the other gauge is independent
+        assert_eq!(tele.queue_depth(Queue::Task), 0);
+        // a stray extra dec clamps at zero on read
+        tele.queue_dec(Queue::Batch);
+        tele.queue_dec(Queue::Batch);
+        assert_eq!(tele.queue_depth(Queue::Batch), 0);
+        assert_eq!(tele.queue_max(Queue::Batch), 2);
+    }
+
+    fn record(step: u64) -> StepRecord {
+        StepRecord {
+            step,
+            loss: 0.5,
+            present_rows: 40,
+            survivors: Some(30),
+            emb_coords_noised: 240,
+            dense_coords_noised: 100,
+            reduction_factor: 1.0e6,
+            eps_spent: 0.25,
+            delta: 1e-6,
+        }
+    }
+
+    #[test]
+    fn sinkless_record_step_only_counts() {
+        let tele = Telemetry::new();
+        tele.record_step(&record(1)).unwrap();
+        tele.record_step(&record(2)).unwrap();
+        assert_eq!(tele.records(), 2);
+        let s = tele.summary(0.25, 1e-6);
+        assert_eq!(s.steps, 2);
+        assert!(s.wall_secs >= 0.0);
+    }
+
+    #[test]
+    fn sink_writes_parseable_jsonl_with_stage_deltas() {
+        let path = std::env::temp_dir().join(format!(
+            "telemetry_sink_test_{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap();
+        let tele = Telemetry::with_sink(Some(path_str)).unwrap();
+        tele.add_nanos(Stage::Select, 500);
+        tele.record_step(&record(1)).unwrap();
+        tele.add_nanos(Stage::Select, 700);
+        tele.add_nanos(Stage::Noise, 100);
+        tele.record_step(&record(2)).unwrap();
+        tele.write_summary(&tele.summary(0.25, 1e-6)).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lines: Vec<Json> =
+            text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].get("type").unwrap().as_str(), Some("step"));
+        assert_eq!(lines[0].get("step").unwrap().as_u64(), Some(1));
+        assert_eq!(lines[0].get("loss").unwrap().as_f64(), Some(0.5));
+        // first record carries the first 500ns; second only the 700ns delta
+        let sel = |l: &Json| {
+            l.get("stages")
+                .unwrap()
+                .get("select")
+                .unwrap()
+                .get("nanos")
+                .unwrap()
+                .as_u64()
+                .unwrap()
+        };
+        assert_eq!(sel(&lines[0]), 500);
+        assert_eq!(sel(&lines[1]), 700);
+        assert!(lines[0].get("stages").unwrap().get("noise").is_none());
+        assert!(lines[1].get("stages").unwrap().get("noise").is_some());
+        assert_eq!(lines[2].get("type").unwrap().as_str(), Some("summary"));
+        assert_eq!(lines[2].get("steps").unwrap().as_u64(), Some(2));
+        assert_eq!(lines[2].get("eps_spent").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn summary_reports_only_ticked_stages() {
+        let tele = Telemetry::new();
+        tele.add_nanos(Stage::ChunkCompute, 10);
+        tele.add_nanos(Stage::ChunkCompute, 20);
+        let s = tele.summary(0.0, 0.0);
+        assert_eq!(s.stages.len(), 1);
+        let total = s.stage(Stage::ChunkCompute).unwrap();
+        assert_eq!((total.nanos, total.count), (30, 2));
+        assert!(s.stage(Stage::Noise).is_none());
+    }
+
+    #[test]
+    fn infinite_reduction_factor_serializes_as_null() {
+        let path = std::env::temp_dir().join(format!(
+            "telemetry_inf_test_{}.jsonl",
+            std::process::id()
+        ));
+        let tele = Telemetry::with_sink(path.to_str()).unwrap();
+        let mut rec = record(1);
+        rec.reduction_factor = f64::INFINITY;
+        rec.survivors = None;
+        tele.record_step(&rec).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let line = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(line.get("reduction_factor"), Some(&Json::Null));
+        assert_eq!(line.get("survivors"), Some(&Json::Null));
+    }
+
+    fn sample_snapshot() -> BenchSnapshot {
+        BenchSnapshot {
+            schema_version: BENCH_SCHEMA_VERSION,
+            bench: "engine_throughput".into(),
+            model: "criteo-small".into(),
+            algorithm: "dp-adafest".into(),
+            steps: 60,
+            provenance: "unit-test".into(),
+            rows: vec![
+                BenchRow {
+                    path: "sync".into(),
+                    grad_workers: 1,
+                    secs: 12.5,
+                    steps_per_sec: 4.8,
+                    speedup: 1.0,
+                },
+                BenchRow {
+                    path: "async".into(),
+                    grad_workers: 4,
+                    secs: 4.25,
+                    steps_per_sec: 14.1,
+                    speedup: 2.94,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn bench_snapshot_roundtrip() {
+        let snap = sample_snapshot();
+        assert_eq!(BenchSnapshot::parse(&snap.to_json_pretty()).unwrap(), snap);
+        assert_eq!(
+            BenchSnapshot::parse(&snap.to_json().to_string()).unwrap(),
+            snap
+        );
+    }
+
+    #[test]
+    fn bench_snapshot_rejects_other_schema_versions() {
+        let mut snap = sample_snapshot();
+        snap.schema_version = BENCH_SCHEMA_VERSION + 1;
+        let err = BenchSnapshot::parse(&snap.to_json_pretty()).unwrap_err();
+        assert!(err.to_string().contains("schema version"));
+    }
+
+    #[test]
+    fn bench_snapshot_accepts_empty_rows() {
+        let mut snap = sample_snapshot();
+        snap.rows.clear();
+        assert_eq!(BenchSnapshot::parse(&snap.to_json_pretty()).unwrap(), snap);
+    }
+}

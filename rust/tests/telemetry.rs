@@ -1,0 +1,293 @@
+//! Telemetry acceptance tests:
+//!
+//! * instrumentation is **passive** — the sync==async bit-exactness bar
+//!   (outcomes AND final parameters) holds with a live `--metrics-out` sink
+//!   on both workloads, and two traces agree row-for-row on every
+//!   paper-semantic gauge;
+//! * counters are **consistent** — under plain DP-SGD the per-step noised
+//!   coordinate count equals the analytic dense `V·d` baseline (reduction
+//!   factor exactly 1), span counts match the step/chunk arithmetic, and
+//!   the summary's step count equals the configured run length;
+//! * the checked-in `BENCH_engine.json` parses under the current schema.
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{Algorithm, Trainer};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
+use sparse_dp_emb::engine;
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::telemetry::json::Json;
+use sparse_dp_emb::telemetry::{BenchSnapshot, Stage, BENCH_SCHEMA_VERSION};
+
+fn tiny_cfg(algo: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 6;
+    cfg.eval_batches = 2;
+    cfg.c2 = 0.5;
+    cfg
+}
+
+fn tiny_nlu_cfg(algo: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "nlu-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 4;
+    cfg.eval_batches = 2;
+    cfg.c2 = 0.5;
+    cfg.tau = 2.0;
+    cfg
+}
+
+fn gen_cfg(rt: &Runtime, cfg: &RunConfig) -> CriteoConfig {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    let vocabs = model.attr_usize_list("vocabs").unwrap();
+    CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A)
+}
+
+fn text_cfg(rt: &Runtime, cfg: &RunConfig) -> TextConfig {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    TextConfig::from_model(model, cfg.seed ^ 0xDA7A).unwrap()
+}
+
+/// A per-test temp sink path (runs share a process; paths must not collide).
+fn sink_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("telemetry_it_{}_{tag}.jsonl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+fn read_jsonl(path: &str) -> Vec<Json> {
+    let text = std::fs::read_to_string(path).unwrap();
+    std::fs::remove_file(path).ok();
+    text.lines().map(|l| Json::parse(l).unwrap()).collect()
+}
+
+fn assert_outcomes_identical(
+    a: &sparse_dp_emb::coordinator::TrainOutcome,
+    b: &sparse_dp_emb::coordinator::TrainOutcome,
+    what: &str,
+) {
+    assert_eq!(a.loss_history, b.loss_history, "{what}: loss history");
+    assert_eq!(a.utility, b.utility, "{what}: utility");
+    assert_eq!(a.eval_loss, b.eval_loss, "{what}: eval loss");
+    assert_eq!(
+        a.emb_grad_coords_per_step, b.emb_grad_coords_per_step,
+        "{what}: emb coords/step"
+    );
+    assert_eq!(a.sigma1, b.sigma1, "{what}: sigma1");
+    assert_eq!(a.sigma2, b.sigma2, "{what}: sigma2");
+}
+
+/// The paper-semantic step fields two traces of the same run must agree on.
+/// Stage timings and queue depths are deliberately excluded — those describe
+/// the execution, not the training trajectory.
+const PAPER_KEYS: &[&str] = &[
+    "step",
+    "loss",
+    "present_rows",
+    "survivors",
+    "emb_coords_noised",
+    "dense_coords_noised",
+    "reduction_factor",
+    "eps_spent",
+    "delta",
+];
+
+fn assert_paper_rows_identical(a: &[Json], b: &[Json], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: line count");
+    for (i, (la, lb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(la.get("type"), lb.get("type"), "{what}: line {i} type");
+        if la.get("type").and_then(Json::as_str) != Some("step") {
+            continue;
+        }
+        for key in PAPER_KEYS {
+            assert_eq!(la.get(key), lb.get(key), "{what}: line {i} field `{key}`");
+        }
+    }
+}
+
+#[test]
+fn sync_and_async_pctr_match_exactly_with_live_sink() {
+    // The tentpole's acceptance bar: telemetry (with a live JSONL sink on
+    // both paths) perturbs nothing — outcomes, final parameters, and the
+    // paper gauges in the traces are all bit-identical sync vs async.
+    let rt = Runtime::builtin();
+    for algo in [Algorithm::DpSgd, Algorithm::DpAdaFest] {
+        let sync_path = sink_path(&format!("pctr_sync_{algo:?}"));
+        let async_path = sink_path(&format!("pctr_async_{algo:?}"));
+
+        let mut cfg = tiny_cfg(algo);
+        cfg.metrics_out = sync_path.clone();
+        let gcfg = gen_cfg(&rt, &cfg);
+        let gen = SynthCriteo::new(gcfg);
+        let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+        let sync_out = trainer.run_pctr(&gen).unwrap();
+
+        let mut acfg = cfg.clone();
+        acfg.metrics_out = async_path.clone();
+        acfg.engine.grad_workers = 3;
+        acfg.engine.data_workers = 2;
+        acfg.engine.shards = 7;
+        let (async_out, async_store) = engine::run_with_params(&acfg, &rt).unwrap();
+
+        let what = format!("pctr {algo:?} with sink");
+        assert_outcomes_identical(&sync_out, &async_out, &what);
+        for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
+            assert_eq!(
+                pa.tensor.as_f32().unwrap(),
+                pb.tensor.as_f32().unwrap(),
+                "{what}: param {} diverged",
+                pa.name
+            );
+        }
+
+        let sync_lines = read_jsonl(&sync_path);
+        let async_lines = read_jsonl(&async_path);
+        // one line per step plus the final summary
+        assert_eq!(sync_lines.len(), cfg.steps as usize + 1, "{what}");
+        assert_eq!(
+            sync_lines.last().unwrap().get("type").and_then(Json::as_str),
+            Some("summary"),
+            "{what}"
+        );
+        assert_paper_rows_identical(&sync_lines, &async_lines, &what);
+    }
+}
+
+#[test]
+fn sync_and_async_nlu_match_exactly_with_live_sink() {
+    let rt = Runtime::builtin();
+    let sync_path = sink_path("nlu_sync");
+    let async_path = sink_path("nlu_async");
+
+    let mut cfg = tiny_nlu_cfg(Algorithm::DpAdaFest);
+    cfg.metrics_out = sync_path.clone();
+    let gen = SynthText::new(text_cfg(&rt, &cfg));
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let sync_out = trainer.run_text(&gen).unwrap();
+
+    let mut acfg = cfg.clone();
+    acfg.metrics_out = async_path.clone();
+    acfg.engine.grad_workers = 2;
+    acfg.engine.shards = 4;
+    let (async_out, async_store) = engine::run_with_params(&acfg, &rt).unwrap();
+
+    assert_outcomes_identical(&sync_out, &async_out, "nlu with sink");
+    for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
+        assert_eq!(
+            pa.tensor.as_f32().unwrap(),
+            pb.tensor.as_f32().unwrap(),
+            "nlu with sink: param {} diverged",
+            pa.name
+        );
+    }
+    assert_paper_rows_identical(
+        &read_jsonl(&sync_path),
+        &read_jsonl(&async_path),
+        "nlu with sink",
+    );
+}
+
+#[test]
+fn dp_sgd_counters_match_the_analytic_dense_baseline() {
+    // Under plain DP-SGD every embedding coordinate is noised every step, so
+    // the trace's per-step count must equal the analytic V·d total and the
+    // per-step reduction factor must be exactly 1.
+    let rt = Runtime::builtin();
+    let path = sink_path("dense_baseline");
+    let mut cfg = tiny_cfg(Algorithm::DpSgd);
+    cfg.metrics_out = path.clone();
+    let gen = SynthCriteo::new(gen_cfg(&rt, &cfg));
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let vd_total: u64 = trainer
+        .emb_tables()
+        .iter()
+        .map(|t| (t.vocab * t.dim) as u64)
+        .sum();
+    trainer.run_pctr(&gen).unwrap();
+
+    let lines = read_jsonl(&path);
+    let mut last_eps = 0.0;
+    for line in &lines {
+        if line.get("type").and_then(Json::as_str) != Some("step") {
+            continue;
+        }
+        assert_eq!(
+            line.get("emb_coords_noised").and_then(Json::as_u64),
+            Some(vd_total),
+            "emb_coords_noised must equal the dense V·d total"
+        );
+        assert_eq!(
+            line.get("reduction_factor").and_then(Json::as_f64),
+            Some(1.0),
+            "dense DP-SGD has no gradient-size reduction"
+        );
+        // no selection stage under DP-SGD
+        assert_eq!(line.get("survivors"), Some(&Json::Null));
+        // cumulative privacy spend never decreases
+        let eps = line.get("eps_spent").and_then(Json::as_f64).unwrap();
+        assert!(eps >= last_eps, "eps_spent decreased: {eps} < {last_eps}");
+        assert!(eps.is_finite() && eps > 0.0);
+        last_eps = eps;
+        assert_eq!(
+            line.get("delta").and_then(Json::as_f64),
+            Some(cfg.effective_delta())
+        );
+    }
+}
+
+#[test]
+fn span_and_gauge_totals_match_step_arithmetic() {
+    let rt = Runtime::builtin();
+    let cfg = tiny_cfg(Algorithm::DpAdaFest);
+
+    // sync: one artifact execution per step, no channels
+    let gen = SynthCriteo::new(gen_cfg(&rt, &cfg));
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let batch = trainer.batch_size();
+    let sync = trainer.run_pctr(&gen).unwrap().telemetry;
+    assert_eq!(sync.steps, cfg.steps);
+    assert_eq!(sync.stage(Stage::ChunkCompute).unwrap().count, cfg.steps);
+    assert_eq!(sync.stage(Stage::Select).unwrap().count, cfg.steps);
+    assert_eq!(sync.stage(Stage::DataGenerate).unwrap().count, cfg.steps);
+    assert_eq!(sync.batch_queue_max, 0, "sync path has no batch channel");
+    assert_eq!(sync.task_queue_max, 0, "sync path has no task channel");
+    assert!(sync.wall_secs > 0.0);
+
+    // async: one chunk computation per 16-example reduction chunk, and the
+    // pipeline channels must have actually carried messages
+    let mut acfg = cfg.clone();
+    acfg.engine.grad_workers = 3;
+    acfg.engine.data_workers = 2;
+    let run = engine::run_pctr(&acfg, &rt, gen_cfg(&rt, &acfg)).unwrap();
+    let tele = &run.telemetry;
+    assert_eq!(tele.steps, cfg.steps);
+    let chunks_per_step = batch.div_ceil(16) as u64;
+    assert_eq!(
+        tele.stage(Stage::ChunkCompute).unwrap().count,
+        cfg.steps * chunks_per_step,
+        "one chunk computation per reduction chunk"
+    );
+    assert_eq!(tele.stage(Stage::Select).unwrap().count, cfg.steps);
+    assert_eq!(tele.stage(Stage::Snapshot).unwrap().count, cfg.steps);
+    assert_eq!(tele.stage(Stage::Collect).unwrap().count, cfg.steps);
+    assert_eq!(tele.stage(Stage::DataGenerate).unwrap().count, cfg.steps);
+    assert!(tele.batch_queue_max >= 1, "batch channel never carried a message");
+    assert!(tele.task_queue_max >= 1, "task channel never carried a message");
+}
+
+#[test]
+fn checked_in_bench_snapshot_parses_under_current_schema() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_engine.json");
+    let text = std::fs::read_to_string(path).unwrap();
+    let snap = BenchSnapshot::parse(&text).unwrap();
+    assert_eq!(snap.schema_version, BENCH_SCHEMA_VERSION);
+    assert_eq!(snap.bench, "engine_throughput");
+    for row in &snap.rows {
+        assert!(row.path == "sync" || row.path == "async", "{}", row.path);
+        assert!(row.secs > 0.0 && row.steps_per_sec > 0.0);
+    }
+}
