@@ -1,13 +1,17 @@
 //! `cargo bench --bench engine_throughput` — sync trainer vs the async
 //! sharded engine, steps/sec on the synthetic pCTR workload (criteo-small,
-//! DP-AdaFEST), at 1/2/4 gradient workers.
+//! DP-AdaFEST), at 1/2/4 gradient workers, then a `--engine-staleness`
+//! sweep at k ∈ {0, 1, 2, 4} quantifying what the bounded window buys.
 //!
-//! The engine is bit-for-bit equivalent to the sync path (asserted inside
-//! `engine::compare_throughput`), so this is a pure throughput comparison:
-//! the speedup comes from pipelined batch generation plus per-example
-//! gradient chunks computed in parallel between aggregation barriers.
-//! Expected: ≥1.5x at 4 workers on a 4-core machine (the per-step barrier
-//! work — selection, noise, sparse update — stays serial by design).
+//! The worker rows are bit-for-bit equivalent to the sync path (asserted
+//! inside `engine::compare_throughput`), so that part is a pure throughput
+//! comparison: the speedup comes from pipelined batch generation plus
+//! per-example gradient chunks computed in parallel between aggregation
+//! barriers.  Expected: ≥1.5x at 4 workers on a 4-core machine (the
+//! per-step barrier work — selection, noise, sparse update — stays serial
+//! by design).  The staleness rows relax bit-exactness (documented in
+//! `docs/CONCURRENCY.md`), so they are timed directly rather than through
+//! `compare_throughput`'s loss-equality gate.
 
 use sparse_dp_emb::config::RunConfig;
 use sparse_dp_emb::coordinator::Algorithm;
@@ -34,6 +38,7 @@ fn main() {
         cfg.model, cfg.algorithm, cfg.steps
     );
     let rows = engine::compare_throughput(&cfg, &rt, &gen_cfg, &[1, 2, 4]).unwrap();
+    let sync_sps = rows[0].steps_per_sec;
     for r in &rows {
         println!(
             "  {:<5} w={}  {:>7.2}s  {:>6.1} steps/s  ({:.2}x sync)",
@@ -41,6 +46,46 @@ fn main() {
         );
     }
     println!("\n(outcomes asserted bit-identical across all rows)");
+
+    let mut bench_rows: Vec<BenchRow> = rows
+        .iter()
+        .map(|r| BenchRow {
+            path: r.path.to_string(),
+            grad_workers: r.grad_workers as u64,
+            staleness: 0,
+            secs: r.secs,
+            steps_per_sec: r.steps_per_sec,
+            speedup: r.speedup,
+        })
+        .collect();
+
+    // staleness sweep at 4 workers: k > 0 trades bit-exactness for
+    // pipelining, so these runs are timed directly (compare_throughput's
+    // equality gate would reject them by design)
+    println!("\nstaleness sweep (4 workers, k = window of in-flight steps):");
+    for k in [0usize, 1, 2, 4] {
+        let mut c = cfg.clone();
+        c.engine.grad_workers = 4;
+        c.engine.staleness = k;
+        let out = engine::run_pctr(&c, &rt, gen_cfg.clone()).unwrap();
+        let secs = out.telemetry.wall_secs;
+        let sps = cfg.steps as f64 / secs;
+        println!(
+            "  async k={k}  {:>7.2}s  {:>6.1} steps/s  ({:.2}x sync)  max observed staleness {}",
+            secs,
+            sps,
+            sps / sync_sps,
+            out.telemetry.max_staleness
+        );
+        bench_rows.push(BenchRow {
+            path: "async".into(),
+            grad_workers: 4,
+            staleness: k as u64,
+            secs,
+            steps_per_sec: sps,
+            speedup: sps / sync_sps,
+        });
+    }
 
     // tracked snapshot: CI's bench smoke regenerates BENCH_engine.json from
     // this same path (see docs/OBSERVABILITY.md for the schema)
@@ -56,16 +101,7 @@ fn main() {
              compare rows within one snapshot, not across machines)",
             if full { " -- --full" } else { "" }
         ),
-        rows: rows
-            .iter()
-            .map(|r| BenchRow {
-                path: r.path.to_string(),
-                grad_workers: r.grad_workers as u64,
-                secs: r.secs,
-                steps_per_sec: r.steps_per_sec,
-                speedup: r.speedup,
-            })
-            .collect(),
+        rows: bench_rows,
     };
     std::fs::write(&out, snap.to_json_pretty()).unwrap();
     println!("wrote {out}");

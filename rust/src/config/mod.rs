@@ -13,9 +13,11 @@ use crate::sparse::OptimizerKind;
 
 /// Configuration of the asynchronous sharded engine (`train-async`).
 ///
-/// None of these knobs change the trained model: the engine is bit-for-bit
-/// equivalent to the sync trainer at any worker/shard/depth setting (see
-/// `engine/` module docs) — they only trade throughput for resources.
+/// Every knob except `staleness` is throughput-only: the engine is
+/// bit-for-bit equivalent to the sync trainer at any worker/shard/depth
+/// setting (see `engine/` module docs and `docs/CONCURRENCY.md`).
+/// `staleness` is the one deliberate exception — at `> 0` it trades
+/// bit-exactness for pipelining, with the privacy accounting unchanged.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EngineConfig {
     /// gradient workers computing per-example clipped grads (`--engine-workers`)
@@ -36,6 +38,13 @@ pub struct EngineConfig {
     /// only (see `crate::kernels::par_min_work`); prefer `--engine-workers`
     /// for engine runs, which already parallelise across examples.
     pub kernel_threads: usize,
+    /// bounded staleness window (`--engine-staleness`): max steps the
+    /// barrier may leave in flight, so gradient workers compute against
+    /// parameter snapshots up to this many applies old.  The **only**
+    /// engine knob that changes the trained model when non-zero — the
+    /// default 0 is today's bit-exact behavior; `docs/CONCURRENCY.md` has
+    /// the accounting argument and the decision table for turning it up.
+    pub staleness: usize,
 }
 
 impl Default for EngineConfig {
@@ -47,6 +56,7 @@ impl Default for EngineConfig {
             shards: 16,
             microbatch_chunks: 1,
             kernel_threads: 1,
+            staleness: 0,
         }
     }
 }
@@ -98,7 +108,8 @@ pub struct RunConfig {
     /// Purely observational: enabling it cannot change trained results.
     pub metrics_out: String,
 
-    /// async engine knobs (throughput-only; no effect on results)
+    /// async engine knobs (throughput-only, except the opt-in
+    /// [`EngineConfig::staleness`] window)
     pub engine: EngineConfig,
 }
 
@@ -188,6 +199,9 @@ impl RunConfig {
             }
             "engine_kernel_threads" => {
                 self.engine.kernel_threads = v.parse().context("engine_kernel_threads")?
+            }
+            "engine_staleness" => {
+                self.engine.staleness = v.parse().context("engine_staleness")?
             }
             other => bail!("unknown config key `{other}`"),
         }
@@ -306,6 +320,8 @@ mod tests {
                 "--engine-microbatch".to_string(),
                 "2".to_string(),
                 "--engine-kernel-threads=4".to_string(),
+                "--engine-staleness".to_string(),
+                "2".to_string(),
             ])
             .unwrap();
         assert_eq!(rest, vec!["train-async"]);
@@ -313,7 +329,9 @@ mod tests {
         assert_eq!(c.engine.shards, 3);
         assert_eq!(c.engine.microbatch_chunks, 2);
         assert_eq!(c.engine.kernel_threads, 4);
+        assert_eq!(c.engine.staleness, 2);
         assert_eq!(c.engine.data_workers, EngineConfig::default().data_workers);
+        assert_eq!(EngineConfig::default().staleness, 0);
     }
 
     #[test]

@@ -802,6 +802,9 @@ impl StepState {
             },
             eps_spent: self.eps_spent(step),
             delta: self.cfg.effective_delta(),
+            // the engine's collect_apply sets the gauge just before this
+            // call; it stays 0 on the sync path and at --engine-staleness 0
+            staleness: self.tele.staleness(),
         })?;
         Ok(StepStats {
             loss,

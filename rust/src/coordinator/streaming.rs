@@ -58,6 +58,48 @@ pub fn prior_batch_rng(seed: u64, index: u64) -> Xoshiro256 {
     Xoshiro256::seed_from(seed ^ 0x57AE ^ (index + 1).wrapping_mul(0xA24BAED4963EE407))
 }
 
+/// The warmup / cold-start prior pass of a streaming run, as a data-plan
+/// item: how many batches are drawn from the tagged [`prior_batch_rng`]
+/// stream before training, and which simulated day each samples from.
+///
+/// This is the single description both executors derive the prior batch
+/// list from: [`StreamSchedule::run_days`] consumes the batches in index
+/// order through [`StreamDriver::observe_prior`], and the async engine's
+/// data workers *produce* exactly this list ahead of the training stream —
+/// so the FirstDay/AllDays pre-passes and the cold-start sniff overlap
+/// pipeline fill instead of generating barrier-side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PriorPass {
+    /// no prior batches (plain runs; `Streaming` without FEST selection)
+    None,
+    /// `first-day` warmup: 20 batches of day 0
+    FirstDay,
+    /// `all-days` oracle warmup: 8 batches from each of the 18 training days
+    AllDays,
+    /// `streaming` + DP-FEST cold start: a 4-batch day-0 sniff
+    Sniff,
+}
+
+impl PriorPass {
+    /// Total prior batches the pass generates (indices `0..num_batches()`).
+    pub fn num_batches(self) -> u64 {
+        match self {
+            PriorPass::None => 0,
+            PriorPass::FirstDay => FIRST_DAY_WARMUP_BATCHES,
+            PriorPass::AllDays => TRAIN_DAYS as u64 * ALL_DAYS_WARMUP_BATCHES_PER_DAY,
+            PriorPass::Sniff => COLD_START_SNIFF_BATCHES,
+        }
+    }
+
+    /// Which simulated day prior batch `index` samples from.
+    pub fn day_of(self, index: u64) -> usize {
+        match self {
+            PriorPass::AllDays => (index / ALL_DAYS_WARMUP_BATCHES_PER_DAY) as usize,
+            _ => 0,
+        }
+    }
+}
+
 /// Which simulated day training step `step` belongs to, at `steps_per_day`
 /// steps per day.  The **single** definition of the step→day mapping —
 /// [`StreamSchedule::day_of_step`] and the engine's data workers both call
@@ -132,6 +174,18 @@ pub trait StreamDriver {
     fn train_step(
         &mut self,
         step: u64,
+        day: usize,
+        tracker: &mut FrequencyTracker,
+    ) -> Result<()>;
+
+    /// Record warmup / cold-start prior batch `index` (drawn from
+    /// [`prior_batch_rng`]`(seed, index)` at `day` — see [`PriorPass`]) into
+    /// `tracker`.  The sync path generates the batch inline; the engine
+    /// merges the pre-aggregated counts its data workers shipped for that
+    /// batch — integer sums commute, so the tracker ends up bit-identical.
+    fn observe_prior(
+        &mut self,
+        index: u64,
         day: usize,
         tracker: &mut FrequencyTracker,
     ) -> Result<()>;
@@ -217,6 +271,21 @@ impl StreamSchedule {
         self.uses_fest && self.source == FrequencySource::Streaming
     }
 
+    /// Which prior pass this run performs before its first training step.
+    /// Deterministic from the schedule alone — in particular the `Streaming`
+    /// cold-start sniff *always* fires for a FEST-selecting run, because the
+    /// tracker is necessarily empty at the day-0 period boundary (nothing
+    /// observes before it) — so the engine's data workers can generate the
+    /// prior batches ahead of time without waiting on barrier state.
+    pub fn prior_pass(&self) -> PriorPass {
+        match self.source {
+            FrequencySource::FirstDay => PriorPass::FirstDay,
+            FrequencySource::AllDays => PriorPass::AllDays,
+            FrequencySource::Streaming if self.uses_fest => PriorPass::Sniff,
+            FrequencySource::Streaming => PriorPass::None,
+        }
+    }
+
     /// Align `state`'s privacy calibration with the streamed step count.
     /// The protocol runs [`total_steps`](StreamSchedule::total_steps) noisy
     /// steps (18 days × steps/day), not `cfg.steps`, so when `cfg.steps` is
@@ -248,13 +317,14 @@ impl StreamSchedule {
     }
 
     /// Run the 18 training days: frequency-source warmup, period-boundary
-    /// publishes and reselections, and the per-day step loop.  `gen` must
-    /// be the drift-enabled generator; warmup/sniff batches are drawn here
-    /// (barrier-side in the async engine), training batches by the driver.
+    /// publishes and reselections, and the per-day step loop.  Warmup and
+    /// cold-start sniff batches (the run's [`PriorPass`]) are consumed in
+    /// index order through [`StreamDriver::observe_prior`] — generated
+    /// inline on the sync path, pre-counted by the data workers on the
+    /// engine — and training batches through [`StreamDriver::train_step`].
     /// Returns the number of DP-FEST reselections performed.
     pub fn run_days(
         &self,
-        gen: &SynthCriteo,
         tracker: &mut FrequencyTracker,
         vocabs: &[usize],
         driver: &mut impl StreamDriver,
@@ -262,25 +332,23 @@ impl StreamSchedule {
         let mut reselections = 0usize;
 
         // warmup / oracle pre-passes for the frequency source
-        match self.source {
-            FrequencySource::FirstDay => {
+        match self.prior_pass() {
+            PriorPass::FirstDay => {
                 for i in 0..FIRST_DAY_WARMUP_BATCHES {
-                    let mut rng = prior_batch_rng(self.seed, i);
-                    observe_batch(tracker, &gen.batch(0, self.batch_size, &mut rng));
+                    driver.observe_prior(i, 0, tracker)?;
                 }
                 tracker.publish();
             }
-            FrequencySource::AllDays => {
+            PriorPass::AllDays => {
                 for day in 0..TRAIN_DAYS {
                     for i in 0..ALL_DAYS_WARMUP_BATCHES_PER_DAY {
                         let idx = day as u64 * ALL_DAYS_WARMUP_BATCHES_PER_DAY + i;
-                        let mut rng = prior_batch_rng(self.seed, idx);
-                        observe_batch(tracker, &gen.batch(day, self.batch_size, &mut rng));
+                        driver.observe_prior(idx, day, tracker)?;
                     }
                 }
                 tracker.publish();
             }
-            FrequencySource::Streaming => {}
+            PriorPass::Sniff | PriorPass::None => {}
         }
         if self.uses_fest && self.source != FrequencySource::Streaming {
             self.reselect(tracker, vocabs, driver)?;
@@ -297,8 +365,7 @@ impl StreamSchedule {
                 } else if self.uses_fest {
                     // cold start: select from a tiny day-0 sniff
                     for i in 0..COLD_START_SNIFF_BATCHES {
-                        let mut rng = prior_batch_rng(self.seed, i);
-                        observe_batch(tracker, &gen.batch(0, self.batch_size, &mut rng));
+                        driver.observe_prior(i, 0, tracker)?;
                     }
                     tracker.publish();
                     self.reselect(tracker, vocabs, driver)?;
@@ -387,7 +454,7 @@ impl<'rt> StreamingTrainer<'rt> {
                 gen,
                 count_batches: self.schedule.needs_stream_counts(),
             };
-            self.schedule.run_days(gen, &mut tracker, &vocabs, &mut driver)?
+            self.schedule.run_days(&mut tracker, &vocabs, &mut driver)?
         };
 
         // evaluation on held-out future days
@@ -422,6 +489,18 @@ impl StreamDriver for TrainerDriver<'_, '_> {
             observe_batch(tracker, &batch);
         }
         self.trainer.step_pctr(&batch)?;
+        Ok(())
+    }
+
+    fn observe_prior(
+        &mut self,
+        index: u64,
+        day: usize,
+        tracker: &mut FrequencyTracker,
+    ) -> Result<()> {
+        let mut rng = prior_batch_rng(self.trainer.cfg().seed, index);
+        let batch = self.gen.batch(day, self.trainer.batch_size(), &mut rng);
+        observe_batch(tracker, &batch);
         Ok(())
     }
 

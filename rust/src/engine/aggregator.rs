@@ -1,14 +1,16 @@
 //! The DP aggregation barrier.
 //!
-//! Collects the gradient workers' per-chunk partials and folds them **in
-//! chunk order** into the full-batch artifact output tuple — the identical
-//! accumulation the sync reference backend performs — then hands the result
-//! to the shared [`StepState::apply_update`] which performs selection,
-//! draws *all* σ₁/σ₂ noise from the single RNG stream **once per logical
-//! batch**, and scatters optimizer updates into the sharded store.  Because
-//! everything stochastic happens here, serially, on bit-identical inputs,
-//! the privacy accounting and the trained model are bit-for-bit equal to
-//! the sync path regardless of worker count.
+//! Collects the gradient workers' step-tagged per-chunk partials and folds
+//! each step's chunks **in chunk order** into the full-batch artifact
+//! output tuple — the identical accumulation the sync reference backend
+//! performs — then hands the result to the shared
+//! [`StepState::apply_update`] which performs selection, draws *all* σ₁/σ₂
+//! noise from the single RNG stream **once per logical batch**, and
+//! scatters optimizer updates into the sharded store.  Because everything
+//! stochastic happens here, serially, in step order, on bit-identical
+//! inputs, the privacy accounting and (at the default `--engine-staleness
+//! 0`) the trained model are bit-for-bit equal to the sync path regardless
+//! of worker count — see `docs/CONCURRENCY.md` for what `k > 0` relaxes.
 //!
 //! In streaming mode (§4.3) the barrier additionally hosts the
 //! streaming-period boundaries: between steps it merges the data workers'
@@ -30,8 +32,16 @@ use anyhow::{bail, Result};
 use crate::runtime::reference::{ChunkGrads, GradsAcc, RefModel};
 use crate::runtime::HostTensor;
 
-/// Receive `n_chunks` chunk results (arriving in any order) and merge them
-/// in ascending chunk order into the artifact output tuple.
+/// Receive step `step`'s `n_chunks` chunk results (arriving in any order)
+/// and merge them in ascending chunk order into the artifact output tuple.
+///
+/// With bounded staleness (`--engine-staleness > 0`) several steps' tasks
+/// are in flight at once, so results are step-tagged and a result belonging
+/// to a *later* step than the one being collected is parked in `early` — a
+/// buffer the barrier keeps alive across calls — and drained when that
+/// step's collection comes around.  At the default `k = 0` only one step is
+/// ever in flight, `early` stays empty between calls, and the merge is the
+/// exact serial collection it has always been.
 ///
 /// `workers_down` counts gradient workers that have exited (each worker
 /// bumps it from a drop guard, so panics count too).  During a step no
@@ -40,15 +50,21 @@ use crate::runtime::HostTensor;
 /// chunk will never arrive; we bail instead of blocking forever.
 pub fn collect_step(
     model: &RefModel,
+    step: u64,
     n_chunks: usize,
-    results: &Receiver<(usize, ChunkGrads)>,
+    results: &Receiver<(u64, usize, ChunkGrads)>,
+    early: &mut BTreeMap<(u64, usize), ChunkGrads>,
     workers_down: &AtomicUsize,
 ) -> Result<Vec<HostTensor>> {
     let mut acc = GradsAcc::new(model);
-    let mut buffered: BTreeMap<usize, ChunkGrads> = BTreeMap::new();
     let mut next = 0usize;
+    // chunks of this step that arrived while an older step was collecting
+    while let Some(g) = early.remove(&(step, next)) {
+        acc.merge(model, g);
+        next += 1;
+    }
     while next < n_chunks {
-        let (chunk, grads) = loop {
+        let (s, chunk, grads) = loop {
             match results.recv_timeout(Duration::from_millis(200)) {
                 Ok(r) => break r,
                 Err(RecvTimeoutError::Timeout) => {
@@ -68,8 +84,14 @@ pub fn collect_step(
         if chunk >= n_chunks {
             bail!("chunk index {chunk} out of range (step has {n_chunks})");
         }
-        buffered.insert(chunk, grads);
-        while let Some(g) = buffered.remove(&next) {
+        if s < step {
+            // steps are collected strictly in order, so an older tag means a
+            // duplicate or a collection that already bailed — never silently
+            // merge it into the wrong step
+            bail!("chunk result for already-collected step {s} while collecting step {step}");
+        }
+        early.insert((s, chunk), grads);
+        while let Some(g) = early.remove(&(step, next)) {
             acc.merge(model, g);
             next += 1;
         }

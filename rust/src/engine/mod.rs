@@ -11,7 +11,7 @@
 //!  [+ freq counts]   channel  │    chunks, per-step row       │  dense snapshot)
 //!  BatchMsg ──▶ BatchStream   │    cache + dense param        ▼
 //!                  (reorder)  │    snapshots, lock-free)   merge chunks in order
-//!                             └──▶ (chunk, grads) ──────────▶ select ∘ noise(σ₁σ₂)
+//!                             └──▶ (step, chunk, grads) ────▶ select ∘ noise(σ₁σ₂)
 //!                                                             ∘ sharded update
 //! ```
 //!
@@ -25,9 +25,10 @@
 //! designates row-sparse (`table_*`, `emb_table`, or the LoRA `emb_lora_a`
 //! factor), so the LoRA models ride the same snapshots.
 //!
-//! **Bit-for-bit equivalence with the sync path** rests on three documented
-//! invariants (each with a test in `tests/engine.rs`, for both workloads;
-//! `docs/ENGINE.md` walks through them):
+//! **Bit-for-bit equivalence with the sync path** (at the default
+//! `--engine-staleness 0`) rests on three documented invariants (each with
+//! a test in `tests/engine.rs`, for both workloads; `docs/CONCURRENCY.md`
+//! is the single source of truth):
 //!
 //! 1. *Batch streams* — batch `t` comes from the self-contained RNG
 //!    `train_batch_rng(seed, t)`, so data workers can produce batches in
@@ -38,6 +39,15 @@
 //! 3. *Noise draw order* — every DP random draw happens once per logical
 //!    batch, serially, at the aggregation barrier, from the single
 //!    [`StepState`](crate::coordinator::step::StepState) RNG.
+//!
+//! **Bounded staleness** (`--engine-staleness k`, opt-in) lets the barrier
+//! keep up to `k` dispatched steps in flight, so gradient workers compute
+//! against parameter snapshots at most `k` applies old while the barrier
+//! pipelines ahead.  Dispatch order, chunk merge order, and the serial
+//! noise stream are all unchanged — only the *parameters read* are stale,
+//! so per-example clipping still bounds sensitivity and the σ calibration
+//! and (ε, δ) accounting carry over verbatim; `docs/CONCURRENCY.md` has the
+//! accounting argument and the stale-FEST-selection caveat.
 //!
 //! **Streaming mode** ([`run_streaming`]) threads the paper's §4.3 time
 //! axis (days and streaming periods) through the same pipeline: the data
@@ -66,6 +76,7 @@ pub use aggregator::collect_step;
 pub use pipeline::{BatchMsg, BatchStream, ChunkTask, DataPlan, RowCache, WorkerView};
 pub use sharded_store::{ShardedStore, ShardedTable};
 
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -74,7 +85,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
 use crate::coordinator::step::{self, ModelMeta, OutputKind, StepState, TrainOutcome};
-use crate::coordinator::streaming::{StreamDriver, StreamSchedule};
+use crate::coordinator::streaming::{PriorPass, StreamDriver, StreamSchedule};
 use crate::coordinator::{pctr_frequency_counts, text_frequency_counts, StreamingOutcome};
 use crate::data::{
     Batch, CriteoConfig, GenConfig, PctrBatch, SynthCriteo, SynthText, TextBatch,
@@ -89,7 +100,9 @@ use crate::telemetry::{Queue, Stage};
 /// Run a full async training (train → eval) for whatever kind of model
 /// `cfg.model` names, deriving the synthetic data source from the manifest
 /// exactly as the sync CLI path does.  Returns the same [`TrainOutcome`] as
-/// the sync trainer — bitwise, given the same config and seed.
+/// the sync trainer — bitwise, given the same config and seed, at the
+/// default `engine.staleness = 0` (see `docs/CONCURRENCY.md` for what a
+/// non-zero staleness window trades away).
 ///
 /// # Example
 ///
@@ -155,7 +168,8 @@ pub fn run_text(cfg: &RunConfig, rt: &Runtime, gen_cfg: TextConfig) -> Result<Tr
 /// ([`StreamSchedule::recalibrate`]).  Returns the same
 /// [`StreamingOutcome`] as the synchronous
 /// [`StreamingTrainer`](crate::coordinator::StreamingTrainer) — bitwise,
-/// for every `FrequencySource` and any worker/shard/depth setting.
+/// for every `FrequencySource` and any worker/shard/depth setting, at the
+/// default `engine.staleness = 0`.
 pub fn run_streaming(
     cfg: &RunConfig,
     rt: &Runtime,
@@ -185,8 +199,11 @@ enum Trained {
 /// Everything the aggregation barrier needs to push one logical batch
 /// through the workers and apply its DP update: per-step snapshots (row
 /// cache + dense params), chunk dispatch, in-order merge, assembly, and
-/// the shared [`StepState::apply_update`].  Shared by the plain step loop
-/// and the streaming driver so the two modes cannot drift.
+/// the shared [`StepState::apply_update`] — plus the bounded-staleness
+/// window: up to `staleness` dispatched steps ride in `inflight` before
+/// the barrier collects, so workers may compute against snapshots at most
+/// that many applies old (`docs/CONCURRENCY.md`).  Shared by the plain
+/// step loop and the streaming driver so the two modes cannot drift.
 struct StepExec<'a> {
     rm: &'a RefModel,
     estore: &'a ShardedStore,
@@ -194,7 +211,7 @@ struct StepExec<'a> {
     static_dense: &'a [Option<Arc<Vec<f32>>>],
     plan: &'a [OutputKind],
     task_tx: &'a mpsc::Sender<ChunkTask>,
-    res_rx: &'a mpsc::Receiver<(usize, ChunkGrads)>,
+    res_rx: &'a mpsc::Receiver<(u64, usize, ChunkGrads)>,
     workers_down: &'a AtomicUsize,
     n_chunks: usize,
     chunks_per_task: usize,
@@ -203,20 +220,40 @@ struct StepExec<'a> {
     c1: f32,
     c2: f32,
     seq_len: usize,
+    /// `--engine-staleness`: max dispatched-but-uncollected steps left in
+    /// flight between [`StepExec::run_step`] calls (0 = fully serial)
+    staleness: usize,
+    /// dispatched steps awaiting collection, oldest first
+    inflight: VecDeque<InflightStep>,
+    /// chunk results that arrived ahead of their step's collection
+    /// (see [`collect_step`]); always empty at `staleness = 0`
+    early: BTreeMap<(u64, usize), ChunkGrads>,
+}
+
+/// One dispatched-but-not-yet-applied step.
+struct InflightStep {
+    step: u64,
+    batch: Arc<Batch>,
+    /// store epoch ([`ShardedStore::epoch`]) the snapshot was taken at;
+    /// `step − epoch` is the snapshot age the telemetry gauge reports
+    epoch: u64,
 }
 
 impl StepExec<'_> {
-    fn run_step(&self, state: &mut StepState, batch: Batch) -> Result<()> {
+    /// Snapshot the store and fan step `step`'s chunk tasks out to the
+    /// gradient workers, leaving the step in flight (uncollected).
+    fn dispatch(&mut self, state: &StepState, step: u64, batch: Batch) -> Result<()> {
         if batch.batch_size() != self.b {
             bail!("batch size {} != model batch {}", batch.batch_size(), self.b);
         }
         let batch = Arc::new(batch);
         let tele = Arc::clone(&state.tele);
-        // Per-step read-only snapshots, taken after the previous step's
-        // updates: every embedding row the batch touches (gathered once,
-        // read lock-free by all workers — this is what keeps per-chunk
-        // per-shard lock traffic off the hot path) and the dense params
-        // (frozen entries are shared across steps).
+        let epoch = self.estore.epoch();
+        // Per-step read-only snapshots, taken after the newest *collected*
+        // step's updates: every embedding row the batch touches (gathered
+        // once, read lock-free by all workers — this is what keeps
+        // per-chunk per-shard lock traffic off the hot path) and the dense
+        // params (frozen entries are shared across steps).
         let snap_span = tele.span(Stage::Snapshot);
         let rows = Arc::new(RowCache::build(&batch, self.estore, self.emb_params));
         let dense: Arc<Vec<Arc<Vec<f32>>>> = Arc::new(
@@ -239,6 +276,7 @@ impl StepExec<'_> {
             tele.queue_inc(Queue::Task);
             self.task_tx
                 .send(ChunkTask {
+                    step,
                     chunks: c0..hi,
                     batch: Arc::clone(&batch),
                     rows: Arc::clone(&rows),
@@ -250,12 +288,29 @@ impl StepExec<'_> {
                 .context("gradient workers terminated early")?;
             c0 = hi;
         }
-        let outs = tele.time(Stage::Collect, || {
-            collect_step(self.rm, self.n_chunks, self.res_rx, self.workers_down)
+        self.inflight.push_back(InflightStep { step, batch, epoch });
+        Ok(())
+    }
+
+    /// Collect the oldest in-flight step's chunks, assemble the gradient
+    /// bundle, and apply its DP update — serially, on this thread, so the
+    /// chunk merge order and the noise stream are identical at any
+    /// staleness window.
+    fn collect_apply(&mut self, state: &mut StepState) -> Result<()> {
+        let inflight = self
+            .inflight
+            .pop_front()
+            .expect("collect_apply called with nothing in flight");
+        let tele = Arc::clone(&state.tele);
+        let (rm, res_rx, early, workers_down) =
+            (self.rm, self.res_rx, &mut self.early, self.workers_down);
+        let (step, n_chunks) = (inflight.step, self.n_chunks);
+        let outs = tele.time(Stage::Collect, move || {
+            collect_step(rm, step, n_chunks, res_rx, early, workers_down)
         })?;
         let need_counts = state.cfg.algorithm.uses_contribution_map();
         let assemble_span = tele.span(Stage::Assemble);
-        let bundle = match batch.as_ref() {
+        let bundle = match inflight.batch.as_ref() {
             Batch::Pctr(pb) => {
                 step::assemble_pctr(self.plan, &outs, &state.emb_tables, pb, need_counts)?
             }
@@ -269,35 +324,90 @@ impl StepExec<'_> {
             )?,
         };
         drop(assemble_span);
+        // snapshot age of the update being applied; always 0 at k = 0
+        tele.set_staleness(inflight.step - inflight.epoch);
         let mut sink = self.estore;
         state.apply_update(bundle, &mut sink)?;
+        self.estore.bump_epoch();
+        Ok(())
+    }
+
+    /// Push one logical batch through: dispatch step `step`, then collect
+    /// until at most `staleness` steps remain in flight.  At the default
+    /// `staleness = 0` this is dispatch-then-collect — the fully serial,
+    /// bit-exact barrier.
+    fn run_step(&mut self, state: &mut StepState, step: u64, batch: Batch) -> Result<()> {
+        self.dispatch(state, step, batch)?;
+        while self.inflight.len() > self.staleness {
+            self.collect_apply(state)?;
+        }
+        Ok(())
+    }
+
+    /// Collect and apply every step still in flight — at the end of
+    /// training, and before any streaming reselection boundary (no step's
+    /// update may cross one).
+    fn drain(&mut self, state: &mut StepState) -> Result<()> {
+        while !self.inflight.is_empty() {
+            self.collect_apply(state)?;
+        }
         Ok(())
     }
 }
 
-/// [`StreamDriver`] over the engine internals: step `t`'s batch (and its
-/// pre-aggregated frequency counts) comes from the reordered data-worker
-/// stream, the update goes through the shared [`StepExec`], and DP-FEST
-/// reselection mutates the barrier's [`StepState`] exactly where the sync
-/// path would.
+/// [`StreamDriver`] over the engine internals: warmup/sniff prior batches
+/// and step `t`'s training batch (with its pre-aggregated frequency
+/// counts) all come from the reordered data-worker stream, the update goes
+/// through the shared [`StepExec`], and DP-FEST reselection mutates the
+/// barrier's [`StepState`] exactly where the sync path would — after
+/// draining the staleness window, so no step's update crosses a
+/// reselection boundary.
 struct EngineDriver<'a, 'b> {
     stream: BatchStream,
-    exec: &'a StepExec<'b>,
+    exec: &'a mut StepExec<'b>,
     state: &'a mut StepState,
+    /// prior-pass batches prepended to the data-worker sequence
+    /// ([`PriorPass::num_batches`]); training step `t` rides sequence key
+    /// `prior_batches + t`
+    prior_batches: u64,
     /// [`StreamSchedule::needs_stream_counts`] — matches the data workers'
     /// [`DataPlan::with_counts`], so counts are shipped iff they are read
     count_batches: bool,
 }
 
 impl StreamDriver for EngineDriver<'_, '_> {
+    fn observe_prior(
+        &mut self,
+        index: u64,
+        _day: usize,
+        tracker: &mut FrequencyTracker,
+    ) -> Result<()> {
+        // The data workers generated this warmup/sniff batch (sequence key
+        // `index`, day resolved worker-side via `PriorPass::day_of`) and
+        // always ship counts with it; integer count sums commute, so
+        // merging here is bit-identical to the sync trainer observing the
+        // batch itself.
+        let msg = self.stream.next(index)?;
+        let counts = msg
+            .counts
+            .context("data workers shipped no counts with a prior batch")?;
+        for (f, pairs) in counts.iter().enumerate() {
+            tracker.merge_counts(f, pairs);
+        }
+        Ok(())
+    }
+
     fn train_step(
         &mut self,
         step: u64,
         _day: usize,
         tracker: &mut FrequencyTracker,
     ) -> Result<()> {
-        let msg = self.stream.next(step)?;
+        let msg = self.stream.next(self.prior_batches + step)?;
         if self.count_batches {
+            // merged at dispatch time, in step order — identical tracker
+            // contents at every publish boundary because `select` drains
+            // the staleness window before reading them
             let counts = msg
                 .counts
                 .context("data workers shipped no frequency counts in streaming mode")?;
@@ -305,10 +415,15 @@ impl StreamDriver for EngineDriver<'_, '_> {
                 tracker.merge_counts(f, pairs);
             }
         }
-        self.exec.run_step(self.state, msg.batch)
+        self.exec.run_step(self.state, step, msg.batch)
     }
 
     fn select(&mut self, feature_counts: &[Vec<f64>], epsilon: f64) -> Result<()> {
+        // Drain the staleness window first: reselection mutates the
+        // selection state, so no in-flight step's update may cross the
+        // boundary — this also keeps the Gumbel draws in their sync stream
+        // position relative to the noise draws.
+        self.exec.drain(self.state)?;
         self.state.fest_select_with_eps(feature_counts, epsilon)
     }
 }
@@ -411,10 +526,10 @@ fn run_with(
 
     let emb_params: Vec<usize> = state.emb_tables.iter().map(|t| t.param_index).collect();
     let ecfg = state.cfg.engine;
-    // Throughput-only, like every engine knob: kernel threading partitions
-    // output tiles across threads without splitting any accumulation chain,
-    // so the run stays bit-identical at any setting (tests/kernels.rs,
-    // tests/engine.rs).
+    // Throughput-only, like every engine knob except `staleness`: kernel
+    // threading partitions output tiles across threads without splitting
+    // any accumulation chain, so the run stays bit-identical at any
+    // setting (tests/kernels.rs, tests/engine.rs).
     crate::kernels::set_threads(ecfg.kernel_threads);
     let estore = ShardedStore::from_store(store, &emb_params, ecfg.shards.max(1))?;
 
@@ -428,6 +543,7 @@ fn run_with(
         steps,
         steps_per_day: streaming.as_ref().map(|(s, _)| s.steps_per_day),
         with_counts: streaming.as_ref().is_some_and(|(s, _)| s.needs_stream_counts()),
+        prior: streaming.as_ref().map_or(PriorPass::None, |(s, _)| s.prior_pass()),
     };
 
     // Frozen dense params (the NLU transformer backbone) never receive
@@ -488,7 +604,7 @@ fn run_with(
 
         // ---- the aggregation loop (this thread) ----
         let run_loop = |state: &mut StepState| -> Result<Option<usize>> {
-            let exec = StepExec {
+            let mut exec = StepExec {
                 rm: &rm,
                 estore: &estore,
                 emb_params: &emb_params,
@@ -504,31 +620,39 @@ fn run_with(
                 c1,
                 c2,
                 seq_len,
+                staleness: ecfg.staleness,
+                inflight: VecDeque::new(),
+                early: BTreeMap::new(),
             };
             let mut stream = BatchStream::with_telemetry(batch_rx, Arc::clone(&tele));
             match &streaming {
                 None => {
                     for t in 0..steps {
                         let msg = stream.next(t)?;
-                        exec.run_step(state, msg.batch)?;
+                        exec.run_step(state, t, msg.batch)?;
                     }
+                    exec.drain(state)?;
                     Ok(None)
                 }
-                Some((sched, gcfg)) => {
-                    // barrier-side generator: warmup passes and the
-                    // cold-start sniff (training batches come from the
-                    // data workers)
-                    let gen = SynthCriteo::new(gcfg.clone());
+                Some((sched, _)) => {
+                    // Warmup/sniff prior batches come from the data workers
+                    // too (sequence keys 0..prior_batches, ahead of the
+                    // training steps), so the pre-passes overlap pipeline
+                    // fill instead of stalling the barrier.
                     let vocabs: Vec<usize> =
                         state.emb_tables.iter().map(|t| t.vocab).collect();
                     let mut tracker = FrequencyTracker::new(vocabs.len(), sched.source);
-                    let mut driver = EngineDriver {
-                        stream,
-                        exec: &exec,
-                        state,
-                        count_batches: sched.needs_stream_counts(),
+                    let n = {
+                        let mut driver = EngineDriver {
+                            stream,
+                            exec: &mut exec,
+                            state: &mut *state,
+                            prior_batches: sched.prior_pass().num_batches(),
+                            count_batches: sched.needs_stream_counts(),
+                        };
+                        sched.run_days(&mut tracker, &vocabs, &mut driver)?
                     };
-                    let n = sched.run_days(&gen, &mut tracker, &vocabs, &mut driver)?;
+                    exec.drain(state)?;
                     Ok(Some(n))
                 }
             }
@@ -634,6 +758,8 @@ pub fn compare_throughput(
     for &workers in worker_counts {
         let mut c = cfg.clone();
         c.engine.grad_workers = workers;
+        // the loss-equality gate below requires the bit-exact window
+        c.engine.staleness = 0;
         let out = run_pctr(&c, rt, gen_cfg.clone())?;
         let secs = out.telemetry.wall_secs;
         if out.loss_history != sync_out.loss_history {

@@ -1,21 +1,26 @@
 //! Worker side of the async engine: pipelined data loaders and per-example
 //! gradient workers, generic over both workloads (pCTR and NLU).
 //!
-//! * **Data workers** claim step indices off a shared atomic counter and
-//!   generate that step's batch from its self-contained RNG
-//!   ([`step::train_batch_rng`]), sending a [`BatchMsg`] over a bounded
-//!   channel — order across workers is irrelevant, the [`BatchStream`]
-//!   reorders.  Backpressure comes from the channel bound.  In streaming
-//!   mode the [`DataPlan`] maps each step to its simulated day and the
-//!   workers also aggregate the batch's per-feature bucket counts, so the
-//!   barrier can feed its `FrequencyTracker` without re-scanning batches.
+//! * **Data workers** claim sequence indices off a shared atomic counter
+//!   and generate that item's batch from its self-contained RNG, sending a
+//!   [`BatchMsg`] over a bounded channel — order across workers is
+//!   irrelevant, the [`BatchStream`] reorders.  Backpressure comes from the
+//!   channel bound.  The sequence starts with the streaming run's prior
+//!   pass (warmup/sniff batches from `prior_batch_rng`, always shipped with
+//!   their frequency counts), followed by the training steps
+//!   ([`step::train_batch_rng`]).  In streaming mode the [`DataPlan`] maps
+//!   each step to its simulated day and the workers also aggregate the
+//!   batch's per-feature bucket counts, so the barrier can feed its
+//!   `FrequencyTracker` without re-scanning batches.
 //! * **Gradient workers** pull [`ChunkTask`]s (a range of fixed 16-example
-//!   reduction chunks of the current step's batch), compute per-example
-//!   clipped gradients against the step's read-only snapshots — the
-//!   [`RowCache`] of every embedding row the batch touches plus the dense
-//!   parameters — and send `(chunk_index, ChunkGrads)` to the aggregation
-//!   barrier.  The chunk math dispatches through [`RefModel`], so the same
-//!   worker body drives the Criteo tower and the transformer.
+//!   reduction chunks of one step's batch), compute per-example clipped
+//!   gradients against that step's read-only snapshots — the [`RowCache`]
+//!   of every embedding row the batch touches plus the dense parameters —
+//!   and send `(step, chunk_index, ChunkGrads)` to the aggregation barrier.
+//!   The step tag is what lets the barrier pipeline up to
+//!   `--engine-staleness` steps concurrently and still merge each step's
+//!   chunks in order.  The chunk math dispatches through [`RefModel`], so
+//!   the same worker body drives the Criteo tower and the transformer.
 //!
 //! Shutdown is purely channel-driven: dropping the task sender ends the
 //! gradient workers, dropping the batch receiver ends the data workers
@@ -32,7 +37,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::coordinator::step;
-use crate::coordinator::streaming;
+use crate::coordinator::streaming::{self, PriorPass};
 use crate::data::{Batch, GenConfig, Generator};
 use crate::runtime::reference::{BatchRef, ChunkGrads, ParamsView, RefModel, REDUCE_CHUNK};
 use crate::telemetry::{Queue, Stage, Telemetry};
@@ -55,12 +60,19 @@ pub struct DataPlan {
     /// aggregate per-feature bucket counts for every batch (streaming mode —
     /// they feed the barrier's `FrequencyTracker` at period boundaries)
     pub with_counts: bool,
+    /// warmup / cold-start prior batches produced *before* the training
+    /// stream (streaming mode; [`PriorPass::None`] elsewhere).  Prior
+    /// batches always ship their frequency counts — counting them is their
+    /// entire purpose
+    pub prior: PriorPass,
 }
 
-/// One data-worker message: step `step`'s batch, plus its per-feature
-/// `(bucket, count)` pairs when the [`DataPlan`] asks for them.
+/// One data-worker message: one batch of the run's reordered sequence, plus
+/// its per-feature `(bucket, count)` pairs when the [`DataPlan`] asks for
+/// them.  Sequence keys: prior batch `i` is key `i`, training step `t` is
+/// key `prior.num_batches() + t`.
 pub struct BatchMsg {
-    /// which training step this batch belongs to
+    /// sequence key of this batch in the reordered stream
     pub step: u64,
     /// the generated batch
     pub batch: Batch,
@@ -68,8 +80,13 @@ pub struct BatchMsg {
     pub counts: Option<Vec<Vec<(u32, u32)>>>,
 }
 
-/// One unit of gradient work: reduction chunks `chunks` of the step's batch.
+/// One unit of gradient work: reduction chunks `chunks` of step `step`'s
+/// batch.
 pub struct ChunkTask {
+    /// which training step the chunks belong to — echoed back with every
+    /// result so the barrier can keep several steps in flight
+    /// (`--engine-staleness`) and still collect each one in chunk order
+    pub step: u64,
     /// which fixed 16-example reduction chunks of the batch to compute
     pub chunks: Range<usize>,
     /// the step's batch (shared across the step's tasks)
@@ -182,19 +199,28 @@ pub fn data_worker(
     tele: &Telemetry,
 ) {
     let gen = Generator::new(gen_cfg);
+    let n_prior = plan.prior.num_batches();
     loop {
-        let step_idx = next_step.fetch_add(1, Ordering::Relaxed);
-        if step_idx >= plan.steps {
+        let seq = next_step.fetch_add(1, Ordering::Relaxed);
+        if seq >= n_prior + plan.steps {
             return;
         }
-        let day = match plan.steps_per_day {
-            Some(spd) => streaming::day_of_step(spd, step_idx),
-            None => 0,
+        // The first `n_prior` sequence items are the streaming run's prior
+        // pass (warmup / cold-start sniff) from its own tagged RNG stream;
+        // training step `t` rides at sequence key `n_prior + t`.
+        let (day, mut rng, is_prior) = if seq < n_prior {
+            (plan.prior.day_of(seq), streaming::prior_batch_rng(plan.seed, seq), true)
+        } else {
+            let step_idx = seq - n_prior;
+            let day = match plan.steps_per_day {
+                Some(spd) => streaming::day_of_step(spd, step_idx),
+                None => 0,
+            };
+            (day, step::train_batch_rng(plan.seed, step_idx), false)
         };
-        let mut rng = step::train_batch_rng(plan.seed, step_idx);
         let gen_span = tele.span(Stage::DataGenerate);
         let batch = gen.batch(day, plan.batch_size, &mut rng);
-        let counts = match (&batch, plan.with_counts) {
+        let counts = match (&batch, is_prior || plan.with_counts) {
             (Batch::Pctr(pb), true) => Some(streaming::pctr_batch_counts(pb)),
             _ => None,
         };
@@ -204,7 +230,7 @@ pub fn data_worker(
         // depth pinned at `channel_depth + data_workers`
         tele.queue_inc(Queue::Batch);
         let _span = tele.span(Stage::DataSend);
-        if tx.send(BatchMsg { step: step_idx, batch, counts }).is_err() {
+        if tx.send(BatchMsg { step: seq, batch, counts }).is_err() {
             return; // aggregator gone — shut down
         }
     }
@@ -214,7 +240,7 @@ pub fn data_worker(
 pub fn grad_worker(
     model: &RefModel,
     tasks: &Mutex<Receiver<ChunkTask>>,
-    results: &Sender<(usize, ChunkGrads)>,
+    results: &Sender<(u64, usize, ChunkGrads)>,
     tele: &Telemetry,
 ) {
     loop {
@@ -234,7 +260,7 @@ pub fn grad_worker(
             let out = tele.time(Stage::ChunkCompute, || {
                 model.grads_chunk(&view, &batch, lo, hi, task.c1, task.c2)
             });
-            if results.send((chunk, out)).is_err() {
+            if results.send((task.step, chunk, out)).is_err() {
                 return;
             }
         }

@@ -9,6 +9,7 @@
 //! how the scheduler interleaves shard locks; `tests/engine.rs` checks this
 //! under the in-repo property harness.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -201,6 +202,12 @@ pub struct ShardedStore {
     model_name: String,
     kind: String,
     slots: Vec<ParamSlot>,
+    /// Snapshot version: how many optimizer steps have been applied to the
+    /// store.  The aggregation barrier bumps it once per applied step, and
+    /// tags each step's read-only snapshot with the epoch it was taken at,
+    /// so the bounded-staleness pipeline can report *exactly* how stale the
+    /// parameters a step computed against were (`docs/CONCURRENCY.md`).
+    epoch: AtomicU64,
 }
 
 impl ShardedStore {
@@ -238,7 +245,20 @@ impl ShardedStore {
             };
             slots.push(ParamSlot { name, trainable, dims, body });
         }
-        Ok(ShardedStore { model_name, kind, slots })
+        Ok(ShardedStore { model_name, kind, slots, epoch: AtomicU64::new(0) })
+    }
+
+    /// The store's snapshot version — the number of optimizer steps applied
+    /// so far.  A snapshot taken at epoch `e` and consumed by step `t` is
+    /// `t − e` steps stale (0 at the default `--engine-staleness 0`).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Advance the snapshot version by one applied step (called by the
+    /// aggregation barrier after every `apply_update`).
+    pub fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::Release);
     }
 
     /// Number of parameter slots (same indexing as the source store).

@@ -31,8 +31,11 @@
 //! * [`engine`] — the asynchronous sharded engine: pipelined data workers →
 //!   per-example gradient workers → a DP aggregation barrier that draws all
 //!   noise once per logical batch.  Bit-for-bit equivalent to the sync path
-//!   at any worker count (`sparse-dp-emb train-async`); `docs/ENGINE.md`
-//!   is the architecture reference.
+//!   at any worker count at the default `--engine-staleness 0`, with an
+//!   opt-in bounded-staleness window for more pipelining at the same
+//!   privacy accounting (`sparse-dp-emb train-async`); `docs/ENGINE.md` is
+//!   the architecture reference and `docs/CONCURRENCY.md` the exactness
+//!   and staleness story.
 //!
 //! Both paths are instrumented by a passive [`telemetry`] subsystem —
 //! per-stage span timers, channel queue-depth gauges, and per-step

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! sparse-dp-emb train       [--model criteo-small] [--algorithm dp-adafest] [--epsilon 1.0] ...
-//! sparse-dp-emb train-async [--engine-workers 4] [--engine-shards 16] ...   # pipelined engine
+//! sparse-dp-emb train-async [--engine-workers 4] [--engine-shards 16] [--engine-staleness 0] ...   # pipelined engine
 //! sparse-dp-emb train-async --stream [--freq-source streaming] [--streaming-period 1] ...
 //! sparse-dp-emb stream      [--streaming-period 1] [--freq-source streaming] ...
 //! sparse-dp-emb sweep       <fig1b|fig3|fig4|fig5[-async]|fig6[-async]|fig7|fig8|fig9|tab1|tab2|tab4|tab5[-async]|tab6|lemma31> [--fast]
@@ -16,7 +16,9 @@
 //! Both commands execute on the blocked-kernel native executors
 //! (`rust/src/kernels/`); `--engine-kernel-threads N` additionally fans
 //! large kernel calls' output tiles across `N` threads (bit-exact at any
-//! setting, like every engine knob).
+//! setting, like every engine knob except `--engine-staleness`, which at
+//! `k > 0` opts into bounded-staleness pipelining — same privacy
+//! accounting, no longer bit-identical; see `docs/CONCURRENCY.md`).
 //! Both commands drive either model family: the built-in reference manifest
 //! covers `criteo-small`/`criteo-tiny` (pCTR) and `nlu-small`/`nlu-tiny`
 //! (native transformer) plus their LoRA-on-embedding variants
@@ -135,13 +137,14 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
 fn cmd_train_async(cfg: &RunConfig, stream: bool) -> Result<()> {
     let rt = Runtime::new(&cfg.artifacts_dir)?;
     println!(
-        "[train-async] platform={} {} workers={} data={} shards={} depth={}",
+        "[train-async] platform={} {} workers={} data={} shards={} depth={} staleness={}",
         rt.platform(),
         cfg.summary(),
         cfg.engine.grad_workers,
         cfg.engine.data_workers,
         cfg.engine.shards,
         cfg.engine.channel_depth,
+        cfg.engine.staleness,
     );
     if stream {
         // the async twin of `stream`: same drift generator, same seed
@@ -293,6 +296,9 @@ fn report(outcome: &sparse_dp_emb::coordinator::TrainOutcome, rt: &Runtime) {
             "queue max depth: batch={} task={}",
             t.batch_queue_max, t.task_queue_max
         );
+    }
+    if t.max_staleness > 0 {
+        println!("max snapshot staleness: {} steps", t.max_staleness);
     }
     for s in &t.stages {
         println!(

@@ -162,6 +162,10 @@ pub struct Telemetry {
     stages: [StageCell; Stage::COUNT],
     batch_queue: QueueGauge,
     task_queue: QueueGauge,
+    /// snapshot age (in applied steps) of the update most recently applied —
+    /// the engine's `--engine-staleness` gauge; stays 0 on the sync path
+    staleness: AtomicU64,
+    staleness_max: AtomicU64,
     records: AtomicU64,
     started: Instant,
     sink: Mutex<SinkState>,
@@ -180,6 +184,8 @@ impl Telemetry {
             stages: std::array::from_fn(|_| StageCell::default()),
             batch_queue: QueueGauge::default(),
             task_queue: QueueGauge::default(),
+            staleness: AtomicU64::new(0),
+            staleness_max: AtomicU64::new(0),
             records: AtomicU64::new(0),
             started: Instant::now(),
             sink: Mutex::new(SinkState {
@@ -262,6 +268,24 @@ impl Telemetry {
         self.gauge(q).max()
     }
 
+    /// Set the snapshot-age gauge: how many optimizer steps stale the
+    /// parameters were that the update being applied was computed against
+    /// (0 everywhere except the engine at `--engine-staleness > 0`).
+    pub fn set_staleness(&self, steps: u64) {
+        self.staleness.store(steps, Ordering::Relaxed);
+        self.staleness_max.fetch_max(steps, Ordering::Relaxed);
+    }
+
+    /// Current value of the snapshot-age gauge.
+    pub fn staleness(&self) -> u64 {
+        self.staleness.load(Ordering::Relaxed)
+    }
+
+    /// High-water snapshot age over the run so far.
+    pub fn staleness_max(&self) -> u64 {
+        self.staleness_max.load(Ordering::Relaxed)
+    }
+
     /// Number of step records emitted so far.
     pub fn records(&self) -> u64 {
         self.records.load(Ordering::Relaxed)
@@ -329,6 +353,7 @@ impl Telemetry {
                 "task_queue".into(),
                 Json::num(self.queue_depth(Queue::Task) as f64),
             ),
+            ("staleness".into(), Json::num(rec.staleness as f64)),
             ("stages".into(), Json::Obj(stages)),
         ]);
         writeln!(w, "{line}").context("writing metrics step record")?;
@@ -343,6 +368,7 @@ impl Telemetry {
             wall_secs: self.wall_secs(),
             batch_queue_max: self.queue_max(Queue::Batch),
             task_queue_max: self.queue_max(Queue::Task),
+            max_staleness: self.staleness_max(),
             eps_spent,
             delta,
             stages: Stage::ALL
@@ -423,6 +449,10 @@ pub struct StepRecord {
     pub eps_spent: f64,
     /// The δ at which `eps_spent` is stated.
     pub delta: f64,
+    /// Snapshot age (applied steps) of the parameters this step's gradients
+    /// were computed against — 0 on the sync path and at the engine's
+    /// default `--engine-staleness 0`.
+    pub staleness: u64,
 }
 
 /// Per-stage accumulated totals inside a [`RunSummary`].
@@ -448,6 +478,9 @@ pub struct RunSummary {
     pub batch_queue_max: u64,
     /// High-water depth of the chunk-task channel (0 for the sync trainer).
     pub task_queue_max: u64,
+    /// High-water snapshot age over the run — bounded by the engine's
+    /// `--engine-staleness` window, 0 everywhere else.
+    pub max_staleness: u64,
     /// Cumulative privacy ε spent over the run (closed-form bound).
     pub eps_spent: f64,
     /// The δ at which `eps_spent` is stated.
@@ -476,6 +509,10 @@ impl RunSummary {
                 "task_queue_max".into(),
                 Json::num(self.task_queue_max as f64),
             ),
+            (
+                "max_staleness".into(),
+                Json::num(self.max_staleness as f64),
+            ),
             ("eps_spent".into(), Json::num(self.eps_spent)),
             ("delta".into(), Json::num(self.delta)),
             (
@@ -500,7 +537,9 @@ impl RunSummary {
 }
 
 /// Current `BENCH_*.json` schema version; bump on any breaking field change.
-pub const BENCH_SCHEMA_VERSION: u64 = 1;
+/// (v2 added the per-row `staleness` field for the `--engine-staleness`
+/// sweep.)
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
 
 /// One sync/async throughput row inside a [`BenchSnapshot`].
 #[derive(Clone, Debug, PartialEq)]
@@ -509,6 +548,9 @@ pub struct BenchRow {
     pub path: String,
     /// Gradient workers used (1 for the sync path).
     pub grad_workers: u64,
+    /// `--engine-staleness` window the row ran with (0 for the sync path
+    /// and the bit-exact async rows).
+    pub staleness: u64,
     /// Wall seconds for the timed run.
     pub secs: f64,
     /// Optimizer steps per second.
@@ -564,6 +606,7 @@ impl BenchSnapshot {
                                     "grad_workers".into(),
                                     Json::num(r.grad_workers as f64),
                                 ),
+                                ("staleness".into(), Json::num(r.staleness as f64)),
                                 ("secs".into(), Json::num(r.secs)),
                                 ("steps_per_sec".into(), Json::num(r.steps_per_sec)),
                                 ("speedup".into(), Json::num(r.speedup)),
@@ -621,6 +664,7 @@ impl BenchSnapshot {
                     .context("row field `path` is not a string")?
                     .to_string(),
                 grad_workers: u64_field(row, "grad_workers")?,
+                staleness: u64_field(row, "staleness")?,
                 secs: f64_field(row, "secs")?,
                 steps_per_sec: f64_field(row, "steps_per_sec")?,
                 speedup: f64_field(row, "speedup")?,
@@ -684,7 +728,19 @@ mod tests {
             reduction_factor: 1.0e6,
             eps_spent: 0.25,
             delta: 1e-6,
+            staleness: 0,
         }
+    }
+
+    #[test]
+    fn staleness_gauge_tracks_current_and_high_water() {
+        let tele = Telemetry::new();
+        assert_eq!(tele.staleness(), 0);
+        tele.set_staleness(2);
+        tele.set_staleness(1);
+        assert_eq!(tele.staleness(), 1);
+        assert_eq!(tele.staleness_max(), 2);
+        assert_eq!(tele.summary(0.0, 0.0).max_staleness, 2);
     }
 
     #[test]
@@ -721,6 +777,7 @@ mod tests {
         assert_eq!(lines[0].get("type").unwrap().as_str(), Some("step"));
         assert_eq!(lines[0].get("step").unwrap().as_u64(), Some(1));
         assert_eq!(lines[0].get("loss").unwrap().as_f64(), Some(0.5));
+        assert_eq!(lines[0].get("staleness").unwrap().as_u64(), Some(0));
         // first record carries the first 500ns; second only the 700ns delta
         let sel = |l: &Json| {
             l.get("stages")
@@ -783,6 +840,7 @@ mod tests {
                 BenchRow {
                     path: "sync".into(),
                     grad_workers: 1,
+                    staleness: 0,
                     secs: 12.5,
                     steps_per_sec: 4.8,
                     speedup: 1.0,
@@ -790,9 +848,18 @@ mod tests {
                 BenchRow {
                     path: "async".into(),
                     grad_workers: 4,
+                    staleness: 0,
                     secs: 4.25,
                     steps_per_sec: 14.1,
                     speedup: 2.94,
+                },
+                BenchRow {
+                    path: "async".into(),
+                    grad_workers: 4,
+                    staleness: 2,
+                    secs: 3.4,
+                    steps_per_sec: 17.6,
+                    speedup: 3.67,
                 },
             ],
         }

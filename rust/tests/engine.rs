@@ -8,7 +8,11 @@
 //!   consume the identical RNG stream and produce identical parameters);
 //! * sharded-store concurrent-update correctness under the in-repo property
 //!   harness;
-//! * channel shutdown / no-deadlock at degenerate configurations.
+//! * channel shutdown / no-deadlock at degenerate configurations;
+//! * the `--engine-staleness` window: `k = 0` bit-identical through the
+//!   versioned-snapshot dispatch path (outcomes AND final params), `k > 0`
+//!   terminating with observed staleness exactly `min(k, steps − 1)` and
+//!   loss still descending (`docs/CONCURRENCY.md`).
 
 use sparse_dp_emb::config::RunConfig;
 use sparse_dp_emb::coordinator::step::{GradBundle, StepState};
@@ -452,6 +456,112 @@ fn engine_rejects_mismatched_generator_geometry() {
     let pctr = tiny_cfg(Algorithm::NonPrivate);
     let wrong_features = CriteoConfig::new(vec![8, 8], 1); // criteo-tiny has 4
     assert!(engine::run_pctr(&pctr, &rt, wrong_features).is_err());
+}
+
+// ---- bounded staleness (`--engine-staleness`) ----
+
+#[test]
+fn staleness_zero_is_bit_identical_on_outcomes_and_params() {
+    // The tentpole's k = 0 acceptance bar: the explicit default window must
+    // reproduce the sync trainer bit for bit through the versioned-snapshot
+    // dispatch path — outcomes AND final parameters — on both the pCTR
+    // tower and a Table-1 LoRA rank model, at non-default worker settings.
+    let rt = Runtime::builtin();
+
+    let mut cfg = tiny_cfg(Algorithm::DpAdaFest);
+    cfg.engine.staleness = 0;
+    cfg.engine.grad_workers = 3;
+    cfg.engine.data_workers = 2;
+    cfg.engine.shards = 7;
+    let gen = SynthCriteo::new(gen_cfg(&rt, &cfg));
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let sync_out = trainer.run_pctr(&gen).unwrap();
+    let (async_out, async_store) = engine::run_with_params(&cfg, &rt).unwrap();
+    assert_outcomes_identical(&sync_out, &async_out, "staleness 0 pctr");
+    assert_eq!(async_out.telemetry.max_staleness, 0, "k=0 must never observe staleness");
+    for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
+        assert_eq!(
+            pa.tensor.as_f32().unwrap(),
+            pb.tensor.as_f32().unwrap(),
+            "staleness 0 pctr: param {} diverged",
+            pa.name
+        );
+    }
+
+    let mut cfg = tiny_nlu_cfg(Algorithm::DpAdaFest);
+    cfg.model = "nlu-tiny-lora4".into();
+    cfg.engine.staleness = 0;
+    cfg.engine.grad_workers = 4;
+    cfg.engine.shards = 16;
+    let gen = SynthText::new(text_cfg(&rt, &cfg));
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let sync_out = trainer.run_text(&gen).unwrap();
+    let (async_out, async_store) = engine::run_with_params(&cfg, &rt).unwrap();
+    assert_outcomes_identical(&sync_out, &async_out, "staleness 0 lora4");
+    assert_eq!(async_out.telemetry.max_staleness, 0, "k=0 must never observe staleness");
+    for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
+        assert_eq!(
+            pa.tensor.as_f32().unwrap(),
+            pb.tensor.as_f32().unwrap(),
+            "staleness 0 lora4: param {} diverged",
+            pa.name
+        );
+    }
+}
+
+#[test]
+fn staleness_window_bounds_observed_staleness_and_still_learns() {
+    // k > 0 relaxes bit-exactness but the pipeline must stay correct: the
+    // run terminates, losses are finite, and the high-water snapshot age is
+    // exactly min(k, steps − 1).  That value is deterministic, not a race:
+    // the barrier drains to exactly k in-flight steps after every dispatch
+    // regardless of worker speed, so step t is applied at age min(t, k).
+    // NonPrivate SGD must also still descend on stale gradients.
+    let rt = Runtime::builtin();
+    let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+    cfg.steps = 24;
+    cfg.engine.staleness = 2;
+    cfg.engine.grad_workers = 4;
+    let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
+    assert_eq!(out.loss_history.len(), 24);
+    assert!(out.loss_history.iter().all(|l| l.is_finite()));
+    assert_eq!(out.telemetry.max_staleness, 2);
+    let (first, second) = out.loss_history.split_at(12);
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    assert!(
+        mean(second) < mean(first),
+        "loss did not go downhill under staleness: {:?}",
+        out.loss_history
+    );
+
+    // a window larger than the run clamps at steps − 1 (every later step
+    // reads the initial parameters; nothing is ever collected before drain)
+    let mut cfg = tiny_cfg(Algorithm::DpAdaFest);
+    cfg.steps = 3;
+    cfg.engine.staleness = 16;
+    let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
+    assert_eq!(out.loss_history.len(), 3);
+    assert!(out.loss_history.iter().all(|l| l.is_finite()));
+    assert_eq!(out.telemetry.max_staleness, 2);
+}
+
+#[test]
+fn streaming_with_staleness_window_runs_and_bounds_staleness() {
+    // k > 0 on the §4.3 protocol: periods and reselections are schedule-
+    // driven and the barrier drains the window at every reselection
+    // boundary, so the reselection count is unchanged and no step's update
+    // crosses a boundary — only the parameters read are stale.
+    let rt = Runtime::builtin();
+    let mut cfg = streaming_cfg(Algorithm::DpFest, FrequencySource::Streaming, 4);
+    cfg.engine.staleness = 2;
+    cfg.engine.grad_workers = 4;
+    let gcfg = gen_cfg(&rt, &cfg).with_drift();
+    let out = engine::run_streaming(&cfg, &rt, gcfg, 2).unwrap();
+    assert_eq!(out.outcome.loss_history.len(), 18);
+    assert!(out.outcome.loss_history.iter().all(|l| l.is_finite()));
+    assert_eq!(out.per_day_auc.len(), 6);
+    assert_eq!(out.reselections, TRAIN_DAYS.div_ceil(4));
+    assert!(out.outcome.telemetry.max_staleness <= 2);
 }
 
 // ---- streaming (§4.3) mode ----

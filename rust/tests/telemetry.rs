@@ -154,6 +154,17 @@ fn sync_and_async_pctr_match_exactly_with_live_sink() {
             "{what}"
         );
         assert_paper_rows_identical(&sync_lines, &async_lines, &what);
+        // both paths run bit-exact here, so every step line reports a
+        // zero snapshot age (the field only rises at --engine-staleness > 0)
+        for line in sync_lines.iter().chain(&async_lines) {
+            if line.get("type").and_then(Json::as_str) == Some("step") {
+                assert_eq!(
+                    line.get("staleness").and_then(Json::as_u64),
+                    Some(0),
+                    "{what}: staleness field"
+                );
+            }
+        }
     }
 }
 
@@ -289,5 +300,7 @@ fn checked_in_bench_snapshot_parses_under_current_schema() {
     for row in &snap.rows {
         assert!(row.path == "sync" || row.path == "async", "{}", row.path);
         assert!(row.secs > 0.0 && row.steps_per_sec > 0.0);
+        // only the async staleness-sweep rows may carry a non-zero window
+        assert!(row.staleness == 0 || row.path == "async");
     }
 }
