@@ -45,6 +45,13 @@ pub struct EngineConfig {
     /// default 0 is today's bit-exact behavior; `docs/CONCURRENCY.md` has
     /// the accounting argument and the decision table for turning it up.
     pub staleness: usize,
+    /// multi-process mode (`--engine-processes`): at ≥ 2, replace the
+    /// worker threads with this many gradient actor *processes* (plus
+    /// `data_workers` data actor processes) talking to the barrier over
+    /// unix-domain sockets; `grad_workers` and `microbatch` are then
+    /// inert.  Throughput/isolation-only — bit-identical to the
+    /// in-process engine and the sync trainer (`docs/ENGINE.md`).
+    pub processes: usize,
 }
 
 impl Default for EngineConfig {
@@ -57,6 +64,7 @@ impl Default for EngineConfig {
             microbatch_chunks: 1,
             kernel_threads: 1,
             staleness: 0,
+            processes: 1,
         }
     }
 }
@@ -203,6 +211,9 @@ impl RunConfig {
             "engine_staleness" => {
                 self.engine.staleness = v.parse().context("engine_staleness")?
             }
+            "engine_processes" => {
+                self.engine.processes = v.parse().context("engine_processes")?
+            }
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -322,6 +333,7 @@ mod tests {
                 "--engine-kernel-threads=4".to_string(),
                 "--engine-staleness".to_string(),
                 "2".to_string(),
+                "--engine-processes=3".to_string(),
             ])
             .unwrap();
         assert_eq!(rest, vec!["train-async"]);
@@ -330,8 +342,10 @@ mod tests {
         assert_eq!(c.engine.microbatch_chunks, 2);
         assert_eq!(c.engine.kernel_threads, 4);
         assert_eq!(c.engine.staleness, 2);
+        assert_eq!(c.engine.processes, 3);
         assert_eq!(c.engine.data_workers, EngineConfig::default().data_workers);
         assert_eq!(EngineConfig::default().staleness, 0);
+        assert_eq!(EngineConfig::default().processes, 1);
     }
 
     #[test]

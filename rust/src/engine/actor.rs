@@ -1,0 +1,945 @@
+//! Multi-process mode for the async engine (`--engine-processes <n>`):
+//! data and gradient **actor processes** talking to the barrier process
+//! over unix-domain sockets, with the wire format in [`super::wire`].
+//!
+//! Topology (an actor-manager split — see `docs/ENGINE.md` for the full
+//! diagram and protocol table):
+//!
+//! * **Data actors** (`engine_data_workers` processes) own a strided slice
+//!   of the batch sequence (`offset, offset + stride, …`) and stream
+//!   `Batch` frames to the barrier; invariant 1 (self-contained batch
+//!   streams) makes the slice assignment irrelevant to the bytes produced.
+//! * **Gradient actors** (`n` processes) each own a **contiguous row
+//!   range** of every embedding table, held as a local `ShardedTable`.
+//!   They rebuild their slice from `ParamStore::init(manifest, seed)` —
+//!   a pure function of the init frame — so no parameter values ride the
+//!   wire at startup.  Per step they receive the batch + row-cache
+//!   snapshot, compute their assigned 16-example chunks, and stream the
+//!   partials back; scatter updates route to them by row range.
+//! * **The barrier** (this process) keeps the full `ParamStore` for the
+//!   dense parameters and the *unchanged* serial assemble → select →
+//!   noise → scatter tail, so (ε, δ) accounting, σ calibration, and the
+//!   FEST reselection protocol are byte-identical to the in-process paths.
+//!
+//! Per grad actor the barrier runs one **reader thread** that demuxes the
+//! actor → barrier direction (chunk results to the aggregation channel,
+//! row fetches and finalize results to per-actor channels) — because the
+//! reader always drains, an actor's writes can never block indefinitely,
+//! which is the no-deadlock argument for the socket protocol.  A reader
+//! that sees EOF without a clean final frame bumps a `down` counter that
+//! the barrier's timeout loops poll, so a killed actor becomes a
+//! bounded-time error instead of a hang (`rust/tests/engine_fault.rs`).
+
+use std::io::BufReader;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::step::ParamSink;
+use crate::data::{Batch, GenConfig, Generator};
+use crate::models::ParamStore;
+use crate::runtime::reference::{BatchRef, ChunkGrads, RefModel, REDUCE_CHUNK};
+use crate::runtime::{HostTensor, Runtime};
+use crate::sparse::{DenseState, Optimizer, OptimizerKind, RowSparseGrad};
+use crate::telemetry::{Queue, Stage, Telemetry};
+
+use super::pipeline::{self, BatchMsg, DataPlan, RowCache, WorkerView};
+use super::sharded_store::ShardedTable;
+use super::wire::{self, Frame, GradInit, StepData, WireFeat};
+
+/// Marks a process as an actor child: `data:<i>` or `grad:<i>`.
+const ENV_ROLE: &str = "SPARSE_DP_EMB_ACTOR";
+/// Filesystem path of the barrier's unix-domain listener.
+const ENV_SOCKET: &str = "SPARSE_DP_EMB_ACTOR_SOCKET";
+/// Fault-injection spec forwarded to children (tests only): `role:i:n`
+/// makes actor `role:i` abort the process after its `n`-th outbound
+/// payload frame.
+const ENV_FAULT: &str = "SPARSE_DP_EMB_ACTOR_FAULT";
+
+/// Exit code of a fault-injected abort (distinguishable from real errors
+/// in test output; nothing depends on the value).
+const FAULT_EXIT: i32 = 42;
+
+static ACTOR_EXE: OnceLock<PathBuf> = OnceLock::new();
+static FAULT: Mutex<Option<String>> = Mutex::new(None);
+
+/// Route actor children through `exe` instead of `current_exe()`.
+///
+/// Integration tests need this: their own executable's `main` is the
+/// libtest harness, which never reaches [`maybe_actor_main`] — so they
+/// point the spawner at the CLI binary (`env!("CARGO_BIN_EXE_...")`),
+/// whose `main` does.  First call wins; later calls are ignored.
+pub fn set_actor_exe(exe: PathBuf) {
+    let _ = ACTOR_EXE.set(exe);
+}
+
+/// Fault injection for tests: `"<role>:<index>:<n>"` makes that actor
+/// process abort (hard `process::exit`, no shutdown protocol) right after
+/// sending its `n`-th payload frame.  Applies to every subsequent
+/// [`ProcEngine`] launch in this process; pass via the child's
+/// environment only — the parent's is never mutated.
+pub fn set_fault(spec: &str) {
+    *FAULT.lock().unwrap() = Some(spec.to_string());
+}
+
+/// Parse this process's fault spec for `role:index`: the number of payload
+/// frames to send before aborting.
+fn fault_after(role: &str, index: u32) -> Option<u64> {
+    let spec = std::env::var(ENV_FAULT).ok()?;
+    let (target, n) = spec.rsplit_once(':')?;
+    if target == format!("{role}:{index}") {
+        n.parse().ok()
+    } else {
+        None
+    }
+}
+
+/// The contiguous row range owner `a` of `owners` holds in a table of
+/// `rows` rows: `[a·per, (a+1)·per)` clamped, with `per = ceil(rows /
+/// owners)`.  Ranges are ascending and disjoint, so concatenating the
+/// owners' slices in index order reassembles the table.
+fn owner_range(rows: usize, owners: usize, a: usize) -> (usize, usize) {
+    let per = rows.div_ceil(owners.max(1)).max(1);
+    ((a * per).min(rows), ((a + 1) * per).min(rows))
+}
+
+/// Which owner's range contains `row`.
+fn owner_of(rows: usize, owners: usize, row: usize) -> usize {
+    let per = rows.div_ceil(owners.max(1)).max(1);
+    (row / per).min(owners - 1)
+}
+
+/// Non-zero `(stage, nanos, count)` totals of an actor-local telemetry hub,
+/// ready to ride a `DataDone` / `FinalizeResult` frame.
+fn stage_totals(tele: &Telemetry) -> Vec<(Stage, u64, u64)> {
+    Stage::ALL
+        .iter()
+        .map(|&s| {
+            let (nanos, count) = tele.stage_total(s);
+            (s, nanos, count)
+        })
+        .filter(|&(_, nanos, count)| nanos > 0 || count > 0)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// actor-process side
+// ---------------------------------------------------------------------------
+
+/// Actor-process entry hook — the CLI binary calls this first thing in
+/// `main`.  When the process was spawned as an actor child (the
+/// `SPARSE_DP_EMB_ACTOR` environment variable is set by the barrier's
+/// spawner) this runs the actor loop and **exits the process**; otherwise
+/// it returns immediately and the CLI proceeds as usual.
+pub fn maybe_actor_main() {
+    let Ok(role) = std::env::var(ENV_ROLE) else { return };
+    let code = match actor_main(&role) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("[actor {role}] error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn actor_main(role: &str) -> Result<()> {
+    let path = std::env::var(ENV_SOCKET).context("actor spawned without a socket path")?;
+    let (kind, index) = role
+        .split_once(':')
+        .and_then(|(k, i)| Some((k, i.parse::<u32>().ok()?)))
+        .with_context(|| format!("malformed actor role {role:?}"))?;
+    let sock = UnixStream::connect(&path)
+        .with_context(|| format!("connecting to the barrier socket {path}"))?;
+    let reader = BufReader::new(sock.try_clone().context("cloning the actor socket")?);
+    let mut w = sock;
+    let role_tag = match kind {
+        "data" => 0,
+        "grad" => 1,
+        _ => bail!("unknown actor kind {kind:?}"),
+    };
+    wire::write_frame(&mut w, &Frame::Hello { role: role_tag, index })?;
+    match kind {
+        "data" => data_actor(reader, w, index),
+        _ => grad_actor(reader, w, index),
+    }
+}
+
+/// Data actor body: generate the strided slice `offset, offset + stride, …`
+/// of the plan's sequence through the same [`pipeline::gen_item`] as the
+/// in-process workers, stream each batch, then report stage totals and
+/// exit.
+fn data_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Result<()> {
+    let Frame::DataInit { gen, plan, stride, offset } = wire::read_frame(&mut r)? else {
+        bail!("expected DataInit");
+    };
+    let gen = Generator::new(gen);
+    let tele = Telemetry::new();
+    let fault = fault_after("data", index);
+    let total = plan.prior.num_batches() + plan.steps;
+    let mut sent = 0u64;
+    let mut seq = offset as u64;
+    while seq < total {
+        let msg = pipeline::gen_item(&gen, &plan, seq, &tele);
+        let _span = tele.span(Stage::DataSend);
+        wire::write_frame(&mut w, &Frame::Batch(msg))?;
+        drop(_span);
+        sent += 1;
+        if fault == Some(sent) {
+            std::process::exit(FAULT_EXIT);
+        }
+        seq += stride.max(1) as u64;
+    }
+    wire::write_frame(&mut w, &Frame::DataDone { stages: stage_totals(&tele) })
+}
+
+/// One embedding-table slice a gradient actor owns: global rows
+/// `[lo, hi)` of parameter `param`, held as a local sharded table.
+struct OwnedTable {
+    param: usize,
+    lo: usize,
+    hi: usize,
+    table: ShardedTable,
+}
+
+impl OwnedTable {
+    /// Map a global (table-level) row id into the owned range.
+    fn local(&self, global: u32) -> Result<usize> {
+        (global as usize)
+            .checked_sub(self.lo)
+            .filter(|&l| l < self.hi - self.lo)
+            .with_context(|| {
+                format!("row {global} outside owned range {}..{} of param {}", self.lo, self.hi,
+                    self.param)
+            })
+    }
+}
+
+/// Gradient actor body: rebuild the owned row ranges from the
+/// deterministic `ParamStore::init`, then serve the barrier's frame loop —
+/// row fetches, step dispatches (chunk gradients), scatter updates, and
+/// the final table hand-back.
+fn grad_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Result<()> {
+    let init = match wire::read_frame(&mut r)? {
+        Frame::GradInit(g) => g,
+        _ => bail!("expected GradInit"),
+    };
+    // The parent resolved its runtime from the same directory: when the
+    // manifest file is absent both sides fall back to the identical
+    // built-in reference manifest (checked here to keep children from
+    // re-printing the fallback notice).
+    let dir = std::path::Path::new(&init.artifacts_dir);
+    let rt = if dir.join("manifest.txt").exists() {
+        Runtime::new(&init.artifacts_dir)?
+    } else {
+        Runtime::builtin()
+    };
+    let model = rt.manifest.model(&init.model)?;
+    let rm = RefModel::from_manifest(model)?;
+    crate::kernels::set_threads(init.kernel_threads as usize);
+    let opt = Optimizer::new(init.opt_kind, init.lr);
+    // Rebuild the full init store locally (deterministic in (manifest,
+    // seed)), slice out this actor's owned row ranges, and keep the dense
+    // parameters as the step snapshot baseline — zero parameter bytes on
+    // the wire.
+    let store = ParamStore::init(model, init.seed)?;
+    let owners = init.n_owners as usize;
+    let mut owned = Vec::with_capacity(init.emb_params.len());
+    for &p in &init.emb_params {
+        let p = p as usize;
+        let t = &store.params[p].tensor;
+        let dims = t.dims();
+        if dims.len() != 2 {
+            bail!("embedding parameter {} is not 2-D", store.params[p].name);
+        }
+        let (rows, dim) = (dims[0], dims[1]);
+        let (lo, hi) = owner_range(rows, owners, index as usize);
+        let values = t.as_f32()?[lo * dim..hi * dim].to_vec();
+        let table = ShardedTable::from_dense(hi - lo, dim, values, init.shards as usize);
+        owned.push(OwnedTable { param: p, lo, hi, table });
+    }
+    let nt = rm.num_tables();
+    let mut dense: Vec<Arc<Vec<f32>>> = (nt..rm.num_params())
+        .map(|i| Ok(Arc::new(store.params[i].tensor.as_f32()?.to_vec())))
+        .collect::<Result<_>>()?;
+    let tele = Telemetry::new();
+    let fault = fault_after("grad", index);
+    let mut sent = 0u64;
+    loop {
+        let frame = match wire::read_frame(&mut r) {
+            Ok(f) => f,
+            // EOF: the barrier dropped the socket (error-path shutdown or
+            // kill) — exit quietly, nothing left to serve.
+            Err(_) => return Ok(()),
+        };
+        match frame {
+            Frame::FetchRows { rows } => {
+                if rows.len() != owned.len() {
+                    bail!("row fetch feature count mismatch");
+                }
+                let mut values = Vec::with_capacity(rows.len());
+                for (o, ids) in owned.iter().zip(&rows) {
+                    let dim = o.table.dim;
+                    let mut out = vec![0f32; ids.len() * dim];
+                    for (k, &gid) in ids.iter().enumerate() {
+                        o.table.read_row(o.local(gid)?, &mut out[k * dim..(k + 1) * dim]);
+                    }
+                    values.push(out);
+                }
+                wire::write_frame(&mut w, &Frame::RowValues { values })?;
+            }
+            Frame::StepData(sd) => {
+                let StepData { step, chunk_lo, chunk_hi, c1, c2, batch, feats, dense: dv } = sd;
+                let cache = RowCache::from_parts(feats);
+                for (idx, values) in dv {
+                    dense[idx as usize - nt] = Arc::new(values);
+                }
+                let view = WorkerView { rows: &cache, dense: dense.as_slice() };
+                let bref = BatchRef::from_batch(&batch);
+                let b = batch.batch_size();
+                for chunk in chunk_lo..chunk_hi {
+                    let lo = chunk as usize * REDUCE_CHUNK;
+                    let hi = (lo + REDUCE_CHUNK).min(b);
+                    let grads = tele.time(Stage::ChunkCompute, || {
+                        rm.grads_chunk(&view, &bref, lo, hi, c1, c2)
+                    });
+                    wire::write_frame(&mut w, &Frame::ChunkResult { step, chunk, grads })?;
+                    sent += 1;
+                    if fault == Some(sent) {
+                        std::process::exit(FAULT_EXIT);
+                    }
+                }
+            }
+            Frame::Scatter { param, rows, values } => {
+                let o = find_owned(&owned, param)?;
+                let dim = o.table.dim;
+                if rows.len() * dim != values.len() {
+                    bail!("scatter geometry mismatch for param {param}");
+                }
+                let mut g = RowSparseGrad::with_capacity(o.hi - o.lo, dim, rows.len());
+                for (k, &gid) in rows.iter().enumerate() {
+                    g.add_row(o.local(gid)? as u32, &values[k * dim..(k + 1) * dim]);
+                }
+                o.table.apply_sparse(&g, &opt);
+            }
+            Frame::DenseScatter { param, values } => {
+                let o = find_owned(&owned, param)?;
+                if values.len() != (o.hi - o.lo) * o.table.dim {
+                    bail!("dense scatter length mismatch for param {param}");
+                }
+                o.table.apply_dense(&values, &opt);
+            }
+            Frame::Finalize => {
+                let tables = std::mem::take(&mut owned)
+                    .into_iter()
+                    .map(|o| {
+                        let (values, accum) = o.table.into_dense();
+                        (o.param as u32, values, accum)
+                    })
+                    .collect();
+                let stages = stage_totals(&tele);
+                return wire::write_frame(&mut w, &Frame::FinalizeResult { tables, stages });
+            }
+            _ => bail!("unexpected frame in the gradient actor loop"),
+        }
+    }
+}
+
+fn find_owned(owned: &[OwnedTable], param: u32) -> Result<&OwnedTable> {
+    owned
+        .iter()
+        .find(|o| o.param == param as usize)
+        .with_context(|| format!("update aimed at parameter {param}, which this actor owns no \
+             slice of"))
+}
+
+// ---------------------------------------------------------------------------
+// barrier side
+// ---------------------------------------------------------------------------
+
+/// Everything [`ProcEngine::launch`] needs to describe the run to its
+/// actors.
+pub(crate) struct ProcSpec<'a> {
+    /// Manifest model name.
+    pub model: &'a str,
+    /// `RunConfig::artifacts_dir` (children resolve the same manifest).
+    pub artifacts_dir: &'a str,
+    /// The run seed.
+    pub seed: u64,
+    /// Optimizer kind (fixed for the run).
+    pub opt_kind: OptimizerKind,
+    /// Learning rate.
+    pub lr: f32,
+    /// Data-generator config for the data actors.
+    pub gen: &'a GenConfig,
+    /// The data plan (sequence length, streaming calendar, priors).
+    pub plan: DataPlan,
+    /// Number of data actor processes.
+    pub n_data: usize,
+    /// Number of gradient actor processes (= row-range owners).
+    pub n_grad: usize,
+    /// Shard count inside each actor's local tables.
+    pub shards: usize,
+    /// Kernel threads inside each gradient actor.
+    pub kernel_threads: usize,
+    /// Parameter indices of the embedding tables, in feature order.
+    pub emb_params: &'a [usize],
+    /// Number of embedding tables (dense params start at this index).
+    pub nt: usize,
+    /// Reduction chunks per step (`ceil(batch / 16)`).
+    pub n_chunks: usize,
+}
+
+/// The spawned children plus their reader threads; dropping kills every
+/// child (orphan-free on success and error paths alike) and joins the
+/// readers (they exit on the resulting EOFs).
+struct ActorSet {
+    children: Vec<Child>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl Drop for ActorSet {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Barrier-side handle to one gradient actor: the write half of its
+/// socket plus the per-actor reply channels its reader thread feeds.
+struct GradPeer {
+    sock: UnixStream,
+    rows_rx: Receiver<Vec<Vec<f32>>>,
+    fin_rx: Receiver<Vec<(u32, Vec<f32>, Vec<f32>)>>,
+}
+
+/// Row-range geometry of one embedding table.
+struct EmbMeta {
+    param: usize,
+    rows: usize,
+    dim: usize,
+}
+
+/// Barrier-side handle to a running multi-process actor fleet — the
+/// multi-process counterpart of the in-process `ShardedStore` + worker
+/// scope.  Owns the children (killed on drop), the full `ParamStore`
+/// (dense half authoritative; embedding values are reassembled from the
+/// actors at [`ProcEngine::into_store`]), and the per-step epoch counter
+/// that the staleness telemetry reads.
+pub(crate) struct ProcEngine {
+    actors: ActorSet,
+    grads: Vec<GradPeer>,
+    emb: Vec<EmbMeta>,
+    store: Mutex<ParamStore>,
+    nt: usize,
+    n_grad: usize,
+    n_chunks: usize,
+    epoch: AtomicU64,
+    data_down: Arc<AtomicUsize>,
+    tele: Arc<Telemetry>,
+}
+
+impl ProcEngine {
+    /// Spawn and connect the actor fleet: bind a private unix socket,
+    /// fork `n_data + n_grad` children of the current executable (or the
+    /// [`set_actor_exe`] override), collect their hellos with a startup
+    /// deadline (a child that dies before connecting is surfaced, not
+    /// waited for), send the init frames, and start one reader thread per
+    /// actor.
+    pub(crate) fn launch(
+        spec: ProcSpec,
+        store: ParamStore,
+        batch_tx: SyncSender<BatchMsg>,
+        res_tx: Sender<(u64, usize, ChunkGrads)>,
+        workers_down: Arc<AtomicUsize>,
+        tele: Arc<Telemetry>,
+    ) -> Result<ProcEngine> {
+        static NEXT_SOCKET: AtomicU64 = AtomicU64::new(0);
+        let tag = NEXT_SOCKET.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("sparse-dp-emb-{}-{tag}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("binding actor socket {}", path.display()))?;
+        listener.set_nonblocking(true).context("unblocking the actor listener")?;
+
+        let exe = match ACTOR_EXE.get() {
+            Some(p) => p.clone(),
+            None => std::env::current_exe().context("resolving the actor executable")?,
+        };
+        let fault = FAULT.lock().unwrap().clone();
+        let mut children = Vec::with_capacity(spec.n_data + spec.n_grad);
+        let mut spawn = |role: &str, idx: usize| -> Result<()> {
+            let mut cmd = Command::new(&exe);
+            cmd.env(ENV_ROLE, format!("{role}:{idx}"))
+                .env(ENV_SOCKET, &path)
+                .stdin(Stdio::null());
+            if let Some(f) = &fault {
+                cmd.env(ENV_FAULT, f);
+            }
+            children.push(cmd.spawn().with_context(|| format!("spawning {role} actor {idx}"))?);
+            Ok(())
+        };
+        for i in 0..spec.n_data {
+            spawn("data", i)?;
+        }
+        for a in 0..spec.n_grad {
+            spawn("grad", a)?;
+        }
+        let mut actors = ActorSet { children, readers: Vec::new() };
+
+        // Collect hellos.  The listener is non-blocking so a child that
+        // dies before connecting turns into an error within the deadline
+        // instead of an accept() hang.
+        let mut data_socks: Vec<Option<UnixStream>> = (0..spec.n_data).map(|_| None).collect();
+        let mut grad_socks: Vec<Option<UnixStream>> = (0..spec.n_grad).map(|_| None).collect();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut connected = 0;
+        while connected < spec.n_data + spec.n_grad {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false).context("blocking an actor socket")?;
+                    s.set_read_timeout(Some(Duration::from_secs(10)))?;
+                    let Frame::Hello { role, index } = wire::read_frame(&mut &s)? else {
+                        bail!("expected Hello from a connecting actor");
+                    };
+                    // the timeout guards the hello only; steady-state sockets
+                    // may legitimately idle (a grad actor between slow steps)
+                    s.set_read_timeout(None)?;
+                    let slot = match role {
+                        0 => data_socks.get_mut(index as usize),
+                        1 => grad_socks.get_mut(index as usize),
+                        r => bail!("unknown actor role {r}"),
+                    };
+                    match slot {
+                        Some(slot @ None) => *slot = Some(s),
+                        Some(_) => bail!("duplicate hello from actor {role}:{index}"),
+                        None => bail!("actor index {index} out of range for role {role}"),
+                    }
+                    connected += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        bail!("timed out waiting for actor processes to connect");
+                    }
+                    for c in &mut actors.children {
+                        if let Some(status) = c.try_wait()? {
+                            bail!("an actor process exited during startup ({status})");
+                        }
+                    }
+                    thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e).context("accepting an actor connection"),
+            }
+        }
+        drop(listener);
+        let _ = std::fs::remove_file(&path);
+
+        let mut emb = Vec::with_capacity(spec.emb_params.len());
+        for &p in spec.emb_params {
+            let dims = store.params[p].tensor.dims();
+            if dims.len() != 2 {
+                bail!("embedding parameter {} is not 2-D", store.params[p].name);
+            }
+            emb.push(EmbMeta { param: p, rows: dims[0], dim: dims[1] });
+        }
+
+        for (i, s) in data_socks.iter().enumerate() {
+            let s = s.as_ref().unwrap();
+            let init = Frame::DataInit {
+                gen: spec.gen.clone(),
+                plan: spec.plan,
+                stride: spec.n_data as u32,
+                offset: i as u32,
+            };
+            wire::write_frame(&mut &*s, &init).context("initializing a data actor")?;
+        }
+        let emb_u32: Vec<u32> = spec.emb_params.iter().map(|&p| p as u32).collect();
+        for (a, s) in grad_socks.iter().enumerate() {
+            let s = s.as_ref().unwrap();
+            let init = Frame::GradInit(GradInit {
+                model: spec.model.to_string(),
+                artifacts_dir: spec.artifacts_dir.to_string(),
+                seed: spec.seed,
+                opt_kind: spec.opt_kind,
+                lr: spec.lr,
+                emb_params: emb_u32.clone(),
+                n_owners: spec.n_grad as u32,
+                owner_index: a as u32,
+                shards: spec.shards as u32,
+                kernel_threads: spec.kernel_threads as u32,
+            });
+            wire::write_frame(&mut &*s, &init).context("initializing a gradient actor")?;
+        }
+
+        // One reader thread per actor — *not* scoped: they must outlive
+        // the worker scope because `into_store` still talks the finalize
+        // protocol afterwards.  They hold only owned Arcs and exit on
+        // socket EOF or channel disconnect, and `ActorSet::drop` joins
+        // them after killing the children.
+        let data_down = Arc::new(AtomicUsize::new(0));
+        for s in data_socks.into_iter().map(Option::unwrap) {
+            let tx = batch_tx.clone();
+            let tl = Arc::clone(&tele);
+            let down = Arc::clone(&data_down);
+            actors.readers.push(thread::spawn(move || data_reader(s, tx, tl, down)));
+        }
+        let mut grads = Vec::with_capacity(spec.n_grad);
+        for s in grad_socks.into_iter().map(Option::unwrap) {
+            let rs = s.try_clone().context("cloning a gradient actor socket")?;
+            let (rows_tx, rows_rx) = mpsc::channel();
+            let (fin_tx, fin_rx) = mpsc::channel();
+            let tx = res_tx.clone();
+            let tl = Arc::clone(&tele);
+            let down = Arc::clone(&workers_down);
+            actors
+                .readers
+                .push(thread::spawn(move || grad_reader(rs, tx, rows_tx, fin_tx, tl, down)));
+            grads.push(GradPeer { sock: s, rows_rx, fin_rx });
+        }
+
+        Ok(ProcEngine {
+            actors,
+            grads,
+            emb,
+            store: Mutex::new(store),
+            nt: spec.nt,
+            n_grad: spec.n_grad,
+            n_chunks: spec.n_chunks,
+            epoch: AtomicU64::new(0),
+            data_down,
+            tele,
+        })
+    }
+
+    /// Count of data actor processes that died mid-sequence — feeds the
+    /// `BatchStream` watchdog.
+    pub(crate) fn data_down(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.data_down)
+    }
+
+    /// Applied-update count (the snapshot-age reference for the staleness
+    /// gauge — same semantics as `ShardedStore::epoch`).
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Note one applied update.
+    pub(crate) fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Whether parameter `index` is trainable.
+    pub(crate) fn is_trainable(&self, index: usize) -> bool {
+        self.store.lock().unwrap().params[index].trainable
+    }
+
+    /// Snapshot of dense parameter `index` (barrier-owned, so a plain
+    /// locked read).
+    pub(crate) fn dense_values(&self, index: usize) -> Vec<f32> {
+        let store = self.store.lock().unwrap();
+        store.params[index].tensor.as_f32().expect("dense parameter is f32").to_vec()
+    }
+
+    /// Build the step's [`RowCache`] by fetching each owner's slice of the
+    /// batch's unique rows.  The per-feature row lists are sorted and the
+    /// owner ranges are contiguous and ascending, so concatenating the
+    /// replies in owner order *is* the sorted global row list — the cache
+    /// is byte-identical to an in-process `RowCache::build`.
+    pub(crate) fn fetch_row_cache(&self, batch: &Batch) -> Result<RowCache> {
+        let uniq = RowCache::unique_rows(batch);
+        for (a, peer) in self.grads.iter().enumerate() {
+            let rows: Vec<Vec<u32>> = uniq
+                .iter()
+                .zip(&self.emb)
+                .map(|(rows, m)| {
+                    let (lo, hi) = owner_range(m.rows, self.n_grad, a);
+                    let s = rows.partition_point(|&r| (r as usize) < lo);
+                    let e = rows.partition_point(|&r| (r as usize) < hi);
+                    rows[s..e].to_vec()
+                })
+                .collect();
+            wire::write_frame(&mut &peer.sock, &Frame::FetchRows { rows })
+                .context("requesting rows from a gradient actor")?;
+        }
+        let mut feats: Vec<WireFeat> = uniq
+            .into_iter()
+            .zip(&self.emb)
+            .map(|(rows, m)| {
+                let values = Vec::with_capacity(rows.len() * m.dim);
+                (rows, values, m.dim)
+            })
+            .collect();
+        for peer in &self.grads {
+            let values = peer
+                .rows_rx
+                .recv()
+                .map_err(|_| anyhow!("a gradient actor process terminated during a row fetch"))?;
+            if values.len() != feats.len() {
+                bail!("row fetch reply feature count mismatch");
+            }
+            for (f, v) in values.into_iter().enumerate() {
+                feats[f].1.extend_from_slice(&v);
+            }
+        }
+        for (rows, values, dim) in &feats {
+            if values.len() != rows.len() * dim {
+                bail!("row fetch reply length mismatch");
+            }
+        }
+        Ok(RowCache::from_parts(feats))
+    }
+
+    /// Dispatch step `step` to the gradient actors: each owner gets the
+    /// batch, the full row-cache snapshot, the trainable dense values, and
+    /// its contiguous block of reduction chunks.
+    pub(crate) fn send_step(
+        &self,
+        step: u64,
+        batch: &Batch,
+        rows: &RowCache,
+        dense: &[Arc<Vec<f32>>],
+        clips: (f32, f32),
+    ) -> Result<()> {
+        let feats: Vec<WireFeat> =
+            rows.parts().map(|(r, v, d)| (r.to_vec(), v.to_vec(), d)).collect();
+        let trainable: Vec<(u32, Vec<f32>)> = {
+            let store = self.store.lock().unwrap();
+            dense
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| store.params[self.nt + j].trainable)
+                .map(|(j, v)| ((self.nt + j) as u32, v.as_ref().clone()))
+                .collect()
+        };
+        for (a, peer) in self.grads.iter().enumerate() {
+            let (lo, hi) = owner_range(self.n_chunks, self.n_grad, a);
+            if lo >= hi {
+                continue;
+            }
+            for _ in lo..hi {
+                self.tele.queue_inc(Queue::Task);
+            }
+            let frame = Frame::StepData(StepData {
+                step,
+                chunk_lo: lo as u32,
+                chunk_hi: hi as u32,
+                c1: clips.0,
+                c2: clips.1,
+                batch: batch.clone(),
+                feats: feats.clone(),
+                dense: trainable.clone(),
+            });
+            wire::write_frame(&mut &peer.sock, &frame)
+                .context("dispatching a step to a gradient actor")?;
+        }
+        Ok(())
+    }
+
+    /// Run the finalize protocol and reassemble the full [`ParamStore`]:
+    /// each gradient actor ships back its owned `(values, accum)` slices,
+    /// which concatenate in owner order into the embedding tables; the
+    /// dense half was barrier-owned all along.
+    pub(crate) fn into_store(self) -> Result<ParamStore> {
+        let ProcEngine { actors, grads, emb, store, n_grad, .. } = self;
+        for peer in &grads {
+            wire::write_frame(&mut &peer.sock, &Frame::Finalize)
+                .context("sending finalize to a gradient actor")?;
+        }
+        let mut store = store.into_inner().unwrap();
+        let mut parts: Vec<Vec<(Vec<f32>, Vec<f32>)>> = emb.iter().map(|_| Vec::new()).collect();
+        for (a, peer) in grads.iter().enumerate() {
+            let tables = peer.fin_rx.recv().map_err(|_| {
+                anyhow!("a gradient actor process terminated before finalizing")
+            })?;
+            if tables.len() != emb.len() {
+                bail!("finalize reply table count mismatch");
+            }
+            for (f, (param, values, accum)) in tables.into_iter().enumerate() {
+                let m = &emb[f];
+                if param as usize != m.param {
+                    bail!("finalize reply param order mismatch");
+                }
+                let (lo, hi) = owner_range(m.rows, n_grad, a);
+                if values.len() != (hi - lo) * m.dim {
+                    bail!("finalize reply slice length mismatch");
+                }
+                if !accum.is_empty() && accum.len() != (hi - lo) * m.dim {
+                    bail!("finalize reply accum length mismatch");
+                }
+                parts[f].push((values, accum));
+            }
+        }
+        for (m, slices) in emb.iter().zip(parts) {
+            // Optimizer state merges like `ShardedTable::into_dense`: empty
+            // iff no owner accumulated any; otherwise untouched owners'
+            // slices zero-fill (adagrad state starts at zero).
+            let any_state = slices.iter().any(|(_, a)| !a.is_empty());
+            let mut values = Vec::with_capacity(m.rows * m.dim);
+            let mut accum = Vec::new();
+            for (a, (v, acc)) in slices.into_iter().enumerate() {
+                let (lo, hi) = owner_range(m.rows, n_grad, a);
+                values.extend_from_slice(&v);
+                if any_state {
+                    if acc.is_empty() {
+                        accum.resize(accum.len() + (hi - lo) * m.dim, 0.0);
+                    } else {
+                        accum.extend_from_slice(&acc);
+                    }
+                }
+            }
+            let p = &mut store.params[m.param];
+            p.tensor = HostTensor::f32(vec![m.rows, m.dim], values);
+            p.opt_state =
+                if any_state { DenseState::from_accum(accum) } else { DenseState::default() };
+        }
+        drop(actors);
+        Ok(store)
+    }
+}
+
+/// [`ParamSink`] that routes the barrier's optimizer updates to their
+/// owners: embedding updates travel to the owning gradient actors as
+/// `Scatter` / `DenseScatter` frames (the actors hold the run's fixed
+/// optimizer from their init frame, so no optimizer payload rides per
+/// update), while non-embedding dense updates apply locally to the
+/// barrier's store.  Socket FIFO ordering is the correctness argument:
+/// the next step's row fetch is written after these frames on the same
+/// socket, so it observes exactly the updates applied before it.
+pub(crate) struct RoutedSink<'a>(pub(crate) &'a ProcEngine);
+
+impl ParamSink for RoutedSink<'_> {
+    fn apply_sparse(
+        &mut self,
+        param_index: usize,
+        grad: &RowSparseGrad,
+        _opt: &Optimizer,
+    ) -> Result<()> {
+        let eng = self.0;
+        let Some(m) = eng.emb.iter().find(|m| m.param == param_index) else {
+            bail!("row-sparse update aimed at non-embedding parameter {param_index}");
+        };
+        let mut rows: Vec<Vec<u32>> = eng.grads.iter().map(|_| Vec::new()).collect();
+        let mut values: Vec<Vec<f32>> = eng.grads.iter().map(|_| Vec::new()).collect();
+        for (row, vals) in grad.iter_rows() {
+            let a = owner_of(m.rows, eng.n_grad, row as usize);
+            rows[a].push(row);
+            values[a].extend_from_slice(vals);
+        }
+        for (a, (rows, values)) in rows.into_iter().zip(values).enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let frame = Frame::Scatter { param: param_index as u32, rows, values };
+            wire::write_frame(&mut &eng.grads[a].sock, &frame)
+                .context("sending a scatter update to a gradient actor")?;
+        }
+        Ok(())
+    }
+
+    fn apply_dense(&mut self, param_index: usize, grad: &[f32], opt: &Optimizer) -> Result<()> {
+        let eng = self.0;
+        if let Some(m) = eng.emb.iter().find(|m| m.param == param_index) {
+            // densified embedding update (DP-SGD baseline): slice by owner
+            for (a, peer) in eng.grads.iter().enumerate() {
+                let (lo, hi) = owner_range(m.rows, eng.n_grad, a);
+                if lo >= hi {
+                    continue;
+                }
+                let frame = Frame::DenseScatter {
+                    param: param_index as u32,
+                    values: grad[lo * m.dim..hi * m.dim].to_vec(),
+                };
+                wire::write_frame(&mut &peer.sock, &frame)
+                    .context("sending a dense scatter to a gradient actor")?;
+            }
+            Ok(())
+        } else {
+            ParamSink::apply_dense(&mut *eng.store.lock().unwrap(), param_index, grad, opt)
+        }
+    }
+}
+
+/// Reader thread for one data actor: forwards batches into the barrier's
+/// bounded channel (backpressure propagates to the actor through the
+/// socket buffer), merges the actor's stage totals on a clean `DataDone`,
+/// and flags `down` on EOF-without-done so the `BatchStream` watchdog can
+/// turn a dead producer into an error.
+fn data_reader(
+    sock: UnixStream,
+    tx: SyncSender<BatchMsg>,
+    tele: Arc<Telemetry>,
+    down: Arc<AtomicUsize>,
+) {
+    let mut r = BufReader::new(sock);
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Frame::Batch(msg)) => {
+                tele.queue_inc(Queue::Batch);
+                if tx.send(msg).is_err() {
+                    return; // barrier loop is gone — normal shutdown
+                }
+            }
+            Ok(Frame::DataDone { stages }) => {
+                tele.merge_stage_totals(&stages);
+                return;
+            }
+            Ok(_) | Err(_) => {
+                down.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+}
+
+/// Reader thread for one gradient actor: demuxes chunk results into the
+/// aggregation channel (with the `Queue::Task` gauge decrement), row-fetch
+/// and finalize replies into their per-actor channels, and flags `down`
+/// on EOF-without-finalize so `collect_step`'s timeout loop surfaces the
+/// death.
+fn grad_reader(
+    sock: UnixStream,
+    res_tx: Sender<(u64, usize, ChunkGrads)>,
+    rows_tx: Sender<Vec<Vec<f32>>>,
+    fin_tx: Sender<Vec<(u32, Vec<f32>, Vec<f32>)>>,
+    tele: Arc<Telemetry>,
+    down: Arc<AtomicUsize>,
+) {
+    let mut r = BufReader::new(sock);
+    loop {
+        match wire::read_frame(&mut r) {
+            Ok(Frame::ChunkResult { step, chunk, grads }) => {
+                tele.queue_dec(Queue::Task);
+                if res_tx.send((step, chunk as usize, grads)).is_err() {
+                    return;
+                }
+            }
+            Ok(Frame::RowValues { values }) => {
+                if rows_tx.send(values).is_err() {
+                    return;
+                }
+            }
+            Ok(Frame::FinalizeResult { tables, stages }) => {
+                tele.merge_stage_totals(&stages);
+                let _ = fin_tx.send(tables);
+                return;
+            }
+            Ok(_) | Err(_) => {
+                down.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+}

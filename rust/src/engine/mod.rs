@@ -62,15 +62,26 @@
 //! [`StreamingTrainer`](crate::coordinator::StreamingTrainer) for every
 //! [`FrequencySource`](crate::selection::FrequencySource) variant.
 //!
+//! **Multi-process mode** (`--engine-processes <n>`, n ≥ 2) replaces the
+//! worker threads with actor *processes* talking to this barrier over
+//! unix-domain sockets ([`actor`], wire format in [`wire`]): data actors
+//! stream batches, gradient actors own contiguous row ranges of the
+//! embedding tables and compute chunk partials, and the barrier keeps the
+//! exact same serial assemble → select → noise → scatter tail.  The three
+//! invariants above are process-location-independent, so the multi-process
+//! run is bit-identical to both in-process paths (`tests/engine.rs`).
+//!
 //! The engine requires the reference runtime backend (PJRT artifacts have a
 //! fixed batch shape and cannot compute per-chunk partials); with `xla`
 //! artifacts use the sync trainer.
 
 #![warn(missing_docs)]
 
+pub mod actor;
 mod aggregator;
 mod pipeline;
 mod sharded_store;
+pub mod wire;
 
 pub use aggregator::collect_step;
 pub use pipeline::{BatchMsg, BatchStream, ChunkTask, DataPlan, RowCache, WorkerView};
@@ -196,6 +207,58 @@ enum Trained {
     Streaming(StreamingOutcome),
 }
 
+/// The parameter-holding compute fabric behind the aggregation barrier:
+/// either the in-process sharded store served by worker threads, or the
+/// multi-process actor fleet ([`actor::ProcEngine`]).  The barrier's step
+/// loop is fabric-agnostic — it reads snapshots, dispatches chunks, and
+/// applies updates through this façade, which is what makes the
+/// bit-exactness argument carry across process boundaries unchanged.
+enum Fabric {
+    /// In-process: gradient worker threads over a [`ShardedStore`].
+    Threads(ShardedStore),
+    /// Multi-process: actor children over unix-domain sockets.
+    Procs(actor::ProcEngine),
+}
+
+impl Fabric {
+    /// Applied-update count (snapshot-age reference for the staleness gauge).
+    fn epoch(&self) -> u64 {
+        match self {
+            Fabric::Threads(s) => s.epoch(),
+            Fabric::Procs(p) => p.epoch(),
+        }
+    }
+
+    fn bump_epoch(&self) {
+        match self {
+            Fabric::Threads(s) => s.bump_epoch(),
+            Fabric::Procs(p) => p.bump_epoch(),
+        }
+    }
+
+    fn is_trainable(&self, index: usize) -> bool {
+        match self {
+            Fabric::Threads(s) => s.is_trainable(index),
+            Fabric::Procs(p) => p.is_trainable(index),
+        }
+    }
+
+    fn dense_values(&self, index: usize) -> Vec<f32> {
+        match self {
+            Fabric::Threads(s) => s.dense_values(index),
+            Fabric::Procs(p) => p.dense_values(index),
+        }
+    }
+
+    /// Reassemble the final full [`ParamStore`] (shards or actor slices).
+    fn into_store(self) -> Result<ParamStore> {
+        match self {
+            Fabric::Threads(s) => s.into_store(),
+            Fabric::Procs(p) => p.into_store(),
+        }
+    }
+}
+
 /// Everything the aggregation barrier needs to push one logical batch
 /// through the workers and apply its DP update: per-step snapshots (row
 /// cache + dense params), chunk dispatch, in-order merge, assembly, and
@@ -206,7 +269,7 @@ enum Trained {
 /// step loop and the streaming driver so the two modes cannot drift.
 struct StepExec<'a> {
     rm: &'a RefModel,
-    estore: &'a ShardedStore,
+    fab: &'a Fabric,
     emb_params: &'a [usize],
     static_dense: &'a [Option<Arc<Vec<f32>>>],
     plan: &'a [OutputKind],
@@ -248,45 +311,59 @@ impl StepExec<'_> {
         }
         let batch = Arc::new(batch);
         let tele = Arc::clone(&state.tele);
-        let epoch = self.estore.epoch();
+        let epoch = self.fab.epoch();
         // Per-step read-only snapshots, taken after the newest *collected*
         // step's updates: every embedding row the batch touches (gathered
         // once, read lock-free by all workers — this is what keeps
-        // per-chunk per-shard lock traffic off the hot path) and the dense
+        // per-chunk per-shard lock traffic off the hot path; in
+        // multi-process mode fetched from the owning actors) and the dense
         // params (frozen entries are shared across steps).
         let snap_span = tele.span(Stage::Snapshot);
-        let rows = Arc::new(RowCache::build(&batch, self.estore, self.emb_params));
+        let rows = Arc::new(match self.fab {
+            Fabric::Threads(estore) => RowCache::build(&batch, estore, self.emb_params),
+            Fabric::Procs(pe) => pe.fetch_row_cache(&batch)?,
+        });
         let dense: Arc<Vec<Arc<Vec<f32>>>> = Arc::new(
             self.static_dense
                 .iter()
                 .enumerate()
                 .map(|(j, frozen)| match frozen {
                     Some(a) => Arc::clone(a),
-                    None => Arc::new(self.estore.dense_values(self.nt + j)),
+                    None => Arc::new(self.fab.dense_values(self.nt + j)),
                 })
                 .collect(),
         );
         drop(snap_span);
-        let mut c0 = 0usize;
-        while c0 < self.n_chunks {
-            let hi = (c0 + self.chunks_per_task).min(self.n_chunks);
-            // gauge up before the send, so in-flight + claimed-but-unfinished
-            // work is what the depth reads (the task channel is unbounded —
-            // the send itself never blocks)
-            tele.queue_inc(Queue::Task);
-            self.task_tx
-                .send(ChunkTask {
-                    step,
-                    chunks: c0..hi,
-                    batch: Arc::clone(&batch),
-                    rows: Arc::clone(&rows),
-                    dense: Arc::clone(&dense),
-                    c1: self.c1,
-                    c2: self.c2,
-                })
-                .ok()
-                .context("gradient workers terminated early")?;
-            c0 = hi;
+        match self.fab {
+            Fabric::Threads(_) => {
+                let mut c0 = 0usize;
+                while c0 < self.n_chunks {
+                    let hi = (c0 + self.chunks_per_task).min(self.n_chunks);
+                    // gauge up before the send, so in-flight +
+                    // claimed-but-unfinished work is what the depth reads
+                    // (the task channel is unbounded — the send itself
+                    // never blocks)
+                    tele.queue_inc(Queue::Task);
+                    self.task_tx
+                        .send(ChunkTask {
+                            step,
+                            chunks: c0..hi,
+                            batch: Arc::clone(&batch),
+                            rows: Arc::clone(&rows),
+                            dense: Arc::clone(&dense),
+                            c1: self.c1,
+                            c2: self.c2,
+                        })
+                        .ok()
+                        .context("gradient workers terminated early")?;
+                    c0 = hi;
+                }
+            }
+            Fabric::Procs(pe) => {
+                // each gradient actor gets its contiguous block of chunks
+                // (`microbatch_chunks` does not apply across processes)
+                pe.send_step(step, &batch, &rows, dense.as_slice(), (self.c1, self.c2))?;
+            }
         }
         self.inflight.push_back(InflightStep { step, batch, epoch });
         Ok(())
@@ -326,9 +403,17 @@ impl StepExec<'_> {
         drop(assemble_span);
         // snapshot age of the update being applied; always 0 at k = 0
         tele.set_staleness(inflight.step - inflight.epoch);
-        let mut sink = self.estore;
-        state.apply_update(bundle, &mut sink)?;
-        self.estore.bump_epoch();
+        match self.fab {
+            Fabric::Threads(estore) => {
+                let mut sink = estore;
+                state.apply_update(bundle, &mut sink)?;
+            }
+            Fabric::Procs(pe) => {
+                let mut sink = actor::RoutedSink(pe);
+                state.apply_update(bundle, &mut sink)?;
+            }
+        }
+        self.fab.bump_epoch();
         Ok(())
     }
 
@@ -531,7 +616,6 @@ fn run_with(
     // any accumulation chain, so the run stays bit-identical at any
     // setting (tests/kernels.rs, tests/engine.rs).
     crate::kernels::set_threads(ecfg.kernel_threads);
-    let estore = ShardedStore::from_store(store, &emb_params, ecfg.shards.max(1))?;
 
     let seed = state.cfg.seed;
     let (c1, c2) = step::clip_values(&state.cfg);
@@ -545,24 +629,11 @@ fn run_with(
         with_counts: streaming.as_ref().is_some_and(|(s, _)| s.needs_stream_counts()),
         prior: streaming.as_ref().map_or(PriorPass::None, |(s, _)| s.prior_pass()),
     };
-
-    // Frozen dense params (the NLU transformer backbone) never receive
-    // updates, so snapshot them once; only trainable dense params (the MLP
-    // stack / classifier head) are re-cloned per step.
     let nt = rm.num_tables();
     let np = rm.num_params();
-    let static_dense: Vec<Option<Arc<Vec<f32>>>> = (nt..np)
-        .map(|i| {
-            if estore.is_trainable(i) {
-                None
-            } else {
-                Some(Arc::new(estore.dense_values(i)))
-            }
-        })
-        .collect();
 
     let next_step = AtomicU64::new(0);
-    let workers_down = AtomicUsize::new(0);
+    let workers_down = Arc::new(AtomicUsize::new(0));
     let (batch_tx, batch_rx) = mpsc::sync_channel::<BatchMsg>(ecfg.channel_depth.max(1));
     let (task_tx, task_rx) = mpsc::channel::<ChunkTask>();
     let task_rx = Arc::new(Mutex::new(task_rx));
@@ -571,48 +642,97 @@ fn run_with(
     // The telemetry hub travels to every worker by Arc — probing it is
     // atomics and clock reads only, so instrumented workers stay bit-exact.
     let tele = Arc::clone(&state.tele);
-    let reselections = std::thread::scope(|scope| -> Result<Option<usize>> {
-        for _ in 0..ecfg.data_workers.max(1) {
-            let tx = batch_tx.clone();
-            let gcfg = src.clone();
-            let next = &next_step;
-            let tl = Arc::clone(&tele);
-            scope.spawn(move || pipeline::data_worker(gcfg, dplan, next, tx, &tl));
-        }
-        drop(batch_tx); // aggregator detects data-worker exit via channel close
 
-        for _ in 0..ecfg.grad_workers.max(1) {
-            let rx = Arc::clone(&task_rx);
-            let tx = res_tx.clone();
-            let rm = &rm;
-            let down = &workers_down;
-            let tl = Arc::clone(&tele);
-            scope.spawn(move || {
-                // Bump the exit counter even on panic, so the aggregator
-                // can tell a dead worker from a slow one (aggregator.rs).
-                struct ExitGuard<'a>(&'a AtomicUsize);
-                impl Drop for ExitGuard<'_> {
-                    fn drop(&mut self) {
-                        self.0.fetch_add(1, Ordering::SeqCst);
+    // `--engine-processes ≥ 2` swaps the worker threads for actor
+    // processes; the barrier loop below is identical either way.
+    let fab = if ecfg.processes >= 2 {
+        let spec = actor::ProcSpec {
+            model: &state.cfg.model,
+            artifacts_dir: &state.cfg.artifacts_dir,
+            seed,
+            opt_kind: state.cfg.optimizer,
+            lr: state.cfg.lr,
+            gen: &src,
+            plan: dplan,
+            n_data: ecfg.data_workers.max(1),
+            n_grad: ecfg.processes,
+            shards: ecfg.shards.max(1),
+            kernel_threads: ecfg.kernel_threads,
+            emb_params: &emb_params,
+            nt,
+            n_chunks,
+        };
+        Fabric::Procs(actor::ProcEngine::launch(
+            spec,
+            store,
+            batch_tx.clone(),
+            res_tx.clone(),
+            Arc::clone(&workers_down),
+            Arc::clone(&tele),
+        )?)
+    } else {
+        Fabric::Threads(ShardedStore::from_store(store, &emb_params, ecfg.shards.max(1))?)
+    };
+
+    // Frozen dense params (the NLU transformer backbone) never receive
+    // updates, so snapshot them once; only trainable dense params (the MLP
+    // stack / classifier head) are re-cloned per step.
+    let static_dense: Vec<Option<Arc<Vec<f32>>>> = (nt..np)
+        .map(|i| {
+            if fab.is_trainable(i) {
+                None
+            } else {
+                Some(Arc::new(fab.dense_values(i)))
+            }
+        })
+        .collect();
+
+    let reselections = std::thread::scope(|scope| -> Result<Option<usize>> {
+        if matches!(fab, Fabric::Threads(_)) {
+            for _ in 0..ecfg.data_workers.max(1) {
+                let tx = batch_tx.clone();
+                let gcfg = src.clone();
+                let next = &next_step;
+                let tl = Arc::clone(&tele);
+                scope.spawn(move || pipeline::data_worker(gcfg, dplan, next, tx, &tl));
+            }
+            for _ in 0..ecfg.grad_workers.max(1) {
+                let rx = Arc::clone(&task_rx);
+                let tx = res_tx.clone();
+                let rm = &rm;
+                let down = &*workers_down;
+                let tl = Arc::clone(&tele);
+                scope.spawn(move || {
+                    // Bump the exit counter even on panic, so the aggregator
+                    // can tell a dead worker from a slow one (aggregator.rs).
+                    struct ExitGuard<'a>(&'a AtomicUsize);
+                    impl Drop for ExitGuard<'_> {
+                        fn drop(&mut self) {
+                            self.0.fetch_add(1, Ordering::SeqCst);
+                        }
                     }
-                }
-                let _guard = ExitGuard(down);
-                pipeline::grad_worker(rm, &rx, &tx, &tl)
-            });
+                    let _guard = ExitGuard(down);
+                    pipeline::grad_worker(rm, &rx, &tx, &tl)
+                });
+            }
         }
+        // In-process: the aggregator detects data-worker exit via channel
+        // close.  Multi-process: the actor reader threads hold their own
+        // clones, so the channels close when the last reader exits.
+        drop(batch_tx);
         drop(res_tx);
 
         // ---- the aggregation loop (this thread) ----
         let run_loop = |state: &mut StepState| -> Result<Option<usize>> {
             let mut exec = StepExec {
                 rm: &rm,
-                estore: &estore,
+                fab: &fab,
                 emb_params: &emb_params,
                 static_dense: &static_dense,
                 plan: &plan,
                 task_tx: &task_tx,
                 res_rx: &res_rx,
-                workers_down: &workers_down,
+                workers_down: &*workers_down,
                 n_chunks,
                 chunks_per_task,
                 nt,
@@ -624,7 +744,19 @@ fn run_with(
                 inflight: VecDeque::new(),
                 early: BTreeMap::new(),
             };
-            let mut stream = BatchStream::with_telemetry(batch_rx, Arc::clone(&tele));
+            // Against actor processes a plain channel recv could hang
+            // forever if a data actor dies (its reader thread keeps the
+            // channel sender alive until EOF, but mpsc cannot say *which*
+            // producer went quiet) — the watchdog variant polls the
+            // reader-maintained down counter instead.
+            let mut stream = match &fab {
+                Fabric::Procs(pe) => {
+                    BatchStream::with_watchdog(batch_rx, Arc::clone(&tele), pe.data_down())
+                }
+                Fabric::Threads(_) => {
+                    BatchStream::with_telemetry(batch_rx, Arc::clone(&tele))
+                }
+            };
             match &streaming {
                 None => {
                     for t in 0..steps {
@@ -667,7 +799,7 @@ fn run_with(
     })?;
 
     // ---- evaluation on the reassembled store (same streams as sync) ----
-    let store = estore.into_store()?;
+    let store = fab.into_store()?;
     match streaming {
         Some((sched, gcfg)) => {
             let gen = SynthCriteo::new(gcfg);

@@ -30,9 +30,10 @@
 
 use std::collections::BTreeMap;
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -71,6 +72,7 @@ pub struct DataPlan {
 /// its per-feature `(bucket, count)` pairs when the [`DataPlan`] asks for
 /// them.  Sequence keys: prior batch `i` is key `i`, training step `t` is
 /// key `prior.num_batches() + t`.
+#[derive(Clone, Debug)]
 pub struct BatchMsg {
     /// sequence key of this batch in the reordered stream
     pub step: u64,
@@ -129,21 +131,31 @@ struct FeatRows {
 }
 
 impl RowCache {
-    /// Gather the batch's unique rows, feature by feature, from the sharded
-    /// store (one locked read per unique row).
-    pub fn build(batch: &Batch, store: &ShardedStore, emb_params: &[usize]) -> RowCache {
-        let per_feature: Vec<Vec<u32>> = match batch {
+    /// The batch's sorted, deduplicated table-local rows, per embedding
+    /// feature — the "which rows" half of a snapshot, with no values read
+    /// yet.  The multi-process barrier uses this directly to build its
+    /// per-owner `FetchRows` requests (`engine::actor`).
+    pub(crate) fn unique_rows(batch: &Batch) -> Vec<Vec<u32>> {
+        let mut per_feature: Vec<Vec<u32>> = match batch {
             Batch::Pctr(b) => (0..b.num_features)
                 .map(|f| (0..b.batch_size).map(|i| b.cat_of(i, f) as u32).collect())
                 .collect(),
             Batch::Text(b) => vec![b.ids.iter().map(|&t| t as u32).collect()],
         };
-        let feats = per_feature
+        for rows in &mut per_feature {
+            rows.sort_unstable();
+            rows.dedup();
+        }
+        per_feature
+    }
+
+    /// Gather the batch's unique rows, feature by feature, from the sharded
+    /// store (one locked read per unique row).
+    pub fn build(batch: &Batch, store: &ShardedStore, emb_params: &[usize]) -> RowCache {
+        let feats = Self::unique_rows(batch)
             .into_iter()
             .zip(emb_params)
-            .map(|(mut rows, &param)| {
-                rows.sort_unstable();
-                rows.dedup();
+            .map(|(rows, &param)| {
                 let dim = store.emb_row_dim(param);
                 let mut values = vec![0f32; rows.len() * dim];
                 for (k, &row) in rows.iter().enumerate() {
@@ -153,6 +165,24 @@ impl RowCache {
             })
             .collect();
         RowCache { feats }
+    }
+
+    /// Assemble a cache from per-feature `(sorted rows, packed values, dim)`
+    /// parts — the multi-process barrier concatenates per-owner fetches into
+    /// these, and the gradient actors rebuild the cache from the wire.
+    pub(crate) fn from_parts(feats: Vec<(Vec<u32>, Vec<f32>, usize)>) -> RowCache {
+        let feats = feats
+            .into_iter()
+            .map(|(rows, values, dim)| FeatRows { rows, values, dim })
+            .collect();
+        RowCache { feats }
+    }
+
+    /// Per-feature `(rows, values, dim)` views of the cache, in feature
+    /// order — the inverse of [`RowCache::from_parts`], used to put a
+    /// snapshot on the wire.
+    pub(crate) fn parts(&self) -> impl Iterator<Item = (&[u32], &[f32], usize)> {
+        self.feats.iter().map(|f| (f.rows.as_slice(), f.values.as_slice(), f.dim))
     }
 
     /// The cached row, by feature and table-local row id.
@@ -190,6 +220,33 @@ impl ParamsView for WorkerView<'_> {
     }
 }
 
+/// Generate sequence item `seq` of a [`DataPlan`] — the self-contained
+/// per-item body shared by the in-process data workers and the data actor
+/// processes (`engine::actor`).  The first `prior.num_batches()` sequence
+/// items are the streaming run's prior pass (warmup / cold-start sniff)
+/// from its own tagged RNG stream; training step `t` rides at sequence key
+/// `n_prior + t`.
+pub(crate) fn gen_item(gen: &Generator, plan: &DataPlan, seq: u64, tele: &Telemetry) -> BatchMsg {
+    let n_prior = plan.prior.num_batches();
+    let (day, mut rng, is_prior) = if seq < n_prior {
+        (plan.prior.day_of(seq), streaming::prior_batch_rng(plan.seed, seq), true)
+    } else {
+        let step_idx = seq - n_prior;
+        let day = match plan.steps_per_day {
+            Some(spd) => streaming::day_of_step(spd, step_idx),
+            None => 0,
+        };
+        (day, step::train_batch_rng(plan.seed, step_idx), false)
+    };
+    let _span = tele.span(Stage::DataGenerate);
+    let batch = gen.batch(day, plan.batch_size, &mut rng);
+    let counts = match (&batch, is_prior || plan.with_counts) {
+        (Batch::Pctr(pb), true) => Some(streaming::pctr_batch_counts(pb)),
+        _ => None,
+    };
+    BatchMsg { step: seq, batch, counts }
+}
+
 /// Body of one data-worker thread.
 pub fn data_worker(
     gen_cfg: GenConfig,
@@ -205,32 +262,13 @@ pub fn data_worker(
         if seq >= n_prior + plan.steps {
             return;
         }
-        // The first `n_prior` sequence items are the streaming run's prior
-        // pass (warmup / cold-start sniff) from its own tagged RNG stream;
-        // training step `t` rides at sequence key `n_prior + t`.
-        let (day, mut rng, is_prior) = if seq < n_prior {
-            (plan.prior.day_of(seq), streaming::prior_batch_rng(plan.seed, seq), true)
-        } else {
-            let step_idx = seq - n_prior;
-            let day = match plan.steps_per_day {
-                Some(spd) => streaming::day_of_step(spd, step_idx),
-                None => 0,
-            };
-            (day, step::train_batch_rng(plan.seed, step_idx), false)
-        };
-        let gen_span = tele.span(Stage::DataGenerate);
-        let batch = gen.batch(day, plan.batch_size, &mut rng);
-        let counts = match (&batch, is_prior || plan.with_counts) {
-            (Batch::Pctr(pb), true) => Some(streaming::pctr_batch_counts(pb)),
-            _ => None,
-        };
-        drop(gen_span);
+        let msg = gen_item(&gen, &plan, seq, tele);
         // gauge up *before* the (possibly blocking) send so the depth also
         // counts producers stalled on a full channel — backpressure shows as
         // depth pinned at `channel_depth + data_workers`
         tele.queue_inc(Queue::Batch);
         let _span = tele.span(Stage::DataSend);
-        if tx.send(BatchMsg { step: seq, batch, counts }).is_err() {
+        if tx.send(msg).is_err() {
             return; // aggregator gone — shut down
         }
     }
@@ -272,18 +310,65 @@ pub struct BatchStream {
     rx: Receiver<BatchMsg>,
     pending: BTreeMap<u64, BatchMsg>,
     tele: Option<Arc<Telemetry>>,
+    /// Multi-process mode: count of data actor processes that died without
+    /// completing their sequence slice.  In-process data workers share the
+    /// channel's sender set, so a dead worker closes the channel; a dead
+    /// data actor *process* does not (the surviving actors keep their
+    /// senders open), so the stream polls this counter on a timeout to turn
+    /// the hang into an error.
+    down: Option<Arc<AtomicUsize>>,
 }
 
 impl BatchStream {
     /// Wrap the receiving end of the data workers' channel.
     pub fn new(rx: Receiver<BatchMsg>) -> BatchStream {
-        BatchStream { rx, pending: BTreeMap::new(), tele: None }
+        BatchStream { rx, pending: BTreeMap::new(), tele: None, down: None }
     }
 
     /// Like [`BatchStream::new`], but receive waits and queue-depth changes
     /// are reported to `tele`.
     pub fn with_telemetry(rx: Receiver<BatchMsg>, tele: Arc<Telemetry>) -> BatchStream {
-        BatchStream { rx, pending: BTreeMap::new(), tele: Some(tele) }
+        BatchStream { rx, pending: BTreeMap::new(), tele: Some(tele), down: None }
+    }
+
+    /// Like [`BatchStream::with_telemetry`], plus a watchdog on `down`: when
+    /// a producer *process* dies mid-sequence (counter goes nonzero) the
+    /// blocked receive becomes a bounded-time error instead of a deadlock.
+    pub fn with_watchdog(
+        rx: Receiver<BatchMsg>,
+        tele: Arc<Telemetry>,
+        down: Arc<AtomicUsize>,
+    ) -> BatchStream {
+        BatchStream { rx, pending: BTreeMap::new(), tele: Some(tele), down: Some(down) }
+    }
+
+    fn recv(&self, step: u64) -> Result<BatchMsg> {
+        let Some(down) = &self.down else {
+            return self
+                .rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("data workers exited before producing step {step}"));
+        };
+        loop {
+            match self.rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(m) => return Ok(m),
+                Err(RecvTimeoutError::Timeout) => {
+                    if down.load(Ordering::SeqCst) > 0 {
+                        bail!("a data actor process terminated before producing step {step}");
+                    }
+                }
+                // The channel can also close *after* the death: the dead
+                // actor's reader is gone and the surviving actors finished
+                // their slices — attribute that to the death too, so the
+                // error is deterministic whichever side of the race wins.
+                Err(RecvTimeoutError::Disconnected) => {
+                    if down.load(Ordering::SeqCst) > 0 {
+                        bail!("a data actor process terminated before producing step {step}");
+                    }
+                    bail!("data workers exited before producing step {step}")
+                }
+            }
+        }
     }
 
     /// Block until the message for `step` is available.
@@ -295,19 +380,15 @@ impl BatchStream {
             let received = match &self.tele {
                 Some(tele) => {
                     let _span = tele.span(Stage::BatchWait);
-                    self.rx.recv()
+                    self.recv(step)
                 }
-                None => self.rx.recv(),
+                None => self.recv(step),
             };
-            match received {
-                Ok(m) => {
-                    if let Some(tele) = &self.tele {
-                        tele.queue_dec(Queue::Batch);
-                    }
-                    self.pending.insert(m.step, m);
-                }
-                Err(_) => bail!("data workers exited before producing step {step}"),
+            let m = received?;
+            if let Some(tele) = &self.tele {
+                tele.queue_dec(Queue::Batch);
             }
+            self.pending.insert(m.step, m);
         }
     }
 }

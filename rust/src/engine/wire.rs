@@ -1,0 +1,854 @@
+//! Length-prefixed binary wire format for the multi-process engine.
+//!
+//! Hand-rolled and zero-dependency, in the same spirit as
+//! `telemetry/json.rs`: every frame is `[u32 le body_len][u8 tag][payload]`,
+//! integers are little-endian fixed width, lengths ride as `u64`, and
+//! **floats travel as raw bits** (`to_bits`/`from_bits`) so a value decodes
+//! to the exact bit pattern that was encoded — NaNs, `-0.0`, and subnormals
+//! included.  That is what lets the multi-process engine stay bit-identical
+//! to the in-process paths (`docs/CONCURRENCY.md`): serialization is a
+//! bijection on the payloads, never a rounding step.
+//!
+//! Decoding is **strict and total**: a [`Frame::decode`] on truncated or
+//! garbage bytes returns an error (never panics, never over-allocates —
+//! every vector length is validated against the bytes actually present),
+//! and trailing bytes after a well-formed payload are an error too.  The
+//! combination makes the encoding canonical: if `decode(b)` succeeds, then
+//! re-encoding the result reproduces `b` exactly
+//! (`rust/tests/wire.rs` proves these properties over random payloads).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::streaming::PriorPass;
+use crate::data::{Batch, CriteoConfig, GenConfig, PctrBatch, TextBatch, TextConfig};
+use crate::runtime::reference::ChunkGrads;
+use crate::sparse::OptimizerKind;
+use crate::telemetry::Stage;
+
+use super::pipeline::{BatchMsg, DataPlan};
+
+/// Upper bound on a single frame body (1 GiB) — rejects garbage length
+/// prefixes before any allocation happens.
+pub const MAX_FRAME: usize = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// primitive encoder / decoder
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian byte encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty encoder.
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+
+    /// The encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a bool as `0`/`1`.
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `i32`, little-endian.
+    pub fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `usize` as a `u64` (the format is 64-bit regardless of host).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Append an `f32` as its raw bit pattern.
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// Append an `f64` as its raw bit pattern.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed `f32` slice (bit patterns).
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    /// Append a length-prefixed `u32` slice.
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+
+    /// Append a length-prefixed `i32` slice.
+    pub fn i32s(&mut self, v: &[i32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.i32(x);
+        }
+    }
+
+    /// Append a length-prefixed `usize` slice (as `u64`s).
+    pub fn usizes(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian byte decoder over a borrowed buffer.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode from `buf`, starting at offset 0.
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let rest = self.buf.len() - self.pos;
+        if rest < n {
+            bail!("frame truncated: need {n} bytes at offset {}, have {rest}", self.pos);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// One byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// A bool — only `0`/`1` are accepted (keeps the encoding canonical).
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b:#x}"),
+        }
+    }
+
+    /// A little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A little-endian `i32`.
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `usize` carried as `u64` (errors if it overflows the host).
+    pub fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("usize overflows host width")
+    }
+
+    /// An `f32` from its raw bit pattern.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// An `f64` from its raw bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length prefix for a vector of `elem`-byte items, validated against
+    /// the bytes actually remaining so garbage can never trigger a huge
+    /// allocation.
+    fn seq_len(&mut self, elem: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let rest = self.buf.len() - self.pos;
+        if n.saturating_mul(elem.max(1)) > rest {
+            bail!("sequence length {n} ({elem}-byte items) exceeds remaining {rest} bytes");
+        }
+        Ok(n)
+    }
+
+    /// A length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.seq_len(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).context("invalid UTF-8 in wire string")
+    }
+
+    /// A length-prefixed `f32` vector.
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    /// A length-prefixed `u32` vector.
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.seq_len(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    /// A length-prefixed `i32` vector.
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.seq_len(4)?;
+        (0..n).map(|_| self.i32()).collect()
+    }
+
+    /// A length-prefixed `usize` vector.
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.seq_len(8)?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    /// Assert every byte was consumed (strict decode).
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after frame payload", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// domain-type codecs
+// ---------------------------------------------------------------------------
+
+fn enc_prior(e: &mut Enc, p: PriorPass) {
+    e.u8(match p {
+        PriorPass::None => 0,
+        PriorPass::FirstDay => 1,
+        PriorPass::AllDays => 2,
+        PriorPass::Sniff => 3,
+    });
+}
+
+fn dec_prior(d: &mut Dec) -> Result<PriorPass> {
+    Ok(match d.u8()? {
+        0 => PriorPass::None,
+        1 => PriorPass::FirstDay,
+        2 => PriorPass::AllDays,
+        3 => PriorPass::Sniff,
+        t => bail!("unknown PriorPass tag {t}"),
+    })
+}
+
+fn enc_opt_kind(e: &mut Enc, k: OptimizerKind) {
+    e.u8(match k {
+        OptimizerKind::Sgd => 0,
+        OptimizerKind::Adagrad => 1,
+    });
+}
+
+fn dec_opt_kind(d: &mut Dec) -> Result<OptimizerKind> {
+    Ok(match d.u8()? {
+        0 => OptimizerKind::Sgd,
+        1 => OptimizerKind::Adagrad,
+        t => bail!("unknown OptimizerKind tag {t}"),
+    })
+}
+
+fn enc_gen(e: &mut Enc, g: &GenConfig) {
+    match g {
+        GenConfig::Pctr(c) => {
+            e.u8(0);
+            e.usizes(&c.vocabs);
+            e.usize(c.num_numeric);
+            e.u64(c.seed);
+            e.bool(c.drift);
+            e.f64(c.drift_swap_frac);
+            e.f64(c.drift_teacher);
+        }
+        GenConfig::Text(c) => {
+            e.u8(1);
+            e.usize(c.vocab);
+            e.usize(c.seq_len);
+            e.usize(c.num_classes);
+            e.u64(c.seed);
+            e.usize(c.informative);
+        }
+    }
+}
+
+fn dec_gen(d: &mut Dec) -> Result<GenConfig> {
+    Ok(match d.u8()? {
+        0 => GenConfig::Pctr(CriteoConfig {
+            vocabs: d.usizes()?,
+            num_numeric: d.usize()?,
+            seed: d.u64()?,
+            drift: d.bool()?,
+            drift_swap_frac: d.f64()?,
+            drift_teacher: d.f64()?,
+        }),
+        1 => GenConfig::Text(TextConfig {
+            vocab: d.usize()?,
+            seq_len: d.usize()?,
+            num_classes: d.usize()?,
+            seed: d.u64()?,
+            informative: d.usize()?,
+        }),
+        t => bail!("unknown GenConfig tag {t}"),
+    })
+}
+
+fn enc_plan(e: &mut Enc, p: &DataPlan) {
+    e.u64(p.seed);
+    e.usize(p.batch_size);
+    e.u64(p.steps);
+    match p.steps_per_day {
+        None => e.bool(false),
+        Some(s) => {
+            e.bool(true);
+            e.u64(s);
+        }
+    }
+    e.bool(p.with_counts);
+    enc_prior(e, p.prior);
+}
+
+fn dec_plan(d: &mut Dec) -> Result<DataPlan> {
+    Ok(DataPlan {
+        seed: d.u64()?,
+        batch_size: d.usize()?,
+        steps: d.u64()?,
+        steps_per_day: if d.bool()? { Some(d.u64()?) } else { None },
+        with_counts: d.bool()?,
+        prior: dec_prior(d)?,
+    })
+}
+
+fn enc_batch(e: &mut Enc, b: &Batch) {
+    match b {
+        Batch::Pctr(p) => {
+            e.u8(0);
+            e.usize(p.batch_size);
+            e.usize(p.num_features);
+            e.usize(p.num_numeric);
+            e.i32s(&p.cat);
+            e.f32s(&p.num);
+            e.f32s(&p.y);
+        }
+        Batch::Text(t) => {
+            e.u8(1);
+            e.usize(t.batch_size);
+            e.usize(t.seq_len);
+            e.i32s(&t.ids);
+            e.i32s(&t.labels);
+        }
+    }
+}
+
+fn dec_batch(d: &mut Dec) -> Result<Batch> {
+    Ok(match d.u8()? {
+        0 => Batch::Pctr(PctrBatch {
+            batch_size: d.usize()?,
+            num_features: d.usize()?,
+            num_numeric: d.usize()?,
+            cat: d.i32s()?,
+            num: d.f32s()?,
+            y: d.f32s()?,
+        }),
+        1 => Batch::Text(TextBatch {
+            batch_size: d.usize()?,
+            seq_len: d.usize()?,
+            ids: d.i32s()?,
+            labels: d.i32s()?,
+        }),
+        t => bail!("unknown Batch tag {t}"),
+    })
+}
+
+fn enc_counts(e: &mut Enc, counts: &Option<Vec<Vec<(u32, u32)>>>) {
+    match counts {
+        None => e.bool(false),
+        Some(feats) => {
+            e.bool(true);
+            e.usize(feats.len());
+            for f in feats {
+                e.usize(f.len());
+                for &(bucket, count) in f {
+                    e.u32(bucket);
+                    e.u32(count);
+                }
+            }
+        }
+    }
+}
+
+fn dec_counts(d: &mut Dec) -> Result<Option<Vec<Vec<(u32, u32)>>>> {
+    if !d.bool()? {
+        return Ok(None);
+    }
+    let nf = d.seq_len(8)?;
+    let mut feats = Vec::with_capacity(nf);
+    for _ in 0..nf {
+        let n = d.seq_len(8)?;
+        let mut f = Vec::with_capacity(n);
+        for _ in 0..n {
+            f.push((d.u32()?, d.u32()?));
+        }
+        feats.push(f);
+    }
+    Ok(Some(feats))
+}
+
+fn enc_grads(e: &mut Enc, g: &ChunkGrads) {
+    e.usize(g.lo);
+    e.usize(g.hi);
+    e.f32(g.loss_sum);
+    e.usize(g.dense_grads.len());
+    for dg in &g.dense_grads {
+        e.f32s(dg);
+    }
+    e.f32s(&g.zgrads);
+    e.usize(g.counts.len());
+    for &(row, c) in &g.counts {
+        e.u32(row);
+        e.f32(c);
+    }
+    e.f32s(&g.scales);
+}
+
+fn dec_grads(d: &mut Dec) -> Result<ChunkGrads> {
+    let lo = d.usize()?;
+    let hi = d.usize()?;
+    let loss_sum = d.f32()?;
+    let nd = d.seq_len(8)?;
+    let dense_grads = (0..nd).map(|_| d.f32s()).collect::<Result<Vec<_>>>()?;
+    let zgrads = d.f32s()?;
+    let nc = d.seq_len(8)?;
+    let counts = (0..nc)
+        .map(|_| Ok((d.u32()?, d.f32()?)))
+        .collect::<Result<Vec<_>>>()?;
+    let scales = d.f32s()?;
+    Ok(ChunkGrads { lo, hi, loss_sum, dense_grads, zgrads, counts, scales })
+}
+
+/// Encode per-stage telemetry totals as `(stage index, nanos, count)`.
+fn enc_stages(e: &mut Enc, stages: &[(Stage, u64, u64)]) {
+    e.usize(stages.len());
+    for &(stage, nanos, count) in stages {
+        e.u8(stage as u8);
+        e.u64(nanos);
+        e.u64(count);
+    }
+}
+
+fn dec_stages(d: &mut Dec) -> Result<Vec<(Stage, u64, u64)>> {
+    let n = d.seq_len(17)?;
+    (0..n)
+        .map(|_| {
+            let idx = d.u8()? as usize;
+            if idx >= Stage::COUNT {
+                bail!("unknown telemetry stage index {idx}");
+            }
+            Ok((Stage::ALL[idx], d.u64()?, d.u64()?))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------------
+
+/// The gradient actor's startup payload: everything it needs to rebuild its
+/// owned slice of the world deterministically.  No parameter values ride the
+/// wire — `ParamStore::init(manifest, seed)` is a pure function, so the
+/// child reconstructs its contiguous row range locally and bit-identically.
+#[derive(Clone, Debug)]
+pub struct GradInit {
+    /// Manifest model name (resolved against `artifacts_dir` or the
+    /// built-in reference manifest).
+    pub model: String,
+    /// The run's artifacts directory (`RunConfig::artifacts_dir`).
+    pub artifacts_dir: String,
+    /// The run seed (drives `ParamStore::init`).
+    pub seed: u64,
+    /// Optimizer kind — fixed for the whole run, so it rides once here and
+    /// never again on scatter frames.
+    pub opt_kind: OptimizerKind,
+    /// Learning rate.
+    pub lr: f32,
+    /// Parameter indices of the embedding tables, in feature order.
+    pub emb_params: Vec<u32>,
+    /// Total number of gradient actors (= row-range owners).
+    pub n_owners: u32,
+    /// This actor's owner index in `0..n_owners`.
+    pub owner_index: u32,
+    /// Shard count for the actor's local `ShardedTable`s.
+    pub shards: u32,
+    /// Kernel fan-out threads inside the actor.
+    pub kernel_threads: u32,
+}
+
+/// One per-feature slice of a step's row cache on the wire:
+/// `(sorted unique global row ids, packed row values, row dim)`.
+pub type WireFeat = (Vec<u32>, Vec<f32>, usize);
+
+/// A step dispatch to one gradient actor: the batch, the full row-cache
+/// snapshot, the trainable dense parameters, and the contiguous chunk range
+/// `[chunk_lo, chunk_hi)` this actor computes.
+#[derive(Clone, Debug)]
+pub struct StepData {
+    /// The logical step index.
+    pub step: u64,
+    /// First 16-example chunk (inclusive) assigned to this actor.
+    pub chunk_lo: u32,
+    /// Last chunk (exclusive).
+    pub chunk_hi: u32,
+    /// Row-grad clip norm (σ₂ side).
+    pub c1: f32,
+    /// Contribution-map clip norm (σ₁ side).
+    pub c2: f32,
+    /// The step's batch.
+    pub batch: Batch,
+    /// The step's full row-cache snapshot, per embedding feature.
+    pub feats: Vec<WireFeat>,
+    /// Trainable dense parameter snapshots as `(param index, values)`.
+    pub dense: Vec<(u32, Vec<f32>)>,
+}
+
+/// Every message exchanged between the barrier process and its actors.
+///
+/// See the protocol table in `docs/ENGINE.md` for direction and cadence.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Actor → barrier, once on connect: `role` (0 = data, 1 = grad) and
+    /// the actor's index.
+    Hello {
+        /// 0 for a data actor, 1 for a gradient actor.
+        role: u8,
+        /// Actor index within its role.
+        index: u32,
+    },
+    /// Barrier → data actor, once: generator config + data plan + the
+    /// actor's stride/offset slice of the step sequence.
+    DataInit {
+        /// Generator configuration (the data substrate).
+        gen: GenConfig,
+        /// The run's data plan (seed, steps, streaming calendar, priors).
+        plan: DataPlan,
+        /// Number of data actors (sequence stride).
+        stride: u32,
+        /// This actor's starting sequence offset.
+        offset: u32,
+    },
+    /// Barrier → gradient actor, once: see [`GradInit`].
+    GradInit(GradInit),
+    /// Data actor → barrier: one generated batch (with optional per-batch
+    /// frequency counts in streaming mode).
+    Batch(BatchMsg),
+    /// Data actor → barrier, last frame: the actor finished its slice of
+    /// the sequence; carries its stage-timer totals.
+    DataDone {
+        /// `(stage, nanos, count)` totals from the actor's telemetry.
+        stages: Vec<(Stage, u64, u64)>,
+    },
+    /// Barrier → gradient actor: fetch current values for these global row
+    /// ids (per feature, all within the actor's owned range).
+    FetchRows {
+        /// Sorted global row ids per embedding feature.
+        rows: Vec<Vec<u32>>,
+    },
+    /// Gradient actor → barrier: the packed values answering a
+    /// [`Frame::FetchRows`], per feature.
+    RowValues {
+        /// Packed row values per feature, in request order.
+        values: Vec<Vec<f32>>,
+    },
+    /// Barrier → gradient actor: one step dispatch, see [`StepData`].
+    StepData(StepData),
+    /// Gradient actor → barrier: one computed chunk partial.
+    ChunkResult {
+        /// The step the chunk belongs to.
+        step: u64,
+        /// Chunk index within the step.
+        chunk: u32,
+        /// The fixed-16-example chunk partial.
+        grads: ChunkGrads,
+    },
+    /// Barrier → gradient actor: apply a row-sparse optimizer step to the
+    /// actor's slice of `param` (global row ids; values packed row-major).
+    Scatter {
+        /// Parameter index of the embedding table.
+        param: u32,
+        /// Global row ids (within the actor's owned range).
+        rows: Vec<u32>,
+        /// Row values, `rows.len() × dim`.
+        values: Vec<f32>,
+    },
+    /// Barrier → gradient actor: apply a dense optimizer step to the
+    /// actor's contiguous slice of embedding table `param`.
+    DenseScatter {
+        /// Parameter index of the embedding table.
+        param: u32,
+        /// The dense gradient slice covering the actor's row range.
+        values: Vec<f32>,
+    },
+    /// Barrier → gradient actor, last frame: ship the final tables back.
+    Finalize,
+    /// Gradient actor → barrier: final `(param, values, adagrad accum)` for
+    /// every owned slice (accum empty when no state accumulated), plus the
+    /// actor's stage-timer totals.
+    FinalizeResult {
+        /// `(param index, row values, optimizer accum)` per owned slice.
+        tables: Vec<(u32, Vec<f32>, Vec<f32>)>,
+        /// `(stage, nanos, count)` totals from the actor's telemetry.
+        stages: Vec<(Stage, u64, u64)>,
+    },
+}
+
+impl Frame {
+    /// Encode to a frame body (tag byte + payload, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Frame::Hello { role, index } => {
+                e.u8(1);
+                e.u8(*role);
+                e.u32(*index);
+            }
+            Frame::DataInit { gen, plan, stride, offset } => {
+                e.u8(2);
+                enc_gen(&mut e, gen);
+                enc_plan(&mut e, plan);
+                e.u32(*stride);
+                e.u32(*offset);
+            }
+            Frame::GradInit(g) => {
+                e.u8(3);
+                e.str(&g.model);
+                e.str(&g.artifacts_dir);
+                e.u64(g.seed);
+                enc_opt_kind(&mut e, g.opt_kind);
+                e.f32(g.lr);
+                e.u32s(&g.emb_params);
+                e.u32(g.n_owners);
+                e.u32(g.owner_index);
+                e.u32(g.shards);
+                e.u32(g.kernel_threads);
+            }
+            Frame::Batch(m) => {
+                e.u8(4);
+                e.u64(m.step);
+                enc_batch(&mut e, &m.batch);
+                enc_counts(&mut e, &m.counts);
+            }
+            Frame::DataDone { stages } => {
+                e.u8(5);
+                enc_stages(&mut e, stages);
+            }
+            Frame::FetchRows { rows } => {
+                e.u8(6);
+                e.usize(rows.len());
+                for r in rows {
+                    e.u32s(r);
+                }
+            }
+            Frame::RowValues { values } => {
+                e.u8(7);
+                e.usize(values.len());
+                for v in values {
+                    e.f32s(v);
+                }
+            }
+            Frame::StepData(s) => {
+                e.u8(8);
+                e.u64(s.step);
+                e.u32(s.chunk_lo);
+                e.u32(s.chunk_hi);
+                e.f32(s.c1);
+                e.f32(s.c2);
+                enc_batch(&mut e, &s.batch);
+                e.usize(s.feats.len());
+                for (rows, values, dim) in &s.feats {
+                    e.u32s(rows);
+                    e.f32s(values);
+                    e.usize(*dim);
+                }
+                e.usize(s.dense.len());
+                for (idx, values) in &s.dense {
+                    e.u32(*idx);
+                    e.f32s(values);
+                }
+            }
+            Frame::ChunkResult { step, chunk, grads } => {
+                e.u8(9);
+                e.u64(*step);
+                e.u32(*chunk);
+                enc_grads(&mut e, grads);
+            }
+            Frame::Scatter { param, rows, values } => {
+                e.u8(10);
+                e.u32(*param);
+                e.u32s(rows);
+                e.f32s(values);
+            }
+            Frame::DenseScatter { param, values } => {
+                e.u8(11);
+                e.u32(*param);
+                e.f32s(values);
+            }
+            Frame::Finalize => {
+                e.u8(12);
+            }
+            Frame::FinalizeResult { tables, stages } => {
+                e.u8(13);
+                e.usize(tables.len());
+                for (param, values, accum) in tables {
+                    e.u32(*param);
+                    e.f32s(values);
+                    e.f32s(accum);
+                }
+                enc_stages(&mut e, stages);
+            }
+        }
+        e.into_bytes()
+    }
+
+    /// Strict decode of a frame body: every byte must be consumed, every
+    /// length validated, and malformed input returns an error — never a
+    /// panic.
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut d = Dec::new(body);
+        let frame = match d.u8().context("empty frame body")? {
+            1 => Frame::Hello { role: d.u8()?, index: d.u32()? },
+            2 => Frame::DataInit {
+                gen: dec_gen(&mut d)?,
+                plan: dec_plan(&mut d)?,
+                stride: d.u32()?,
+                offset: d.u32()?,
+            },
+            3 => Frame::GradInit(GradInit {
+                model: d.str()?,
+                artifacts_dir: d.str()?,
+                seed: d.u64()?,
+                opt_kind: dec_opt_kind(&mut d)?,
+                lr: d.f32()?,
+                emb_params: d.u32s()?,
+                n_owners: d.u32()?,
+                owner_index: d.u32()?,
+                shards: d.u32()?,
+                kernel_threads: d.u32()?,
+            }),
+            4 => Frame::Batch(BatchMsg {
+                step: d.u64()?,
+                batch: dec_batch(&mut d)?,
+                counts: dec_counts(&mut d)?,
+            }),
+            5 => Frame::DataDone { stages: dec_stages(&mut d)? },
+            6 => {
+                let n = d.seq_len(8)?;
+                let rows = (0..n).map(|_| d.u32s()).collect::<Result<Vec<_>>>()?;
+                Frame::FetchRows { rows }
+            }
+            7 => {
+                let n = d.seq_len(8)?;
+                let values = (0..n).map(|_| d.f32s()).collect::<Result<Vec<_>>>()?;
+                Frame::RowValues { values }
+            }
+            8 => {
+                let step = d.u64()?;
+                let chunk_lo = d.u32()?;
+                let chunk_hi = d.u32()?;
+                let c1 = d.f32()?;
+                let c2 = d.f32()?;
+                let batch = dec_batch(&mut d)?;
+                let nf = d.seq_len(8)?;
+                let feats = (0..nf)
+                    .map(|_| Ok((d.u32s()?, d.f32s()?, d.usize()?)))
+                    .collect::<Result<Vec<_>>>()?;
+                let nd = d.seq_len(8)?;
+                let dense = (0..nd)
+                    .map(|_| Ok((d.u32()?, d.f32s()?)))
+                    .collect::<Result<Vec<_>>>()?;
+                Frame::StepData(StepData { step, chunk_lo, chunk_hi, c1, c2, batch, feats, dense })
+            }
+            9 => Frame::ChunkResult {
+                step: d.u64()?,
+                chunk: d.u32()?,
+                grads: dec_grads(&mut d)?,
+            },
+            10 => Frame::Scatter { param: d.u32()?, rows: d.u32s()?, values: d.f32s()? },
+            11 => Frame::DenseScatter { param: d.u32()?, values: d.f32s()? },
+            12 => Frame::Finalize,
+            13 => {
+                let nt = d.seq_len(8)?;
+                let tables = (0..nt)
+                    .map(|_| Ok((d.u32()?, d.f32s()?, d.f32s()?)))
+                    .collect::<Result<Vec<_>>>()?;
+                Frame::FinalizeResult { tables, stages: dec_stages(&mut d)? }
+            }
+            t => bail!("unknown frame tag {t}"),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Write one length-prefixed frame and flush.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let body = frame.encode();
+    if body.len() > MAX_FRAME {
+        bail!("frame body of {} bytes exceeds MAX_FRAME", body.len());
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())
+        .context("writing frame length")?;
+    w.write_all(&body).context("writing frame body")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.  A garbage length prefix is rejected
+/// before allocation; a short read is an error, not a panic.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).context("reading frame length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds MAX_FRAME");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading frame body")?;
+    Frame::decode(&body)
+}

@@ -42,6 +42,11 @@ use sparse_dp_emb::harness;
 use sparse_dp_emb::runtime::Runtime;
 
 fn main() -> Result<()> {
+    // Multi-process engine children re-exec this binary: when the actor
+    // environment marker is set this runs the actor loop and exits, so it
+    // must come before any CLI parsing.
+    sparse_dp_emb::engine::actor::maybe_actor_main();
+
     let mut args: Vec<String> = std::env::args().skip(1).collect();
 
     // --config file is applied before other flags
@@ -137,7 +142,8 @@ fn cmd_train(cfg: &RunConfig) -> Result<()> {
 fn cmd_train_async(cfg: &RunConfig, stream: bool) -> Result<()> {
     let rt = Runtime::new(&cfg.artifacts_dir)?;
     println!(
-        "[train-async] platform={} {} workers={} data={} shards={} depth={} staleness={}",
+        "[train-async] platform={} {} workers={} data={} shards={} depth={} staleness={} \
+         processes={}",
         rt.platform(),
         cfg.summary(),
         cfg.engine.grad_workers,
@@ -145,6 +151,7 @@ fn cmd_train_async(cfg: &RunConfig, stream: bool) -> Result<()> {
         cfg.engine.shards,
         cfg.engine.channel_depth,
         cfg.engine.staleness,
+        cfg.engine.processes,
     );
     if stream {
         // the async twin of `stream`: same drift generator, same seed

@@ -259,6 +259,7 @@ impl<'a> BatchRef<'a> {
 
 /// Outputs of one reduction chunk (`[lo, hi)` examples), for either model
 /// family.
+#[derive(Clone, Debug)]
 pub struct ChunkGrads {
     /// first example of the chunk (inclusive)
     pub lo: usize,

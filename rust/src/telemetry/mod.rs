@@ -232,6 +232,20 @@ impl Telemetry {
         cell.count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Merge pre-aggregated `(stage, nanos, count)` totals into this hub —
+    /// how actor processes' stage timers land in the barrier's summary
+    /// (`engine::actor` ships them back inside `DataDone` /
+    /// `FinalizeResult` frames).  Unlike [`Telemetry::add_nanos`] this adds
+    /// `count` occurrences, not one, so merged summaries keep the same
+    /// per-step span arithmetic as in-process runs.
+    pub fn merge_stage_totals(&self, totals: &[(Stage, u64, u64)]) {
+        for &(stage, nanos, count) in totals {
+            let cell = &self.stages[stage as usize];
+            cell.nanos.fetch_add(nanos, Ordering::Relaxed);
+            cell.count.fetch_add(count, Ordering::Relaxed);
+        }
+    }
+
     /// Accumulated `(nanos, count)` for `stage`.
     pub fn stage_total(&self, stage: Stage) -> (u64, u64) {
         let cell = &self.stages[stage as usize];

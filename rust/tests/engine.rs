@@ -8,15 +8,29 @@
 //!   consume the identical RNG stream and produce identical parameters);
 //! * sharded-store concurrent-update correctness under the in-repo property
 //!   harness;
-//! * channel shutdown / no-deadlock at degenerate configurations;
+//! * channel shutdown / no-deadlock at degenerate configurations (under a
+//!   hard watchdog so a regression fails in bounded time);
 //! * the `--engine-staleness` window: `k = 0` bit-identical through the
 //!   versioned-snapshot dispatch path (outcomes AND final params), `k > 0`
 //!   terminating with observed staleness exactly `min(k, steps − 1)` and
-//!   loss still descending (`docs/CONCURRENCY.md`).
+//!   loss still descending (`docs/CONCURRENCY.md`);
+//! * multi-process mode (`--engine-processes`): the actor fleet over unix
+//!   sockets is bit-identical to the sync trainer AND the in-process async
+//!   engine — outcomes and final parameters — on both workloads, at
+//!   several process/shard splits, including `--stream`
+//!   (`docs/ENGINE.md`; the fault-injection side lives in
+//!   `tests/engine_fault.rs`).
+
+mod support;
+
+use support::{
+    assert_outcomes_identical, assert_params_identical, assert_streaming_identical, gen_cfg,
+    streaming_cfg, sync_streaming, text_cfg, tiny_cfg, tiny_nlu_cfg,
+};
 
 use sparse_dp_emb::config::RunConfig;
 use sparse_dp_emb::coordinator::step::{GradBundle, StepState};
-use sparse_dp_emb::coordinator::{Algorithm, StreamingOutcome, StreamingTrainer, Trainer};
+use sparse_dp_emb::coordinator::{Algorithm, Trainer};
 use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig, TRAIN_DAYS};
 use sparse_dp_emb::engine::{self, ShardedStore, ShardedTable};
 use sparse_dp_emb::models::ParamStore;
@@ -25,54 +39,6 @@ use sparse_dp_emb::runtime::Runtime;
 use sparse_dp_emb::selection::FrequencySource;
 use sparse_dp_emb::sparse::{DenseState, Optimizer, RowSparseGrad};
 use sparse_dp_emb::util::rng::Xoshiro256;
-
-fn tiny_cfg(algo: Algorithm) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.model = "criteo-tiny".into();
-    cfg.algorithm = algo;
-    cfg.steps = 6;
-    cfg.eval_batches = 2;
-    cfg.c2 = 0.5;
-    cfg
-}
-
-fn gen_cfg(rt: &Runtime, cfg: &RunConfig) -> CriteoConfig {
-    let model = rt.manifest.model(&cfg.model).unwrap();
-    let vocabs = model.attr_usize_list("vocabs").unwrap();
-    CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A)
-}
-
-fn tiny_nlu_cfg(algo: Algorithm) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.model = "nlu-tiny".into();
-    cfg.algorithm = algo;
-    cfg.steps = 4;
-    cfg.eval_batches = 2;
-    cfg.c2 = 0.5;
-    cfg.tau = 2.0;
-    cfg
-}
-
-fn text_cfg(rt: &Runtime, cfg: &RunConfig) -> TextConfig {
-    let model = rt.manifest.model(&cfg.model).unwrap();
-    TextConfig::from_model(model, cfg.seed ^ 0xDA7A).unwrap()
-}
-
-fn assert_outcomes_identical(
-    a: &sparse_dp_emb::coordinator::TrainOutcome,
-    b: &sparse_dp_emb::coordinator::TrainOutcome,
-    what: &str,
-) {
-    assert_eq!(a.loss_history, b.loss_history, "{what}: loss history");
-    assert_eq!(a.utility, b.utility, "{what}: utility");
-    assert_eq!(a.eval_loss, b.eval_loss, "{what}: eval loss");
-    assert_eq!(
-        a.emb_grad_coords_per_step, b.emb_grad_coords_per_step,
-        "{what}: emb coords/step"
-    );
-    assert_eq!(a.sigma1, b.sigma1, "{what}: sigma1");
-    assert_eq!(a.sigma2, b.sigma2, "{what}: sigma2");
-}
 
 #[test]
 fn sync_and_async_outcomes_match_exactly() {
@@ -210,14 +176,7 @@ fn sync_and_async_match_exactly_with_threaded_kernels() {
         };
         let what = format!("{model} threaded kernels");
         assert_outcomes_identical(&sync_out, &async_out, &what);
-        for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
-            assert_eq!(
-                pa.tensor.as_f32().unwrap(),
-                pb.tensor.as_f32().unwrap(),
-                "{what}: param {} diverged",
-                pa.name
-            );
-        }
+        assert_params_identical(&trainer.store, &async_store, &what);
     }
 }
 
@@ -248,20 +207,7 @@ fn sync_and_async_lora_outcomes_and_params_match_exactly() {
                 let (async_out, async_store) = engine::run_with_params(&c, &rt).unwrap();
                 let what = format!("{model} {algo:?} ({gw},{dw},{shards},{mb})");
                 assert_outcomes_identical(&sync_out, &async_out, &what);
-                assert_eq!(
-                    trainer.store.params.len(),
-                    async_store.params.len(),
-                    "{what}: param count"
-                );
-                for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
-                    assert_eq!(pa.name, pb.name, "{what}");
-                    assert_eq!(
-                        pa.tensor.as_f32().unwrap(),
-                        pb.tensor.as_f32().unwrap(),
-                        "{what}: param {} diverged",
-                        pa.name
-                    );
-                }
+                assert_params_identical(&trainer.store, &async_store, &what);
             }
         }
     }
@@ -361,15 +307,7 @@ fn noise_draw_order_is_worker_count_invariant() {
     assert_eq!(state_a.rng.next_u64(), state_b.rng.next_u64());
     // identical parameters, coordinate for coordinate
     let back = sharded.into_store().unwrap();
-    for (pa, pb) in sink_a.params.iter().zip(&back.params) {
-        assert_eq!(pa.name, pb.name);
-        assert_eq!(
-            pa.tensor.as_f32().unwrap(),
-            pb.tensor.as_f32().unwrap(),
-            "param {} diverged",
-            pa.name
-        );
-    }
+    assert_params_identical(&sink_a, &back, "sharded sink");
 }
 
 #[test]
@@ -417,29 +355,34 @@ fn prop_sharded_concurrent_disjoint_updates_match_sequential() {
 
 #[test]
 fn engine_handles_degenerate_configs_without_deadlock() {
-    let rt = Runtime::builtin();
+    // Hard watchdog: a shutdown regression here must fail in bounded time,
+    // not hang the suite (the multi-process analogue with killed actor
+    // children lives in tests/engine_fault.rs).
+    support::watchdog(120, "degenerate engine configs", || {
+        let rt = Runtime::builtin();
 
-    // zero steps: nothing to train, eval only
-    let mut cfg = tiny_cfg(Algorithm::NonPrivate);
-    cfg.steps = 0;
-    let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
-    assert!(out.loss_history.is_empty());
+        // zero steps: nothing to train, eval only
+        let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+        cfg.steps = 0;
+        let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
+        assert!(out.loss_history.is_empty());
 
-    // one step, minimal channel, more workers than work
-    let mut cfg = tiny_cfg(Algorithm::NonPrivate);
-    cfg.steps = 1;
-    cfg.eval_batches = 1;
-    cfg.engine.grad_workers = 8;
-    cfg.engine.data_workers = 6;
-    cfg.engine.channel_depth = 1;
-    let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
-    assert_eq!(out.loss_history.len(), 1);
+        // one step, minimal channel, more workers than work
+        let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+        cfg.steps = 1;
+        cfg.eval_batches = 1;
+        cfg.engine.grad_workers = 8;
+        cfg.engine.data_workers = 6;
+        cfg.engine.channel_depth = 1;
+        let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
+        assert_eq!(out.loss_history.len(), 1);
 
-    // unknown model errors cleanly instead of hanging
-    let mut cfg = tiny_cfg(Algorithm::NonPrivate);
-    cfg.model = "no-such-model".into();
-    let vocabs = vec![8usize];
-    assert!(engine::run_pctr(&cfg, &rt, CriteoConfig::new(vocabs, 1)).is_err());
+        // unknown model errors cleanly instead of hanging
+        let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+        cfg.model = "no-such-model".into();
+        let vocabs = vec![8usize];
+        assert!(engine::run_pctr(&cfg, &rt, CriteoConfig::new(vocabs, 1)).is_err());
+    });
 }
 
 #[test]
@@ -462,10 +405,10 @@ fn engine_rejects_mismatched_generator_geometry() {
 
 #[test]
 fn staleness_zero_is_bit_identical_on_outcomes_and_params() {
-    // The tentpole's k = 0 acceptance bar: the explicit default window must
-    // reproduce the sync trainer bit for bit through the versioned-snapshot
-    // dispatch path — outcomes AND final parameters — on both the pCTR
-    // tower and a Table-1 LoRA rank model, at non-default worker settings.
+    // The explicit default window must reproduce the sync trainer bit for
+    // bit through the versioned-snapshot dispatch path — outcomes AND final
+    // parameters — on both the pCTR tower and a Table-1 LoRA rank model, at
+    // non-default worker settings.
     let rt = Runtime::builtin();
 
     let mut cfg = tiny_cfg(Algorithm::DpAdaFest);
@@ -479,14 +422,7 @@ fn staleness_zero_is_bit_identical_on_outcomes_and_params() {
     let (async_out, async_store) = engine::run_with_params(&cfg, &rt).unwrap();
     assert_outcomes_identical(&sync_out, &async_out, "staleness 0 pctr");
     assert_eq!(async_out.telemetry.max_staleness, 0, "k=0 must never observe staleness");
-    for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
-        assert_eq!(
-            pa.tensor.as_f32().unwrap(),
-            pb.tensor.as_f32().unwrap(),
-            "staleness 0 pctr: param {} diverged",
-            pa.name
-        );
-    }
+    assert_params_identical(&trainer.store, &async_store, "staleness 0 pctr");
 
     let mut cfg = tiny_nlu_cfg(Algorithm::DpAdaFest);
     cfg.model = "nlu-tiny-lora4".into();
@@ -499,14 +435,7 @@ fn staleness_zero_is_bit_identical_on_outcomes_and_params() {
     let (async_out, async_store) = engine::run_with_params(&cfg, &rt).unwrap();
     assert_outcomes_identical(&sync_out, &async_out, "staleness 0 lora4");
     assert_eq!(async_out.telemetry.max_staleness, 0, "k=0 must never observe staleness");
-    for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
-        assert_eq!(
-            pa.tensor.as_f32().unwrap(),
-            pb.tensor.as_f32().unwrap(),
-            "staleness 0 lora4: param {} diverged",
-            pa.name
-        );
-    }
+    assert_params_identical(&trainer.store, &async_store, "staleness 0 lora4");
 }
 
 #[test]
@@ -565,32 +494,6 @@ fn streaming_with_staleness_window_runs_and_bounds_staleness() {
 }
 
 // ---- streaming (§4.3) mode ----
-
-fn streaming_cfg(algo: Algorithm, source: FrequencySource, period: usize) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.model = "criteo-tiny".into();
-    cfg.algorithm = algo;
-    cfg.steps = 18; // 1 step/day over the 18 training days
-    cfg.eval_batches = 4;
-    cfg.c2 = 0.5;
-    cfg.fest_top_k = 64;
-    cfg.freq_source = source;
-    cfg.streaming_period = period;
-    cfg
-}
-
-fn sync_streaming(cfg: &RunConfig, rt: &Runtime, gcfg: &CriteoConfig) -> StreamingOutcome {
-    let gen = SynthCriteo::new(gcfg.clone());
-    let trainer = Trainer::new(cfg.clone(), rt).unwrap();
-    let mut st = StreamingTrainer::new(trainer, 2);
-    st.run(&gen).unwrap()
-}
-
-fn assert_streaming_identical(a: &StreamingOutcome, b: &StreamingOutcome, what: &str) {
-    assert_outcomes_identical(&a.outcome, &b.outcome, what);
-    assert_eq!(a.per_day_auc, b.per_day_auc, "{what}: per-day AUC");
-    assert_eq!(a.reselections, b.reselections, "{what}: reselections");
-}
 
 #[test]
 fn streaming_sync_and_async_match_for_all_frequency_sources() {
@@ -691,4 +594,132 @@ fn fest_preselection_paths_agree() {
     let sync_out = trainer.run_pctr(&gen).unwrap();
     let async_out = engine::run_pctr(&cfg, &rt, gcfg).unwrap();
     assert_outcomes_identical(&sync_out, &async_out, "DpAdaFestPlus");
+}
+
+// ---- multi-process mode (`--engine-processes`) ----
+
+/// The three-way bit-exactness bar on one config: sync trainer ==
+/// in-process async == multi-process actor fleet, on outcomes AND final
+/// parameters, at each `(processes, shards, data actors)` split.  Run
+/// under a watchdog — a wire-protocol regression must fail in bounded
+/// time, not hang the suite.
+fn three_way_multi_process(cfg: RunConfig, what: &'static str) {
+    support::use_cli_actor_exe();
+    support::watchdog(300, what, move || {
+        let rt = Runtime::builtin();
+        let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+        let sync_out = match rt.manifest.model(&cfg.model).unwrap().kind.as_str() {
+            "pctr" => {
+                let gen = SynthCriteo::new(gen_cfg(&rt, &cfg));
+                trainer.run_pctr(&gen).unwrap()
+            }
+            _ => {
+                let gen = SynthText::new(text_cfg(&rt, &cfg));
+                trainer.run_text(&gen).unwrap()
+            }
+        };
+        let (async_out, async_store) = engine::run_with_params(&cfg, &rt).unwrap();
+        assert_outcomes_identical(&sync_out, &async_out, &format!("{what}: in-process"));
+        assert_params_identical(&trainer.store, &async_store, &format!("{what}: in-process"));
+
+        // (gradient actor processes, shards per actor table, data actors)
+        for (procs, shards, data) in [(2, 2, 2), (3, 1, 1)] {
+            let mut c = cfg.clone();
+            c.engine.processes = procs;
+            c.engine.shards = shards;
+            c.engine.data_workers = data;
+            let (mp_out, mp_store) = engine::run_with_params(&c, &rt).unwrap();
+            let label = format!("{what}: {procs} procs, {shards} shards, {data} data");
+            assert_outcomes_identical(&sync_out, &mp_out, &label);
+            assert_params_identical(&trainer.store, &mp_store, &label);
+            assert_outcomes_identical(&async_out, &mp_out, &format!("{label} vs async"));
+            assert_params_identical(&async_store, &mp_store, &format!("{label} vs async"));
+        }
+    });
+}
+
+#[test]
+fn multi_process_pctr_dp_sgd_matches_sync_and_async_exactly() {
+    three_way_multi_process(tiny_cfg(Algorithm::DpSgd), "mp criteo DpSgd");
+}
+
+#[test]
+fn multi_process_pctr_dp_ada_fest_matches_sync_and_async_exactly() {
+    three_way_multi_process(tiny_cfg(Algorithm::DpAdaFest), "mp criteo DpAdaFest");
+}
+
+#[test]
+fn multi_process_lora_dp_sgd_matches_sync_and_async_exactly() {
+    let mut cfg = tiny_nlu_cfg(Algorithm::DpSgd);
+    cfg.model = "nlu-tiny-lora4".into();
+    three_way_multi_process(cfg, "mp lora4 DpSgd");
+}
+
+#[test]
+fn multi_process_lora_dp_ada_fest_matches_sync_and_async_exactly() {
+    let mut cfg = tiny_nlu_cfg(Algorithm::DpAdaFest);
+    cfg.model = "nlu-tiny-lora4".into();
+    three_way_multi_process(cfg, "mp lora4 DpAdaFest");
+}
+
+#[test]
+fn multi_process_streaming_matches_sync_and_counts_reselections() {
+    // `--stream --engine-processes`: per-batch frequency counts and the
+    // PriorPass warmup batches ride the wire from the data actors, the
+    // barrier still drives every DP-FEST reselection — the streaming
+    // outcome, per-day AUCs, and reselection count are bit-identical to
+    // the sync StreamingTrainer.
+    support::use_cli_actor_exe();
+    support::watchdog(300, "mp streaming", || {
+        let rt = Runtime::builtin();
+        let cfg = streaming_cfg(Algorithm::DpFest, FrequencySource::Streaming, 4);
+        let gcfg = gen_cfg(&rt, &cfg).with_drift();
+        let sync_out = sync_streaming(&cfg, &rt, &gcfg);
+        assert_eq!(sync_out.reselections, TRAIN_DAYS.div_ceil(4));
+        for (procs, shards, data) in [(2, 4, 2), (3, 1, 1)] {
+            let mut c = cfg.clone();
+            c.engine.processes = procs;
+            c.engine.shards = shards;
+            c.engine.data_workers = data;
+            let mp_out = engine::run_streaming(&c, &rt, gcfg.clone(), 2).unwrap();
+            assert_streaming_identical(
+                &sync_out,
+                &mp_out,
+                &format!("mp streaming ({procs},{shards},{data})"),
+            );
+        }
+
+        // PriorPass over the wire: a frozen frequency source's warmup pass
+        // is generated by the data actors too (sequence keys ahead of the
+        // training steps), and the single barrier-side selection matches.
+        let cfg = streaming_cfg(Algorithm::DpFest, FrequencySource::FirstDay, 4);
+        let gcfg = gen_cfg(&rt, &cfg).with_drift();
+        let sync_out = sync_streaming(&cfg, &rt, &gcfg);
+        assert_eq!(sync_out.reselections, 1);
+        let mut c = cfg.clone();
+        c.engine.processes = 2;
+        c.engine.data_workers = 2;
+        let mp_out = engine::run_streaming(&c, &rt, gcfg, 2).unwrap();
+        assert_streaming_identical(&sync_out, &mp_out, "mp streaming FirstDay prior");
+    });
+}
+
+#[test]
+fn multi_process_staleness_window_still_terminates_and_learns() {
+    // `--engine-staleness` composes with `--engine-processes`: the barrier
+    // pipelines k steps ahead over the sockets, the run terminates, and the
+    // observed snapshot age hits exactly min(k, steps − 1) — the FIFO
+    // scatter-before-fetch ordering holds at any window.
+    support::use_cli_actor_exe();
+    support::watchdog(300, "mp staleness", || {
+        let rt = Runtime::builtin();
+        let mut cfg = tiny_cfg(Algorithm::NonPrivate);
+        cfg.steps = 12;
+        cfg.engine.staleness = 2;
+        cfg.engine.processes = 2;
+        let out = engine::run_pctr(&cfg, &rt, gen_cfg(&rt, &cfg)).unwrap();
+        assert_eq!(out.loss_history.len(), 12);
+        assert!(out.loss_history.iter().all(|l| l.is_finite()));
+        assert_eq!(out.telemetry.max_staleness, 2);
+    });
 }

@@ -1,0 +1,90 @@
+//! Fault injection for the multi-process engine: abort one actor process
+//! mid-run (a hard `process::exit`, no shutdown protocol) and prove the
+//! barrier surfaces an error in **bounded time** — no deadlock, no hung
+//! channel waits, and no orphaned actor processes left behind.
+//!
+//! This lives in its own test binary on purpose: the fault spec set by
+//! `engine::actor::set_fault` is process-global (it rides the environment
+//! of every actor child spawned from this process afterwards), so it must
+//! never share a binary with the healthy multi-process runs in
+//! `tests/engine.rs` / `tests/telemetry.rs`.  For the same reason both
+//! fault scenarios run sequentially inside ONE `#[test]`.
+
+mod support;
+
+use sparse_dp_emb::coordinator::Algorithm;
+use sparse_dp_emb::engine;
+use sparse_dp_emb::engine::actor::set_fault;
+use sparse_dp_emb::runtime::Runtime;
+
+/// Assert no live actor child survived the failed run.  `ActorSet::drop`
+/// kills and reaps every child on the error path, so the kernel's
+/// child list for this process must be empty again.  (If this kernel was
+/// built without `CONFIG_PROC_CHILDREN` the probe files don't exist and
+/// the check degrades to a no-op rather than a false failure.)
+fn assert_no_actor_children(what: &str) {
+    let mut children = Vec::new();
+    if let Ok(tasks) = std::fs::read_dir("/proc/self/task") {
+        for task in tasks.flatten() {
+            let path = task.path().join("children");
+            if let Ok(list) = std::fs::read_to_string(path) {
+                children.extend(list.split_whitespace().map(str::to_owned));
+            }
+        }
+    }
+    assert!(
+        children.is_empty(),
+        "{what}: orphaned child processes after the failed run: {children:?}"
+    );
+}
+
+#[test]
+fn killed_actor_processes_fail_the_run_in_bounded_time() {
+    support::use_cli_actor_exe();
+
+    // --- Scenario 1: a gradient actor dies mid-run ------------------------
+    // `grad:0:2` aborts gradient actor 0 right after its second ChunkResult
+    // frame.  On criteo-tiny each of the two actors owns one reduction
+    // chunk per step, so the abort races the barrier's next interaction
+    // with the dead peer: the error surfaces either from a read side
+    // ("… terminated …" via the reader threads / the aggregation barrier's
+    // worker-down poll) or from a write to the closed socket (the
+    // "… gradient actor" context on FetchRows/Scatter/StepData sends).
+    // Both are bounded-time and attribute the death to a gradient actor.
+    set_fault("grad:0:2");
+    let err = support::watchdog(120, "grad-actor death", || {
+        let mut cfg = support::tiny_cfg(Algorithm::DpSgd);
+        cfg.engine.processes = 2;
+        cfg.engine.data_workers = 1;
+        let rt = Runtime::builtin();
+        engine::run_with_params(&cfg, &rt)
+    })
+    .expect_err("a dead gradient actor must fail the run, not hang it");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("gradient actor") || msg.contains("gradient worker"),
+        "grad-actor death surfaced an unrelated error: {msg}"
+    );
+    assert_no_actor_children("grad-actor death");
+
+    // --- Scenario 2: a data actor dies mid-sequence -----------------------
+    // With two data actors, actor 0 owns steps 0, 2, 4, …; `data:0:1`
+    // aborts it right after its first batch, so step 2 never arrives.  The
+    // batch stream's watchdog must convert the missing producer into an
+    // error instead of blocking on the channel forever.
+    set_fault("data:0:1");
+    let err = support::watchdog(120, "data-actor death", || {
+        let mut cfg = support::tiny_cfg(Algorithm::DpSgd);
+        cfg.engine.processes = 2;
+        cfg.engine.data_workers = 2;
+        let rt = Runtime::builtin();
+        engine::run_with_params(&cfg, &rt)
+    })
+    .expect_err("a dead data actor must fail the run, not hang it");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("terminated before producing step"),
+        "data-actor death surfaced an unrelated error: {msg}"
+    );
+    assert_no_actor_children("data-actor death");
+}

@@ -1,0 +1,159 @@
+//! Helpers shared by the engine-facing integration suites
+//! (`tests/engine.rs`, `tests/telemetry.rs`, `tests/engine_fault.rs`): the
+//! tiny run configs, the manifest-derived generator configs, the
+//! outcome/parameter bit-exactness assertions every sync-vs-async
+//! comparison uses, and the multi-process plumbing (CLI actor binary,
+//! hang watchdog).  Each test binary compiles its own copy and uses a
+//! subset, hence the `dead_code` allowance.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use sparse_dp_emb::config::RunConfig;
+use sparse_dp_emb::coordinator::{
+    Algorithm, StreamingOutcome, StreamingTrainer, TrainOutcome, Trainer,
+};
+use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, TextConfig};
+use sparse_dp_emb::models::ParamStore;
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::selection::FrequencySource;
+
+/// Six steps of the tiny pCTR tower — the cheapest end-to-end DP run.
+pub fn tiny_cfg(algo: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 6;
+    cfg.eval_batches = 2;
+    cfg.c2 = 0.5;
+    cfg
+}
+
+/// Four steps of the tiny NLU transformer.
+pub fn tiny_nlu_cfg(algo: Algorithm) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "nlu-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 4;
+    cfg.eval_batches = 2;
+    cfg.c2 = 0.5;
+    cfg.tau = 2.0;
+    cfg
+}
+
+/// The §4.3 streaming protocol config: one step per training day.
+pub fn streaming_cfg(algo: Algorithm, source: FrequencySource, period: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "criteo-tiny".into();
+    cfg.algorithm = algo;
+    cfg.steps = 18; // 1 step/day over the 18 training days
+    cfg.eval_batches = 4;
+    cfg.c2 = 0.5;
+    cfg.fest_top_k = 64;
+    cfg.freq_source = source;
+    cfg.streaming_period = period;
+    cfg
+}
+
+/// The pCTR generator config the CLI would derive for `cfg.model`.
+pub fn gen_cfg(rt: &Runtime, cfg: &RunConfig) -> CriteoConfig {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    let vocabs = model.attr_usize_list("vocabs").unwrap();
+    CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A)
+}
+
+/// The text generator config the CLI would derive for `cfg.model`.
+pub fn text_cfg(rt: &Runtime, cfg: &RunConfig) -> TextConfig {
+    let model = rt.manifest.model(&cfg.model).unwrap();
+    TextConfig::from_model(model, cfg.seed ^ 0xDA7A).unwrap()
+}
+
+/// Run the synchronous `StreamingTrainer` reference for a streaming config.
+pub fn sync_streaming(cfg: &RunConfig, rt: &Runtime, gcfg: &CriteoConfig) -> StreamingOutcome {
+    let gen = SynthCriteo::new(gcfg.clone());
+    let trainer = Trainer::new(cfg.clone(), rt).unwrap();
+    let mut st = StreamingTrainer::new(trainer, 2);
+    st.run(&gen).unwrap()
+}
+
+/// The bit-exactness bar on outcomes: every paper-semantic field equal.
+pub fn assert_outcomes_identical(a: &TrainOutcome, b: &TrainOutcome, what: &str) {
+    assert_eq!(a.loss_history, b.loss_history, "{what}: loss history");
+    assert_eq!(a.utility, b.utility, "{what}: utility");
+    assert_eq!(a.eval_loss, b.eval_loss, "{what}: eval loss");
+    assert_eq!(
+        a.emb_grad_coords_per_step, b.emb_grad_coords_per_step,
+        "{what}: emb coords/step"
+    );
+    assert_eq!(a.sigma1, b.sigma1, "{what}: sigma1");
+    assert_eq!(a.sigma2, b.sigma2, "{what}: sigma2");
+}
+
+/// The bit-exactness bar on final parameters: same names, same f32 bits,
+/// coordinate for coordinate.
+pub fn assert_params_identical(a: &ParamStore, b: &ParamStore, what: &str) {
+    assert_eq!(a.params.len(), b.params.len(), "{what}: param count");
+    for (pa, pb) in a.params.iter().zip(&b.params) {
+        assert_eq!(pa.name, pb.name, "{what}: param order");
+        assert_eq!(
+            pa.tensor.as_f32().unwrap(),
+            pb.tensor.as_f32().unwrap(),
+            "{what}: param {} diverged",
+            pa.name
+        );
+    }
+}
+
+/// Streaming-mode equality: the outcome, the per-day AUCs, and the DP-FEST
+/// reselection count.
+pub fn assert_streaming_identical(a: &StreamingOutcome, b: &StreamingOutcome, what: &str) {
+    assert_outcomes_identical(&a.outcome, &b.outcome, what);
+    assert_eq!(a.per_day_auc, b.per_day_auc, "{what}: per-day AUC");
+    assert_eq!(a.reselections, b.reselections, "{what}: reselections");
+}
+
+/// Route multi-process actor children through the CLI binary.
+///
+/// The test executable's `main` is the libtest harness, which never reaches
+/// `engine::actor::maybe_actor_main` — so spawning *ourselves* as an actor
+/// would rerun the test suite instead.  Every test that sets
+/// `engine.processes >= 2` must call this first.
+pub fn use_cli_actor_exe() {
+    sparse_dp_emb::engine::actor::set_actor_exe(PathBuf::from(env!(
+        "CARGO_BIN_EXE_sparse-dp-emb"
+    )));
+}
+
+/// Hard watchdog for shutdown/no-deadlock tests: run `f` on a helper
+/// thread and panic if it has not finished within `secs` — a bounded-time
+/// failure instead of a hung test binary.  A panic inside `f` is
+/// propagated unchanged.
+pub fn watchdog<T, F>(secs: u64, what: &str, f: F) -> T
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::Builder::new()
+        .name(format!("watchdog:{what}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .unwrap();
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = handle.join();
+            v
+        }
+        // the sender dropped without sending: `f` panicked — re-raise it
+        Err(RecvTimeoutError::Disconnected) => match handle.join() {
+            Err(panic) => std::panic::resume_unwind(panic),
+            Ok(()) => unreachable!("worker exited without sending or panicking"),
+        },
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("{what}: still running after the {secs}s watchdog — deadlock or orphaned wait")
+        }
+    }
+}

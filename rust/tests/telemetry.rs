@@ -8,47 +8,24 @@
 //!   coordinate count equals the analytic dense `V·d` baseline (reduction
 //!   factor exactly 1), span counts match the step/chunk arithmetic, and
 //!   the summary's step count equals the configured run length;
+//! * both hold **across the socket boundary** — in multi-process mode the
+//!   actors' stage timers ride `DataDone`/`FinalizeResult` frames and
+//!   merge into the barrier hub (`Telemetry::merge_stage_totals`), so the
+//!   same step/chunk arithmetic and paper gauges come out;
 //! * the checked-in `BENCH_engine.json` parses under the current schema.
 
-use sparse_dp_emb::config::RunConfig;
+mod support;
+
+use support::{
+    assert_outcomes_identical, assert_params_identical, gen_cfg, text_cfg, tiny_cfg, tiny_nlu_cfg,
+};
+
 use sparse_dp_emb::coordinator::{Algorithm, Trainer};
-use sparse_dp_emb::data::{CriteoConfig, SynthCriteo, SynthText, TextConfig};
+use sparse_dp_emb::data::{SynthCriteo, SynthText};
 use sparse_dp_emb::engine;
 use sparse_dp_emb::runtime::Runtime;
 use sparse_dp_emb::telemetry::json::Json;
-use sparse_dp_emb::telemetry::{BenchSnapshot, Stage, BENCH_SCHEMA_VERSION};
-
-fn tiny_cfg(algo: Algorithm) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.model = "criteo-tiny".into();
-    cfg.algorithm = algo;
-    cfg.steps = 6;
-    cfg.eval_batches = 2;
-    cfg.c2 = 0.5;
-    cfg
-}
-
-fn tiny_nlu_cfg(algo: Algorithm) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.model = "nlu-tiny".into();
-    cfg.algorithm = algo;
-    cfg.steps = 4;
-    cfg.eval_batches = 2;
-    cfg.c2 = 0.5;
-    cfg.tau = 2.0;
-    cfg
-}
-
-fn gen_cfg(rt: &Runtime, cfg: &RunConfig) -> CriteoConfig {
-    let model = rt.manifest.model(&cfg.model).unwrap();
-    let vocabs = model.attr_usize_list("vocabs").unwrap();
-    CriteoConfig::new(vocabs, cfg.seed ^ 0xDA7A)
-}
-
-fn text_cfg(rt: &Runtime, cfg: &RunConfig) -> TextConfig {
-    let model = rt.manifest.model(&cfg.model).unwrap();
-    TextConfig::from_model(model, cfg.seed ^ 0xDA7A).unwrap()
-}
+use sparse_dp_emb::telemetry::{BenchSnapshot, Stage, Telemetry, BENCH_SCHEMA_VERSION};
 
 /// A per-test temp sink path (runs share a process; paths must not collide).
 fn sink_path(tag: &str) -> String {
@@ -63,22 +40,6 @@ fn read_jsonl(path: &str) -> Vec<Json> {
     let text = std::fs::read_to_string(path).unwrap();
     std::fs::remove_file(path).ok();
     text.lines().map(|l| Json::parse(l).unwrap()).collect()
-}
-
-fn assert_outcomes_identical(
-    a: &sparse_dp_emb::coordinator::TrainOutcome,
-    b: &sparse_dp_emb::coordinator::TrainOutcome,
-    what: &str,
-) {
-    assert_eq!(a.loss_history, b.loss_history, "{what}: loss history");
-    assert_eq!(a.utility, b.utility, "{what}: utility");
-    assert_eq!(a.eval_loss, b.eval_loss, "{what}: eval loss");
-    assert_eq!(
-        a.emb_grad_coords_per_step, b.emb_grad_coords_per_step,
-        "{what}: emb coords/step"
-    );
-    assert_eq!(a.sigma1, b.sigma1, "{what}: sigma1");
-    assert_eq!(a.sigma2, b.sigma2, "{what}: sigma2");
 }
 
 /// The paper-semantic step fields two traces of the same run must agree on.
@@ -111,9 +72,10 @@ fn assert_paper_rows_identical(a: &[Json], b: &[Json], what: &str) {
 
 #[test]
 fn sync_and_async_pctr_match_exactly_with_live_sink() {
-    // The tentpole's acceptance bar: telemetry (with a live JSONL sink on
-    // both paths) perturbs nothing — outcomes, final parameters, and the
-    // paper gauges in the traces are all bit-identical sync vs async.
+    // The passive-instrumentation acceptance bar: telemetry (with a live
+    // JSONL sink on both paths) perturbs nothing — outcomes, final
+    // parameters, and the paper gauges in the traces are all bit-identical
+    // sync vs async.
     let rt = Runtime::builtin();
     for algo in [Algorithm::DpSgd, Algorithm::DpAdaFest] {
         let sync_path = sink_path(&format!("pctr_sync_{algo:?}"));
@@ -135,14 +97,7 @@ fn sync_and_async_pctr_match_exactly_with_live_sink() {
 
         let what = format!("pctr {algo:?} with sink");
         assert_outcomes_identical(&sync_out, &async_out, &what);
-        for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
-            assert_eq!(
-                pa.tensor.as_f32().unwrap(),
-                pb.tensor.as_f32().unwrap(),
-                "{what}: param {} diverged",
-                pa.name
-            );
-        }
+        assert_params_identical(&trainer.store, &async_store, &what);
 
         let sync_lines = read_jsonl(&sync_path);
         let async_lines = read_jsonl(&async_path);
@@ -187,14 +142,7 @@ fn sync_and_async_nlu_match_exactly_with_live_sink() {
     let (async_out, async_store) = engine::run_with_params(&acfg, &rt).unwrap();
 
     assert_outcomes_identical(&sync_out, &async_out, "nlu with sink");
-    for (pa, pb) in trainer.store.params.iter().zip(&async_store.params) {
-        assert_eq!(
-            pa.tensor.as_f32().unwrap(),
-            pb.tensor.as_f32().unwrap(),
-            "nlu with sink: param {} diverged",
-            pa.name
-        );
-    }
+    assert_params_identical(&trainer.store, &async_store, "nlu with sink");
     assert_paper_rows_identical(
         &read_jsonl(&sync_path),
         &read_jsonl(&async_path),
@@ -288,6 +236,84 @@ fn span_and_gauge_totals_match_step_arithmetic() {
     assert_eq!(tele.stage(Stage::DataGenerate).unwrap().count, cfg.steps);
     assert!(tele.batch_queue_max >= 1, "batch channel never carried a message");
     assert!(tele.task_queue_max >= 1, "task channel never carried a message");
+}
+
+#[test]
+fn multi_process_stage_totals_cross_the_socket_boundary() {
+    // The same step/chunk arithmetic as the in-process async path, but with
+    // DataGenerate counted inside the data actor processes and ChunkCompute
+    // inside the gradient actors — their totals ride the wire on
+    // `DataDone` / `FinalizeResult` frames and merge into the barrier hub,
+    // so a lost or double merge shows up as an exact count mismatch.  The
+    // queue gauges also cross the boundary: Batch rises in the data reader
+    // threads, Task rises at step dispatch and falls as chunk results
+    // arrive.  And with a live JSONL sink, the paper gauges match the sync
+    // trace row for row.
+    support::use_cli_actor_exe();
+    support::watchdog(300, "mp telemetry", || {
+        let rt = Runtime::builtin();
+        let cfg = tiny_cfg(Algorithm::DpAdaFest);
+
+        let sync_path = sink_path("mp_sync");
+        let mut scfg = cfg.clone();
+        scfg.metrics_out = sync_path.clone();
+        let gen = SynthCriteo::new(gen_cfg(&rt, &scfg));
+        let mut trainer = Trainer::new(scfg.clone(), &rt).unwrap();
+        let batch = trainer.batch_size();
+        trainer.run_pctr(&gen).unwrap();
+
+        let mp_path = sink_path("mp_procs");
+        let mut acfg = cfg.clone();
+        acfg.metrics_out = mp_path.clone();
+        acfg.engine.processes = 2;
+        acfg.engine.data_workers = 2;
+        let run = engine::run_pctr(&acfg, &rt, gen_cfg(&rt, &acfg)).unwrap();
+        let tele = &run.telemetry;
+        assert_eq!(tele.steps, cfg.steps);
+        let chunks_per_step = batch.div_ceil(16) as u64;
+        assert_eq!(
+            tele.stage(Stage::ChunkCompute).unwrap().count,
+            cfg.steps * chunks_per_step,
+            "grad actors' chunk spans must merge across the socket"
+        );
+        assert_eq!(
+            tele.stage(Stage::DataGenerate).unwrap().count,
+            cfg.steps,
+            "data actors' generate spans must merge across the socket"
+        );
+        assert_eq!(tele.stage(Stage::Select).unwrap().count, cfg.steps);
+        assert_eq!(tele.stage(Stage::Snapshot).unwrap().count, cfg.steps);
+        assert_eq!(tele.stage(Stage::Collect).unwrap().count, cfg.steps);
+        assert!(tele.batch_queue_max >= 1, "batch gauge never rose at the socket boundary");
+        assert!(tele.task_queue_max >= 1, "task gauge never rose at dispatch");
+
+        assert_paper_rows_identical(
+            &read_jsonl(&sync_path),
+            &read_jsonl(&mp_path),
+            "mp paper gauges",
+        );
+    });
+}
+
+#[test]
+fn merge_stage_totals_adds_nanos_and_counts() {
+    // The wire-merge primitive the actor readers use: totals add into the
+    // hub per stage — nanos to nanos, counts to counts — and stages absent
+    // from the shipped list stay untouched.
+    let hub = Telemetry::new();
+    hub.time(Stage::Select, || std::hint::black_box(0));
+    let (nanos0, count0) = hub.stage_total(Stage::Select);
+    assert_eq!(count0, 1);
+
+    hub.merge_stage_totals(&[
+        (Stage::Select, 1_000, 3),
+        (Stage::ChunkCompute, 2_500, 7),
+    ]);
+    hub.merge_stage_totals(&[(Stage::ChunkCompute, 500, 1)]);
+
+    assert_eq!(hub.stage_total(Stage::Select), (nanos0 + 1_000, count0 + 3));
+    assert_eq!(hub.stage_total(Stage::ChunkCompute), (3_000, 8));
+    assert_eq!(hub.stage_total(Stage::DataGenerate), (0, 0), "untouched stage must stay zero");
 }
 
 #[test]

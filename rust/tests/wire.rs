@@ -1,0 +1,495 @@
+//! Property suite for the multi-process wire format (`engine::wire`).
+//!
+//! The format's contract (see the module doc on `rust/src/engine/wire.rs`)
+//! is three-fold, and each clause gets a property here:
+//!
+//! 1. **Canonical round-trip** — for every frame type, over random payloads
+//!    (including NaN/inf/-0.0/subnormal floats built from raw bit patterns),
+//!    `encode → decode → encode` reproduces the original bytes exactly.
+//!    Comparing *re-encoded bytes* rather than decoded values is what makes
+//!    the float check a `to_bits` equality: a NaN that survived decoding
+//!    only counts if its exact payload bits survived too.
+//! 2. **Strict and total decoding** — truncated frames, trailing garbage,
+//!    flipped bytes, and arbitrary byte soup return errors (or, rarely, a
+//!    valid frame that still re-encodes canonically); nothing panics and no
+//!    length prefix can trigger an oversized allocation.
+//! 3. **Framing layer** — `write_frame`/`read_frame` round-trip streams of
+//!    frames, reject bodies above `MAX_FRAME` before allocating, and report
+//!    short reads as errors.
+
+use std::io::Cursor;
+
+use sparse_dp_emb::coordinator::streaming::PriorPass;
+use sparse_dp_emb::data::{Batch, CriteoConfig, GenConfig, PctrBatch, TextBatch, TextConfig};
+use sparse_dp_emb::engine::wire::{read_frame, write_frame, Dec, Enc, Frame, GradInit, StepData, MAX_FRAME};
+use sparse_dp_emb::engine::{BatchMsg, DataPlan};
+use sparse_dp_emb::proptest::{check, ensure, usize_in, CaseResult};
+use sparse_dp_emb::runtime::reference::ChunkGrads;
+use sparse_dp_emb::sparse::OptimizerKind;
+use sparse_dp_emb::telemetry::Stage;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------------------
+// random payload generators
+// ---------------------------------------------------------------------------
+
+/// An `f32` from a uniformly random bit pattern: hits NaNs (with payloads),
+/// ±inf, -0.0, and subnormals far more often than any value-space generator.
+fn any_f32(rng: &mut Xoshiro256) -> f32 {
+    f32::from_bits(rng.next_u64() as u32)
+}
+
+fn any_f64(rng: &mut Xoshiro256) -> f64 {
+    f64::from_bits(rng.next_u64())
+}
+
+fn f32_vec(rng: &mut Xoshiro256, max: usize) -> Vec<f32> {
+    (0..usize_in(rng, 0, max)).map(|_| any_f32(rng)).collect()
+}
+
+fn u32_vec(rng: &mut Xoshiro256, max: usize) -> Vec<u32> {
+    (0..usize_in(rng, 0, max))
+        .map(|_| rng.next_u64() as u32)
+        .collect()
+}
+
+fn i32_vec(rng: &mut Xoshiro256, max: usize) -> Vec<i32> {
+    (0..usize_in(rng, 0, max))
+        .map(|_| rng.next_u64() as i32)
+        .collect()
+}
+
+fn usize_vec(rng: &mut Xoshiro256, max: usize) -> Vec<usize> {
+    (0..usize_in(rng, 0, max))
+        .map(|_| rng.next_u64() as usize)
+        .collect()
+}
+
+/// A short string with multi-byte code points mixed in.
+fn any_str(rng: &mut Xoshiro256) -> String {
+    const ALPHABET: &[char] = &['a', 'Z', '0', '_', '/', '.', 'é', 'λ', '日', '🦀'];
+    (0..usize_in(rng, 0, 10))
+        .map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize])
+        .collect()
+}
+
+fn any_prior(rng: &mut Xoshiro256) -> PriorPass {
+    match rng.below(4) {
+        0 => PriorPass::None,
+        1 => PriorPass::FirstDay,
+        2 => PriorPass::AllDays,
+        _ => PriorPass::Sniff,
+    }
+}
+
+fn any_gen(rng: &mut Xoshiro256) -> GenConfig {
+    if rng.below(2) == 0 {
+        GenConfig::Pctr(CriteoConfig {
+            vocabs: usize_vec(rng, 6),
+            num_numeric: rng.next_u64() as usize,
+            seed: rng.next_u64(),
+            drift: rng.below(2) == 1,
+            drift_swap_frac: any_f64(rng),
+            drift_teacher: any_f64(rng),
+        })
+    } else {
+        GenConfig::Text(TextConfig {
+            vocab: rng.next_u64() as usize,
+            seq_len: rng.next_u64() as usize,
+            num_classes: rng.next_u64() as usize,
+            seed: rng.next_u64(),
+            informative: rng.next_u64() as usize,
+        })
+    }
+}
+
+fn any_plan(rng: &mut Xoshiro256) -> DataPlan {
+    DataPlan {
+        seed: rng.next_u64(),
+        batch_size: rng.next_u64() as usize,
+        steps: rng.next_u64(),
+        steps_per_day: if rng.below(2) == 1 { Some(rng.next_u64()) } else { None },
+        with_counts: rng.below(2) == 1,
+        prior: any_prior(rng),
+    }
+}
+
+/// The codec carries structure, not semantics: shape fields and payload
+/// lengths are deliberately *not* required to be mutually consistent here.
+fn any_batch(rng: &mut Xoshiro256) -> Batch {
+    if rng.below(2) == 0 {
+        Batch::Pctr(PctrBatch {
+            batch_size: rng.next_u64() as usize,
+            num_features: rng.next_u64() as usize,
+            num_numeric: rng.next_u64() as usize,
+            cat: i32_vec(rng, 12),
+            num: f32_vec(rng, 12),
+            y: f32_vec(rng, 12),
+        })
+    } else {
+        Batch::Text(TextBatch {
+            batch_size: rng.next_u64() as usize,
+            seq_len: rng.next_u64() as usize,
+            ids: i32_vec(rng, 12),
+            labels: i32_vec(rng, 12),
+        })
+    }
+}
+
+fn any_counts(rng: &mut Xoshiro256) -> Option<Vec<Vec<(u32, u32)>>> {
+    if rng.below(2) == 0 {
+        return None;
+    }
+    Some(
+        (0..usize_in(rng, 0, 4))
+            .map(|_| {
+                (0..usize_in(rng, 0, 5))
+                    .map(|_| (rng.next_u64() as u32, rng.next_u64() as u32))
+                    .collect()
+            })
+            .collect(),
+    )
+}
+
+fn any_stages(rng: &mut Xoshiro256) -> Vec<(Stage, u64, u64)> {
+    (0..usize_in(rng, 0, Stage::COUNT))
+        .map(|_| {
+            let stage = Stage::ALL[usize_in(rng, 0, Stage::COUNT - 1)];
+            (stage, rng.next_u64(), rng.next_u64())
+        })
+        .collect()
+}
+
+fn any_grads(rng: &mut Xoshiro256) -> ChunkGrads {
+    ChunkGrads {
+        lo: rng.next_u64() as usize,
+        hi: rng.next_u64() as usize,
+        loss_sum: any_f32(rng),
+        dense_grads: (0..usize_in(rng, 0, 4)).map(|_| f32_vec(rng, 8)).collect(),
+        zgrads: f32_vec(rng, 8),
+        counts: (0..usize_in(rng, 0, 8))
+            .map(|_| (rng.next_u64() as u32, any_f32(rng)))
+            .collect(),
+        scales: f32_vec(rng, 8),
+    }
+}
+
+/// One random instance of every frame type — each property case exercises
+/// all 13 variants, so coverage never depends on which tag a die roll picks.
+fn all_frames(rng: &mut Xoshiro256) -> Vec<Frame> {
+    vec![
+        Frame::Hello { role: rng.next_u64() as u8, index: rng.next_u64() as u32 },
+        Frame::DataInit {
+            gen: any_gen(rng),
+            plan: any_plan(rng),
+            stride: rng.next_u64() as u32,
+            offset: rng.next_u64() as u32,
+        },
+        Frame::GradInit(GradInit {
+            model: any_str(rng),
+            artifacts_dir: any_str(rng),
+            seed: rng.next_u64(),
+            opt_kind: if rng.below(2) == 0 { OptimizerKind::Sgd } else { OptimizerKind::Adagrad },
+            lr: any_f32(rng),
+            emb_params: u32_vec(rng, 6),
+            n_owners: rng.next_u64() as u32,
+            owner_index: rng.next_u64() as u32,
+            shards: rng.next_u64() as u32,
+            kernel_threads: rng.next_u64() as u32,
+        }),
+        Frame::Batch(BatchMsg {
+            step: rng.next_u64(),
+            batch: any_batch(rng),
+            counts: any_counts(rng),
+        }),
+        Frame::DataDone { stages: any_stages(rng) },
+        Frame::FetchRows {
+            rows: (0..usize_in(rng, 0, 4)).map(|_| u32_vec(rng, 8)).collect(),
+        },
+        Frame::RowValues {
+            values: (0..usize_in(rng, 0, 4)).map(|_| f32_vec(rng, 8)).collect(),
+        },
+        Frame::StepData(StepData {
+            step: rng.next_u64(),
+            chunk_lo: rng.next_u64() as u32,
+            chunk_hi: rng.next_u64() as u32,
+            c1: any_f32(rng),
+            c2: any_f32(rng),
+            batch: any_batch(rng),
+            feats: (0..usize_in(rng, 0, 3))
+                .map(|_| (u32_vec(rng, 6), f32_vec(rng, 12), rng.next_u64() as usize))
+                .collect(),
+            dense: (0..usize_in(rng, 0, 3))
+                .map(|_| (rng.next_u64() as u32, f32_vec(rng, 8)))
+                .collect(),
+        }),
+        Frame::ChunkResult {
+            step: rng.next_u64(),
+            chunk: rng.next_u64() as u32,
+            grads: any_grads(rng),
+        },
+        Frame::Scatter {
+            param: rng.next_u64() as u32,
+            rows: u32_vec(rng, 8),
+            values: f32_vec(rng, 16),
+        },
+        Frame::DenseScatter { param: rng.next_u64() as u32, values: f32_vec(rng, 16) },
+        Frame::Finalize,
+        Frame::FinalizeResult {
+            tables: (0..usize_in(rng, 0, 3))
+                .map(|_| (rng.next_u64() as u32, f32_vec(rng, 8), f32_vec(rng, 8)))
+                .collect(),
+            stages: any_stages(rng),
+        },
+    ]
+}
+
+fn roundtrip_canonical(frame: &Frame) -> CaseResult {
+    let body = frame.encode();
+    let decoded =
+        Frame::decode(&body).map_err(|e| format!("decode failed on {frame:?}: {e}"))?;
+    let re = decoded.encode();
+    ensure(
+        re == body,
+        format!("re-encode of {decoded:?} differs from original encoding of {frame:?}"),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// 1. canonical round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_frame_type_roundtrips_bit_exactly() {
+    check("frame round-trip is canonical", 150, |rng| {
+        for frame in all_frames(rng) {
+            roundtrip_canonical(&frame)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn float_special_values_survive_as_exact_bit_patterns() {
+    // The values a value-space comparison would mangle: NaN (quiet and
+    // payload-carrying), infinities, signed zero, a subnormal.
+    let specials = [
+        f32::NAN,
+        f32::from_bits(0x7fc0_dead), // NaN with a payload
+        f32::from_bits(0xffc0_0001), // negative NaN
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -0.0_f32,
+        f32::from_bits(1), // smallest subnormal
+        f32::MIN_POSITIVE,
+    ];
+    let frame = Frame::DenseScatter { param: 7, values: specials.to_vec() };
+    let body = frame.encode();
+    let decoded = Frame::decode(&body).unwrap();
+    assert_eq!(decoded.encode(), body, "special float bits changed in flight");
+    match decoded {
+        Frame::DenseScatter { values, .. } => {
+            let sent: Vec<u32> = specials.iter().map(|v| v.to_bits()).collect();
+            let got: Vec<u32> = values.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, sent, "to_bits mismatch on special values");
+        }
+        other => panic!("decoded to a different variant: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. strict, total decoding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_frames_error_rather_than_panic() {
+    check("strict prefixes never decode", 60, |rng| {
+        for frame in all_frames(rng) {
+            let body = frame.encode();
+            // Exhaustive prefixes for small bodies; a boundary-heavy sample
+            // for big ones (all-prefixes on a StepData body is quadratic).
+            let cuts: Vec<usize> = if body.len() <= 64 {
+                (0..body.len()).collect()
+            } else {
+                let mut c = vec![0, 1, body.len() / 2, body.len() - 1];
+                c.extend((0..12).map(|_| rng.below(body.len() as u64) as usize));
+                c
+            };
+            for cut in cuts {
+                ensure(
+                    Frame::decode(&body[..cut]).is_err(),
+                    format!("strict prefix of {} bytes decoded (cut at {cut})", body.len()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trailing_bytes_after_a_valid_payload_error() {
+    check("trailing bytes are rejected", 60, |rng| {
+        for frame in all_frames(rng) {
+            let mut body = frame.encode();
+            for _ in 0..usize_in(rng, 1, 4) {
+                body.push(rng.next_u64() as u8);
+            }
+            ensure(
+                Frame::decode(&body).is_err(),
+                "frame with trailing garbage decoded",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn flipped_bytes_stay_canonical_or_error() {
+    check("single-byte corruption is strict", 120, |rng| {
+        for frame in all_frames(rng) {
+            let mut body = frame.encode();
+            let pos = rng.below(body.len() as u64) as usize;
+            let flip = (rng.below(255) + 1) as u8; // never a zero XOR
+            body[pos] ^= flip;
+            if let Ok(decoded) = Frame::decode(&body) {
+                // A corrupted buffer may still parse (e.g. the flip landed in
+                // a float payload) — but then it must re-encode to exactly
+                // the corrupted bytes, or the codec is not canonical.
+                ensure(
+                    decoded.encode() == body,
+                    format!("corrupted body decoded non-canonically at byte {pos}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn random_byte_soup_never_panics_and_stays_canonical() {
+    check("garbage decode is total", 400, |rng| {
+        let n = usize_in(rng, 0, 160);
+        let body: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        if let Ok(decoded) = Frame::decode(&body) {
+            ensure(
+                decoded.encode() == body,
+                "garbage decoded to a frame that re-encodes differently",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unknown_tags_are_rejected() {
+    assert!(Frame::decode(&[]).is_err(), "empty body decoded");
+    assert!(Frame::decode(&[0]).is_err(), "tag 0 is not assigned");
+    for tag in 14..=255u8 {
+        assert!(Frame::decode(&[tag]).is_err(), "unassigned frame tag {tag} decoded");
+    }
+    // Out-of-range telemetry stage index inside an otherwise valid DataDone.
+    let mut e = Enc::new();
+    e.u8(5); // DataDone tag
+    e.usize(1);
+    e.u8(Stage::COUNT as u8);
+    e.u64(0);
+    e.u64(0);
+    assert!(
+        Frame::decode(&e.into_bytes()).is_err(),
+        "out-of-range stage index decoded"
+    );
+}
+
+#[test]
+fn length_prefixes_cannot_force_oversized_allocations() {
+    // A u64::MAX element count with no bytes behind it must be rejected by
+    // the remaining-bytes guard, not handed to Vec::with_capacity.
+    let mut e = Enc::new();
+    e.u64(u64::MAX);
+    let bytes = e.into_bytes();
+    assert!(Dec::new(&bytes).u32s().is_err());
+    assert!(Dec::new(&bytes).f32s().is_err());
+    assert!(Dec::new(&bytes).usizes().is_err());
+    assert!(Dec::new(&bytes).str().is_err());
+
+    // Same guard, reached through a full frame decode: a FetchRows claiming
+    // a huge outer vector.
+    let mut e = Enc::new();
+    e.u8(6); // FetchRows tag
+    e.u64(1 << 40);
+    assert!(Frame::decode(&e.into_bytes()).is_err());
+}
+
+#[test]
+fn primitive_decoders_are_strict() {
+    // bool accepts only 0 and 1 — anything else would break canonicality.
+    for b in 2..=255u8 {
+        assert!(Dec::new(&[b]).bool().is_err(), "bool byte {b} accepted");
+    }
+    assert!(!Dec::new(&[0]).bool().unwrap());
+    assert!(Dec::new(&[1]).bool().unwrap());
+
+    // Strings must be valid UTF-8.
+    let mut e = Enc::new();
+    e.usize(2);
+    e.u8(0xff);
+    e.u8(0xfe);
+    assert!(Dec::new(&e.into_bytes()).str().is_err(), "invalid UTF-8 accepted");
+
+    // finish() rejects unconsumed bytes.
+    let mut e = Enc::new();
+    e.u32(42);
+    e.u8(9);
+    let bytes = e.into_bytes();
+    let mut d = Dec::new(&bytes);
+    assert_eq!(d.u32().unwrap(), 42);
+    assert!(d.finish().is_err(), "trailing byte survived finish()");
+}
+
+// ---------------------------------------------------------------------------
+// 3. the framing layer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frame_streams_roundtrip_through_write_and_read() {
+    check("write_frame/read_frame stream round-trip", 40, |rng| {
+        let frames = all_frames(rng);
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).map_err(|e| format!("write failed: {e}"))?;
+        }
+        let mut r = Cursor::new(buf);
+        for f in &frames {
+            let got = read_frame(&mut r).map_err(|e| format!("read failed: {e}"))?;
+            ensure(got.encode() == f.encode(), "frame changed across the stream")?;
+        }
+        // The stream must be exactly drained.
+        ensure(read_frame(&mut r).is_err(), "phantom frame after the stream end")
+    });
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+    let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+    assert!(
+        err.to_string().contains("MAX_FRAME"),
+        "unexpected error for oversized prefix: {err}"
+    );
+}
+
+#[test]
+fn truncated_streams_error_mid_frame() {
+    check("short reads error", 40, |rng| {
+        let frame = &all_frames(rng)[usize_in(rng, 0, 12)];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        let cut = rng.below(buf.len() as u64) as usize;
+        buf.truncate(cut);
+        ensure(
+            read_frame(&mut Cursor::new(buf)).is_err(),
+            format!("truncated stream (cut {cut}) produced a frame"),
+        )
+    });
+}
