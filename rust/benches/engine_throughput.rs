@@ -53,6 +53,7 @@ fn main() {
             path: r.path.to_string(),
             grad_workers: r.grad_workers as u64,
             staleness: 0,
+            store: "ram".into(),
             secs: r.secs,
             steps_per_sec: r.steps_per_sec,
             speedup: r.speedup,
@@ -81,6 +82,7 @@ fn main() {
             path: "async".into(),
             grad_workers: 4,
             staleness: k as u64,
+            store: "ram".into(),
             secs,
             steps_per_sec: sps,
             speedup: sps / sync_sps,

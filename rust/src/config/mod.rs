@@ -116,6 +116,18 @@ pub struct RunConfig {
     /// Purely observational: enabling it cannot change trained results.
     pub metrics_out: String,
 
+    /// paged-store budget in MiB (`--store-budget-mb`): at > 0, embedding
+    /// tables live in page files on disk behind an LRU page cache of at
+    /// most this many bytes (split across tables; per process in
+    /// multi-process mode).  0 — the default — keeps every table in RAM.
+    /// Throughput/memory-only: bit-exact at any setting (`docs/ENGINE.md`,
+    /// `tests/store.rs`).
+    pub store_budget_mb: usize,
+
+    /// directory for the paged store's page files (`--store-dir`); empty =
+    /// the system temp dir.  Files are removed on clean shutdown.
+    pub store_dir: String,
+
     /// async engine knobs (throughput-only, except the opt-in
     /// [`EngineConfig::staleness`] window)
     pub engine: EngineConfig,
@@ -147,6 +159,8 @@ impl Default for RunConfig {
             freeze_embedding: false,
             artifacts_dir: "artifacts".into(),
             metrics_out: String::new(),
+            store_budget_mb: 0,
+            store_dir: String::new(),
             engine: EngineConfig::default(),
         }
     }
@@ -192,6 +206,10 @@ impl RunConfig {
             "freeze_embedding" => self.freeze_embedding = parse_bool(v)?,
             "artifacts_dir" => self.artifacts_dir = v.into(),
             "metrics_out" => self.metrics_out = v.into(),
+            "store_budget_mb" => {
+                self.store_budget_mb = v.parse().context("store_budget_mb")?
+            }
+            "store_dir" => self.store_dir = v.into(),
             "engine_workers" => {
                 self.engine.grad_workers = v.parse().context("engine_workers")?
             }
@@ -361,6 +379,24 @@ mod tests {
             .unwrap();
         assert_eq!(rest, vec!["train-async"]);
         assert_eq!(c.metrics_out, "/tmp/run.jsonl");
+    }
+
+    #[test]
+    fn store_flags_parse() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.store_budget_mb, 0);
+        assert!(c.store_dir.is_empty());
+        let rest = c
+            .apply_args(&[
+                "train-async".to_string(),
+                "--store-budget-mb".to_string(),
+                "64".to_string(),
+                "--store-dir=/tmp/pages".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(rest, vec!["train-async"]);
+        assert_eq!(c.store_budget_mb, 64);
+        assert_eq!(c.store_dir, "/tmp/pages");
     }
 
     #[test]

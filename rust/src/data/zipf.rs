@@ -3,55 +3,123 @@
 //! Bucket frequencies in ads/categorical data and token frequencies in text
 //! are canonically Zipf-like — this skew is exactly what frequency filtering
 //! (DP-FEST) and contribution thresholding (DP-AdaFEST) exploit, so the
-//! synthetic generators must reproduce it.  Sampling is inverse-CDF with
-//! binary search on a precomputed cumulative table (O(log n) per draw).
+//! synthetic generators must reproduce it.
+//!
+//! For `n` up to [`HEAD_RANKS`] sampling is inverse-CDF with binary search
+//! on a precomputed cumulative table (O(log n) per draw) — the historical
+//! behaviour, bit-identical draw for draw.  Beyond that (the `fullscale`
+//! harness runs hundred-million-row vocabularies, where a dense f64 CDF
+//! alone would be ~800 MB) the table covers only the top [`HEAD_RANKS`]
+//! ranks, which hold nearly all the mass at the α ≈ 1 skews we model, and
+//! the tail is drawn from the continuous density `x^(−α)` by inverting its
+//! closed-form integral `x^(1−α)/(1−α)` (`ln x` at α = 1).  The tail rank
+//! probabilities are then `∫_{k}^{k+1} x^(−α) dx` rather than exactly
+//! `k^(−α)` — an approximation confined to ranks past the head, fine for
+//! throughput workloads and reflected consistently by [`ZipfSampler::pmf`].
 
 use crate::util::rng::Xoshiro256;
 
+/// Ranks covered by the exact cumulative table; `n` at or below this bound
+/// reproduces the historical all-exact sampler draw for draw.
+pub const HEAD_RANKS: usize = 1 << 20;
+
 #[derive(Clone, Debug)]
 pub struct ZipfSampler {
+    n: usize,
+    alpha: f64,
+    /// Cumulative mass of the head ranks, normalised by head + tail mass;
+    /// covers all of `{0, .., n-1}` when `n <= HEAD_RANKS`.
     cdf: Vec<f64>,
+    /// Total unnormalised mass (head sum + tail integral).
+    total: f64,
 }
 
 impl ZipfSampler {
     pub fn new(n: usize, alpha: f64) -> Self {
+        Self::with_head(n, alpha, HEAD_RANKS)
+    }
+
+    /// As [`ZipfSampler::new`] with an explicit head size — lets tests
+    /// exercise the integral tail without building a million-entry table.
+    fn with_head(n: usize, alpha: f64, head: usize) -> Self {
         assert!(n > 0);
-        let mut cdf = Vec::with_capacity(n);
+        let head_len = n.min(head.max(1));
+        let mut cdf = Vec::with_capacity(head_len);
         let mut acc = 0.0;
-        for r in 0..n {
+        for r in 0..head_len {
             acc += ((r + 1) as f64).powf(-alpha);
             cdf.push(acc);
         }
-        let total = acc;
+        // tail ranks r ∈ [head_len, n), i.e. 1-based k ∈ [head_len+1, n],
+        // approximated by the continuous density on x ∈ [head_len+1, n+1)
+        let tail = if n > head_len {
+            primitive(alpha, (n + 1) as f64) - primitive(alpha, (head_len + 1) as f64)
+        } else {
+            0.0
+        };
+        let total = acc + tail;
         for v in &mut cdf {
             *v /= total;
         }
-        ZipfSampler { cdf }
+        ZipfSampler { n, alpha, cdf, total }
     }
 
     pub fn n(&self) -> usize {
-        self.cdf.len()
+        self.n
     }
 
     /// Sample a rank (0 = most frequent).
     pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
         let u = rng.uniform();
-        match self
-            .cdf
-            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
-        {
-            Ok(i) => i,
-            Err(i) => i.min(self.cdf.len() - 1),
+        let head_mass = *self.cdf.last().unwrap();
+        if u <= head_mass || self.cdf.len() == self.n {
+            return match self
+                .cdf
+                .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+            {
+                Ok(i) => i,
+                Err(i) => i.min(self.cdf.len() - 1),
+            };
         }
+        // invert the tail integral: x with F(x) = F(a) + v·(F(b) − F(a))
+        let v = (u - head_mass) / (1.0 - head_mass);
+        let a = (self.cdf.len() + 1) as f64;
+        let b = (self.n + 1) as f64;
+        let x = if (self.alpha - 1.0).abs() < 1e-9 {
+            a * (b / a).powf(v)
+        } else {
+            let e = 1.0 - self.alpha;
+            (a.powf(e) + v * (b.powf(e) - a.powf(e))).powf(1.0 / e)
+        };
+        // x ∈ [a, b) maps to 1-based rank k = floor(x); clamp guards the
+        // open upper end against floating-point overshoot
+        (x.floor() as usize).clamp(self.cdf.len() + 1, self.n) - 1
     }
 
-    /// P(rank r).
+    /// P(rank r).  Exact within the head table; integral-approximated for
+    /// ranks past it (consistent with how [`ZipfSampler::sample`] draws
+    /// them, so empirical frequencies match this function everywhere).
     pub fn pmf(&self, r: usize) -> f64 {
+        assert!(r < self.n);
         if r == 0 {
             self.cdf[0]
-        } else {
+        } else if r < self.cdf.len() {
             self.cdf[r] - self.cdf[r - 1]
+        } else {
+            let k = (r + 1) as f64;
+            (primitive(self.alpha, k + 1.0) - primitive(self.alpha, k)) / self.total
         }
+    }
+}
+
+/// Antiderivative of `x^(−α)` (increasing for any α since the density is
+/// positive): `x^(1−α)/(1−α)`, or `ln x` at α = 1.
+fn primitive(alpha: f64, x: f64) -> f64 {
+    if (alpha - 1.0).abs() < 1e-9 {
+        x.ln()
+    } else {
+        let e = 1.0 - alpha;
+        x.powf(e) / e
     }
 }
 
@@ -102,5 +170,59 @@ mod tests {
         let z = ZipfSampler::new(1, 2.0);
         let mut rng = Xoshiro256::seed_from(2);
         assert_eq!(z.sample(&mut rng), 0);
+    }
+
+    #[test]
+    fn tail_pmf_sums_to_one_and_decreases() {
+        // small head forces the integral-tail path for most ranks
+        for alpha in [0.0, 0.8, 1.0, 1.1, 2.0] {
+            let z = ZipfSampler::with_head(1000, alpha, 50);
+            let total: f64 = (0..1000).map(|r| z.pmf(r)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "alpha {alpha}: total {total}");
+            for r in 1..1000 {
+                assert!(
+                    z.pmf(r) <= z.pmf(r - 1) + 1e-12,
+                    "alpha {alpha}: pmf increased at rank {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tail_samples_stay_in_range_and_match_pmf() {
+        let z = ZipfSampler::with_head(1000, 1.1, 50);
+        let mut rng = Xoshiro256::seed_from(3);
+        let n = 400_000;
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..n {
+            let r = z.sample(&mut rng);
+            assert!(r < 1000);
+            counts[r] += 1;
+        }
+        // head rank, boundary tail rank, and a deep-tail band all track pmf
+        for r in [0usize, 10, 49, 50, 60, 200] {
+            let emp = counts[r] as f64 / n as f64;
+            let want = z.pmf(r);
+            let sd = (want * (1.0 - want) / n as f64).sqrt();
+            assert!(
+                (emp - want).abs() < 6.0 * sd + 1e-4,
+                "rank {r}: emp {emp} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_n_head_matches_historical_exact_sampler() {
+        // n below HEAD_RANKS must keep the all-exact table: same pmf and
+        // same draw sequence as a sampler whose head trivially covers n
+        let z = ZipfSampler::new(64, 1.3);
+        let all_head = ZipfSampler::with_head(64, 1.3, 64);
+        let (mut r1, mut r2) = (Xoshiro256::seed_from(7), Xoshiro256::seed_from(7));
+        for _ in 0..1000 {
+            assert_eq!(z.sample(&mut r1), all_head.sample(&mut r2));
+        }
+        for r in 0..64 {
+            assert_eq!(z.pmf(r), all_head.pmf(r));
+        }
     }
 }

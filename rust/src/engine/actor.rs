@@ -10,7 +10,10 @@
 //!   `Batch` frames to the barrier; invariant 1 (self-contained batch
 //!   streams) makes the slice assignment irrelevant to the bytes produced.
 //! * **Gradient actors** (`n` processes) each own a **contiguous row
-//!   range** of every embedding table, held as a local `ShardedTable`.
+//!   range** of every embedding table, held as a local [`TableStore`] —
+//!   in-RAM row shards by default, or a file-backed paged table for the
+//!   actor's own range when the run sets `--store-budget-mb` (each actor
+//!   pages only the rows it owns, so the budget splits across the fleet).
 //!   They rebuild their slice from `ParamStore::init(manifest, seed)` —
 //!   a pure function of the init frame — so no parameter values ride the
 //!   wire at startup.  Per step they receive the batch + row-cache
@@ -51,8 +54,10 @@ use crate::sparse::{DenseState, Optimizer, OptimizerKind, RowSparseGrad};
 use crate::telemetry::{Queue, Stage, Telemetry};
 
 use super::pipeline::{self, BatchMsg, DataPlan, RowCache, WorkerView};
-use super::sharded_store::ShardedTable;
 use super::wire::{self, Frame, GradInit, StepData, WireFeat};
+use crate::store::{
+    default_page_rows, unique_path, PagedTable, ShardedTable, StoreOptions, TableStore,
+};
 
 /// Marks a process as an actor child: `data:<i>` or `grad:<i>`.
 const ENV_ROLE: &str = "SPARSE_DP_EMB_ACTOR";
@@ -201,12 +206,13 @@ fn data_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Re
 }
 
 /// One embedding-table slice a gradient actor owns: global rows
-/// `[lo, hi)` of parameter `param`, held as a local sharded table.
+/// `[lo, hi)` of parameter `param`, held in whichever backend the init
+/// frame selected (in-RAM shards, or pages over the owned range only).
 struct OwnedTable {
     param: usize,
     lo: usize,
     hi: usize,
-    table: ShardedTable,
+    table: TableStore,
 }
 
 impl OwnedTable {
@@ -251,6 +257,11 @@ fn grad_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Re
     // the wire.
     let store = ParamStore::init(model, init.seed)?;
     let owners = init.n_owners as usize;
+    // `--store-budget-mb` splits evenly across this actor's owned tables —
+    // each actor pages only its own contiguous range, so the fleet-wide
+    // resident footprint is bounded per process, not just per run.
+    let per_table_budget =
+        (init.store_budget_mb as usize * 1024 * 1024) / init.emb_params.len().max(1);
     let mut owned = Vec::with_capacity(init.emb_params.len());
     for &p in &init.emb_params {
         let p = p as usize;
@@ -262,7 +273,24 @@ fn grad_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Re
         let (rows, dim) = (dims[0], dims[1]);
         let (lo, hi) = owner_range(rows, owners, index as usize);
         let values = t.as_f32()?[lo * dim..hi * dim].to_vec();
-        let table = ShardedTable::from_dense(hi - lo, dim, values, init.shards as usize);
+        let table = if init.store_budget_mb > 0 {
+            let dir = StoreOptions::resolve_dir(&init.store_dir);
+            TableStore::Paged(PagedTable::from_dense(
+                unique_path(&dir, &format!("a{index}_p{p}")),
+                hi - lo,
+                dim,
+                values,
+                default_page_rows(dim),
+                per_table_budget.max(1),
+            )?)
+        } else {
+            TableStore::Ram(ShardedTable::from_dense(
+                hi - lo,
+                dim,
+                values,
+                init.shards as usize,
+            ))
+        };
         owned.push(OwnedTable { param: p, lo, hi, table });
     }
     let nt = rm.num_tables();
@@ -286,7 +314,7 @@ fn grad_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Re
                 }
                 let mut values = Vec::with_capacity(rows.len());
                 for (o, ids) in owned.iter().zip(&rows) {
-                    let dim = o.table.dim;
+                    let dim = o.table.dim();
                     let mut out = vec![0f32; ids.len() * dim];
                     for (k, &gid) in ids.iter().enumerate() {
                         o.table.read_row(o.local(gid)?, &mut out[k * dim..(k + 1) * dim]);
@@ -319,7 +347,7 @@ fn grad_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Re
             }
             Frame::Scatter { param, rows, values } => {
                 let o = find_owned(&owned, param)?;
-                let dim = o.table.dim;
+                let dim = o.table.dim();
                 if rows.len() * dim != values.len() {
                     bail!("scatter geometry mismatch for param {param}");
                 }
@@ -327,23 +355,21 @@ fn grad_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Re
                 for (k, &gid) in rows.iter().enumerate() {
                     g.add_row(o.local(gid)? as u32, &values[k * dim..(k + 1) * dim]);
                 }
-                o.table.apply_sparse(&g, &opt);
+                o.table.apply_sparse(&g, &opt)?;
             }
             Frame::DenseScatter { param, values } => {
                 let o = find_owned(&owned, param)?;
-                if values.len() != (o.hi - o.lo) * o.table.dim {
+                if values.len() != (o.hi - o.lo) * o.table.dim() {
                     bail!("dense scatter length mismatch for param {param}");
                 }
-                o.table.apply_dense(&values, &opt);
+                o.table.apply_dense(&values, &opt)?;
             }
             Frame::Finalize => {
-                let tables = std::mem::take(&mut owned)
-                    .into_iter()
-                    .map(|o| {
-                        let (values, accum) = o.table.into_dense();
-                        (o.param as u32, values, accum)
-                    })
-                    .collect();
+                let mut tables = Vec::with_capacity(owned.len());
+                for o in std::mem::take(&mut owned) {
+                    let (values, accum) = o.table.into_dense()?;
+                    tables.push((o.param as u32, values, accum));
+                }
                 let stages = stage_totals(&tele);
                 return wire::write_frame(&mut w, &Frame::FinalizeResult { tables, stages });
             }
@@ -395,6 +421,10 @@ pub(crate) struct ProcSpec<'a> {
     pub nt: usize,
     /// Reduction chunks per step (`ceil(batch / 16)`).
     pub n_chunks: usize,
+    /// `--store-budget-mb`: per-process paged-store budget (0 = in RAM).
+    pub store_budget_mb: usize,
+    /// `--store-dir`: directory for the actors' page files ("" = temp dir).
+    pub store_dir: &'a str,
 }
 
 /// The spawned children plus their reader threads; dropping kills every
@@ -580,6 +610,8 @@ impl ProcEngine {
                 owner_index: a as u32,
                 shards: spec.shards as u32,
                 kernel_threads: spec.kernel_threads as u32,
+                store_budget_mb: spec.store_budget_mb as u64,
+                store_dir: spec.store_dir.to_string(),
             });
             wire::write_frame(&mut &*s, &init).context("initializing a gradient actor")?;
         }

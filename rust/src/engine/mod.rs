@@ -80,12 +80,11 @@
 pub mod actor;
 mod aggregator;
 mod pipeline;
-mod sharded_store;
 pub mod wire;
 
 pub use aggregator::collect_step;
 pub use pipeline::{BatchMsg, BatchStream, ChunkTask, DataPlan, RowCache, WorkerView};
-pub use sharded_store::{ShardedStore, ShardedTable};
+pub use crate::store::{ShardedStore, ShardedTable};
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -106,6 +105,7 @@ use crate::models::ParamStore;
 use crate::runtime::reference::{ChunkGrads, RefModel, REDUCE_CHUNK};
 use crate::runtime::Runtime;
 use crate::selection::FrequencyTracker;
+use crate::store::StoreOptions;
 use crate::telemetry::{Queue, Stage};
 
 /// Run a full async training (train → eval) for whatever kind of model
@@ -661,6 +661,8 @@ fn run_with(
             emb_params: &emb_params,
             nt,
             n_chunks,
+            store_budget_mb: state.cfg.store_budget_mb,
+            store_dir: &state.cfg.store_dir,
         };
         Fabric::Procs(actor::ProcEngine::launch(
             spec,
@@ -671,7 +673,20 @@ fn run_with(
             Arc::clone(&tele),
         )?)
     } else {
-        Fabric::Threads(ShardedStore::from_store(store, &emb_params, ecfg.shards.max(1))?)
+        // `--store-budget-mb > 0` swaps the in-RAM row shards for the
+        // file-backed paged tables — throughput/memory-only, bit-exact at
+        // any setting (tests/store.rs, tests/engine.rs).
+        let opts = StoreOptions {
+            budget_mb: state.cfg.store_budget_mb,
+            dir: state.cfg.store_dir.clone(),
+            tele: Some(Arc::clone(&tele)),
+        };
+        Fabric::Threads(ShardedStore::from_store_with(
+            store,
+            &emb_params,
+            ecfg.shards.max(1),
+            &opts,
+        )?)
     };
 
     // Frozen dense params (the NLU transformer backbone) never receive

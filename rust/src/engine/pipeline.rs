@@ -43,7 +43,7 @@ use crate::data::{Batch, GenConfig, Generator};
 use crate::runtime::reference::{BatchRef, ChunkGrads, ParamsView, RefModel, REDUCE_CHUNK};
 use crate::telemetry::{Queue, Stage, Telemetry};
 
-use super::sharded_store::ShardedStore;
+use crate::store::ShardedStore;
 
 /// What the data workers produce: which steps, how steps map to simulated
 /// days, and whether per-batch frequency counts ride along.

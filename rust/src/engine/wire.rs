@@ -519,6 +519,11 @@ pub struct GradInit {
     pub shards: u32,
     /// Kernel fan-out threads inside the actor.
     pub kernel_threads: u32,
+    /// `--store-budget-mb`: per-process paged-store budget in MiB (0 keeps
+    /// the actor's tables in RAM).
+    pub store_budget_mb: u64,
+    /// `--store-dir`: directory for the actor's page files ("" = temp dir).
+    pub store_dir: String,
 }
 
 /// One per-feature slice of a step's row cache on the wire:
@@ -667,6 +672,8 @@ impl Frame {
                 e.u32(g.owner_index);
                 e.u32(g.shards);
                 e.u32(g.kernel_threads);
+                e.u64(g.store_budget_mb);
+                e.str(&g.store_dir);
             }
             Frame::Batch(m) => {
                 e.u8(4);
@@ -770,6 +777,8 @@ impl Frame {
                 owner_index: d.u32()?,
                 shards: d.u32()?,
                 kernel_threads: d.u32()?,
+                store_budget_mb: d.u64()?,
+                store_dir: d.str()?,
             }),
             4 => Frame::Batch(BatchMsg {
                 step: d.u64()?,

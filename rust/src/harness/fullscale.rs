@@ -1,18 +1,36 @@
-//! Full-Table-3-scale gradient-size simulation — the paper's headline
-//! `>10⁵–10⁶×` reduction numbers live at the real Criteo vocabulary
-//! (≈339k rows, embedding dims from `int(2·V^0.25)`, B = 2048).
+//! Full-scale harness, two halves:
 //!
-//! Gradient *size* depends only on the selection/thresholding pipeline, not
-//! on model quality (DESIGN.md §2), so this harness runs the actual
-//! DP-AdaFEST / DP-FEST survivor machinery on full-scale synthetic
-//! activations and counts noised coordinates — utility for the same knobs is
-//! measured at `criteo-small` scale by fig3.
+//! 1. The Table-3-scale gradient-size simulation — the paper's headline
+//!    `>10⁵–10⁶×` reduction numbers live at the real Criteo vocabulary
+//!    (≈339k rows, embedding dims from `int(2·V^0.25)`, B = 2048).
+//!    Gradient *size* depends only on the selection/thresholding pipeline,
+//!    not on model quality (DESIGN.md §2), so this half runs the actual
+//!    DP-AdaFEST / DP-FEST survivor machinery on full-scale synthetic
+//!    activations and counts noised coordinates — utility for the same
+//!    knobs is measured at `criteo-small` scale by fig3.
+//!
+//! 2. A hundred-million-row paged-store workload: a `10⁸ × 8` table is
+//!    opened zero-initialised through [`PagedTable`] (the file is one big
+//!    sparse hole), rows are drawn Zipf(1.1) — the skew the paper's sparse
+//!    gradients actually have — and sparse select (row reads) and scatter
+//!    (Adagrad applies) throughput is measured, with the telemetry
+//!    resident-bytes high-water asserted against `--store-budget-mb`.
+//!    Rows land in `BENCH_engine.json` (schema v3, `"store": "paged"`) per
+//!    docs/OBSERVABILITY.md; `--fast` shrinks to `10⁶` rows with a budget
+//!    small enough that eviction still happens.
 
-use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
 
-use crate::data::{CriteoConfig, SynthCriteo};
+use anyhow::{ensure, Result};
+
+use crate::config::RunConfig;
+use crate::data::{CriteoConfig, SynthCriteo, ZipfSampler};
 use crate::filtering::ContributionMap;
 use crate::selection::dp_top_k_per_feature;
+use crate::sparse::{Optimizer, RowSparseGrad};
+use crate::store::{default_page_rows, unique_path, PagedTable, StoreOptions};
+use crate::telemetry::{BenchRow, BenchSnapshot, Telemetry, BENCH_SCHEMA_VERSION};
 use crate::util::rng::Xoshiro256;
 
 use super::common::{print_table, write_csv, SweepRow};
@@ -22,7 +40,8 @@ fn emb_dim(v: usize) -> usize {
     (2.0 * (v as f64).powf(0.25)) as usize
 }
 
-pub fn run(seed: u64, fast: bool) -> Result<()> {
+pub fn run(cfg: &RunConfig, fast: bool) -> Result<()> {
+    let seed = cfg.seed;
     let vocabs = CRITEO_VOCABS.to_vec();
     let dims: Vec<usize> = vocabs.iter().map(|&v| emb_dim(v)).collect();
     let total_coords: usize = vocabs.iter().zip(&dims).map(|(&v, &d)| v * d).sum();
@@ -133,5 +152,150 @@ pub fn run(seed: u64, fast: bool) -> Result<()> {
         "\npaper shape check: dp-adafest at high tau reaches >=1e4x; combined with\n\
          the Kaggle-scale vocab (1.7M rows in the paper) this is the >1e5-1e6x regime"
     );
+
+    paged_throughput(cfg, fast)
+}
+
+/// The paged-store half: Zipf select/scatter throughput on a table far
+/// larger than the page-cache budget, peak resident bytes asserted.
+fn paged_throughput(cfg: &RunConfig, fast: bool) -> Result<()> {
+    let rows = if fast { 1_000_000 } else { 100_000_000 };
+    let dim = 8usize;
+    let steps = if fast { 50 } else { 200 };
+    let rows_per_step = if fast { 2048 } else { 4096 };
+    // default budgets keep the cache well under the table so eviction is
+    // actually on the measured path (fast: 10⁶ rows ≈ 61 MiB paged cost)
+    let budget_mb = if cfg.store_budget_mb > 0 {
+        cfg.store_budget_mb
+    } else if fast {
+        8
+    } else {
+        64
+    };
+    let budget_bytes = budget_mb * 1024 * 1024;
+    let page_rows = default_page_rows(dim);
+    let page_cost = (page_rows * dim * 8) as u64;
+
+    let tele = Arc::new(Telemetry::new());
+    let dir = StoreOptions::resolve_dir(&cfg.store_dir);
+    let table = PagedTable::create_zeroed(
+        unique_path(&dir, "fullscale"),
+        rows,
+        dim,
+        page_rows,
+        budget_bytes,
+    )?
+    .with_telemetry(Arc::clone(&tele));
+    println!(
+        "\n[fullscale] paged store: {rows} x {dim} table, {} rows/page, \
+         budget {budget_mb} MiB ({} pages), file {}",
+        table.page_rows(),
+        table.budget_pages(),
+        table.path().display()
+    );
+
+    let zipf = ZipfSampler::new(rows, 1.1);
+    let mut rng = Xoshiro256::seed_from(cfg.seed ^ 0xFA57);
+    let opt = Optimizer::adagrad(0.1);
+    let mut vals = vec![0f32; dim];
+
+    // scatter: one row-sparse Adagrad apply per step, Zipf-drawn rows
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let mut grad = RowSparseGrad::with_capacity(rows, dim, rows_per_step);
+        for i in 0..rows_per_step {
+            let r = zipf.sample(&mut rng);
+            for (j, v) in vals.iter_mut().enumerate() {
+                *v = ((step + i + j) % 13) as f32 * 1e-3;
+            }
+            grad.add_row(r as u32, &vals);
+        }
+        table.apply_sparse(&grad, &opt)?;
+    }
+    let scatter_secs = t0.elapsed().as_secs_f64();
+    let touched = (steps * rows_per_step) as f64;
+
+    // select: RowCache-style row reads over a fresh Zipf stream
+    let mut out = vec![0f32; dim];
+    let t1 = Instant::now();
+    for _ in 0..steps {
+        for _ in 0..rows_per_step {
+            table.read_row(zipf.sample(&mut rng), &mut out)?;
+        }
+    }
+    let select_secs = t1.elapsed().as_secs_f64();
+
+    let peak = tele.store_resident_max();
+    let resident_now = table.resident_bytes();
+    drop(table);
+    // the budget is a hard bound on resident cache bytes (floored at one
+    // page when the budget is below a single page's worst-case cost)
+    ensure!(
+        peak <= budget_bytes.max(page_cost as usize) as u64,
+        "paged store exceeded its budget: peak resident {peak} bytes > {budget_bytes}"
+    );
+
+    let mut table_rows = Vec::new();
+    for (phase, secs) in [("scatter", scatter_secs), ("select", select_secs)] {
+        let mut r = SweepRow::default();
+        r.push("phase", phase);
+        r.push("table_rows", rows);
+        r.push("rows_touched", touched as u64);
+        r.push("secs", format!("{secs:.3}"));
+        r.push("rows_per_sec", format!("{:.0}", touched / secs.max(1e-9)));
+        r.push(
+            "peak_resident_mib",
+            format!("{:.2}", peak as f64 / (1024.0 * 1024.0)),
+        );
+        table_rows.push(r);
+    }
+    print_table(
+        &format!("Paged-store Zipf throughput ({rows} rows, budget {budget_mb} MiB)"),
+        &table_rows,
+    );
+    write_csv("fullscale_paged", &table_rows)?;
+    println!(
+        "[fullscale] peak resident {:.2} MiB (budget {budget_mb} MiB), {:.2} MiB \
+         resident at teardown",
+        peak as f64 / (1024.0 * 1024.0),
+        resident_now as f64 / (1024.0 * 1024.0)
+    );
+
+    append_bench_rows(steps, scatter_secs, select_secs)
+}
+
+/// Merge the paged throughput rows into the tracked bench snapshot
+/// (`BENCH_engine.json`, or `$BENCH_OUT`), preserving any in-RAM rows the
+/// engine throughput bench already wrote and replacing stale paged ones.
+fn append_bench_rows(steps: usize, scatter_secs: f64, select_secs: f64) -> Result<()> {
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".into());
+    let mut snap = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| BenchSnapshot::parse(&t).ok())
+        .unwrap_or_else(|| BenchSnapshot {
+            schema_version: BENCH_SCHEMA_VERSION,
+            bench: "engine_throughput".into(),
+            model: "criteo-small".into(),
+            algorithm: "dp-adafest".into(),
+            steps: steps as u64,
+            provenance: "sweep fullscale (paged rows only; ram rows come from \
+                         cargo bench --bench engine_throughput)"
+                .into(),
+            rows: Vec::new(),
+        });
+    snap.rows.retain(|r| r.store != "paged");
+    for (label, secs) in [("paged-scatter", scatter_secs), ("paged-select", select_secs)] {
+        snap.rows.push(BenchRow {
+            path: label.into(),
+            grad_workers: 1,
+            staleness: 0,
+            store: "paged".into(),
+            secs,
+            steps_per_sec: steps as f64 / secs.max(1e-9),
+            speedup: 1.0,
+        });
+    }
+    std::fs::write(&path, snap.to_json_pretty())?;
+    println!("[fullscale] appended paged rows to {path}");
     Ok(())
 }

@@ -43,7 +43,7 @@ pub fn run_experiment(name: &str, cfg: &RunConfig, rt: &Runtime, fast: bool) -> 
         "tab5-async" => tab5_streaming::run(cfg, rt, fast, true),
         "tab6" => tab6_frozen::run(cfg, rt, fast),
         "lemma31" => lemma31::run(fast),
-        "fullscale" => fullscale::run(cfg.seed, fast),
+        "fullscale" => fullscale::run(cfg, fast),
         other => bail!(
             "unknown experiment {other} (want fig1b|fig3|fig4|fig5|fig5-async|fig6|fig6-async|\
              fig7|fig8|fig9|tab1|tab2|tab4|tab5|tab5-async|tab6|lemma31|fullscale)"

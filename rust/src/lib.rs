@@ -68,6 +68,7 @@ pub mod models;
 pub mod runtime;
 pub mod selection;
 pub mod sparse;
+pub mod store;
 pub mod telemetry;
 pub mod util;
 

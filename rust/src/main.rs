@@ -3,10 +3,11 @@
 //!
 //! ```text
 //! sparse-dp-emb train       [--model criteo-small] [--algorithm dp-adafest] [--epsilon 1.0] ...
-//! sparse-dp-emb train-async [--engine-workers 4] [--engine-shards 16] [--engine-staleness 0] ...   # pipelined engine
+//! sparse-dp-emb train-async [--engine-workers 4] [--engine-shards 16] [--engine-staleness 0]
+//!                           [--store-budget-mb 0] [--store-dir <dir>] ...   # pipelined engine
 //! sparse-dp-emb train-async --stream [--freq-source streaming] [--streaming-period 1] ...
 //! sparse-dp-emb stream      [--streaming-period 1] [--freq-source streaming] ...
-//! sparse-dp-emb sweep       <fig1b|fig3|fig4|fig5[-async]|fig6[-async]|fig7|fig8|fig9|tab1|tab2|tab4|tab5[-async]|tab6|lemma31> [--fast]
+//! sparse-dp-emb sweep       <fig1b|fig3|fig4|fig5[-async]|fig6[-async]|fig7|fig8|fig9|tab1|tab2|tab4|tab5[-async]|tab6|lemma31|fullscale> [--fast]
 //! sparse-dp-emb account     [--epsilon 1.0] [--steps 200] ...   # privacy accounting only
 //! sparse-dp-emb info                                            # manifest / artifact inventory
 //! ```
@@ -19,6 +20,10 @@
 //! setting, like every engine knob except `--engine-staleness`, which at
 //! `k > 0` opts into bounded-staleness pipelining — same privacy
 //! accounting, no longer bit-identical; see `docs/CONCURRENCY.md`).
+//! `--store-budget-mb N` swaps the in-RAM embedding-table shards for
+//! file-backed paged tables under an `N` MiB page-cache budget
+//! (`--store-dir` picks where the page files live) — bit-exact at any
+//! budget; see `docs/ENGINE.md`.
 //! Both commands drive either model family: the built-in reference manifest
 //! covers `criteo-small`/`criteo-tiny` (pCTR) and `nlu-small`/`nlu-tiny`
 //! (native transformer) plus their LoRA-on-embedding variants
@@ -306,6 +311,12 @@ fn report(outcome: &sparse_dp_emb::coordinator::TrainOutcome, rt: &Runtime) {
     }
     if t.max_staleness > 0 {
         println!("max snapshot staleness: {} steps", t.max_staleness);
+    }
+    if t.max_store_resident_bytes > 0 {
+        println!(
+            "paged store peak resident: {:.2} MiB",
+            t.max_store_resident_bytes as f64 / (1024.0 * 1024.0)
+        );
     }
     for s in &t.stages {
         println!(

@@ -1,0 +1,157 @@
+//! Embedding-table storage backends behind the engine's `ShardedStore` seam.
+//!
+//! The paper's sparse select/scatter property — a training step touches only
+//! the rows its batch presents — is what makes vocab ≫ RAM feasible: the
+//! dense table never has to be resident.  This module provides the two
+//! backends an embedding table can live in:
+//!
+//! * [`ShardedTable`] (`sharded.rs`) — the in-RAM default: contiguous
+//!   row-range shards behind per-shard mutexes, unchanged from the original
+//!   engine store.
+//! * [`PagedTable`] (`paged.rs`) — file-backed rows in fixed-size row pages
+//!   with an LRU page cache under a byte budget (`--store-budget-mb`), so a
+//!   hundred-million-row table runs in a bounded memory footprint and sparse
+//!   `select`/`scatter` touch only the pages holding present rows.
+//!
+//! [`TableStore`] is the seam: the engine, the gradient actors, and the
+//! `ShardedStore` slots hold one of these per embedding table and dispatch
+//! through it.  Both backends apply the optimizer through the *same*
+//! per-coordinate [`Optimizer::sparse_step`]/[`Optimizer::dense_step`] code
+//! on sub-ranges of the table, and SGD/Adagrad touch each coordinate
+//! independently — so any partitioning (shards or pages) produces bitwise
+//! identical values and accumulator state, and the engine's bit-exactness
+//! invariants (`docs/CONCURRENCY.md`) are backend-independent.
+//! `tests/store.rs` proves paged == sharded == flat byte-for-byte under the
+//! in-repo property harness.
+
+mod paged;
+mod sharded;
+
+pub use paged::{unique_path, PagedTable};
+pub use sharded::{ShardedStore, ShardedTable};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::sparse::{Optimizer, RowSparseGrad};
+use crate::telemetry::Telemetry;
+
+/// Target byte size of one page's value payload; the row count per page is
+/// derived from the embedding dimension ([`default_page_rows`]).
+pub const PAGE_BYTES_TARGET: usize = 64 * 1024;
+
+/// Rows per page for an embedding dimension: ~[`PAGE_BYTES_TARGET`] of f32
+/// values per page, at least one row.
+pub fn default_page_rows(dim: usize) -> usize {
+    (PAGE_BYTES_TARGET / (dim.max(1) * 4)).max(1)
+}
+
+/// Backend selection for the engine's embedding tables, resolved from the
+/// run config (`--store-budget-mb` / `--store-dir`).
+#[derive(Clone)]
+pub struct StoreOptions {
+    /// LRU page-cache budget in MiB; `0` keeps every table in RAM (the
+    /// [`ShardedTable`] default).
+    pub budget_mb: usize,
+    /// Directory holding the page files; empty = the system temp dir.
+    pub dir: String,
+    /// Telemetry hub for the resident-page-bytes gauge (optional).
+    pub tele: Option<Arc<Telemetry>>,
+}
+
+impl StoreOptions {
+    /// The in-RAM default (today's behavior).
+    pub fn ram() -> StoreOptions {
+        StoreOptions { budget_mb: 0, dir: String::new(), tele: None }
+    }
+
+    /// The directory page files go in: `dir`, or the system temp dir when
+    /// unset.
+    pub fn resolve_dir(dir: &str) -> PathBuf {
+        if dir.is_empty() {
+            std::env::temp_dir()
+        } else {
+            PathBuf::from(dir)
+        }
+    }
+}
+
+/// One embedding table, in whichever backend the run selected.  All methods
+/// take `&self` (interior mutability in both backends), so the table is
+/// shared by reference across the worker scope exactly like before.
+pub enum TableStore {
+    /// In-RAM row-range shards (the default).
+    Ram(ShardedTable),
+    /// File-backed fixed-size row pages under an LRU byte budget.
+    Paged(PagedTable),
+}
+
+impl TableStore {
+    /// Total row count of the table.
+    pub fn rows(&self) -> usize {
+        match self {
+            TableStore::Ram(t) => t.rows,
+            TableStore::Paged(t) => t.rows(),
+        }
+    }
+
+    /// Row width (embedding dimension).
+    pub fn dim(&self) -> usize {
+        match self {
+            TableStore::Ram(t) => t.dim,
+            TableStore::Paged(t) => t.dim(),
+        }
+    }
+
+    /// Copy one row out (the `select` half: RowCache snapshot fills).  A
+    /// paged-backend I/O failure is fatal — the callers' signatures are
+    /// infallible by design (`RowCache::build` and the actor fetch path).
+    pub fn read_row(&self, row: usize, out: &mut [f32]) {
+        match self {
+            TableStore::Ram(t) => t.read_row(row, out),
+            TableStore::Paged(t) => t.read_row(row, out).expect("paged table I/O"),
+        }
+    }
+
+    /// Scatter a row-sparse optimizer update (the `scatter` half).
+    pub fn apply_sparse(&self, grad: &RowSparseGrad, opt: &Optimizer) -> Result<()> {
+        match self {
+            TableStore::Ram(t) => {
+                t.apply_sparse(grad, opt);
+                Ok(())
+            }
+            TableStore::Paged(t) => t.apply_sparse(grad, opt),
+        }
+    }
+
+    /// Dense update over every row (the DP-SGD embedding baseline).
+    pub fn apply_dense(&self, grad: &[f32], opt: &Optimizer) -> Result<()> {
+        match self {
+            TableStore::Ram(t) => {
+                t.apply_dense(grad, opt);
+                Ok(())
+            }
+            TableStore::Paged(t) => t.apply_dense(grad, opt),
+        }
+    }
+
+    /// Reassemble `(values, adagrad accumulator)`; the accumulator is empty
+    /// when the optimizer never materialised state (same contract for both
+    /// backends).
+    pub fn into_dense(self) -> Result<(Vec<f32>, Vec<f32>)> {
+        match self {
+            TableStore::Ram(t) => Ok(t.into_dense()),
+            TableStore::Paged(t) => t.into_dense(),
+        }
+    }
+
+    /// Backend name for bench rows / logs: `"ram"` or `"paged"`.
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            TableStore::Ram(_) => "ram",
+            TableStore::Paged(_) => "paged",
+        }
+    }
+}

@@ -1,0 +1,508 @@
+//! File-backed paged embedding table: rows live in a page file on disk,
+//! with an LRU page cache under a configurable byte budget.
+//!
+//! ## Page layout
+//!
+//! One file per table (`std::fs` only — `seek`/`read_exact`/`write_all`, no
+//! mmap, no new deps):
+//!
+//! ```text
+//! [header: 32 bytes]                magic u64 · version u32 · state u32 ·
+//!                                   rows u64 · dim u32 · page_rows u32
+//! [values region: rows·dim f32]     row-major, little-endian bit patterns
+//! [accum region:  rows·dim f32]     Adagrad accumulator, same layout
+//! ```
+//!
+//! The file is created at its full length with `set_len`, so untouched
+//! regions are sparse holes that read back as `0.0` — a hundred-million-row
+//! table costs disk only for the pages actually written.  Rows are grouped
+//! into fixed-size pages of `page_rows` rows (the last page may be short);
+//! a page is loaded on first touch, evicted least-recently-used when the
+//! cache exceeds its page budget, and written back only if dirty.  The
+//! budget is expressed in bytes and divided by the worst-case page cost
+//! (values + accumulator), so resident cache bytes never exceed
+//! `max(budget, one page)` — the telemetry resident-bytes gauge
+//! ([`Telemetry::store_resident_max`]) tracks the high-water mark.
+//!
+//! ## Why select/scatter stay bit-identical
+//!
+//! Every update goes through the same [`Optimizer::sparse_step`] /
+//! [`Optimizer::dense_step`] code as the in-RAM [`ShardedTable`], applied to
+//! page-sized sub-ranges of the table.  SGD and Adagrad touch each
+//! coordinate independently (the accumulator lazily zero-initialises, and a
+//! page's never-written accum region reads as zeros), and a
+//! [`RowSparseGrad`] holds each row at most once ([`RowSparseGrad::add_row`]
+//! accumulates repeats into one entry before any apply), so regrouping the
+//! rows by page cannot reorder anything the optimizer is sensitive to.  Any
+//! partitioning of the table therefore produces bitwise identical values
+//! and state — `tests/store.rs` proves paged == sharded == flat under the
+//! in-repo property harness, across page sizes, budgets (including a single
+//! page), and eviction-then-reread of dirty pages.
+//!
+//! ## Crash consistency
+//!
+//! The header `state` field is written as *open* at creation and marked
+//! *clean* only by [`PagedTable::into_dense`] (which then removes the
+//! file).  A process that dies mid-run (the actor fault tests) skips both,
+//! so any page file found on disk in the open state is a crashed run whose
+//! scatters may be partially applied — [`PagedTable::check_clean`] rejects
+//! it instead of silently serving partial rows.
+//!
+//! [`ShardedTable`]: super::ShardedTable
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sparse::{DenseState, Optimizer, RowSparseGrad};
+use crate::telemetry::Telemetry;
+
+const MAGIC: u64 = 0x4547_4150_4550_4453; // le bytes: "SDPEPAGE"
+const VERSION: u32 = 1;
+const HEADER_BYTES: u64 = 32;
+const STATE_CLEAN: u32 = 0;
+const STATE_OPEN: u32 = 1;
+
+static FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A collision-free page-file path under `dir`: the label plus this
+/// process's id plus a process-local sequence number, `.pages` extension.
+pub fn unique_path(dir: &Path, label: &str) -> PathBuf {
+    let seq = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+    dir.join(format!("sde_{label}_{}_{seq}.pages", std::process::id()))
+}
+
+struct Page {
+    /// rows `[idx·page_rows, hi)` of the table, row-major
+    values: Vec<f32>,
+    /// Adagrad accumulator for the same rows; empty until materialised
+    state: DenseState,
+    dirty: bool,
+    last_used: u64,
+}
+
+struct Inner {
+    file: File,
+    pages: HashMap<usize, Page>,
+    /// LRU clock: bumped on every page touch
+    tick: u64,
+    /// whether *any* page's accumulator has ever materialised — loads only
+    /// read the accum region once this is set (before that the region is
+    /// all holes and the in-RAM backend would report empty state too)
+    any_state: bool,
+    finalized: bool,
+}
+
+/// One embedding table backed by a page file on disk, behind a single lock
+/// (page grouping keeps lock hold times to one optimizer apply per page).
+pub struct PagedTable {
+    rows: usize,
+    dim: usize,
+    page_rows: usize,
+    n_pages: usize,
+    budget_pages: usize,
+    path: PathBuf,
+    inner: Mutex<Inner>,
+    tele: Option<Arc<Telemetry>>,
+}
+
+impl PagedTable {
+    fn create(
+        path: PathBuf,
+        rows: usize,
+        dim: usize,
+        page_rows: usize,
+        budget_bytes: usize,
+        init: Option<Vec<f32>>,
+    ) -> Result<PagedTable> {
+        assert!(rows > 0 && dim > 0, "paged table must be non-empty");
+        let page_rows = page_rows.clamp(1, rows);
+        let n_pages = rows.div_ceil(page_rows);
+        // worst-case resident cost of one page: values + accumulator
+        let page_cost = page_rows * dim * 8;
+        let budget_pages = (budget_bytes / page_cost).max(1);
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("creating page file {path:?}"))?;
+        write_header(&mut file, STATE_OPEN, rows as u64, dim as u32, page_rows as u32)?;
+        if let Some(values) = &init {
+            assert_eq!(values.len(), rows * dim, "table shape mismatch");
+            write_f32s(&mut file, HEADER_BYTES, values)?;
+        }
+        // full length up front: the untouched remainder (and the whole accum
+        // region) stays a sparse hole reading back as zeros
+        file.set_len(HEADER_BYTES + (rows * dim * 8) as u64)?;
+        Ok(PagedTable {
+            rows,
+            dim,
+            page_rows,
+            n_pages,
+            budget_pages,
+            path,
+            inner: Mutex::new(Inner {
+                file,
+                pages: HashMap::new(),
+                tick: 0,
+                any_state: false,
+                finalized: false,
+            }),
+            tele: None,
+        })
+    }
+
+    /// Create a page file holding `values` (row-major `rows × dim`).
+    pub fn from_dense(
+        path: PathBuf,
+        rows: usize,
+        dim: usize,
+        values: Vec<f32>,
+        page_rows: usize,
+        budget_bytes: usize,
+    ) -> Result<PagedTable> {
+        Self::create(path, rows, dim, page_rows, budget_bytes, Some(values))
+    }
+
+    /// Create a zero-initialised table without materialising `rows × dim`
+    /// floats anywhere — the file is one big hole (the `fullscale` harness
+    /// opens its 10⁸-row table this way).
+    pub fn create_zeroed(
+        path: PathBuf,
+        rows: usize,
+        dim: usize,
+        page_rows: usize,
+        budget_bytes: usize,
+    ) -> Result<PagedTable> {
+        Self::create(path, rows, dim, page_rows, budget_bytes, None)
+    }
+
+    /// Report page loads/evictions to `tele`'s resident-store-bytes gauge.
+    pub fn with_telemetry(mut self, tele: Arc<Telemetry>) -> PagedTable {
+        self.tele = Some(tele);
+        self
+    }
+
+    /// Reject a page file that was not cleanly closed: a header still in
+    /// the *open* state means the writing process died mid-run and the
+    /// file's scatters may be partially applied.
+    pub fn check_clean(path: &Path) -> Result<()> {
+        let mut file =
+            File::open(path).with_context(|| format!("opening page file {path:?}"))?;
+        let mut h = [0u8; HEADER_BYTES as usize];
+        file.read_exact(&mut h)
+            .with_context(|| format!("reading page-file header of {path:?}"))?;
+        let magic = u64::from_le_bytes(h[0..8].try_into().unwrap());
+        let version = u32::from_le_bytes(h[8..12].try_into().unwrap());
+        let state = u32::from_le_bytes(h[12..16].try_into().unwrap());
+        if magic != MAGIC {
+            bail!("{path:?} is not a page file");
+        }
+        if version != VERSION {
+            bail!("{path:?}: unsupported page-file version {version}");
+        }
+        if state != STATE_CLEAN {
+            bail!(
+                "{path:?} was not cleanly closed — the writing process died \
+                 mid-run, so its scatters may be partially applied; discard it"
+            );
+        }
+        Ok(())
+    }
+
+    /// Total row count of the table.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row width (embedding dimension).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Rows per fixed-size page (the last page may be short).
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Maximum pages the LRU cache may hold.
+    pub fn budget_pages(&self) -> usize {
+        self.budget_pages
+    }
+
+    /// Pages currently resident in the cache.
+    pub fn resident_pages(&self) -> usize {
+        self.inner.lock().unwrap().pages.len()
+    }
+
+    /// Bytes currently resident in the cache (values + materialised accum).
+    pub fn resident_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .pages
+            .values()
+            .map(|p| ((p.values.len() + p.state.accum().len()) * 4) as u64)
+            .sum()
+    }
+
+    /// The page file's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn page_span(&self, idx: usize) -> (usize, usize) {
+        let lo = idx * self.page_rows;
+        (lo, (lo + self.page_rows).min(self.rows))
+    }
+
+    fn values_off(&self, row: usize) -> u64 {
+        HEADER_BYTES + (row * self.dim * 4) as u64
+    }
+
+    fn accum_off(&self, row: usize) -> u64 {
+        HEADER_BYTES + ((self.rows + row) * self.dim * 4) as u64
+    }
+
+    fn evict_lru(&self, inner: &mut Inner) -> Result<()> {
+        let idx = *inner
+            .pages
+            .iter()
+            .min_by_key(|(_, p)| p.last_used)
+            .map(|(i, _)| i)
+            .expect("evict on an empty page cache");
+        let page = inner.pages.remove(&idx).unwrap();
+        let bytes = ((page.values.len() + page.state.accum().len()) * 4) as u64;
+        if page.dirty {
+            let (lo, _) = self.page_span(idx);
+            write_f32s(&mut inner.file, self.values_off(lo), &page.values)?;
+            if !page.state.accum().is_empty() {
+                write_f32s(&mut inner.file, self.accum_off(lo), page.state.accum())?;
+            }
+        }
+        if let Some(t) = &self.tele {
+            t.store_resident_sub(bytes);
+        }
+        Ok(())
+    }
+
+    fn load_page(&self, inner: &mut Inner, idx: usize) -> Result<()> {
+        while inner.pages.len() >= self.budget_pages {
+            self.evict_lru(inner)?;
+        }
+        let (lo, hi) = self.page_span(idx);
+        let n = (hi - lo) * self.dim;
+        let mut values = vec![0f32; n];
+        read_f32s(&mut inner.file, self.values_off(lo), &mut values)?;
+        let state = if inner.any_state {
+            let mut accum = vec![0f32; n];
+            read_f32s(&mut inner.file, self.accum_off(lo), &mut accum)?;
+            DenseState::from_accum(accum)
+        } else {
+            DenseState::default()
+        };
+        let bytes = ((values.len() + state.accum().len()) * 4) as u64;
+        inner.pages.insert(idx, Page { values, state, dirty: false, last_used: 0 });
+        if let Some(t) = &self.tele {
+            t.store_resident_add(bytes);
+        }
+        Ok(())
+    }
+
+    fn touch<'a>(&self, inner: &'a mut Inner, idx: usize) -> Result<&'a mut Page> {
+        if !inner.pages.contains_key(&idx) {
+            self.load_page(inner, idx)?;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        let page = inner.pages.get_mut(&idx).unwrap();
+        page.last_used = tick;
+        Ok(page)
+    }
+
+    fn apply_to_page(
+        &self,
+        inner: &mut Inner,
+        idx: usize,
+        f: impl FnOnce(&mut [f32], &mut DenseState),
+    ) -> Result<()> {
+        let grew = {
+            let page = self.touch(inner, idx)?;
+            let before = page.state.accum().len();
+            f(&mut page.values, &mut page.state);
+            page.dirty = true;
+            page.state.accum().len() - before
+        };
+        if grew > 0 {
+            inner.any_state = true;
+            if let Some(t) = &self.tele {
+                t.store_resident_add((grew * 4) as u64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy one row out (the `select` half), loading its page on a miss.
+    pub fn read_row(&self, row: usize, out: &mut [f32]) -> Result<()> {
+        debug_assert!(row < self.rows, "row {row} out of range");
+        let idx = row / self.page_rows;
+        let local = row - idx * self.page_rows;
+        let d = self.dim;
+        let mut inner = self.inner.lock().unwrap();
+        let page = self.touch(&mut inner, idx)?;
+        out.copy_from_slice(&page.values[local * d..(local + 1) * d]);
+        Ok(())
+    }
+
+    /// Scatter a row-sparse optimizer update, touching only the pages
+    /// holding present rows.  The gradient holds each row once (repeats are
+    /// pre-accumulated by [`RowSparseGrad::add_row`]) and the optimizer
+    /// treats rows independently, so the per-page
+    /// [`Optimizer::sparse_step`] calls are bitwise identical to one flat
+    /// application.
+    pub fn apply_sparse(&self, grad: &RowSparseGrad, opt: &Optimizer) -> Result<()> {
+        debug_assert_eq!(grad.dim, self.dim);
+        let mut groups: BTreeMap<usize, RowSparseGrad> = BTreeMap::new();
+        for (row, vals) in grad.iter_rows() {
+            let idx = row as usize / self.page_rows;
+            let local = row as usize - idx * self.page_rows;
+            let (lo, hi) = self.page_span(idx);
+            groups
+                .entry(idx)
+                .or_insert_with(|| {
+                    RowSparseGrad::with_capacity(hi - lo, self.dim, grad.nnz_rows())
+                })
+                .add_row(local as u32, vals);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for (idx, g) in &groups {
+            self.apply_to_page(&mut inner, *idx, |values, state| {
+                opt.sparse_step(values, g, state)
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Dense update over every row (the DP-SGD embedding baseline), page by
+    /// page in row order.
+    pub fn apply_dense(&self, grad: &[f32], opt: &Optimizer) -> Result<()> {
+        assert_eq!(grad.len(), self.rows * self.dim);
+        let d = self.dim;
+        let mut inner = self.inner.lock().unwrap();
+        for idx in 0..self.n_pages {
+            let (lo, hi) = self.page_span(idx);
+            self.apply_to_page(&mut inner, idx, |values, state| {
+                opt.dense_step(values, &grad[lo * d..hi * d], state)
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Reassemble `(values, adagrad accumulator)` — disk regions overlaid
+    /// with the resident pages — then mark the header clean and remove the
+    /// page file.  The accumulator is empty when the optimizer never
+    /// materialised state, matching the in-RAM backend's contract.
+    pub fn into_dense(self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = self.rows * self.dim;
+        let out = {
+            let mut inner = self.inner.lock().unwrap();
+            let mut values = vec![0f32; n];
+            read_f32s(&mut inner.file, HEADER_BYTES, &mut values)?;
+            let mut accum = if inner.any_state {
+                let mut a = vec![0f32; n];
+                read_f32s(&mut inner.file, self.accum_off(0), &mut a)?;
+                a
+            } else {
+                Vec::new()
+            };
+            for (idx, page) in &inner.pages {
+                let base = self.page_span(*idx).0 * self.dim;
+                values[base..base + page.values.len()].copy_from_slice(&page.values);
+                let acc = page.state.accum();
+                if !acc.is_empty() {
+                    accum[base..base + acc.len()].copy_from_slice(acc);
+                }
+            }
+            if let Some(t) = &self.tele {
+                let resident: u64 = inner
+                    .pages
+                    .values()
+                    .map(|p| ((p.values.len() + p.state.accum().len()) * 4) as u64)
+                    .sum();
+                t.store_resident_sub(resident);
+            }
+            write_header_state(&mut inner.file, STATE_CLEAN)?;
+            inner.finalized = true;
+            (values, accum)
+        };
+        let _ = std::fs::remove_file(&self.path);
+        Ok(out)
+    }
+}
+
+impl Drop for PagedTable {
+    fn drop(&mut self) {
+        // best-effort cleanup on non-finalized drops (error paths); a hard
+        // process death skips this, leaving the open-state file behind for
+        // check_clean to reject
+        let finalized = match self.inner.get_mut() {
+            Ok(inner) => inner.finalized,
+            Err(poisoned) => poisoned.into_inner().finalized,
+        };
+        if !finalized {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+fn write_header(
+    file: &mut File,
+    state: u32,
+    rows: u64,
+    dim: u32,
+    page_rows: u32,
+) -> Result<()> {
+    let mut h = [0u8; HEADER_BYTES as usize];
+    h[0..8].copy_from_slice(&MAGIC.to_le_bytes());
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    h[12..16].copy_from_slice(&state.to_le_bytes());
+    h[16..24].copy_from_slice(&rows.to_le_bytes());
+    h[24..28].copy_from_slice(&dim.to_le_bytes());
+    h[28..32].copy_from_slice(&page_rows.to_le_bytes());
+    file.seek(SeekFrom::Start(0))?;
+    file.write_all(&h)?;
+    Ok(())
+}
+
+fn write_header_state(file: &mut File, state: u32) -> Result<()> {
+    file.seek(SeekFrom::Start(12))?;
+    file.write_all(&state.to_le_bytes())?;
+    Ok(())
+}
+
+/// Write floats as little-endian bit patterns at `off`.
+fn write_f32s(file: &mut File, off: u64, vals: &[f32]) -> Result<()> {
+    file.seek(SeekFrom::Start(off))?;
+    let mut buf = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    file.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read floats (little-endian bit patterns) at `off`; holes read as zeros.
+fn read_f32s(file: &mut File, off: u64, out: &mut [f32]) -> Result<()> {
+    file.seek(SeekFrom::Start(off))?;
+    let mut buf = vec![0u8; out.len() * 4];
+    file.read_exact(&mut buf)?;
+    for (o, c) in out.iter_mut().zip(buf.chunks_exact(4)) {
+        *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}

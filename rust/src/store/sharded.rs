@@ -1,4 +1,4 @@
-//! Sharded parameter store for the async engine.
+//! Sharded in-RAM parameter store for the async engine.
 //!
 //! Embedding tables are partitioned into contiguous **row-range shards**,
 //! each behind its own `Mutex`, so sparse row updates apply concurrently
@@ -6,14 +6,21 @@
 //! lock and are only ever updated by the aggregation barrier).  Row-disjoint
 //! updates commute bitwise — Adagrad/SGD touch each coordinate
 //! independently — so shard-parallel application is deterministic no matter
-//! how the scheduler interleaves shard locks; `tests/engine.rs` checks this
-//! under the in-repo property harness.
+//! how the scheduler interleaves shard locks; `tests/engine.rs` and
+//! `tests/store.rs` check this under the in-repo property harness.
+//!
+//! [`ShardedStore`] also hosts the file-backed [`PagedTable`] backend:
+//! when the run sets `--store-budget-mb`, each embedding slot holds a
+//! [`TableStore::Paged`] instead of the in-RAM [`TableStore::Ram`]
+//! (see [`ShardedStore::from_store_with`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use super::paged::unique_path;
+use super::{default_page_rows, PagedTable, StoreOptions, TableStore};
 use crate::coordinator::step::ParamSink;
 use crate::models::{Param, ParamStore};
 use crate::runtime::HostTensor;
@@ -46,23 +53,30 @@ impl ShardedTable {
     pub fn from_dense(
         rows: usize,
         dim: usize,
-        values: Vec<f32>,
+        mut values: Vec<f32>,
         num_shards: usize,
     ) -> ShardedTable {
         assert_eq!(values.len(), rows * dim, "table shape mismatch");
         let num_shards = num_shards.clamp(1, rows.max(1));
         let rows_per_shard = rows.div_ceil(num_shards);
-        let mut shards = Vec::with_capacity(num_shards);
-        let mut row = 0;
-        while row < rows {
-            let hi = (row + rows_per_shard).min(rows);
-            shards.push(Mutex::new(TableShard {
-                values: values[row * dim..hi * dim].to_vec(),
+        // Drain the input back to front: `split_off` moves one shard's rows
+        // out, `shrink_to_fit` releases the emptied tail (in place for
+        // large allocations), so peak extra memory is one shard — not the
+        // second full copy a slice-and-`to_vec` split would transiently hold.
+        let mut shards_rev = Vec::with_capacity(num_shards);
+        let mut row = rows;
+        while row > 0 {
+            let lo = ((row - 1) / rows_per_shard) * rows_per_shard;
+            let tail = values.split_off(lo * dim);
+            values.shrink_to_fit();
+            shards_rev.push(Mutex::new(TableShard {
+                values: tail,
                 state: DenseState::default(),
             }));
-            row = hi;
+            row = lo;
         }
-        ShardedTable { rows, dim, rows_per_shard, shards }
+        shards_rev.reverse();
+        ShardedTable { rows, dim, rows_per_shard, shards: shards_rev }
     }
 
     /// How many row-range shards the table was split into.
@@ -155,9 +169,8 @@ impl ShardedTable {
     /// Reassemble `(values, adagrad accumulator)`; the accumulator is empty
     /// when no shard was ever touched by Adagrad.
     pub fn into_dense(self) -> (Vec<f32>, Vec<f32>) {
-        let d = self.dim;
-        let mut values = Vec::with_capacity(self.rows * d);
-        let mut accum = Vec::with_capacity(self.rows * d);
+        let mut values = Vec::with_capacity(self.rows * self.dim);
+        let mut accum = Vec::with_capacity(self.rows * self.dim);
         let mut any_state = false;
         for shard in self.shards {
             let shard = shard.into_inner().unwrap();
@@ -185,7 +198,7 @@ struct DenseSlot {
 
 enum SlotBody {
     Dense(Mutex<DenseSlot>),
-    Sharded(ShardedTable),
+    Sharded(TableStore),
 }
 
 struct ParamSlot {
@@ -195,9 +208,9 @@ struct ParamSlot {
     body: SlotBody,
 }
 
-/// The engine's parameter store: embedding tables sharded, everything else
-/// behind per-parameter locks.  All methods take `&self`; the store is
-/// shared by reference across the worker scope.
+/// The engine's parameter store: embedding tables sharded (in RAM) or paged
+/// (on disk), everything else behind per-parameter locks.  All methods take
+/// `&self`; the store is shared by reference across the worker scope.
 pub struct ShardedStore {
     model_name: String,
     kind: String,
@@ -211,15 +224,34 @@ pub struct ShardedStore {
 }
 
 impl ShardedStore {
-    /// Partition a [`ParamStore`]: parameters whose index is in
-    /// `sharded_indices` (the embedding tables) get `num_shards` row shards.
+    /// Partition a [`ParamStore`] with the in-RAM backend: parameters whose
+    /// index is in `sharded_indices` (the embedding tables) get `num_shards`
+    /// row shards.
     pub fn from_store(
         store: ParamStore,
         sharded_indices: &[usize],
         num_shards: usize,
     ) -> Result<ShardedStore> {
+        Self::from_store_with(store, sharded_indices, num_shards, &StoreOptions::ram())
+    }
+
+    /// Partition a [`ParamStore`], choosing the embedding backend from
+    /// `opts`: in-RAM row shards at the default budget 0, or file-backed
+    /// pages under an LRU cache otherwise.  A non-zero budget is split
+    /// evenly across the embedding tables; page files go in the resolved
+    /// store dir and report to the resident-bytes gauge when a telemetry
+    /// hub is attached.
+    pub fn from_store_with(
+        store: ParamStore,
+        sharded_indices: &[usize],
+        num_shards: usize,
+        opts: &StoreOptions,
+    ) -> Result<ShardedStore> {
         let model_name = store.model_name.clone();
         let kind = store.kind.clone();
+        let per_table_budget =
+            (opts.budget_mb * 1024 * 1024) / sharded_indices.len().max(1);
+        let dir = StoreOptions::resolve_dir(&opts.dir);
         let mut slots = Vec::with_capacity(store.params.len());
         for (i, p) in store.params.into_iter().enumerate() {
             let Param { name, trainable, tensor, opt_state } = p;
@@ -238,8 +270,25 @@ impl ShardedStore {
                          warm-starting the engine is not supported yet"
                     );
                 }
-                ShardedTable::from_dense(dims[0], dims[1], values, num_shards)
-                    .into_slot()
+                let table = if opts.budget_mb > 0 {
+                    let mut t = PagedTable::from_dense(
+                        unique_path(&dir, &format!("p{i}")),
+                        dims[0],
+                        dims[1],
+                        values,
+                        default_page_rows(dims[1]),
+                        per_table_budget.max(1),
+                    )?;
+                    if let Some(tele) = &opts.tele {
+                        t = t.with_telemetry(Arc::clone(tele));
+                    }
+                    TableStore::Paged(t)
+                } else {
+                    TableStore::Ram(ShardedTable::from_dense(
+                        dims[0], dims[1], values, num_shards,
+                    ))
+                };
+                SlotBody::Sharded(table)
             } else {
                 SlotBody::Dense(Mutex::new(DenseSlot { values, state: opt_state }))
             };
@@ -302,6 +351,17 @@ impl ShardedStore {
         }
     }
 
+    /// Backend the embedding tables live in: `"ram"` or `"paged"` (the
+    /// first sharded slot decides — backends are never mixed in one run).
+    pub fn backend_name(&self) -> &'static str {
+        for slot in &self.slots {
+            if let SlotBody::Sharded(t) = &slot.body {
+                return t.backend_name();
+            }
+        }
+        "ram"
+    }
+
     /// Reassemble a plain [`ParamStore`] (for evaluation / checkpointing).
     pub fn into_store(self) -> Result<ParamStore> {
         let mut params = Vec::with_capacity(self.slots.len());
@@ -313,7 +373,7 @@ impl ShardedStore {
                     (s.values, s.state)
                 }
                 SlotBody::Sharded(t) => {
-                    let (values, accum) = t.into_dense();
+                    let (values, accum) = t.into_dense()?;
                     (values, DenseState::from_accum(accum))
                 }
             };
@@ -334,12 +394,6 @@ impl ShardedStore {
     }
 }
 
-impl ShardedTable {
-    fn into_slot(self) -> SlotBody {
-        SlotBody::Sharded(self)
-    }
-}
-
 /// The aggregation barrier applies updates through the shared step code via
 /// this sink; interior mutability makes `&ShardedStore` sufficient.
 impl ParamSink for &ShardedStore {
@@ -350,10 +404,7 @@ impl ParamSink for &ShardedStore {
         opt: &Optimizer,
     ) -> Result<()> {
         match &self.slot(param_index)?.body {
-            SlotBody::Sharded(t) => {
-                t.apply_sparse(grad, opt);
-                Ok(())
-            }
+            SlotBody::Sharded(t) => t.apply_sparse(grad, opt),
             SlotBody::Dense(_) => {
                 bail!("sparse update aimed at dense param #{param_index}")
             }
@@ -362,10 +413,7 @@ impl ParamSink for &ShardedStore {
 
     fn apply_dense(&mut self, param_index: usize, grad: &[f32], opt: &Optimizer) -> Result<()> {
         match &self.slot(param_index)?.body {
-            SlotBody::Sharded(t) => {
-                t.apply_dense(grad, opt);
-                Ok(())
-            }
+            SlotBody::Sharded(t) => t.apply_dense(grad, opt),
             SlotBody::Dense(m) => {
                 let mut s = m.lock().unwrap();
                 let DenseSlot { values, state } = &mut *s;
@@ -445,5 +493,27 @@ mod tests {
         let (values, accum) = table.into_dense();
         assert_eq!(values, vec![1.0; 16]);
         assert!(accum.is_empty(), "no shard touched ⇒ no state materialised");
+    }
+
+    /// Regression for the drain-based `from_dense`: shard contents must be
+    /// the same contiguous row ranges the old slice-and-copy split produced,
+    /// across even/uneven splits and shard counts exceeding the row count.
+    #[test]
+    fn from_dense_drain_preserves_shard_contents() {
+        for &(rows, dim, shards) in
+            &[(100usize, 4usize, 7usize), (12, 3, 4), (5, 2, 9), (1, 6, 3), (64, 1, 64)]
+        {
+            let init: Vec<f32> = (0..rows * dim).map(|i| (i as f32).cos()).collect();
+            let table = ShardedTable::from_dense(rows, dim, init.clone(), shards);
+            assert!(table.num_shards() <= shards.min(rows));
+            let mut out = vec![0f32; dim];
+            for r in 0..rows {
+                table.read_row(r, &mut out);
+                assert_eq!(out, &init[r * dim..(r + 1) * dim], "row {r}, shards={shards}");
+            }
+            let (values, accum) = table.into_dense();
+            assert_eq!(values, init, "rows={rows} shards={shards}");
+            assert!(accum.is_empty());
+        }
     }
 }

@@ -166,6 +166,10 @@ pub struct Telemetry {
     /// the engine's `--engine-staleness` gauge; stays 0 on the sync path
     staleness: AtomicU64,
     staleness_max: AtomicU64,
+    /// bytes currently resident in paged-store page caches (summed across
+    /// every paged table reporting to this hub); stays 0 for in-RAM runs
+    store_resident: AtomicU64,
+    store_resident_max: AtomicU64,
     records: AtomicU64,
     started: Instant,
     sink: Mutex<SinkState>,
@@ -186,6 +190,8 @@ impl Telemetry {
             task_queue: QueueGauge::default(),
             staleness: AtomicU64::new(0),
             staleness_max: AtomicU64::new(0),
+            store_resident: AtomicU64::new(0),
+            store_resident_max: AtomicU64::new(0),
             records: AtomicU64::new(0),
             started: Instant::now(),
             sink: Mutex::new(SinkState {
@@ -300,6 +306,36 @@ impl Telemetry {
         self.staleness_max.load(Ordering::Relaxed)
     }
 
+    /// Note `bytes` entering a paged-store page cache (page load, or an
+    /// accumulator materialising on a resident page).  Add/sub style rather
+    /// than set so several paged tables aggregate into one gauge naturally.
+    pub fn store_resident_add(&self, bytes: u64) {
+        let now = self.store_resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.store_resident_max.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Note `bytes` leaving a paged-store page cache (eviction or table
+    /// teardown).  Saturates at zero, so a stray unbalanced call cannot
+    /// wrap the gauge.
+    pub fn store_resident_sub(&self, bytes: u64) {
+        let _ = self.store_resident.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(bytes)),
+        );
+    }
+
+    /// Bytes currently resident across every paged table reporting here.
+    pub fn store_resident(&self) -> u64 {
+        self.store_resident.load(Ordering::Relaxed)
+    }
+
+    /// High-water resident paged-store bytes over the run — what the
+    /// `fullscale` harness asserts against the `--store-budget-mb` bound.
+    pub fn store_resident_max(&self) -> u64 {
+        self.store_resident_max.load(Ordering::Relaxed)
+    }
+
     /// Number of step records emitted so far.
     pub fn records(&self) -> u64 {
         self.records.load(Ordering::Relaxed)
@@ -383,6 +419,7 @@ impl Telemetry {
             batch_queue_max: self.queue_max(Queue::Batch),
             task_queue_max: self.queue_max(Queue::Task),
             max_staleness: self.staleness_max(),
+            max_store_resident_bytes: self.store_resident_max(),
             eps_spent,
             delta,
             stages: Stage::ALL
@@ -495,6 +532,10 @@ pub struct RunSummary {
     /// High-water snapshot age over the run — bounded by the engine's
     /// `--engine-staleness` window, 0 everywhere else.
     pub max_staleness: u64,
+    /// High-water resident paged-store page-cache bytes — bounded by
+    /// `--store-budget-mb` (plus at most one page per table when the budget
+    /// is below one page), 0 for in-RAM runs.
+    pub max_store_resident_bytes: u64,
     /// Cumulative privacy ε spent over the run (closed-form bound).
     pub eps_spent: f64,
     /// The δ at which `eps_spent` is stated.
@@ -527,6 +568,10 @@ impl RunSummary {
                 "max_staleness".into(),
                 Json::num(self.max_staleness as f64),
             ),
+            (
+                "max_store_resident_bytes".into(),
+                Json::num(self.max_store_resident_bytes as f64),
+            ),
             ("eps_spent".into(), Json::num(self.eps_spent)),
             ("delta".into(), Json::num(self.delta)),
             (
@@ -551,9 +596,10 @@ impl RunSummary {
 }
 
 /// Current `BENCH_*.json` schema version; bump on any breaking field change.
-/// (v2 added the per-row `staleness` field for the `--engine-staleness`
+/// (v3 added the per-row `store` backend label for the paged-store rows;
+/// v2 added the per-row `staleness` field for the `--engine-staleness`
 /// sweep.)
-pub const BENCH_SCHEMA_VERSION: u64 = 2;
+pub const BENCH_SCHEMA_VERSION: u64 = 3;
 
 /// One sync/async throughput row inside a [`BenchSnapshot`].
 #[derive(Clone, Debug, PartialEq)]
@@ -565,6 +611,9 @@ pub struct BenchRow {
     /// `--engine-staleness` window the row ran with (0 for the sync path
     /// and the bit-exact async rows).
     pub staleness: u64,
+    /// Embedding-table store backend the row ran against (`"ram"` for the
+    /// in-memory shards, `"paged"` for the file-backed page cache).
+    pub store: String,
     /// Wall seconds for the timed run.
     pub secs: f64,
     /// Optimizer steps per second.
@@ -621,6 +670,7 @@ impl BenchSnapshot {
                                     Json::num(r.grad_workers as f64),
                                 ),
                                 ("staleness".into(), Json::num(r.staleness as f64)),
+                                ("store".into(), Json::str(r.store.clone())),
                                 ("secs".into(), Json::num(r.secs)),
                                 ("steps_per_sec".into(), Json::num(r.steps_per_sec)),
                                 ("speedup".into(), Json::num(r.speedup)),
@@ -679,6 +729,11 @@ impl BenchSnapshot {
                     .to_string(),
                 grad_workers: u64_field(row, "grad_workers")?,
                 staleness: u64_field(row, "staleness")?,
+                store: row
+                    .get("store")
+                    .and_then(Json::as_str)
+                    .context("row field `store` is not a string")?
+                    .to_string(),
                 secs: f64_field(row, "secs")?,
                 steps_per_sec: f64_field(row, "steps_per_sec")?,
                 speedup: f64_field(row, "speedup")?,
@@ -755,6 +810,21 @@ mod tests {
         assert_eq!(tele.staleness(), 1);
         assert_eq!(tele.staleness_max(), 2);
         assert_eq!(tele.summary(0.0, 0.0).max_staleness, 2);
+    }
+
+    #[test]
+    fn store_resident_gauge_tracks_bytes_and_high_water() {
+        let tele = Telemetry::new();
+        assert_eq!(tele.store_resident(), 0);
+        tele.store_resident_add(4096);
+        tele.store_resident_add(4096);
+        tele.store_resident_sub(4096);
+        assert_eq!(tele.store_resident(), 4096);
+        assert_eq!(tele.store_resident_max(), 8192);
+        // a stray unbalanced sub saturates instead of wrapping
+        tele.store_resident_sub(1 << 40);
+        assert_eq!(tele.store_resident(), 0);
+        assert_eq!(tele.summary(0.0, 0.0).max_store_resident_bytes, 8192);
     }
 
     #[test]
@@ -855,6 +925,7 @@ mod tests {
                     path: "sync".into(),
                     grad_workers: 1,
                     staleness: 0,
+                    store: "ram".into(),
                     secs: 12.5,
                     steps_per_sec: 4.8,
                     speedup: 1.0,
@@ -863,6 +934,7 @@ mod tests {
                     path: "async".into(),
                     grad_workers: 4,
                     staleness: 0,
+                    store: "ram".into(),
                     secs: 4.25,
                     steps_per_sec: 14.1,
                     speedup: 2.94,
@@ -871,6 +943,7 @@ mod tests {
                     path: "async".into(),
                     grad_workers: 4,
                     staleness: 2,
+                    store: "paged".into(),
                     secs: 3.4,
                     steps_per_sec: 17.6,
                     speedup: 3.67,

@@ -19,7 +19,11 @@
 //!   engine — outcomes and final parameters — on both workloads, at
 //!   several process/shard splits, including `--stream`
 //!   (`docs/ENGINE.md`; the fault-injection side lives in
-//!   `tests/engine_fault.rs`).
+//!   `tests/engine_fault.rs`);
+//! * the paged-store backend (`--store-budget-mb`): file-backed tables are
+//!   bit-identical to the in-RAM shards on every path above, in-process
+//!   and per-actor, including `--stream` with reselection counts (the
+//!   table-level property suite lives in `tests/store.rs`).
 
 mod support;
 
@@ -599,9 +603,10 @@ fn fest_preselection_paths_agree() {
 // ---- multi-process mode (`--engine-processes`) ----
 
 /// The three-way bit-exactness bar on one config: sync trainer ==
-/// in-process async == multi-process actor fleet, on outcomes AND final
-/// parameters, at each `(processes, shards, data actors)` split.  Run
-/// under a watchdog — a wire-protocol regression must fail in bounded
+/// in-process async == multi-process actor fleet — plus the paged-store
+/// backend (`--store-budget-mb`) on both async paths — on outcomes AND
+/// final parameters, at each `(processes, shards, data actors)` split.
+/// Run under a watchdog — a wire-protocol regression must fail in bounded
 /// time, not hang the suite.
 fn three_way_multi_process(cfg: RunConfig, what: &'static str) {
     support::use_cli_actor_exe();
@@ -622,6 +627,19 @@ fn three_way_multi_process(cfg: RunConfig, what: &'static str) {
         assert_outcomes_identical(&sync_out, &async_out, &format!("{what}: in-process"));
         assert_params_identical(&trainer.store, &async_store, &format!("{what}: in-process"));
 
+        // paged-store backend in-process: file-backed tables at a 1 MiB
+        // page-cache budget must reproduce the in-RAM shards bit for bit
+        // (and the resident-bytes gauge must have seen pages move)
+        let mut c = cfg.clone();
+        c.store_budget_mb = 1;
+        let (paged_out, paged_store) = engine::run_with_params(&c, &rt).unwrap();
+        assert_outcomes_identical(&sync_out, &paged_out, &format!("{what}: paged"));
+        assert_params_identical(&trainer.store, &paged_store, &format!("{what}: paged"));
+        assert!(
+            paged_out.telemetry.max_store_resident_bytes > 0,
+            "{what}: paged run never reported resident page bytes"
+        );
+
         // (gradient actor processes, shards per actor table, data actors)
         for (procs, shards, data) in [(2, 2, 2), (3, 1, 1)] {
             let mut c = cfg.clone();
@@ -635,6 +653,15 @@ fn three_way_multi_process(cfg: RunConfig, what: &'static str) {
             assert_outcomes_identical(&async_out, &mp_out, &format!("{label} vs async"));
             assert_params_identical(&async_store, &mp_store, &format!("{label} vs async"));
         }
+
+        // paged tables inside the actor fleet: each gradient actor pages
+        // only its own contiguous row range, same bit-exactness bar
+        let mut c = cfg.clone();
+        c.engine.processes = 2;
+        c.store_budget_mb = 1;
+        let (mp_out, mp_store) = engine::run_with_params(&c, &rt).unwrap();
+        assert_outcomes_identical(&sync_out, &mp_out, &format!("{what}: mp paged"));
+        assert_params_identical(&trainer.store, &mp_store, &format!("{what}: mp paged"));
     });
 }
 
@@ -702,6 +729,32 @@ fn multi_process_streaming_matches_sync_and_counts_reselections() {
         let mp_out = engine::run_streaming(&c, &rt, gcfg, 2).unwrap();
         assert_streaming_identical(&sync_out, &mp_out, "mp streaming FirstDay prior");
     });
+}
+
+#[test]
+fn paged_store_streaming_matches_sync_and_counts_reselections() {
+    // `--stream` on the paged backend: DP-FEST reselections rebuild the
+    // RowCache from file-backed tables, and the whole §4.3 protocol stays
+    // bit-identical to the sync StreamingTrainer — at a 1 MiB budget that
+    // forces eviction traffic and at one comfortably holding every page.
+    let rt = Runtime::builtin();
+    let cfg = streaming_cfg(Algorithm::DpFest, FrequencySource::Streaming, 4);
+    let gcfg = gen_cfg(&rt, &cfg).with_drift();
+    let sync_out = sync_streaming(&cfg, &rt, &gcfg);
+    assert_eq!(sync_out.reselections, TRAIN_DAYS.div_ceil(4));
+    for budget_mb in [1usize, 64] {
+        let mut c = cfg.clone();
+        c.store_budget_mb = budget_mb;
+        c.engine.grad_workers = 4;
+        c.engine.data_workers = 2;
+        let paged_out = engine::run_streaming(&c, &rt, gcfg.clone(), 2).unwrap();
+        assert_streaming_identical(
+            &sync_out,
+            &paged_out,
+            &format!("paged streaming (budget {budget_mb} MiB)"),
+        );
+        assert_eq!(paged_out.reselections, TRAIN_DAYS.div_ceil(4));
+    }
 }
 
 #[test]

@@ -7,7 +7,7 @@
 //! `engine::actor::set_fault` is process-global (it rides the environment
 //! of every actor child spawned from this process afterwards), so it must
 //! never share a binary with the healthy multi-process runs in
-//! `tests/engine.rs` / `tests/telemetry.rs`.  For the same reason both
+//! `tests/engine.rs` / `tests/telemetry.rs`.  For the same reason all
 //! fault scenarios run sequentially inside ONE `#[test]`.
 
 mod support;
@@ -16,6 +16,7 @@ use sparse_dp_emb::coordinator::Algorithm;
 use sparse_dp_emb::engine;
 use sparse_dp_emb::engine::actor::set_fault;
 use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::store::PagedTable;
 
 /// Assert no live actor child survived the failed run.  `ActorSet::drop`
 /// kills and reaps every child on the error path, so the kernel's
@@ -87,4 +88,55 @@ fn killed_actor_processes_fail_the_run_in_bounded_time() {
         "data-actor death surfaced an unrelated error: {msg}"
     );
     assert_no_actor_children("data-actor death");
+
+    // --- Scenario 3: a gradient actor dies mid-scatter, paged store -------
+    // Same `grad:0:2` abort, but with the file-backed paged store live
+    // (`store_budget_mb = 1`) and the page files routed to a dedicated
+    // directory.  The killed actor (`process::exit`) and its SIGKILLed
+    // sibling both skip `Drop`, so their page files survive with the
+    // open-state header — and `PagedTable::check_clean` must reject every
+    // one of them on reopen: a dead writer means its scatters may be
+    // partially applied, and reusing such a file would corrupt the table
+    // silently.  (The coordinator's own tables unwind normally on the
+    // error path and remove their files.)
+    let dir = std::env::temp_dir().join(format!("sde_fault_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    set_fault("grad:0:2");
+    let err = support::watchdog(120, "paged grad-actor death", || {
+        let mut cfg = support::tiny_cfg(Algorithm::DpSgd);
+        cfg.engine.processes = 2;
+        cfg.engine.data_workers = 1;
+        cfg.store_budget_mb = 1;
+        cfg.store_dir = dir.to_string_lossy().into_owned();
+        let rt = Runtime::builtin();
+        engine::run_with_params(&cfg, &rt)
+    })
+    .expect_err("a dead gradient actor must fail the paged run, not hang it");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("gradient actor") || msg.contains("gradient worker"),
+        "paged grad-actor death surfaced an unrelated error: {msg}"
+    );
+    let leftover: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|e| e == "pages"))
+        .collect();
+    assert!(
+        !leftover.is_empty(),
+        "the killed actor should have left its page files behind in {}",
+        dir.display()
+    );
+    for path in &leftover {
+        let err = PagedTable::check_clean(path)
+            .expect_err("a crashed writer's page file must be rejected on reopen");
+        assert!(
+            format!("{err:#}").contains("not cleanly closed"),
+            "wrong rejection for {}: {err:#}",
+            path.display()
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+    assert_no_actor_children("paged grad-actor death");
 }

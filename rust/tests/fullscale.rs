@@ -1,0 +1,46 @@
+//! Executability smoke for the revived `fullscale` harness: the `--fast`
+//! sweep must run end to end (Table-3 gradient-size half + the paged-store
+//! Zipf throughput half) and land its `"store": "paged"` rows in the bench
+//! snapshot.  `BENCH_OUT` is pointed at a scratch file so the test never
+//! touches the tracked `BENCH_engine.json`; this test binary holds exactly
+//! one test, so the process-wide env var cannot race another thread.
+
+mod support;
+
+use sparse_dp_emb::coordinator::Algorithm;
+use sparse_dp_emb::harness;
+use sparse_dp_emb::runtime::Runtime;
+use sparse_dp_emb::store::unique_path;
+use sparse_dp_emb::telemetry::{BenchSnapshot, BENCH_SCHEMA_VERSION};
+
+#[test]
+fn fullscale_fast_runs_and_writes_paged_bench_rows() {
+    let bench_path = unique_path(&std::env::temp_dir(), "bench_smoke");
+    let bench_path = bench_path.with_extension("json");
+    std::env::set_var("BENCH_OUT", &bench_path);
+
+    let cfg = support::tiny_cfg(Algorithm::DpAdaFest); // fullscale only reads seed + store knobs
+    let rt = Runtime::builtin();
+    support::watchdog(300, "fullscale --fast", move || {
+        harness::run_experiment("fullscale", &cfg, &rt, true)
+    })
+    .expect("fullscale --fast must run end to end");
+
+    let text = std::fs::read_to_string(&bench_path).expect("fullscale wrote no bench snapshot");
+    // the exact assertion CI makes against the tracked snapshot
+    assert!(text.contains("\"store\": \"paged\""), "no paged rows in: {text}");
+    let snap = BenchSnapshot::parse(&text).expect("snapshot must round-trip");
+    assert_eq!(snap.schema_version, BENCH_SCHEMA_VERSION);
+    for label in ["paged-scatter", "paged-select"] {
+        let row = snap
+            .rows
+            .iter()
+            .find(|r| r.path == label)
+            .unwrap_or_else(|| panic!("missing {label} row"));
+        assert_eq!(row.store, "paged");
+        assert!(row.secs > 0.0 && row.steps_per_sec > 0.0, "degenerate {label} timing");
+    }
+
+    std::env::remove_var("BENCH_OUT");
+    std::fs::remove_file(&bench_path).unwrap();
+}

@@ -1,0 +1,273 @@
+//! Property suite for the embedding-table store backends: the file-backed
+//! [`PagedTable`] against the in-RAM [`ShardedTable`] oracle (and a flat
+//! single-slice application), byte for byte.
+//!
+//! The bit-exactness claim (docs/ENGINE.md): both backends run the same
+//! per-coordinate optimizer code on sub-ranges of the table, so any
+//! partitioning — shards or pages — produces identical values AND identical
+//! Adagrad accumulator state.  Checked here over random row patterns, page
+//! sizes, shard counts, and cache budgets under the in-repo property
+//! harness, plus deterministic edge cases the issue calls out: a budget of
+//! a single page, vocab not a multiple of the page size, repeated rows in
+//! one scatter, eviction-then-reread of a dirty page, and crash-consistency
+//! of the page-file header ([`PagedTable::check_clean`]).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sparse_dp_emb::proptest::{check, ensure, usize_in};
+use sparse_dp_emb::sparse::{DenseState, Optimizer, RowSparseGrad};
+use sparse_dp_emb::store::{default_page_rows, unique_path, PagedTable, ShardedTable};
+use sparse_dp_emb::telemetry::Telemetry;
+use sparse_dp_emb::util::rng::Xoshiro256;
+
+fn tmp(label: &str) -> PathBuf {
+    unique_path(&std::env::temp_dir(), label)
+}
+
+#[test]
+fn prop_paged_matches_sharded_oracle_bitwise() {
+    // random tables, random scatters (repeated rows allowed), interleaved
+    // row reads, then final (values, accum) — all three representations
+    // must agree exactly
+    check("paged == sharded == flat", 60, |rng| {
+        let rows = usize_in(rng, 1, 300);
+        let dim = usize_in(rng, 1, 8);
+        let page_rows = usize_in(rng, 1, rows + 3); // clamped to rows inside
+        let shards = usize_in(rng, 1, 9);
+        let page_cost = page_rows.min(rows) * dim * 8;
+        let budget = page_cost * usize_in(rng, 1, 4); // 1..4 resident pages
+        let opt = if rng.uniform() < 0.5 {
+            Optimizer::adagrad(0.05)
+        } else {
+            Optimizer::sgd(0.05)
+        };
+        let init: Vec<f32> = (0..rows * dim).map(|_| rng.gauss() as f32).collect();
+
+        let mut flat = init.clone();
+        let mut flat_state = DenseState::default();
+        let sharded = ShardedTable::from_dense(rows, dim, init.clone(), shards);
+        let paged =
+            PagedTable::from_dense(tmp("prop"), rows, dim, init, page_rows, budget)
+                .map_err(|e| e.to_string())?;
+
+        for _ in 0..usize_in(rng, 1, 6) {
+            let mut g = RowSparseGrad::new(rows, dim);
+            for _ in 0..usize_in(rng, 0, 40) {
+                let r = rng.below(rows as u64) as u32;
+                let vals: Vec<f32> = (0..dim).map(|_| rng.gauss() as f32).collect();
+                g.add_row(r, &vals);
+            }
+            opt.sparse_step(&mut flat, &g, &mut flat_state);
+            sharded.apply_sparse(&g, &opt);
+            paged.apply_sparse(&g, &opt).map_err(|e| e.to_string())?;
+
+            let (mut a, mut b) = (vec![0f32; dim], vec![0f32; dim]);
+            for _ in 0..5 {
+                let r = rng.below(rows as u64) as usize;
+                sharded.read_row(r, &mut a);
+                paged.read_row(r, &mut b).map_err(|e| e.to_string())?;
+                ensure(a == b, format!("row {r} read diverged mid-run"))?;
+                ensure(
+                    b == flat[r * dim..(r + 1) * dim],
+                    format!("row {r} diverged from flat"),
+                )?;
+            }
+        }
+        ensure(
+            paged.resident_pages() <= paged.budget_pages(),
+            "resident pages exceeded the budget",
+        )?;
+        let (sv, sa) = sharded.into_dense();
+        let (pv, pa) = paged.into_dense().map_err(|e| e.to_string())?;
+        ensure(sv == flat && pv == flat, "final values diverged")?;
+        ensure(sa == pa, "final accumulator diverged")
+    });
+}
+
+#[test]
+fn one_page_budget_evicts_and_rereads_dirty_pages() {
+    // budget = exactly one page, vocab not a multiple of the page size
+    // (7 rows, 3-row pages → last page short): touching a second page must
+    // write the first (dirty) page back, and re-reading it must see the
+    // scattered values, not the initial ones
+    let (rows, dim, page_rows) = (7usize, 3usize, 3usize);
+    let init: Vec<f32> = (0..rows * dim).map(|i| i as f32 * 0.5).collect();
+    let opt = Optimizer::adagrad(0.1);
+    let mut flat = init.clone();
+    let mut flat_state = DenseState::default();
+
+    let paged = PagedTable::from_dense(
+        tmp("onepage"),
+        rows,
+        dim,
+        init.clone(),
+        page_rows,
+        page_rows * dim * 8,
+    )
+    .unwrap();
+    assert_eq!(paged.budget_pages(), 1);
+
+    let mut g = RowSparseGrad::new(rows, dim);
+    g.add_row(0, &[1.0, 2.0, 3.0]);
+    g.add_row(1, &[-0.5, 0.25, 4.0]);
+    opt.sparse_step(&mut flat, &g, &mut flat_state);
+    paged.apply_sparse(&g, &opt).unwrap();
+    assert_eq!(paged.resident_pages(), 1);
+
+    // touch the short last page: evicts dirty page 0
+    let mut out = vec![0f32; dim];
+    paged.read_row(rows - 1, &mut out).unwrap();
+    assert_eq!(out, init[(rows - 1) * dim..]);
+    assert_eq!(paged.resident_pages(), 1);
+
+    // re-read the written-back page
+    paged.read_row(0, &mut out).unwrap();
+    assert_eq!(out, flat[0..dim]);
+
+    let (values, accum) = paged.into_dense().unwrap();
+    assert_eq!(values, flat);
+    assert_eq!(accum, flat_state.accum().to_vec());
+}
+
+#[test]
+fn repeated_rows_in_one_scatter_match_flat() {
+    // RowSparseGrad pre-accumulates a repeated row id into one entry, so
+    // the paged apply must see the same summed row as the flat oracle —
+    // with the repeats spanning several pages of a multi-page table
+    let (rows, dim, page_rows) = (6usize, 2usize, 2usize);
+    let init = vec![0.25f32; rows * dim];
+    let opt = Optimizer::adagrad(0.2);
+    let mut flat = init.clone();
+    let mut flat_state = DenseState::default();
+
+    let paged =
+        PagedTable::from_dense(tmp("repeat"), rows, dim, init, page_rows, page_rows * dim * 8)
+            .unwrap();
+    let mut g = RowSparseGrad::new(rows, dim);
+    g.add_row(3, &[1.0, -1.0]);
+    g.add_row(0, &[0.5, 0.5]);
+    g.add_row(3, &[2.0, 0.25]); // same row again, later in the sequence
+    g.add_row(5, &[-0.125, 8.0]);
+    opt.sparse_step(&mut flat, &g, &mut flat_state);
+    paged.apply_sparse(&g, &opt).unwrap();
+
+    let (values, accum) = paged.into_dense().unwrap();
+    assert_eq!(values, flat);
+    assert_eq!(accum, flat_state.accum().to_vec());
+}
+
+#[test]
+fn dense_apply_matches_flat_across_pages() {
+    // the DP-SGD embedding baseline walks every page in row order
+    let (rows, dim, page_rows) = (11usize, 3usize, 4usize);
+    let init: Vec<f32> = (0..rows * dim).map(|i| (i as f32).sin()).collect();
+    let grad: Vec<f32> = (0..rows * dim).map(|i| (i % 5) as f32 * 0.1 - 0.2).collect();
+    for opt in [Optimizer::sgd(0.3), Optimizer::adagrad(0.3)] {
+        let mut flat = init.clone();
+        let mut flat_state = DenseState::default();
+        opt.dense_step(&mut flat, &grad, &mut flat_state);
+        let paged = PagedTable::from_dense(
+            tmp("dense"),
+            rows,
+            dim,
+            init.clone(),
+            page_rows,
+            page_rows * dim * 8, // one page resident at a time
+        )
+        .unwrap();
+        paged.apply_dense(&grad, &opt).unwrap();
+        let (values, accum) = paged.into_dense().unwrap();
+        assert_eq!(values, flat);
+        assert_eq!(accum, flat_state.accum().to_vec());
+    }
+}
+
+#[test]
+fn create_zeroed_serves_zeros_within_budget_and_cleans_up() {
+    // a zero-initialised table never materialises rows × dim anywhere: the
+    // file is a sparse hole and unwritten pages read back as zeros
+    let (rows, dim) = (1_000_000usize, 4usize);
+    let page_rows = default_page_rows(dim);
+    let budget = 2 * page_rows * dim * 8;
+    let path = tmp("zeroed");
+    let paged =
+        PagedTable::create_zeroed(path.clone(), rows, dim, page_rows, budget).unwrap();
+    assert_eq!(paged.budget_pages(), 2);
+
+    let mut rng = Xoshiro256::seed_from(11);
+    let mut out = vec![1f32; dim];
+    for _ in 0..50 {
+        paged.read_row(rng.below(rows as u64) as usize, &mut out).unwrap();
+        assert_eq!(out, vec![0f32; dim]);
+        assert!(paged.resident_pages() <= 2);
+    }
+    let mut g = RowSparseGrad::new(rows, dim);
+    g.add_row(999_999, &[1.0, 2.0, 3.0, 4.0]);
+    paged.apply_sparse(&g, &Optimizer::sgd(1.0)).unwrap();
+    paged.read_row(999_999, &mut out).unwrap();
+    assert_eq!(out, [-1.0, -2.0, -3.0, -4.0]);
+
+    // a plain drop (error path) removes the page file too
+    assert!(path.exists());
+    drop(paged);
+    assert!(!path.exists());
+}
+
+#[test]
+fn telemetry_gauge_tracks_resident_bytes_and_respects_budget() {
+    let tele = Arc::new(Telemetry::new());
+    let (rows, dim, page_rows) = (100usize, 4usize, 8usize);
+    let page_cost = page_rows * dim * 8;
+    let paged = PagedTable::create_zeroed(tmp("gauge"), rows, dim, page_rows, 2 * page_cost)
+        .unwrap()
+        .with_telemetry(Arc::clone(&tele));
+
+    let mut out = vec![0f32; dim];
+    for r in (0..rows).step_by(7) {
+        paged.read_row(r, &mut out).unwrap();
+        assert_eq!(tele.store_resident(), paged.resident_bytes());
+    }
+    // Adagrad materialises accumulators on resident pages — gauge grows but
+    // the high-water stays within the worst-case budget (values + accum)
+    let mut g = RowSparseGrad::new(rows, dim);
+    for r in [0u32, 13, 77, 99] {
+        g.add_row(r, &[0.1, 0.2, 0.3, 0.4]);
+    }
+    paged.apply_sparse(&g, &Optimizer::adagrad(0.1)).unwrap();
+    assert_eq!(tele.store_resident(), paged.resident_bytes());
+    assert!(tele.store_resident_max() <= (2 * page_cost) as u64);
+
+    paged.into_dense().unwrap();
+    assert_eq!(tele.store_resident(), 0, "teardown must release the gauge");
+}
+
+#[test]
+fn check_clean_rejects_crashed_and_foreign_files() {
+    // simulate a process dying mid-run: the table is neither finalised nor
+    // dropped, so the page file keeps its open-state header on disk
+    let path = tmp("crash");
+    let t = PagedTable::from_dense(path.clone(), 4, 2, vec![0.1; 8], 2, 1024).unwrap();
+    let mut g = RowSparseGrad::new(4, 2);
+    g.add_row(1, &[1.0, -1.0]);
+    t.apply_sparse(&g, &Optimizer::sgd(0.5)).unwrap();
+    std::mem::forget(t);
+    let err = PagedTable::check_clean(&path).unwrap_err();
+    assert!(
+        err.to_string().contains("not cleanly closed"),
+        "wrong rejection: {err:#}"
+    );
+    std::fs::remove_file(&path).unwrap();
+
+    // junk that is not a page file at all
+    let junk = tmp("junk");
+    std::fs::write(&junk, [0u8; 64]).unwrap();
+    assert!(PagedTable::check_clean(&junk).is_err());
+    std::fs::remove_file(&junk).unwrap();
+
+    // a cleanly finalised table leaves nothing behind to check
+    let done = tmp("done");
+    let t = PagedTable::from_dense(done.clone(), 4, 2, vec![0.1; 8], 2, 1024).unwrap();
+    t.into_dense().unwrap();
+    assert!(!done.exists());
+}

@@ -196,6 +196,8 @@ fn all_frames(rng: &mut Xoshiro256) -> Vec<Frame> {
             owner_index: rng.next_u64() as u32,
             shards: rng.next_u64() as u32,
             kernel_threads: rng.next_u64() as u32,
+            store_budget_mb: rng.next_u64(),
+            store_dir: any_str(rng),
         }),
         Frame::Batch(BatchMsg {
             step: rng.next_u64(),
