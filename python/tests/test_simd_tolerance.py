@@ -1,0 +1,150 @@
+"""NumPy f32 validation of the SIMD backend's documented tolerance model.
+
+The Rust SIMD backend (`rust/src/kernels/simd.rs`) reassociates k-term
+reduction chains into 8 lane partials plus a fixed pairwise horizontal-sum
+tree.  Its verification suite (`rust/tests/kernels.rs`) accepts an element
+when it is within 4 ULPs of the scalar chain OR within the standard
+reassociated-summation bound ``2*(k+1)*eps_f32*sum(|terms|)``.
+
+This file replays both summation orders **in exact f32 arithmetic** with
+NumPy and checks, over random and adversarially cancellation-heavy cases,
+that the observed scalar-vs-lane difference always sits inside the hybrid
+bound — i.e. the tolerance the Rust suite enforces is actually satisfiable
+by the reassociation the backend performs, with no dependence on a Rust
+toolchain.  Pure NumPy; no jax needed.
+"""
+
+import numpy as np
+
+LANES = 8
+EPS32 = np.float32(np.finfo(np.float32).eps)
+
+
+def scalar_chain(terms, start=np.float32(0.0)):
+    """The scalar kernels' order: one chain, ascending k."""
+    acc = np.float32(start)
+    for t in terms:
+        acc = np.float32(acc + np.float32(t))
+    return acc
+
+
+def hsum8(v):
+    """The documented pairwise tree: ((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))."""
+    a = np.float32(np.float32(v[0] + v[1]) + np.float32(v[2] + v[3]))
+    b = np.float32(np.float32(v[4] + v[5]) + np.float32(v[6] + v[7]))
+    return np.float32(a + b)
+
+
+def lane_chain(terms, start=np.float32(0.0)):
+    """The SIMD backend's order: lane l accumulates terms 8c+l serially,
+    lanes reduce through the pairwise tree, the tail (k % 8) is added
+    serially, and the chain start lands first: start + (hsum8 + tail)."""
+    terms = np.asarray(terms, dtype=np.float32)
+    k = terms.shape[0]
+    body = k - (k % LANES)
+    lanes = np.zeros(LANES, dtype=np.float32)
+    for c in range(body // LANES):
+        for l in range(LANES):
+            lanes[l] = np.float32(lanes[l] + terms[c * LANES + l])
+    tail = np.float32(0.0)
+    for t in terms[body:]:
+        tail = np.float32(tail + t)
+    return np.float32(np.float32(start) + np.float32(hsum8(lanes) + tail))
+
+
+def ulp_distance(a, b):
+    """Monotone-bit-map ULP distance; both zeros coincide."""
+
+    def monotone(x):
+        bits = np.float32(x).view(np.uint32)
+        if bits & np.uint32(0x8000_0000):
+            return -int(bits & np.uint32(0x7FFF_FFFF))
+        return int(bits)
+
+    return abs(monotone(a) - monotone(b))
+
+
+def within_tolerance(got, want, k, mag):
+    """The Rust suite's acceptance predicate."""
+    if ulp_distance(got, want) <= 4:
+        return True
+    bound = 2.0 * (k + 1) * float(EPS32) * mag
+    return abs(float(got) - float(want)) <= bound
+
+
+def check_case(terms, start=np.float32(0.0)):
+    terms = np.asarray(terms, dtype=np.float32)
+    want = scalar_chain(terms, start)
+    got = lane_chain(terms, start)
+    mag = float(np.abs(terms.astype(np.float64)).sum()) + abs(float(start))
+    assert within_tolerance(got, got, len(terms), mag)  # reflexivity
+    assert within_tolerance(got, want, len(terms), mag), (
+        f"k={len(terms)}: scalar {want!r} vs lanes {got!r}, "
+        f"ulp={ulp_distance(got, want)}, mag={mag!r}"
+    )
+
+
+def test_gaussian_chains_stay_inside_the_bound():
+    rng = np.random.default_rng(0xD07)
+    for _ in range(300):
+        k = int(rng.integers(0, 200))
+        terms = (rng.standard_normal(k) * 1.5).astype(np.float32)
+        start = np.float32(rng.standard_normal() * rng.choice([0.0, 1.0, 10.0]))
+        check_case(terms, start)
+
+
+def test_cancellation_heavy_chains_stay_inside_the_bound():
+    # pairs that nearly cancel: the result is ~0 while sum(|terms|) is large.
+    # This is exactly where a pure-ULP bar fails and the relative arm of the
+    # hybrid bound (stated against the magnitude, not the result) must carry.
+    rng = np.random.default_rng(0xCAFE)
+    for _ in range(300):
+        half = int(rng.integers(1, 60))
+        a = (rng.standard_normal(half) * 100.0).astype(np.float32)
+        jitter = (rng.standard_normal(half) * 1e-4).astype(np.float32)
+        terms = np.empty(2 * half, dtype=np.float32)
+        terms[0::2] = a
+        terms[1::2] = -(a + jitter)
+        check_case(terms)
+
+
+def test_mixed_scale_chains_stay_inside_the_bound():
+    # magnitudes spanning ~12 orders: small terms absorbed by large partials
+    rng = np.random.default_rng(0xBEEF)
+    for _ in range(200):
+        k = int(rng.integers(1, 120))
+        exp = rng.integers(-6, 6, size=k).astype(np.float64)
+        terms = (rng.standard_normal(k) * 10.0**exp).astype(np.float32)
+        check_case(terms)
+
+
+def test_zero_one_chains_are_bitwise_exact():
+    # the Rust suite's exhaustive {0,1} grid in miniature: small-integer
+    # sums are exact under any association, so lanes owe bit equality
+    rng = np.random.default_rng(0x51D)
+    for _ in range(200):
+        k = int(rng.integers(0, 64))
+        terms = rng.integers(0, 2, size=k).astype(np.float32)
+        start = np.float32(rng.integers(0, 2))
+        want = scalar_chain(terms, start)
+        got = lane_chain(terms, start)
+        assert np.float32(got).view(np.uint32) == np.float32(want).view(np.uint32)
+
+
+def test_dot_products_stay_inside_the_bound():
+    # the matmul_bt / softmax-bwd shape of the chain: terms are products,
+    # the magnitude oracle is sum(|a_i * b_i|) in f64
+    rng = np.random.default_rng(0xD07B)
+    for _ in range(200):
+        k = int(rng.integers(0, 150))
+        a = (rng.standard_normal(k) * 1.5).astype(np.float32)
+        b = (rng.standard_normal(k) * 1.5).astype(np.float32)
+        terms = (a * b).astype(np.float32)
+        check_case(terms)
+
+
+def test_ulp_arm_covers_tiny_magnitudes():
+    # near-zero magnitudes: the relative arm's bound underflows to ~0, so
+    # the ULP arm must accept the reassociated result on its own
+    terms = np.array([1e-38, -1e-38, 3e-39, 2e-39] * 4, dtype=np.float32)
+    check_case(terms)

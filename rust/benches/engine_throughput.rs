@@ -1,7 +1,9 @@
 //! `cargo bench --bench engine_throughput` — sync trainer vs the async
 //! sharded engine, steps/sec on the synthetic pCTR workload (criteo-small,
 //! DP-AdaFEST), at 1/2/4 gradient workers, then a `--engine-staleness`
-//! sweep at k ∈ {0, 1, 2, 4} quantifying what the bounded window buys.
+//! sweep at k ∈ {0, 1, 2, 4} quantifying what the bounded window buys,
+//! then one `--engine-kernel-backend simd` row for the lane-parallel
+//! kernel backend.
 //!
 //! The worker rows are bit-for-bit equivalent to the sync path (asserted
 //! inside `engine::compare_throughput`), so that part is a pure throughput
@@ -17,6 +19,7 @@ use sparse_dp_emb::config::RunConfig;
 use sparse_dp_emb::coordinator::Algorithm;
 use sparse_dp_emb::data::CriteoConfig;
 use sparse_dp_emb::engine;
+use sparse_dp_emb::kernels::{simd_acceleration, KernelBackend};
 use sparse_dp_emb::runtime::Runtime;
 use sparse_dp_emb::telemetry::{BenchRow, BenchSnapshot, BENCH_SCHEMA_VERSION};
 
@@ -54,6 +57,7 @@ fn main() {
             grad_workers: r.grad_workers as u64,
             staleness: 0,
             store: "ram".into(),
+            kernel_backend: "scalar".into(),
             secs: r.secs,
             steps_per_sec: r.steps_per_sec,
             speedup: r.speedup,
@@ -83,6 +87,37 @@ fn main() {
             grad_workers: 4,
             staleness: k as u64,
             store: "ram".into(),
+            kernel_backend: "scalar".into(),
+            secs,
+            steps_per_sec: sps,
+            speedup: sps / sync_sps,
+        });
+    }
+
+    // SIMD backend row at 4 workers: lane-parallel kernels reassociate the
+    // reduction chains, so the loss trajectory is only ULP-close to scalar
+    // (tolerances in tests/simd.rs) and the run is timed directly rather
+    // than through compare_throughput's bit-equality gate.
+    println!("\nkernel backend (4 workers, acceleration: {}):", simd_acceleration());
+    {
+        let mut c = cfg.clone();
+        c.engine.grad_workers = 4;
+        c.engine.kernel_backend = KernelBackend::Simd;
+        let out = engine::run_pctr(&c, &rt, gen_cfg.clone()).unwrap();
+        let secs = out.telemetry.wall_secs;
+        let sps = cfg.steps as f64 / secs;
+        println!(
+            "  async simd  {:>7.2}s  {:>6.1} steps/s  ({:.2}x sync scalar)",
+            secs,
+            sps,
+            sps / sync_sps
+        );
+        bench_rows.push(BenchRow {
+            path: "async".into(),
+            grad_workers: 4,
+            staleness: 0,
+            store: "ram".into(),
+            kernel_backend: "simd".into(),
             secs,
             steps_per_sec: sps,
             speedup: sps / sync_sps,

@@ -10,7 +10,7 @@
 
 use std::time::Instant;
 
-use sparse_dp_emb::kernels::{self, MatInit, MatShape};
+use sparse_dp_emb::kernels::{self, KernelBackend, MatInit, MatShape};
 use sparse_dp_emb::runtime::reference::{builtin_manifest, BatchRef, RefModel, TensorView};
 use sparse_dp_emb::runtime::HostTensor;
 use sparse_dp_emb::util::rng::Xoshiro256;
@@ -102,6 +102,45 @@ fn bench_matmul_pair(name: &str, t: usize, k: usize, n: usize, reps: usize) {
     );
 }
 
+/// Scalar backend vs the lane-parallel SIMD backend on the *same* blocked
+/// kernels (fwd matmul + bwd matmul_bt) — isolates what lane parallelism
+/// buys on top of blocking.
+fn bench_backend_pair(name: &str, t: usize, k: usize, n: usize, reps: usize) {
+    let mut rng = Xoshiro256::seed_from(7);
+    let x = gauss(&mut rng, t * k);
+    let w = gauss(&mut rng, k * n);
+    let b = gauss(&mut rng, n);
+    let mut out = vec![0f32; t * n];
+    let mut dx = vec![0f32; t * k];
+
+    let mut run = |backend: KernelBackend| {
+        kernels::set_backend(backend);
+        let fwd = time(reps, || {
+            kernels::matmul(&x, &w, &mut out, MatShape::packed(t, k, n), MatInit::Bias(&b));
+            std::hint::black_box(&out);
+        });
+        let bwd = time(reps, || {
+            let sh = MatShape::packed_bt(t, n, k);
+            kernels::matmul_bt(&out, &w, &mut dx, sh, MatInit::Accumulate);
+            std::hint::black_box(&dx);
+        });
+        (fwd, bwd)
+    };
+    let (sf, sb) = run(KernelBackend::Scalar);
+    let (vf, vb) = run(KernelBackend::Simd);
+    kernels::set_backend(KernelBackend::Scalar);
+
+    println!(
+        "  {name:<26} fwd {:>9.1}ns -> {:>9.1}ns  ({:>4.2}x)   bwd {:>9.1}ns -> {:>9.1}ns  ({:>4.2}x)",
+        sf * 1e9,
+        vf * 1e9,
+        sf / vf,
+        sb * 1e9,
+        vb * 1e9,
+        sb / vb,
+    );
+}
+
 /// One `nlu-small` gradient step (full batch, all reduction chunks) on the
 /// kernel-backed executor.
 fn bench_nlu_small_step(reps: usize) {
@@ -154,4 +193,13 @@ fn main() {
     println!("\nthreaded (kernel_threads = 4, large shape only):");
     bench_matmul_pair("512x256 . 256x256  t=4", 512, 256, 256, reps / 100 + 1);
     kernels::set_threads(1);
+
+    // scalar backend vs the lane-parallel SIMD backend, same blocked kernels
+    println!(
+        "\nscalar backend vs simd backend (acceleration: {}):",
+        kernels::simd_acceleration()
+    );
+    bench_backend_pair("qkv/proj  32x64 . 64x64", 32, 64, 64, reps);
+    bench_backend_pair("mlp-in    32x64 . 64x128", 32, 64, 128, reps);
+    bench_backend_pair("512x256 . 256x256", 512, 256, 256, reps / 100 + 1);
 }

@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Algorithm;
+use crate::kernels::KernelBackend;
 use crate::selection::FrequencySource;
 use crate::sparse::OptimizerKind;
 
@@ -38,6 +39,15 @@ pub struct EngineConfig {
     /// only (see `crate::kernels::par_min_work`); prefer `--engine-workers`
     /// for engine runs, which already parallelise across examples.
     pub kernel_threads: usize,
+    /// kernel backend (`--engine-kernel-backend`): `scalar` (the default)
+    /// keeps the bit-exact blocked chains; `simd` switches both trainers to
+    /// the lane-parallel kernels (`crate::kernels::simd`), which
+    /// reassociate the k-accumulation and are therefore ULP-close to — not
+    /// bit-identical with — the scalar results (`docs/RUNTIME.md`).  Like
+    /// `kernel_threads` it is applied for the run's scope only
+    /// (`crate::kernels::ScopedConfig`) and composes with it; shipped to
+    /// gradient actor processes in their `GradInit` frame.
+    pub kernel_backend: KernelBackend,
     /// bounded staleness window (`--engine-staleness`): max steps the
     /// barrier may leave in flight, so gradient workers compute against
     /// parameter snapshots up to this many applies old.  The **only**
@@ -63,6 +73,7 @@ impl Default for EngineConfig {
             shards: 16,
             microbatch_chunks: 1,
             kernel_threads: 1,
+            kernel_backend: KernelBackend::Scalar,
             staleness: 0,
             processes: 1,
         }
@@ -175,6 +186,36 @@ impl RunConfig {
         }
     }
 
+    /// Reject `--store-budget-mb` / `--store-dir` on commands that do not
+    /// read them.  Only `train-async` (the engine's sharded store) and
+    /// `sweep fullscale` (the paged-store harness) honor the paged-store
+    /// flags; everywhere else they used to be silently ignored, so a run
+    /// the user believed was budget-capped kept every table in RAM.  Like
+    /// the `--stream` check in `main.rs`, an explicit error beats a silent
+    /// no-op.  `experiment` is the sweep id for `command == "sweep"`.
+    pub fn reject_unused_store_flags(
+        &self,
+        command: &str,
+        experiment: Option<&str>,
+    ) -> Result<()> {
+        let honored =
+            command == "train-async" || (command == "sweep" && experiment == Some("fullscale"));
+        if honored {
+            return Ok(());
+        }
+        let flag = if self.store_budget_mb > 0 {
+            "--store-budget-mb"
+        } else if !self.store_dir.is_empty() {
+            "--store-dir"
+        } else {
+            return Ok(());
+        };
+        bail!(
+            "{flag} only applies to train-async and `sweep fullscale` — `{command}` would \
+             silently ignore it and keep every table in RAM"
+        );
+    }
+
     /// Apply one `key = value` override.
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
@@ -226,6 +267,7 @@ impl RunConfig {
             "engine_kernel_threads" => {
                 self.engine.kernel_threads = v.parse().context("engine_kernel_threads")?
             }
+            "engine_kernel_backend" => self.engine.kernel_backend = v.parse()?,
             "engine_staleness" => {
                 self.engine.staleness = v.parse().context("engine_staleness")?
             }
@@ -352,6 +394,7 @@ mod tests {
                 "--engine-staleness".to_string(),
                 "2".to_string(),
                 "--engine-processes=3".to_string(),
+                "--engine-kernel-backend=simd".to_string(),
             ])
             .unwrap();
         assert_eq!(rest, vec!["train-async"]);
@@ -361,9 +404,11 @@ mod tests {
         assert_eq!(c.engine.kernel_threads, 4);
         assert_eq!(c.engine.staleness, 2);
         assert_eq!(c.engine.processes, 3);
+        assert_eq!(c.engine.kernel_backend, KernelBackend::Simd);
         assert_eq!(c.engine.data_workers, EngineConfig::default().data_workers);
         assert_eq!(EngineConfig::default().staleness, 0);
         assert_eq!(EngineConfig::default().processes, 1);
+        assert_eq!(EngineConfig::default().kernel_backend, KernelBackend::Scalar);
     }
 
     #[test]
@@ -404,6 +449,34 @@ mod tests {
         let mut c = RunConfig::default();
         assert!(c.set("bogus", "1").is_err());
         assert!(c.set("steps", "notanum").is_err());
+        let err = c.set("engine_kernel_backend", "avx512").unwrap_err();
+        assert!(err.to_string().contains("unknown kernel backend"), "{err}");
+    }
+
+    #[test]
+    fn store_flags_rejected_on_commands_that_ignore_them() {
+        let mut c = RunConfig::default();
+        // no store flags set: every command passes
+        c.reject_unused_store_flags("train", None).unwrap();
+        c.reject_unused_store_flags("sweep", Some("fig3")).unwrap();
+
+        c.store_budget_mb = 64;
+        // the two commands that honor the flags still pass
+        c.reject_unused_store_flags("train-async", None).unwrap();
+        c.reject_unused_store_flags("sweep", Some("fullscale")).unwrap();
+        // everything else gets a clear error naming the flag
+        for (cmd, exp) in
+            [("train", None), ("stream", None), ("account", None), ("sweep", Some("fig3"))]
+        {
+            let err = c.reject_unused_store_flags(cmd, exp).unwrap_err().to_string();
+            assert!(err.contains("--store-budget-mb"), "{cmd}: {err}");
+            assert!(err.contains("silently ignore"), "{cmd}: {err}");
+        }
+
+        c.store_budget_mb = 0;
+        c.store_dir = "/tmp/pages".into();
+        let err = c.reject_unused_store_flags("train", None).unwrap_err().to_string();
+        assert!(err.contains("--store-dir"), "{err}");
     }
 
     #[test]

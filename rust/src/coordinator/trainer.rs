@@ -27,15 +27,23 @@ pub struct Trainer<'rt> {
     grads_artifact: String,
     fwd_artifact: String,
     output_plan: Vec<OutputKind>,
+    /// Scopes the process-wide kernel knobs (threads + backend) to this
+    /// trainer's lifetime; dropping the trainer restores the prior values,
+    /// so back-to-back runs in one process cannot inherit them.
+    _kernel_scope: crate::kernels::ScopedConfig,
 }
 
 impl<'rt> Trainer<'rt> {
     /// Initialise a trainer: locate the model's artifact pair, initialise
     /// parameters, and calibrate the noise pair.
     pub fn new(cfg: RunConfig, rt: &'rt Runtime) -> Result<Trainer<'rt>> {
-        // Apply the executor-kernel threading knob (bit-exact at any
-        // setting; `config::EngineConfig::kernel_threads`).
-        crate::kernels::set_threads(cfg.engine.kernel_threads);
+        // Apply the executor-kernel knobs for this trainer's scope.
+        // Threading is bit-exact at any setting; the backend is the one
+        // knob that changes bits (`config::EngineConfig::kernel_backend`).
+        let kernel_scope = crate::kernels::ScopedConfig::apply(
+            cfg.engine.kernel_threads,
+            cfg.engine.kernel_backend,
+        );
         let model = rt.manifest.model(&cfg.model)?;
         let store = crate::models::ParamStore::init(model, cfg.seed)?;
         let (grads_artifact, fwd_artifact) =
@@ -43,7 +51,15 @@ impl<'rt> Trainer<'rt> {
         let output_plan =
             step::output_plan(rt.manifest.artifact(&grads_artifact)?, &store)?;
         let state = StepState::new(cfg, model, &store)?;
-        Ok(Trainer { rt, store, state, grads_artifact, fwd_artifact, output_plan })
+        Ok(Trainer {
+            rt,
+            store,
+            state,
+            grads_artifact,
+            fwd_artifact,
+            output_plan,
+            _kernel_scope: kernel_scope,
+        })
     }
 
     /// The model's fixed training batch size.

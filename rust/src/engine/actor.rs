@@ -249,7 +249,11 @@ fn grad_actor(mut r: BufReader<UnixStream>, mut w: UnixStream, index: u32) -> Re
     };
     let model = rt.manifest.model(&init.model)?;
     let rm = RefModel::from_manifest(model)?;
-    crate::kernels::set_threads(init.kernel_threads as usize);
+    // Scope the kernel knobs like the in-process trainers do; the actor
+    // computes with the run's backend so multi-process == in-process
+    // stays bit-identical at either backend.
+    let _kernel_scope =
+        crate::kernels::ScopedConfig::apply(init.kernel_threads as usize, init.kernel_backend);
     let opt = Optimizer::new(init.opt_kind, init.lr);
     // Rebuild the full init store locally (deterministic in (manifest,
     // seed)), slice out this actor's owned row ranges, and keep the dense
@@ -415,6 +419,9 @@ pub(crate) struct ProcSpec<'a> {
     pub shards: usize,
     /// Kernel threads inside each gradient actor.
     pub kernel_threads: usize,
+    /// Kernel backend inside each gradient actor (must match the barrier's
+    /// so every chain is computed the same way fleet-wide).
+    pub kernel_backend: crate::kernels::KernelBackend,
     /// Parameter indices of the embedding tables, in feature order.
     pub emb_params: &'a [usize],
     /// Number of embedding tables (dense params start at this index).
@@ -610,6 +617,7 @@ impl ProcEngine {
                 owner_index: a as u32,
                 shards: spec.shards as u32,
                 kernel_threads: spec.kernel_threads as u32,
+                kernel_backend: spec.kernel_backend,
                 store_budget_mb: spec.store_budget_mb as u64,
                 store_dir: spec.store_dir.to_string(),
             });

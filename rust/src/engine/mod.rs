@@ -611,11 +611,14 @@ fn run_with(
 
     let emb_params: Vec<usize> = state.emb_tables.iter().map(|t| t.param_index).collect();
     let ecfg = state.cfg.engine;
-    // Throughput-only, like every engine knob except `staleness`: kernel
-    // threading partitions output tiles across threads without splitting
-    // any accumulation chain, so the run stays bit-identical at any
-    // setting (tests/kernels.rs, tests/engine.rs).
-    crate::kernels::set_threads(ecfg.kernel_threads);
+    // Scope the process-wide kernel knobs to this run.  Threading is
+    // throughput-only (partitions output tiles, never splits a chain);
+    // the backend is the one kernel knob that changes bits — `simd`
+    // reassociates the k-chains, ULP-bounded vs scalar (tests/kernels.rs,
+    // tests/engine.rs, docs/RUNTIME.md).  The guard restores the prior
+    // values when the run ends, so back-to-back runs cannot inherit them.
+    let _kernel_scope =
+        crate::kernels::ScopedConfig::apply(ecfg.kernel_threads, ecfg.kernel_backend);
 
     let seed = state.cfg.seed;
     let (c1, c2) = step::clip_values(&state.cfg);
@@ -658,6 +661,7 @@ fn run_with(
             n_grad: ecfg.processes,
             shards: ecfg.shards.max(1),
             kernel_threads: ecfg.kernel_threads,
+            kernel_backend: ecfg.kernel_backend,
             emb_params: &emb_params,
             nt,
             n_chunks,

@@ -288,6 +288,21 @@ fn dec_opt_kind(d: &mut Dec) -> Result<OptimizerKind> {
     })
 }
 
+fn enc_kernel_backend(e: &mut Enc, b: crate::kernels::KernelBackend) {
+    e.u8(match b {
+        crate::kernels::KernelBackend::Scalar => 0,
+        crate::kernels::KernelBackend::Simd => 1,
+    });
+}
+
+fn dec_kernel_backend(d: &mut Dec) -> Result<crate::kernels::KernelBackend> {
+    Ok(match d.u8()? {
+        0 => crate::kernels::KernelBackend::Scalar,
+        1 => crate::kernels::KernelBackend::Simd,
+        t => bail!("unknown KernelBackend tag {t}"),
+    })
+}
+
 fn enc_gen(e: &mut Enc, g: &GenConfig) {
     match g {
         GenConfig::Pctr(c) => {
@@ -519,6 +534,9 @@ pub struct GradInit {
     pub shards: u32,
     /// Kernel fan-out threads inside the actor.
     pub kernel_threads: u32,
+    /// Kernel backend inside the actor — must match the barrier's so every
+    /// accumulation chain is computed the same way fleet-wide.
+    pub kernel_backend: crate::kernels::KernelBackend,
     /// `--store-budget-mb`: per-process paged-store budget in MiB (0 keeps
     /// the actor's tables in RAM).
     pub store_budget_mb: u64,
@@ -672,6 +690,7 @@ impl Frame {
                 e.u32(g.owner_index);
                 e.u32(g.shards);
                 e.u32(g.kernel_threads);
+                enc_kernel_backend(&mut e, g.kernel_backend);
                 e.u64(g.store_budget_mb);
                 e.str(&g.store_dir);
             }
@@ -777,6 +796,7 @@ impl Frame {
                 owner_index: d.u32()?,
                 shards: d.u32()?,
                 kernel_threads: d.u32()?,
+                kernel_backend: dec_kernel_backend(&mut d)?,
                 store_budget_mb: d.u64()?,
                 store_dir: d.str()?,
             }),

@@ -290,6 +290,7 @@ fn append_bench_rows(steps: usize, scatter_secs: f64, select_secs: f64) -> Resul
             grad_workers: 1,
             staleness: 0,
             store: "paged".into(),
+            kernel_backend: "scalar".into(),
             secs,
             steps_per_sec: steps as f64 / secs.max(1e-9),
             speedup: 1.0,

@@ -49,14 +49,75 @@
 //! [`MR`] A rows share each B panel load.  The k×[`NR`] B panel a j-tile
 //! streams is at most a few KiB and stays in L1 across the i sweep.  Edge
 //! tiles (dims not divisible by 4/8) run the same chains at reduced width.
+//!
+//! ## The SIMD backend
+//!
+//! Everything above describes the default [`KernelBackend::Scalar`] path.
+//! An opt-in [`KernelBackend::Simd`] path ([`set_backend`], selected per
+//! run via `--engine-kernel-backend simd`) trades the bit-exactness
+//! guarantee for lane-parallel accumulation: its kernels (`simd`
+//! submodule) reassociate the k-chains into fixed 8-lane partial sums plus
+//! a fixed pairwise horizontal reduce, which is verified against the
+//! scalar kernels at a documented ULP/relative-error tolerance instead of
+//! `to_bits` (`tests/kernels.rs`, `docs/RUNTIME.md`).  The SIMD path is
+//! itself deterministic — same inputs, same bits, on every machine — it is
+//! only *different* bits from the scalar chains.
 
 #![warn(missing_docs)]
 
 mod pool;
+mod simd;
 
 pub use pool::{
-    fan_out_count, par_min_work, set_par_min_work, set_threads, threads, DEFAULT_PAR_MIN_WORK,
+    backend, fan_out_count, par_min_work, set_backend, set_par_min_work, set_threads, threads,
+    ScopedConfig, DEFAULT_PAR_MIN_WORK,
 };
+pub use simd::simd_acceleration;
+
+/// Which kernel implementation a run computes with (process-wide, like the
+/// thread knob — see [`set_backend`] and [`ScopedConfig`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// The blocked scalar chains — bit-identical to the retired loops and
+    /// the backend every bit-exactness proof is pinned to.  The default.
+    #[default]
+    Scalar,
+    /// Lane-parallel variants (8-wide f32, AVX2 when the CPU has it,
+    /// portable lanes otherwise) that reassociate the k-chains —
+    /// ULP-bounded against [`KernelBackend::Scalar`], not bit-identical.
+    Simd,
+}
+
+impl KernelBackend {
+    /// Stable lower-case label (`"scalar"` / `"simd"`) used by the CLI,
+    /// telemetry summaries, and `BENCH_engine.json` rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelBackend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "simd" => Ok(KernelBackend::Simd),
+            other => anyhow::bail!(
+                "unknown kernel backend {other:?} (expected \"scalar\" or \"simd\")"
+            ),
+        }
+    }
+}
 
 /// Register-tile height: A rows processed together per tile.
 pub const MR: usize = 4;
@@ -150,8 +211,13 @@ pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: MatInit
     if sh.m == 0 || sh.n == 0 {
         return;
     }
+    let lanes = pool::backend() == KernelBackend::Simd;
     pool::dispatch_rows(out, sh.rc, sh.m, sh.m * sh.k * sh.n, |r0, rows, block| {
-        matmul_rows(a, b, block, sh, init, r0, rows);
+        if lanes {
+            simd::matmul_rows(a, b, block, sh, init, r0, rows);
+        } else {
+            matmul_rows(a, b, block, sh, init, r0, rows);
+        }
     });
 }
 
@@ -253,8 +319,13 @@ pub fn matmul_bt(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: MatI
     if sh.m == 0 || sh.n == 0 {
         return;
     }
+    let lanes = pool::backend() == KernelBackend::Simd;
     pool::dispatch_rows(out, sh.rc, sh.m, sh.m * sh.k * sh.n, |r0, rows, block| {
-        matmul_bt_rows(a, b, block, sh, init, r0, rows);
+        if lanes {
+            simd::matmul_bt_rows(a, b, block, sh, init, r0, rows);
+        } else {
+            matmul_bt_rows(a, b, block, sh, init, r0, rows);
+        }
     });
 }
 
@@ -318,8 +389,13 @@ pub fn matmul_at(a: &[f32], b: &[f32], out: &mut [f32], sh: MatShape, init: MatI
     if sh.m == 0 || sh.n == 0 {
         return;
     }
+    let lanes = pool::backend() == KernelBackend::Simd;
     pool::dispatch_rows(out, sh.rc, sh.m, sh.m * sh.k * sh.n, |r0, rows, block| {
-        matmul_at_rows(a, b, block, sh, init, r0, rows);
+        if lanes {
+            simd::matmul_at_rows(a, b, block, sh, init, r0, rows);
+        } else {
+            matmul_at_rows(a, b, block, sh, init, r0, rows);
+        }
     });
 }
 
@@ -412,6 +488,7 @@ pub fn add_bias_gelu(
     if sh.m == 0 || sh.n == 0 {
         return;
     }
+    let lanes = pool::backend() == KernelBackend::Simd;
     pool::dispatch_rows2(
         pre,
         post,
@@ -419,7 +496,11 @@ pub fn add_bias_gelu(
         sh.m,
         sh.m * sh.k * sh.n,
         |r0, rows, pb, gb| {
-            add_bias_gelu_rows(x, w, bias, (pb, gb), sh, r0, rows);
+            if lanes {
+                simd::add_bias_gelu_rows(x, w, bias, (pb, gb), sh, r0, rows);
+            } else {
+                add_bias_gelu_rows(x, w, bias, (pb, gb), sh, r0, rows);
+            }
         },
     );
 }
@@ -484,7 +565,12 @@ pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize, pitch: usize, scale
     if rows == 0 || cols == 0 {
         return;
     }
+    let lanes = pool::backend() == KernelBackend::Simd;
     pool::dispatch_rows(x, pitch, rows, rows * cols * 16, |_, nrows, block| {
+        if lanes {
+            simd::softmax_rows_block(block, nrows, cols, pitch, scale);
+            return;
+        }
         for r in 0..nrows {
             let row = &mut block[r * pitch..r * pitch + cols];
             let mut mx = f32::NEG_INFINITY;
@@ -526,7 +612,12 @@ pub fn softmax_rows_bwd(
     if rows == 0 || cols == 0 {
         return;
     }
+    let lanes = pool::backend() == KernelBackend::Simd;
     pool::dispatch_rows(d, rd, rows, rows * cols * 4, |r0, nrows, block| {
+        if lanes {
+            simd::softmax_rows_bwd_block(att, block, r0, nrows, cols, ra, rd, scale);
+            return;
+        }
         for r in 0..nrows {
             let arow = &att[(r0 + r) * ra..(r0 + r) * ra + cols];
             let drow = &mut block[r * rd..r * rd + cols];

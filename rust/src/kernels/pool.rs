@@ -20,7 +20,9 @@
 //! the knob is off (`threads = 1`) unless explicitly requested
 //! (`--engine-kernel-threads`, [`set_threads`]).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+
+use super::KernelBackend;
 
 /// Default [`par_min_work`] floor: a kernel call fans out only when
 /// `m·k·n` (its multiply-add count) reaches ~1M, the point where the
@@ -30,6 +32,8 @@ pub const DEFAULT_PAR_MIN_WORK: usize = 1 << 20;
 static THREADS: AtomicUsize = AtomicUsize::new(1);
 static PAR_MIN_WORK: AtomicUsize = AtomicUsize::new(DEFAULT_PAR_MIN_WORK);
 static FAN_OUTS: AtomicUsize = AtomicUsize::new(0);
+// 0 = Scalar, 1 = Simd — mirrors `KernelBackend` (see `set_backend`).
+static BACKEND: AtomicU8 = AtomicU8::new(0);
 
 /// Kernel calls that actually fanned out across threads since process
 /// start.  Diagnostics: the knobs are process-wide and every trainer
@@ -62,6 +66,64 @@ pub fn set_par_min_work(work: usize) {
 /// Current fan-out floor (see [`set_par_min_work`]).
 pub fn par_min_work() -> usize {
     PAR_MIN_WORK.load(Ordering::Relaxed)
+}
+
+/// Select the kernel backend (see [`KernelBackend`]; `Scalar` is the
+/// default).  Process-wide, like [`set_threads`] — but unlike the thread
+/// knob it **does** change output bits: the SIMD backend reassociates the
+/// k-chains (`kernels::simd`), so anything relying on bit-exactness must
+/// run on `Scalar`.  Prefer [`ScopedConfig`] over calling this directly so
+/// the selection cannot leak past a run.
+pub fn set_backend(backend: KernelBackend) {
+    BACKEND.store(backend as u8, Ordering::Relaxed);
+}
+
+/// Currently selected kernel backend (see [`set_backend`]).
+pub fn backend() -> KernelBackend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => KernelBackend::Simd,
+        _ => KernelBackend::Scalar,
+    }
+}
+
+/// RAII scope for the process-wide kernel knobs: captures the prior
+/// `threads` / `par_min_work` / `backend` on construction, applies the
+/// requested values, and restores all three on drop.
+///
+/// Both trainers hold one of these for the duration of a run so that
+/// back-to-back runs in one process (`compare_throughput`, benches,
+/// multi-run test binaries) cannot silently inherit the previous run's
+/// thread count or backend — the bug this replaced was a bare
+/// [`set_threads`] at run start with no restore.
+#[derive(Debug)]
+pub struct ScopedConfig {
+    prev_threads: usize,
+    prev_min_work: usize,
+    prev_backend: KernelBackend,
+}
+
+impl ScopedConfig {
+    /// Capture the current knobs, then apply `threads` and `backend` for
+    /// the lifetime of the returned guard.  (`par_min_work` is captured and
+    /// restored but not changed — only tests touch that knob.)
+    pub fn apply(threads: usize, backend: KernelBackend) -> ScopedConfig {
+        let guard = ScopedConfig {
+            prev_threads: self::threads(),
+            prev_min_work: self::par_min_work(),
+            prev_backend: self::backend(),
+        };
+        set_threads(threads);
+        set_backend(backend);
+        guard
+    }
+}
+
+impl Drop for ScopedConfig {
+    fn drop(&mut self) {
+        set_threads(self.prev_threads);
+        set_par_min_work(self.prev_min_work);
+        set_backend(self.prev_backend);
+    }
 }
 
 /// How many threads a call over `rows` output rows and `work` multiply-adds
@@ -176,6 +238,13 @@ pub(crate) fn dispatch_rows2<F>(
 mod tests {
     use super::*;
 
+    /// The knobs are process-global; tests that touch them must not
+    /// interleave with each other under the parallel test runner.
+    fn knob_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
     fn row_blocks_cover_exactly() {
         for rows in 1..40 {
@@ -204,8 +273,35 @@ mod tests {
     }
 
     #[test]
+    fn scoped_config_restores_prior_knobs() {
+        // nested scopes restore exactly what they captured, including a
+        // par_min_work a test fiddled with inside the scope
+        let _serial = knob_lock();
+        assert_eq!(threads(), 1);
+        assert_eq!(backend(), KernelBackend::Scalar);
+        {
+            let _outer = ScopedConfig::apply(3, KernelBackend::Simd);
+            assert_eq!(threads(), 3);
+            assert_eq!(backend(), KernelBackend::Simd);
+            set_par_min_work(0);
+            {
+                let _inner = ScopedConfig::apply(2, KernelBackend::Scalar);
+                assert_eq!(threads(), 2);
+                assert_eq!(backend(), KernelBackend::Scalar);
+            }
+            assert_eq!(threads(), 3);
+            assert_eq!(backend(), KernelBackend::Simd);
+            assert_eq!(par_min_work(), 0, "inner scope restored the fiddled floor");
+        }
+        assert_eq!(threads(), 1);
+        assert_eq!(backend(), KernelBackend::Scalar);
+        assert_eq!(par_min_work(), DEFAULT_PAR_MIN_WORK);
+    }
+
+    #[test]
     fn dispatch_runs_every_row_once() {
         // threaded dispatch touches each logical row exactly once
+        let _serial = knob_lock();
         struct Restore;
         impl Drop for Restore {
             fn drop(&mut self) {

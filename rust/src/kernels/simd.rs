@@ -1,0 +1,597 @@
+//! Lane-parallel kernel bodies for [`KernelBackend::Simd`].
+//!
+//! ## Chain reassociation
+//!
+//! Where the scalar kernels fold each output element's `k` multiply-add
+//! terms in one ascending chain, the SIMD bodies split the accumulation
+//! across [`LANES`] (= 8) independent f32 lanes and reduce at the end:
+//!
+//! * **j-vectorised** (`matmul_rows`, `matmul_at_rows`,
+//!   `add_bias_gelu_rows`): the 8 lanes are 8 *output columns*, each lane
+//!   still folding its own chain in ascending k — the per-element chain
+//!   order is unchanged; the only difference from the scalar path is that
+//!   the `A == 0.0` skip is dropped so the inner loop is branchless.  For
+//!   finite operands a skipped `±0.0` term is bit-invisible (the parent
+//!   module's signed-zero argument), so these three match the scalar
+//!   kernels bit-for-bit outside signed-zero/non-finite corners.
+//! * **k-vectorised** (`matmul_bt_rows`, the softmax denominator and the
+//!   softmax-backward dot): lane `l` accumulates terms `8c + l`, the 8
+//!   lane partials are reduced by the fixed pairwise tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` ([`hsum8`]), remaining tail
+//!   terms (`k mod 8`) are folded serially in ascending order, and the
+//!   chain start (0 / bias / the accumulate target) is added once at the
+//!   end: `value = start + (hsum8(lanes) + tail)`.  This *reassociates*
+//!   the sum, so the result is ULP-close to the scalar chain, not
+//!   bit-equal — `tests/kernels.rs` pins the documented tolerance model
+//!   and `docs/RUNTIME.md` derives it.
+//!
+//! Sums of values that are exactly representable small integers (the 0/1
+//! exhaustive grid in the test suite) are exact under *any* association,
+//! so there the SIMD kernels are bitwise identical to the scalar ones.
+//!
+//! ## Runtime feature detection, and why both paths give the same bits
+//!
+//! On x86_64 each body has a clone compiled with
+//! `#[target_feature(enable = "avx2")]`, selected once per process via
+//! `is_x86_feature_detected!` ([`simd_acceleration`]); everywhere else
+//! (and on x86_64 without AVX2) the portable array-of-lanes body runs as
+//! plain Rust.  The clones contain **no intrinsics and no FMA** — they are
+//! the same source lanes, just compiled so LLVM may use 256-bit registers
+//! — so both paths execute the identical sequence of IEEE-754 single ops
+//! and produce bit-identical results.  The backend choice changes bits
+//! (vs `Scalar`); the machine running it never does.
+
+use super::{MatInit, MatShape, MR, NR};
+
+/// f32 lanes per accumulation group (AVX2's 256-bit register width).
+pub(crate) const LANES: usize = 8;
+
+/// Which lane implementation the SIMD backend runs on this machine:
+/// `"avx2"` when runtime detection found AVX2, `"portable"` otherwise.
+/// A label for benches/telemetry only — both produce identical bits (see
+/// the module docs).
+pub fn simd_acceleration() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            return "avx2";
+        }
+    }
+    "portable"
+}
+
+/// Cached `is_x86_feature_detected!("avx2")`: 0 = unknown, 1 = no, 2 = yes.
+#[cfg(target_arch = "x86_64")]
+fn avx2() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            STATE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// The fixed pairwise horizontal reduce of the 8 lane partials.
+#[inline(always)]
+fn hsum8(v: &[f32; LANES]) -> f32 {
+    ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]))
+}
+
+/// Lane dot product: `hsum8(lane partials) + serial tail` (module docs).
+#[inline(always)]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut lanes = [0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        let av: &[f32; LANES] = a[i..i + LANES].try_into().expect("len checked");
+        let bv: &[f32; LANES] = b[i..i + LANES].try_into().expect("len checked");
+        for l in 0..LANES {
+            lanes[l] += av[l] * bv[l];
+        }
+        i += LANES;
+    }
+    let mut tail = 0f32;
+    while i < n {
+        tail += a[i] * b[i];
+        i += 1;
+    }
+    hsum8(&lanes) + tail
+}
+
+/// Lane sum, same association as [`dot_lanes`].
+#[inline(always)]
+fn sum_lanes(x: &[f32]) -> f32 {
+    let mut lanes = [0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= x.len() {
+        let xv: &[f32; LANES] = x[i..i + LANES].try_into().expect("len checked");
+        for l in 0..LANES {
+            lanes[l] += xv[l];
+        }
+        i += LANES;
+    }
+    let mut tail = 0f32;
+    while i < x.len() {
+        tail += x[i];
+        i += 1;
+    }
+    hsum8(&lanes) + tail
+}
+
+// ---------------------------------------------------------------------------
+// matmul (j-vectorised: the scalar tile loop, branchless)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn matmul_rows_body(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    let mut i0 = 0;
+    while i0 < rows {
+        let h = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < sh.n {
+            let w = NR.min(sh.n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            if let MatInit::Bias(bias) = init {
+                for accr in acc.iter_mut().take(h) {
+                    accr[..w].copy_from_slice(&bias[j0..j0 + w]);
+                }
+            }
+            for kk in 0..sh.k {
+                let bb = kk * sh.rb + j0;
+                if w == NR {
+                    let brow: &[f32; NR] = b[bb..bb + NR].try_into().expect("len checked");
+                    for r in 0..h {
+                        let av = a[(r0 + i0 + r) * sh.ra + kk];
+                        let accr = &mut acc[r];
+                        for l in 0..NR {
+                            accr[l] += av * brow[l];
+                        }
+                    }
+                } else {
+                    let brow = &b[bb..bb + w];
+                    for r in 0..h {
+                        let av = a[(r0 + i0 + r) * sh.ra + kk];
+                        for (accv, &bv) in acc[r][..w].iter_mut().zip(brow) {
+                            *accv += av * bv;
+                        }
+                    }
+                }
+            }
+            super::store_tile(out, sh.rc, &acc, init, (i0, j0, h, w));
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+pub(crate) fn matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: runtime detection confirmed this CPU supports AVX2.
+            unsafe { matmul_rows_avx2(a, b, out, sh, init, r0, rows) };
+            return;
+        }
+    }
+    matmul_rows_body(a, b, out, sh, init, r0, rows);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_rows_avx2(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    matmul_rows_body(a, b, out, sh, init, r0, rows);
+}
+
+// ---------------------------------------------------------------------------
+// matmul_bt (k-vectorised: lane partial sums + horizontal reduce)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn matmul_bt_rows_body(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    // k == 0 leaves the operands possibly empty (the length contracts only
+    // cover k elements per row) — land the chain starts without slicing
+    let empty: &[f32] = &[];
+    for r in 0..rows {
+        let arow = if sh.k == 0 { empty } else { &a[(r0 + r) * sh.ra..(r0 + r) * sh.ra + sh.k] };
+        for j in 0..sh.n {
+            let brow = if sh.k == 0 { empty } else { &b[j * sh.rb..j * sh.rb + sh.k] };
+            let dot = dot_lanes(arow, brow);
+            let o = &mut out[r * sh.rc + j];
+            match init {
+                MatInit::Zero => *o = dot,
+                MatInit::Accumulate => *o += dot,
+                MatInit::Bias(bias) => *o = bias[j] + dot,
+            }
+        }
+    }
+}
+
+pub(crate) fn matmul_bt_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: runtime detection confirmed this CPU supports AVX2.
+            unsafe { matmul_bt_rows_avx2(a, b, out, sh, init, r0, rows) };
+            return;
+        }
+    }
+    matmul_bt_rows_body(a, b, out, sh, init, r0, rows);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_bt_rows_avx2(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    matmul_bt_rows_body(a, b, out, sh, init, r0, rows);
+}
+
+// ---------------------------------------------------------------------------
+// matmul_at (j-vectorised: the scalar tile loop, branchless)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn matmul_at_rows_body(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    let mut i0 = 0;
+    while i0 < rows {
+        let h = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < sh.n {
+            let w = NR.min(sh.n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            if let MatInit::Bias(bias) = init {
+                for accr in acc.iter_mut().take(h) {
+                    accr[..w].copy_from_slice(&bias[j0..j0 + w]);
+                }
+            }
+            for p in 0..sh.k {
+                let brow = &b[p * sh.rb + j0..p * sh.rb + j0 + w];
+                for r in 0..h {
+                    let av = a[p * sh.ra + r0 + i0 + r];
+                    for (accv, &bv) in acc[r][..w].iter_mut().zip(brow) {
+                        *accv += av * bv;
+                    }
+                }
+            }
+            super::store_tile(out, sh.rc, &acc, init, (i0, j0, h, w));
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+pub(crate) fn matmul_at_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: runtime detection confirmed this CPU supports AVX2.
+            unsafe { matmul_at_rows_avx2(a, b, out, sh, init, r0, rows) };
+            return;
+        }
+    }
+    matmul_at_rows_body(a, b, out, sh, init, r0, rows);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_at_rows_avx2(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    sh: MatShape,
+    init: MatInit<'_>,
+    r0: usize,
+    rows: usize,
+) {
+    matmul_at_rows_body(a, b, out, sh, init, r0, rows);
+}
+
+// ---------------------------------------------------------------------------
+// Fused bias + GELU affine (j-vectorised, branchless)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn add_bias_gelu_rows_body(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: (&mut [f32], &mut [f32]),
+    sh: MatShape,
+    r0: usize,
+    rows: usize,
+) {
+    let (pre, post) = out;
+    let mut i0 = 0;
+    while i0 < rows {
+        let h = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < sh.n {
+            let wd = NR.min(sh.n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            for accr in acc.iter_mut().take(h) {
+                accr[..wd].copy_from_slice(&bias[j0..j0 + wd]);
+            }
+            for kk in 0..sh.k {
+                let wrow = &w[kk * sh.rb + j0..kk * sh.rb + j0 + wd];
+                for r in 0..h {
+                    let xv = x[(r0 + i0 + r) * sh.ra + kk];
+                    for (accv, &wv) in acc[r][..wd].iter_mut().zip(wrow) {
+                        *accv += xv * wv;
+                    }
+                }
+            }
+            for r in 0..h {
+                let base = (i0 + r) * sh.rc + j0;
+                pre[base..base + wd].copy_from_slice(&acc[r][..wd]);
+                for (gv, &av) in post[base..base + wd].iter_mut().zip(&acc[r][..wd]) {
+                    *gv = super::gelu(av);
+                }
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+pub(crate) fn add_bias_gelu_rows(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: (&mut [f32], &mut [f32]),
+    sh: MatShape,
+    r0: usize,
+    rows: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: runtime detection confirmed this CPU supports AVX2.
+            unsafe { add_bias_gelu_rows_avx2(x, w, bias, out, sh, r0, rows) };
+            return;
+        }
+    }
+    add_bias_gelu_rows_body(x, w, bias, out, sh, r0, rows);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_bias_gelu_rows_avx2(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: (&mut [f32], &mut [f32]),
+    sh: MatShape,
+    r0: usize,
+    rows: usize,
+) {
+    add_bias_gelu_rows_body(x, w, bias, out, sh, r0, rows);
+}
+
+// ---------------------------------------------------------------------------
+// Softmax row primitives (k-vectorised denominator / dot)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn softmax_rows_block_body(block: &mut [f32], nrows: usize, cols: usize, pitch: usize, scale: f32) {
+    for r in 0..nrows {
+        let row = &mut block[r * pitch..r * pitch + cols];
+        // scale + max and the exponentials are elementwise — identical ops
+        // to the scalar pass; only the denominator sum is reassociated
+        let mut mx = f32::NEG_INFINITY;
+        for v in row.iter_mut() {
+            *v *= scale;
+            if *v > mx {
+                mx = *v;
+            }
+        }
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+        }
+        let inv = 1.0 / sum_lanes(row);
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+pub(crate) fn softmax_rows_block(
+    block: &mut [f32],
+    nrows: usize,
+    cols: usize,
+    pitch: usize,
+    scale: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: runtime detection confirmed this CPU supports AVX2.
+            unsafe { softmax_rows_block_avx2(block, nrows, cols, pitch, scale) };
+            return;
+        }
+    }
+    softmax_rows_block_body(block, nrows, cols, pitch, scale);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn softmax_rows_block_avx2(
+    block: &mut [f32],
+    nrows: usize,
+    cols: usize,
+    pitch: usize,
+    scale: f32,
+) {
+    softmax_rows_block_body(block, nrows, cols, pitch, scale);
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn softmax_rows_bwd_block_body(
+    att: &[f32],
+    block: &mut [f32],
+    r0: usize,
+    nrows: usize,
+    cols: usize,
+    ra: usize,
+    rd: usize,
+    scale: f32,
+) {
+    for r in 0..nrows {
+        let arow = &att[(r0 + r) * ra..(r0 + r) * ra + cols];
+        let drow = &mut block[r * rd..r * rd + cols];
+        let dot = dot_lanes(arow, drow);
+        for (dv, &aw) in drow.iter_mut().zip(arow) {
+            *dv = aw * (*dv - dot) * scale;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn softmax_rows_bwd_block(
+    att: &[f32],
+    block: &mut [f32],
+    r0: usize,
+    nrows: usize,
+    cols: usize,
+    ra: usize,
+    rd: usize,
+    scale: f32,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: runtime detection confirmed this CPU supports AVX2.
+            unsafe { softmax_rows_bwd_block_avx2(att, block, r0, nrows, cols, ra, rd, scale) };
+            return;
+        }
+    }
+    softmax_rows_bwd_block_body(att, block, r0, nrows, cols, ra, rd, scale);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn softmax_rows_bwd_block_avx2(
+    att: &[f32],
+    block: &mut [f32],
+    r0: usize,
+    nrows: usize,
+    cols: usize,
+    ra: usize,
+    rd: usize,
+    scale: f32,
+) {
+    softmax_rows_bwd_block_body(att, block, r0, nrows, cols, ra, rd, scale);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hsum8_uses_the_documented_tree() {
+        // magnitudes chosen so association matters: the pairwise tree and
+        // the serial left fold disagree, and we pin the tree
+        let v = [1e8f32, 1.0, -1e8, 1.0, 1e8, 1.0, -1e8, 1.0];
+        let tree = ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]));
+        assert_eq!(hsum8(&v).to_bits(), tree.to_bits());
+        let serial: f32 = v.iter().sum();
+        assert_ne!(tree.to_bits(), serial.to_bits(), "case must discriminate");
+    }
+
+    #[test]
+    fn dot_and_sum_lanes_match_f64_closely() {
+        let eps = f64::from(f32::EPSILON);
+        let bound = |terms: usize, mag: f64| 2.0 * (terms as f64 + 1.0) * eps * mag + 1e-12;
+        let mut rng = crate::util::rng::Xoshiro256::seed_from(42);
+        for n in [0usize, 1, 7, 8, 9, 16, 23, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+            let prods: Vec<f64> =
+                a.iter().zip(&b).map(|(&x, &y)| f64::from(x) * f64::from(y)).collect();
+            let want: f64 = prods.iter().sum();
+            let mag: f64 = prods.iter().map(|p| p.abs()).sum();
+            let got = f64::from(dot_lanes(&a, &b));
+            assert!((got - want).abs() <= bound(n, mag), "dot n={n}: got {got}, want {want}");
+            let wsum: f64 = a.iter().map(|&x| f64::from(x)).sum();
+            let gsum = f64::from(sum_lanes(&a));
+            let msum: f64 = a.iter().map(|&x| f64::from(x).abs()).sum();
+            assert!((gsum - wsum).abs() <= bound(n, msum), "sum n={n}: got {gsum}, want {wsum}");
+        }
+    }
+
+    #[test]
+    fn acceleration_label_is_stable() {
+        let l = simd_acceleration();
+        assert!(l == "avx2" || l == "portable");
+        assert_eq!(l, simd_acceleration(), "cached detection must not flip");
+    }
+}

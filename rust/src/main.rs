@@ -20,6 +20,10 @@
 //! setting, like every engine knob except `--engine-staleness`, which at
 //! `k > 0` opts into bounded-staleness pipelining — same privacy
 //! accounting, no longer bit-identical; see `docs/CONCURRENCY.md`).
+//! `--engine-kernel-backend simd` opts both trainers into the
+//! lane-parallel SIMD kernels (AVX2 when detected at runtime, portable
+//! lanes otherwise) — ULP-close to the default `scalar` backend rather
+//! than bit-identical; see `docs/RUNTIME.md`.
 //! `--store-budget-mb N` swaps the in-RAM embedding-table shards for
 //! file-backed paged tables under an `N` MiB page-cache budget
 //! (`--store-dir` picks where the page files live) — bit-exact at any
@@ -86,6 +90,11 @@ fn main() -> Result<()> {
         // `stream` subcommand and would otherwise train non-streaming
         bail!("--stream only applies to train-async (did you mean the `stream` command?)");
     }
+    // same policy for the paged-store flags: only train-async and the
+    // fullscale harness read them, so anywhere else they must error rather
+    // than silently keep every table in RAM
+    let experiment = if command == "sweep" { positional.get(1).map(String::as_str) } else { None };
+    cfg.reject_unused_store_flags(command, experiment)?;
 
     match command.as_str() {
         "train" => cmd_train(&cfg),
@@ -303,6 +312,13 @@ fn report(outcome: &sparse_dp_emb::coordinator::TrainOutcome, rt: &Runtime) {
         "steps: {}  wall: {:.2}s  eps_spent: {:.4}  delta: {:.2e}",
         t.steps, t.wall_secs, t.eps_spent, t.delta
     );
+    if t.kernel_backend != "scalar" {
+        println!(
+            "kernel backend: {} ({})",
+            t.kernel_backend,
+            sparse_dp_emb::kernels::simd_acceleration()
+        );
+    }
     if t.batch_queue_max > 0 || t.task_queue_max > 0 {
         println!(
             "queue max depth: batch={} task={}",

@@ -414,6 +414,7 @@ impl Telemetry {
     /// Snapshot the run totals into a [`RunSummary`].
     pub fn summary(&self, eps_spent: f64, delta: f64) -> RunSummary {
         RunSummary {
+            kernel_backend: crate::kernels::backend().name().into(),
             steps: self.records(),
             wall_secs: self.wall_secs(),
             batch_queue_max: self.queue_max(Queue::Batch),
@@ -540,6 +541,10 @@ pub struct RunSummary {
     pub eps_spent: f64,
     /// The δ at which `eps_spent` is stated.
     pub delta: f64,
+    /// Kernel backend the run computed with (`"scalar"` / `"simd"`),
+    /// captured from the trainer's scoped selection at summary time.
+    /// Empty in a defaulted summary that never saw a run.
+    pub kernel_backend: String,
     /// Accumulated `(nanos, count)` per stage that ever ticked.
     pub stages: Vec<StageTotal>,
 }
@@ -575,6 +580,10 @@ impl RunSummary {
             ("eps_spent".into(), Json::num(self.eps_spent)),
             ("delta".into(), Json::num(self.delta)),
             (
+                "kernel_backend".into(),
+                Json::str(self.kernel_backend.clone()),
+            ),
+            (
                 "stages".into(),
                 Json::Obj(
                     self.stages
@@ -596,10 +605,11 @@ impl RunSummary {
 }
 
 /// Current `BENCH_*.json` schema version; bump on any breaking field change.
-/// (v3 added the per-row `store` backend label for the paged-store rows;
-/// v2 added the per-row `staleness` field for the `--engine-staleness`
-/// sweep.)
-pub const BENCH_SCHEMA_VERSION: u64 = 3;
+/// (v4 added the per-row `kernel_backend` label for the scalar-vs-SIMD
+/// rows; v3 added the per-row `store` backend label for the paged-store
+/// rows; v2 added the per-row `staleness` field for the
+/// `--engine-staleness` sweep.)
+pub const BENCH_SCHEMA_VERSION: u64 = 4;
 
 /// One sync/async throughput row inside a [`BenchSnapshot`].
 #[derive(Clone, Debug, PartialEq)]
@@ -614,6 +624,8 @@ pub struct BenchRow {
     /// Embedding-table store backend the row ran against (`"ram"` for the
     /// in-memory shards, `"paged"` for the file-backed page cache).
     pub store: String,
+    /// Kernel backend the row ran on (`"scalar"` / `"simd"`).
+    pub kernel_backend: String,
     /// Wall seconds for the timed run.
     pub secs: f64,
     /// Optimizer steps per second.
@@ -671,6 +683,10 @@ impl BenchSnapshot {
                                 ),
                                 ("staleness".into(), Json::num(r.staleness as f64)),
                                 ("store".into(), Json::str(r.store.clone())),
+                                (
+                                    "kernel_backend".into(),
+                                    Json::str(r.kernel_backend.clone()),
+                                ),
                                 ("secs".into(), Json::num(r.secs)),
                                 ("steps_per_sec".into(), Json::num(r.steps_per_sec)),
                                 ("speedup".into(), Json::num(r.speedup)),
@@ -733,6 +749,11 @@ impl BenchSnapshot {
                     .get("store")
                     .and_then(Json::as_str)
                     .context("row field `store` is not a string")?
+                    .to_string(),
+                kernel_backend: row
+                    .get("kernel_backend")
+                    .and_then(Json::as_str)
+                    .context("row field `kernel_backend` is not a string")?
                     .to_string(),
                 secs: f64_field(row, "secs")?,
                 steps_per_sec: f64_field(row, "steps_per_sec")?,
@@ -836,6 +857,9 @@ mod tests {
         let s = tele.summary(0.25, 1e-6);
         assert_eq!(s.steps, 2);
         assert!(s.wall_secs >= 0.0);
+        // the summary stamps the live backend selection; other tests in
+        // this binary may hold a ScopedConfig, so only pin the domain
+        assert!(s.kernel_backend == "scalar" || s.kernel_backend == "simd");
     }
 
     #[test]
@@ -926,6 +950,7 @@ mod tests {
                     grad_workers: 1,
                     staleness: 0,
                     store: "ram".into(),
+                    kernel_backend: "scalar".into(),
                     secs: 12.5,
                     steps_per_sec: 4.8,
                     speedup: 1.0,
@@ -935,6 +960,7 @@ mod tests {
                     grad_workers: 4,
                     staleness: 0,
                     store: "ram".into(),
+                    kernel_backend: "scalar".into(),
                     secs: 4.25,
                     steps_per_sec: 14.1,
                     speedup: 2.94,
@@ -944,6 +970,7 @@ mod tests {
                     grad_workers: 4,
                     staleness: 2,
                     store: "paged".into(),
+                    kernel_backend: "simd".into(),
                     secs: 3.4,
                     steps_per_sec: 17.6,
                     speedup: 3.67,

@@ -156,19 +156,22 @@ fn sync_and_async_match_exactly_with_threaded_kernels() {
 
         // Threaded async: every kernel call fans its output rows out.  The
         // knobs are process-wide and every sibling test's Trainer::new /
-        // engine run resets the thread count to 1 at its own start, so a
-        // racing test can snap this run back to serial mid-way — which
+        // engine run scopes the thread count to 1 for its own duration, so
+        // a racing test can snap this run back to serial mid-way — which
         // would be bit-identical and silently gut the threaded coverage.
-        // Nothing in this process ever writes 3 except this run, so
-        // `threads() == 3` *after* the run proves the knob held for its
-        // whole duration (and the pool counter proves fan-outs happened);
-        // otherwise a race interfered — retry.
+        // Nothing in this process ever writes 3 except this test, and the
+        // engine's `ScopedConfig` restores the *pre-run* value on exit —
+        // so we pre-set 3 before each attempt: `threads() == 3` after the
+        // run then proves no sibling's restore landed mid-way (and the
+        // pool counter proves fan-outs happened); otherwise a race
+        // interfered — retry.
         let mut c = cfg.clone();
         c.engine.kernel_threads = 3;
         c.engine.grad_workers = 2;
         c.engine.shards = 4;
         let mut attempt = 0;
         let (async_out, async_store) = loop {
+            kernels::set_threads(3);
             kernels::set_par_min_work(0);
             let before = kernels::fan_out_count();
             let res = engine::run_with_params(&c, &rt).unwrap();

@@ -1,0 +1,209 @@
+//! End-to-end acceptance of the opt-in SIMD kernel backend
+//! (`--engine-kernel-backend simd`):
+//!
+//! * **loss-trajectory tolerance** against the scalar reference on both
+//!   workloads: lane reassociation moves individual f32 bits, so the bar
+//!   is "same training run to engineering precision" — finite everywhere,
+//!   tiny relative gap at step 0, bounded per-step and mean relative gaps
+//!   over the run (caps documented inline, on DP-SGD whose clip/noise/
+//!   update path is continuous in the gradients — DP-AdaFEST's hard
+//!   selection threshold can legitimately flip a coordinate at a tie
+//!   boundary, so its cross-backend bar lives with the kernel-level suite
+//!   in `tests/kernels.rs` and the *within*-backend equalities below);
+//! * **sync == async == multi-process, bitwise, at the SIMD backend**: the
+//!   concurrency invariants (docs/CONCURRENCY.md) are kernel-independent —
+//!   every path runs the same kernel sequence — so with both sides on
+//!   `simd` the outcomes and final parameters must still match
+//!   bit-for-bit, including across process boundaries;
+//! * **telemetry**: the run summary labels which backend actually ran;
+//! * **knob scoping** (the PR's bugfix): `Trainer::new` / `engine::run`
+//!   scope `kernel_threads` and `kernel_backend` to the run, restoring the
+//!   prior process-wide values on exit — a threaded SIMD run followed by a
+//!   default run leaves the globals at their defaults.
+//!
+//! The kernel threading/backend knobs are process-wide, so every test here
+//! takes `config_lock()` — two concurrent runs wanting different backends
+//! would clobber each other.
+
+mod support;
+
+use std::sync::{Mutex, MutexGuard};
+
+use support::{
+    assert_outcomes_identical, assert_params_identical, gen_cfg, text_cfg, tiny_cfg, tiny_nlu_cfg,
+    use_cli_actor_exe,
+};
+
+use sparse_dp_emb::coordinator::{Algorithm, Trainer};
+use sparse_dp_emb::data::{SynthCriteo, SynthText};
+use sparse_dp_emb::engine;
+use sparse_dp_emb::kernels::{self, KernelBackend};
+use sparse_dp_emb::runtime::Runtime;
+
+fn config_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The trajectory bar: equal lengths, everything finite, and relative
+/// gaps small — ≤ 1% at step 0 (one forward pass of reassociation), ≤ 20%
+/// at any single step (divergence compounds through the weights), ≤ 5% on
+/// average over the run.
+fn assert_trajectories_close(scalar: &[f64], simd: &[f64], what: &str) {
+    assert_eq!(scalar.len(), simd.len(), "{what}: step count");
+    assert!(!scalar.is_empty(), "{what}: empty trajectory");
+    let rel = |a: f64, b: f64| (a - b).abs() / a.abs().max(1e-12);
+    let mut sum = 0.0;
+    for (i, (&s, &v)) in scalar.iter().zip(simd).enumerate() {
+        assert!(s.is_finite() && v.is_finite(), "{what}: non-finite loss at step {i}");
+        let r = rel(s, v);
+        assert!(r <= 0.20, "{what}: step {i} relative gap {r:.4} > 0.20 ({s} vs {v})");
+        sum += r;
+    }
+    let step0 = rel(scalar[0], simd[0]);
+    assert!(step0 <= 0.01, "{what}: step-0 relative gap {step0:.5} > 0.01");
+    let mean = sum / scalar.len() as f64;
+    assert!(mean <= 0.05, "{what}: mean relative gap {mean:.4} > 0.05");
+}
+
+#[test]
+fn simd_loss_trajectory_tracks_scalar_on_pctr() {
+    let _guard = config_lock();
+    let rt = Runtime::builtin();
+    let cfg = tiny_cfg(Algorithm::DpSgd);
+    let gcfg = gen_cfg(&rt, &cfg);
+
+    let gen = SynthCriteo::new(gcfg.clone());
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let scalar = trainer.run_pctr(&gen).unwrap();
+    assert_eq!(scalar.telemetry.kernel_backend, "scalar");
+    drop(trainer);
+
+    let mut c = cfg.clone();
+    c.engine.kernel_backend = KernelBackend::Simd;
+    let simd = engine::run_pctr(&c, &rt, gcfg).unwrap();
+    assert_eq!(simd.telemetry.kernel_backend, "simd");
+    assert_trajectories_close(&scalar.loss_history, &simd.loss_history, "criteo-tiny dp-sgd");
+}
+
+#[test]
+fn simd_loss_trajectory_tracks_scalar_on_nlu_lora() {
+    let _guard = config_lock();
+    let rt = Runtime::builtin();
+    let mut cfg = tiny_nlu_cfg(Algorithm::DpSgd);
+    cfg.model = "nlu-tiny-lora4".into();
+    let tcfg = text_cfg(&rt, &cfg);
+
+    let gen = SynthText::new(tcfg.clone());
+    let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+    let scalar = trainer.run_text(&gen).unwrap();
+    assert_eq!(scalar.telemetry.kernel_backend, "scalar");
+    drop(trainer);
+
+    let mut c = cfg.clone();
+    c.engine.kernel_backend = KernelBackend::Simd;
+    let simd = engine::run_text(&c, &rt, tcfg).unwrap();
+    assert_eq!(simd.telemetry.kernel_backend, "simd");
+    assert_trajectories_close(&scalar.loss_history, &simd.loss_history, "nlu-tiny-lora4 dp-sgd");
+}
+
+#[test]
+fn simd_sync_and_async_match_exactly() {
+    // both sides on the SIMD backend: the engine's determinism guarantees
+    // are backend-independent, so sync vs async stays bit-for-bit —
+    // outcomes AND final parameters — even with threaded kernels
+    let _guard = config_lock();
+    let rt = Runtime::builtin();
+    for model in ["criteo-tiny", "nlu-tiny-lora4"] {
+        let mut cfg = if model == "criteo-tiny" {
+            tiny_cfg(Algorithm::DpAdaFest)
+        } else {
+            tiny_nlu_cfg(Algorithm::DpAdaFest)
+        };
+        cfg.model = model.into();
+        cfg.engine.kernel_backend = KernelBackend::Simd;
+
+        let mut trainer = Trainer::new(cfg.clone(), &rt).unwrap();
+        let sync_out = match model {
+            "criteo-tiny" => {
+                let gen = SynthCriteo::new(gen_cfg(&rt, &cfg));
+                trainer.run_pctr(&gen).unwrap()
+            }
+            _ => {
+                let gen = SynthText::new(text_cfg(&rt, &cfg));
+                trainer.run_text(&gen).unwrap()
+            }
+        };
+        assert!(sync_out.loss_history.iter().all(|l| l.is_finite()), "{model}");
+        assert_eq!(sync_out.telemetry.kernel_backend, "simd", "{model}");
+
+        let mut c = cfg.clone();
+        c.engine.grad_workers = 3;
+        c.engine.shards = 4;
+        c.engine.kernel_threads = 2;
+        let (async_out, async_store) = engine::run_with_params(&c, &rt).unwrap();
+        let what = format!("{model} simd sync-vs-async");
+        assert_outcomes_identical(&sync_out, &async_out, &what);
+        assert_params_identical(&trainer.store, &async_store, &what);
+        assert_eq!(async_out.telemetry.kernel_backend, "simd", "{model}");
+    }
+}
+
+#[test]
+fn simd_multi_process_matches_in_process() {
+    // the actor fleet ships `kernel_backend` in `GradInit`, so a 2-process
+    // SIMD run must be bit-identical to the in-process SIMD engine
+    let _guard = config_lock();
+    use_cli_actor_exe();
+    let rt = Runtime::builtin();
+    let mut cfg = tiny_cfg(Algorithm::DpAdaFest);
+    cfg.engine.kernel_backend = KernelBackend::Simd;
+    cfg.engine.grad_workers = 2;
+    cfg.engine.shards = 4;
+    let (in_proc, in_store) = engine::run_with_params(&cfg, &rt).unwrap();
+
+    let mut c = cfg.clone();
+    c.engine.processes = 2;
+    let (multi, multi_store) = engine::run_with_params(&c, &rt).unwrap();
+    assert_outcomes_identical(&in_proc, &multi, "simd 2-process");
+    assert_params_identical(&in_store, &multi_store, "simd 2-process");
+    assert_eq!(multi.telemetry.kernel_backend, "simd");
+}
+
+#[test]
+fn kernel_knobs_restore_after_each_run() {
+    // The bugfix regression: runs used to *leak* their kernel knobs into
+    // the process globals (set at run start, never restored).  With the
+    // scoped guard, a threaded SIMD run must leave the globals exactly
+    // where it found them — and a follow-up default run must see (and
+    // report) the scalar defaults.
+    let _guard = config_lock();
+    let rt = Runtime::builtin();
+    assert_eq!(kernels::threads(), 1, "precondition: default thread count");
+    assert_eq!(kernels::backend(), KernelBackend::Scalar, "precondition: default backend");
+
+    let mut cfg = tiny_cfg(Algorithm::DpSgd);
+    cfg.steps = 2;
+    cfg.engine.kernel_threads = 3;
+    cfg.engine.kernel_backend = KernelBackend::Simd;
+    let gcfg = gen_cfg(&rt, &cfg);
+    let out = engine::run_pctr(&cfg, &rt, gcfg.clone()).unwrap();
+    assert_eq!(out.telemetry.kernel_backend, "simd");
+    assert_eq!(kernels::threads(), 1, "engine run leaked kernel_threads");
+    assert_eq!(kernels::backend(), KernelBackend::Scalar, "engine run leaked kernel_backend");
+
+    // same process, same knobs, sync path
+    let mut c = cfg.clone();
+    c.engine.kernel_threads = 2;
+    let gen = SynthCriteo::new(gcfg.clone());
+    let mut trainer = Trainer::new(c, &rt).unwrap();
+    trainer.run_pctr(&gen).unwrap();
+    drop(trainer);
+    assert_eq!(kernels::threads(), 1, "sync trainer leaked kernel_threads");
+    assert_eq!(kernels::backend(), KernelBackend::Scalar, "sync trainer leaked kernel_backend");
+
+    // a default run in the same process reports the scalar backend
+    let dcfg = tiny_cfg(Algorithm::DpSgd);
+    let out = engine::run_pctr(&dcfg, &rt, gen_cfg(&rt, &dcfg)).unwrap();
+    assert_eq!(out.telemetry.kernel_backend, "scalar");
+}

@@ -7,6 +7,8 @@
 //! subset, hence the `dead_code` allowance.
 #![allow(dead_code)]
 
+pub mod ulp;
+
 use std::path::PathBuf;
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::Duration;

@@ -1,0 +1,137 @@
+//! ULP-distance comparison for f32 numerics suites (satellite of the SIMD
+//! backend PR, reused by `tests/simd.rs` and `tests/kernels.rs`).
+//!
+//! "ULP distance" is the number of representable f32 values strictly
+//! between two floats, plus one — i.e. how many times you would have to
+//! call `nextafter` to walk from one to the other.  It is the right
+//! yardstick for "same computation, reassociated": a handful of ULPs is
+//! rounding noise, a large gap is a real numeric divergence, and the
+//! metric is scale-free (no tuning an absolute epsilon per magnitude).
+//!
+//! The implementation uses the classic monotone bit map: reinterpret the
+//! IEEE 754 bits so that the total order on the mapped integers matches
+//! the numeric order on floats.  For non-negative floats the bit pattern
+//! is already monotone; negative floats order in reverse, so they map to
+//! the negated magnitude.  Consequences worth pinning (and tested below):
+//!
+//! * `+0.0` and `-0.0` both map to 0 — ULP distance 0, as it should be
+//!   (they compare numerically equal).
+//! * The distance crosses zero smoothly: the two signed subnormals
+//!   nearest zero are 2 ULPs apart (one step to ±0, one step across).
+//! * `f32::MAX` and `+inf` are adjacent (distance 1): an overflowing lane
+//!   sum shows up as a bounded-ULP failure, not a weird huge number.
+//! * NaN has no place on the number line: if exactly one side is NaN the
+//!   distance is `None` ("unboundedly far"); if both are NaN we report
+//!   `Some(0)` so a kernel that legitimately propagates NaN for NaN input
+//!   still compares equal to the scalar oracle doing the same.
+
+/// Map f32 bits onto integers such that numeric order ⇒ integer order.
+/// Both zeros map to 0.  Must only be called on non-NaN values.
+fn monotone(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        -((b & 0x7FFF_FFFF) as i64)
+    } else {
+        b as i64
+    }
+}
+
+/// ULP distance between two floats, or `None` if exactly one is NaN.
+pub fn ulp_distance(a: f32, b: f32) -> Option<u64> {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Some(0),
+        (true, false) | (false, true) => None,
+        (false, false) => Some(monotone(a).abs_diff(monotone(b))),
+    }
+}
+
+/// `Ok(())` if `got` is within `max_ulp` ULPs of `want`, else a message
+/// with the values, their bits, and the observed distance.
+pub fn close_ulp(max_ulp: u64, got: f32, want: f32) -> Result<(), String> {
+    match ulp_distance(got, want) {
+        Some(d) if d <= max_ulp => Ok(()),
+        Some(d) => Err(format!(
+            "{got:e} (bits {:#010x}) vs {want:e} (bits {:#010x}): {d} ULPs apart (max {max_ulp})",
+            got.to_bits(),
+            want.to_bits()
+        )),
+        None => Err(format!(
+            "{got:e} vs {want:e}: exactly one side is NaN (unbounded ULP distance)"
+        )),
+    }
+}
+
+/// Assert two slices are elementwise within `max_ulp` ULPs.
+pub fn assert_close_ulp(max_ulp: u64, got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        if let Err(msg) = close_ulp(max_ulp, g, w) {
+            panic!("{what}: element {i}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_floats_are_one_ulp_apart() {
+        let a = 1.0f32;
+        let b = f32::from_bits(a.to_bits() + 1);
+        assert_eq!(ulp_distance(a, b), Some(1));
+        assert_eq!(ulp_distance(b, a), Some(1));
+        assert_eq!(ulp_distance(a, a), Some(0));
+        // same neighbour relation holds on the negative side
+        let c = -1.0f32;
+        let d = f32::from_bits(c.to_bits() + 1); // more negative magnitude
+        assert_eq!(ulp_distance(c, d), Some(1));
+    }
+
+    #[test]
+    fn signed_zeros_are_zero_apart() {
+        assert_eq!(ulp_distance(0.0, -0.0), Some(0));
+        assert_eq!(ulp_distance(-0.0, 0.0), Some(0));
+        assert!(close_ulp(0, 0.0, -0.0).is_ok());
+    }
+
+    #[test]
+    fn distance_crosses_zero_through_the_subnormals() {
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(ulp_distance(tiny, 0.0), Some(1));
+        assert_eq!(ulp_distance(tiny, -tiny), Some(2));
+        assert_eq!(ulp_distance(-tiny, 0.0), Some(1));
+    }
+
+    #[test]
+    fn nan_semantics() {
+        assert_eq!(ulp_distance(f32::NAN, f32::NAN), Some(0));
+        assert_eq!(ulp_distance(f32::NAN, 1.0), None);
+        assert_eq!(ulp_distance(1.0, f32::NAN), None);
+        assert!(close_ulp(u64::MAX, f32::NAN, 1.0).is_err());
+        assert!(close_ulp(0, f32::NAN, f32::NAN).is_ok());
+    }
+
+    #[test]
+    fn infinity_is_adjacent_to_max() {
+        assert_eq!(ulp_distance(f32::MAX, f32::INFINITY), Some(1));
+        assert_eq!(ulp_distance(f32::MIN, f32::NEG_INFINITY), Some(1));
+    }
+
+    #[test]
+    fn slice_helper_accepts_within_bound() {
+        let want = [1.0f32, -2.0, 0.0, 3.5e-3];
+        assert_close_ulp(0, &want, &want, "identical");
+        let nudge = |w: f32| if w == 0.0 { -0.0 } else { f32::from_bits(w.to_bits() + 2) };
+        let nudged: Vec<f32> = want.iter().map(|&w| nudge(w)).collect();
+        assert_close_ulp(2, &nudged, &want, "2-ulp nudge");
+    }
+
+    #[test]
+    #[should_panic(expected = "ULPs apart")]
+    fn slice_helper_rejects_beyond_bound() {
+        let want = [1.0f32];
+        let got = [f32::from_bits(want[0].to_bits() + 8)];
+        assert_close_ulp(4, &got, &want, "too far");
+    }
+}

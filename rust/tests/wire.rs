@@ -196,6 +196,11 @@ fn all_frames(rng: &mut Xoshiro256) -> Vec<Frame> {
             owner_index: rng.next_u64() as u32,
             shards: rng.next_u64() as u32,
             kernel_threads: rng.next_u64() as u32,
+            kernel_backend: if rng.below(2) == 0 {
+                sparse_dp_emb::kernels::KernelBackend::Scalar
+            } else {
+                sparse_dp_emb::kernels::KernelBackend::Simd
+            },
             store_budget_mb: rng.next_u64(),
             store_dir: any_str(rng),
         }),
